@@ -1,0 +1,359 @@
+//! Manual-deployment baseline (§4.3): what deploying the *same* MLaaS
+//! looks like **without** MLModelCI's automation — the >500-LoC ordeal the
+//! paper describes for hand-written TensorFlow-Serving deployments.
+//!
+//! Everything `Platform::publish` + `Dispatcher::deploy` automates is
+//! written out by hand here against the low-level substrates only:
+//! artifact resolution, weight loading, numeric validation, executable
+//! compilation per batch size, device memory budgeting, the container
+//! lifecycle, the request queue, the dynamic batching loop, padding
+//! bookkeeping, latency accounting, backpressure and shutdown. This file
+//! (together with the boilerplate every real deployment also needs for
+//! config parsing and monitoring glue) is what `deployment_loc` counts
+//! against `quickstart.rs`'s ~20 lines.
+//!
+//! Run: `cargo run --release --example manual_deployment`
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use mlmodelci::cluster::perfmodel::{preset, PerfSpec, WorkloadCost};
+use mlmodelci::runtime::engine::{EngineHandle, ExeHandle};
+use mlmodelci::runtime::{ArtifactStore, ModelManifest, Tensor};
+use mlmodelci::util::rng::Rng;
+use mlmodelci::util::stats::Samples;
+
+// ---------------------------------------------------------------------------
+// 1. Configuration: by hand, every knob spelled out.
+// ---------------------------------------------------------------------------
+
+struct ManualConfig {
+    model_family: String,
+    service_name: String,
+    artifact_dir: std::path::PathBuf,
+    device_kind: String,
+    wanted_format: String,
+    batch_sizes: Vec<usize>,
+    max_queue: usize,
+    dynamic_batch_max: usize,
+    dynamic_batch_timeout_ms: f64,
+    request_overhead_ms: f64,
+    rest_fixed_overhead_ms: f64,
+    rest_per_mib_ms: f64,
+    validation_atol: f32,
+    warmup_iterations: usize,
+}
+
+impl ManualConfig {
+    fn resnet_default() -> ManualConfig {
+        ManualConfig {
+            model_family: "resnet_mini".into(),
+            service_name: "manual-resnet".into(),
+            artifact_dir: std::path::PathBuf::from("artifacts"),
+            device_kind: "t4".into(),
+            wanted_format: "optimized".into(),
+            batch_sizes: vec![1, 2, 4, 8, 16, 32],
+            max_queue: 256,
+            dynamic_batch_max: 32,
+            dynamic_batch_timeout_ms: 2.0,
+            request_overhead_ms: 0.12,
+            rest_fixed_overhead_ms: 0.5,
+            rest_per_mib_ms: 4.0,
+            validation_atol: 2e-3,
+            warmup_iterations: 2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Model resolution + weight loading: by hand.
+// ---------------------------------------------------------------------------
+
+fn resolve_model(cfg: &ManualConfig) -> Result<(ArtifactStore, ModelManifest)> {
+    let store = ArtifactStore::load(&cfg.artifact_dir)
+        .context("loading artifact store (did you run `make artifacts`?)")?;
+    let manifest = store
+        .model(&cfg.model_family)
+        .with_context(|| format!("model family '{}' not found", cfg.model_family))?
+        .clone();
+    if !manifest.formats().iter().any(|f| f == &cfg.wanted_format) {
+        bail!("format '{}' not available for '{}'", cfg.wanted_format, cfg.model_family);
+    }
+    Ok((store, manifest))
+}
+
+fn load_weight_tensors(store: &ArtifactStore, manifest: &ModelManifest) -> Result<Vec<Tensor>> {
+    let weights = store.load_weights(manifest)?;
+    // paranoid byte accounting (the converter normally audits this)
+    let total: usize = weights.iter().map(|w| w.nbytes()).sum();
+    if total != manifest.param_bytes {
+        bail!("weight bytes {} != manifest {}", total, manifest.param_bytes);
+    }
+    Ok(weights)
+}
+
+// ---------------------------------------------------------------------------
+// 3. Numeric validation: by hand (MLModelCI's converter does this for you).
+// ---------------------------------------------------------------------------
+
+fn validate_format(
+    cfg: &ManualConfig,
+    store: &ArtifactStore,
+    manifest: &ModelManifest,
+    engine: &EngineHandle,
+    weights: &[Tensor],
+) -> Result<()> {
+    let (golden_x, golden_y) = store.load_golden(manifest)?;
+    let golden_batch = manifest.golden.batch;
+    let entry = manifest
+        .artifact(&cfg.wanted_format, golden_batch)
+        .ok_or_else(|| anyhow!("no artifact for validation batch {golden_batch}"))?;
+    let exe = engine.load(&store.hlo_path(entry), weights, golden_batch)?;
+    let (got, _) = exe.run(&golden_x)?;
+    exe.unload();
+    let gv = got.to_f32();
+    let wv = golden_y.to_f32();
+    let mut max_err = 0f32;
+    for (g, w) in gv.iter().zip(&wv) {
+        max_err = max_err.max((g - w).abs());
+    }
+    if max_err > cfg.validation_atol {
+        bail!("format '{}' failed validation: max |err| = {max_err}", cfg.wanted_format);
+    }
+    println!("[manual] validated {} (max |err| = {max_err:.2e})", cfg.wanted_format);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// 4. Executable compilation per batch size: by hand.
+// ---------------------------------------------------------------------------
+
+fn compile_all_batches(
+    cfg: &ManualConfig,
+    store: &ArtifactStore,
+    manifest: &ModelManifest,
+    engine: &EngineHandle,
+    weights: &[Tensor],
+) -> Result<Vec<(usize, ExeHandle)>> {
+    let mut exes = Vec::new();
+    for &batch in &cfg.batch_sizes {
+        let entry = manifest
+            .artifact(&cfg.wanted_format, batch)
+            .ok_or_else(|| anyhow!("missing artifact batch {batch}"))?;
+        let exe = engine
+            .load(&store.hlo_path(entry), weights, batch)
+            .with_context(|| format!("compiling batch-{batch} executable"))?;
+        println!("[manual] compiled b{batch} in {:.0} ms", exe.compile_ms);
+        exes.push((batch, exe));
+    }
+    Ok(exes)
+}
+
+// ---------------------------------------------------------------------------
+// 5. Device memory budgeting: by hand.
+// ---------------------------------------------------------------------------
+
+fn budget_memory(cfg: &ManualConfig, manifest: &ModelManifest, spec: &PerfSpec) -> Result<f64> {
+    let workload = manifest.sim.workload(&cfg.wanted_format);
+    let max_batch = *cfg.batch_sizes.iter().max().unwrap();
+    let need = spec.memory_footprint_mib(&workload, max_batch);
+    if need > spec.memory_mib {
+        bail!("model needs {need:.0} MiB but device has {:.0} MiB", spec.memory_mib);
+    }
+    println!("[manual] memory budget: {need:.0} / {:.0} MiB", spec.memory_mib);
+    Ok(need)
+}
+
+// ---------------------------------------------------------------------------
+// 6. The serving loop: queue, dynamic batcher, padding, latency accounting,
+//    backpressure — all by hand.
+// ---------------------------------------------------------------------------
+
+struct ManualRequest {
+    input: Tensor,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<(Tensor, f64)>>,
+}
+
+struct ManualServer {
+    tx: mpsc::Sender<ManualRequest>,
+    depth: Arc<AtomicUsize>,
+    stopped: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    max_queue: usize,
+}
+
+impl ManualServer {
+    fn infer(&self, input: Tensor) -> Result<(Tensor, f64)> {
+        if self.stopped.load(Ordering::SeqCst) {
+            bail!("server stopped");
+        }
+        if self.depth.load(Ordering::SeqCst) >= self.max_queue {
+            bail!("queue full");
+        }
+        let (reply, rx) = mpsc::channel();
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(ManualRequest { input, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow!("worker dropped request"))?
+    }
+
+    fn stop(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_manual_server(
+    cfg: &ManualConfig,
+    manifest: &ModelManifest,
+    spec: PerfSpec,
+    exes: Vec<(usize, ExeHandle)>,
+) -> ManualServer {
+    let (tx, rx) = mpsc::channel::<ManualRequest>();
+    let depth = Arc::new(AtomicUsize::new(0));
+    let stopped = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let workload: WorkloadCost = manifest.sim.workload(&cfg.wanted_format);
+    let (depth2, stopped2, served2) = (depth.clone(), stopped.clone(), served.clone());
+    let max_wait = cfg.dynamic_batch_timeout_ms;
+    let max_batch = cfg.dynamic_batch_max;
+    let overhead = cfg.request_overhead_ms;
+    let (rest_fixed, rest_mib) = (cfg.rest_fixed_overhead_ms, cfg.rest_per_mib_ms);
+    std::thread::spawn(move || {
+        let mut pending: VecDeque<ManualRequest> = VecDeque::new();
+        loop {
+            if stopped2.load(Ordering::SeqCst) {
+                for r in pending.drain(..) {
+                    let _ = r.reply.send(Err(anyhow!("server stopped")));
+                }
+                return;
+            }
+            // drain channel
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => pending.push_back(r),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return,
+                }
+            }
+            // dynamic batching decision, by hand
+            let oldest_wait = pending
+                .front()
+                .map(|r| r.enqueued.elapsed().as_secs_f64() * 1000.0)
+                .unwrap_or(0.0);
+            let n = if pending.len() >= max_batch {
+                max_batch
+            } else if !pending.is_empty() && oldest_wait >= max_wait {
+                pending.len()
+            } else {
+                std::thread::sleep(Duration::from_micros(200));
+                continue;
+            };
+            // round up to a compiled batch size, pad, execute, truncate
+            let exec_batch = exes
+                .iter()
+                .map(|(b, _)| *b)
+                .filter(|&b| b >= n)
+                .min()
+                .unwrap_or_else(|| exes.iter().map(|(b, _)| *b).max().unwrap());
+            let n = n.min(exec_batch);
+            let reqs: Vec<ManualRequest> = pending.drain(..n).collect();
+            depth2.fetch_sub(n, Ordering::SeqCst);
+            let inputs: Vec<Tensor> = reqs.iter().map(|r| r.input.clone()).collect();
+            let mut stacked = Tensor::stack(&inputs);
+            if exec_batch > n {
+                stacked = stacked.pad_batch(exec_batch);
+            }
+            let exe = &exes.iter().find(|(b, _)| *b == exec_batch).unwrap().1;
+            match exe.run(&stacked) {
+                Ok((out, real_ms)) => {
+                    let charged = spec.latency_ms(&workload, exec_batch).max(real_ms);
+                    let outs = out.truncate_batch(n).unstack();
+                    for (r, o) in reqs.iter().zip(outs) {
+                        let wait = r.enqueued.elapsed().as_secs_f64() * 1000.0 - real_ms;
+                        let payload_mib = (r.input.nbytes() + o.nbytes()) as f64 / (1 << 20) as f64;
+                        let latency = wait.max(0.0)
+                            + charged
+                            + overhead
+                            + rest_fixed
+                            + rest_mib * payload_mib;
+                        served2.fetch_add(1, Ordering::SeqCst);
+                        let _ = r.reply.send(Ok((o, latency)));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for r in reqs {
+                        let _ = r.reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+    });
+    ManualServer { tx, depth, stopped, served, max_queue: cfg.max_queue }
+}
+
+// ---------------------------------------------------------------------------
+// 7. Smoke traffic + stats: by hand.
+// ---------------------------------------------------------------------------
+
+fn drive_traffic(server: &ManualServer, manifest: &ModelManifest) -> Result<()> {
+    let mut rng = Rng::new(99);
+    let n: usize = manifest.input_shape.iter().product();
+    let mut latencies = Samples::new();
+    for _ in 0..32 {
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let input = Tensor::from_f32(&manifest.input_shape, &vals);
+        let (out, latency_ms) = server.infer(input)?;
+        if out.shape != vec![manifest.num_classes] {
+            bail!("bad output shape {:?}", out.shape);
+        }
+        latencies.push(latency_ms);
+    }
+    println!(
+        "[manual] served {} requests: p50 {:.2} ms, p99 {:.2} ms",
+        server.served.load(Ordering::SeqCst),
+        latencies.p50(),
+        latencies.p99()
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let cfg = ManualConfig::resnet_default();
+    println!("[manual] deploying '{}' the hard way...", cfg.service_name);
+    let (store, manifest) = resolve_model(&cfg)?;
+    let spec = preset(&cfg.device_kind).ok_or_else(|| anyhow!("unknown device"))?;
+    let engine = EngineHandle::spawn("manual");
+    let weights = load_weight_tensors(&store, &manifest)?;
+    validate_format(&cfg, &store, &manifest, &engine, &weights)?;
+    let exes = compile_all_batches(&cfg, &store, &manifest, &engine, &weights)?;
+    budget_memory(&cfg, &manifest, &spec)?;
+    // warmup
+    for (batch, exe) in &exes {
+        let mut rng = Rng::new(1);
+        let n: usize = manifest.input_shape.iter().product();
+        for _ in 0..cfg.warmup_iterations {
+            let vals: Vec<f32> = (0..n * batch).map(|_| rng.normal() as f32).collect();
+            let mut shape = vec![*batch];
+            shape.extend_from_slice(&manifest.input_shape);
+            exe.run(&Tensor::from_raw(
+                mlmodelci::runtime::DType::F32,
+                &shape,
+                vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ))?;
+        }
+    }
+    let server = spawn_manual_server(&cfg, &manifest, spec, exes);
+    drive_traffic(&server, &manifest)?;
+    server.stop();
+    engine.shutdown();
+    println!("[manual] done — now compare with examples/quickstart.rs");
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Quickstart: deploy a model as MLaaS in ~20 lines of user code (§4.3).
+//!
+//! The paper: "with the help of MLModelCI, users only need to write about
+//! 20 LoC to complete the deployment" (vs >500 LoC by hand — see
+//! `examples/manual_deployment.rs` and `cargo bench --bench deployment_loc`,
+//! which counts the code between the BEGIN/END markers below).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mlmodelci::dispatcher::DeploymentSpec;
+use mlmodelci::profiler::example_input;
+use mlmodelci::util::clock::wall;
+use mlmodelci::workflow::{Platform, PlatformConfig};
+
+fn main() -> anyhow::Result<()> {
+    // BEGIN-USER-CODE (what a platform user actually writes)
+    let platform = Platform::init(std::path::Path::new("artifacts"), None, wall(), PlatformConfig::default())?;
+    let yaml = "\
+name: quickstart-resnet
+family: resnet_mini
+task: image_classification
+dataset: cifar10-synthetic
+accuracy: 0.871
+convert: true
+profile: false
+";
+    let report = platform.publish(yaml, b"resnet-weights")?;
+    println!("published + converted in {:.0} ms", report.total_ms());
+    let service = platform.deploy_by_name("quickstart-resnet", &DeploymentSpec::default())?;
+    let reply = service.infer(example_input(platform.store.model("resnet_mini")?, 0))?;
+    println!("deployed on {}; first inference: {:?} in {:.2} ms",
+        service.device_id, reply.output.shape, reply.timing.total_ms());
+    // END-USER-CODE
+    platform.shutdown();
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT lowering: model zoo -> HLO text artifacts + manifest + packed weights.
+
+Emits, per (model, format, batch size):
+
+    artifacts/<model>-<format>-b<k>.hlo.txt
+
+plus per model:
+
+    artifacts/<model>.weights.bin   — all params packed little-endian f32
+    artifacts/manifest.json         — artifact index consumed by rust
+
+HLO *text* (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: this image's xla_extension 0.5.1 rejects jax>=0.5 protos whose
+instruction ids exceed INT_MAX; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS, make_entry, param_order
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+FORMATS = ("reference", "optimized")
+
+_DTYPES = {"f32": jnp.float32, "s32": jnp.int32}
+_NP_DTYPES = {"f32": np.float32, "s32": np.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(model, fmt: str, batch: int) -> str:
+    fn, keys = make_entry(model, optimized=(fmt == "optimized"))
+    params = model.init_params()
+    x_spec = jax.ShapeDtypeStruct((batch,) + model.input_shape, _DTYPES[model.input_dtype])
+    p_specs = [jax.ShapeDtypeStruct(params[k].shape, params[k].dtype) for k in keys]
+    lowered = jax.jit(fn).lower(x_spec, *p_specs)
+    return to_hlo_text(lowered)
+
+
+def pack_weights(model, out_dir: str):
+    """Pack params into one .bin; return (file name, ordered entries)."""
+    params = model.init_params()
+    keys = param_order(params)
+    fname = f"{model.name}.weights.bin"
+    entries = []
+    offset = 0
+    with open(os.path.join(out_dir, fname), "wb") as f:
+        for k in keys:
+            arr = np.ascontiguousarray(params[k], dtype=np.float32)
+            raw = arr.tobytes()
+            f.write(raw)
+            entries.append(
+                {
+                    "name": k,
+                    "shape": list(arr.shape),
+                    "dtype": "f32",
+                    "offset": offset,
+                    "nbytes": len(raw),
+                }
+            )
+            offset += len(raw)
+    return fname, entries
+
+
+def op_count(hlo_text: str) -> int:
+    """Instruction count of the lowered module (coarse structure metric)."""
+    return sum(
+        1
+        for line in hlo_text.splitlines()
+        if " = " in line and not line.lstrip().startswith("//")
+    )
+
+
+def golden_io(model, batch: int, seed: int = 1234):
+    """Deterministic input + reference output for rust-side validation."""
+    rng = np.random.default_rng(seed)
+    if model.input_dtype == "f32":
+        x = rng.standard_normal((batch,) + model.input_shape).astype(np.float32)
+    else:
+        x = rng.integers(0, 1000, (batch,) + model.input_shape).astype(np.int32)
+    params = {k: jnp.asarray(v) for k, v in model.init_params().items()}
+    y = np.asarray(model.forward(params, jnp.asarray(x), optimized=False))
+    return x, y
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--batches", default=",".join(str(b) for b in BATCH_SIZES))
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    names = [n for n in args.models.split(",") if n]
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    manifest = {"version": 1, "models": {}}
+    for name in names:
+        model = MODELS[name]
+        t0 = time.time()
+        weights_file, weight_entries = pack_weights(model, out_dir)
+        artifacts = []
+        for fmt in FORMATS:
+            for batch in batches:
+                hlo = lower_artifact(model, fmt, batch)
+                fname = f"{name}-{fmt}-b{batch}.hlo.txt"
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(hlo)
+                artifacts.append(
+                    {
+                        "format": fmt,
+                        "batch": batch,
+                        "file": fname,
+                        "hlo_ops": op_count(hlo),
+                        "sha256": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+                    }
+                )
+                print(f"  {fname}: {len(hlo)} chars, {artifacts[-1]['hlo_ops']} ops")
+        # golden input/output at batch=2 for converter validation on rust side
+        gx, gy = golden_io(model, batch=2)
+        gx_file, gy_file = f"{name}.golden_x.bin", f"{name}.golden_y.bin"
+        gx.tofile(os.path.join(out_dir, gx_file))
+        gy.astype(np.float32).tofile(os.path.join(out_dir, gy_file))
+
+        manifest["models"][name] = {
+            "task": model.task,
+            "input_shape": list(model.input_shape),
+            "input_dtype": model.input_dtype,
+            "num_classes": model.num_classes,
+            "claimed_accuracy": model.claimed_accuracy,
+            "weights_file": weights_file,
+            "params": weight_entries,
+            "param_bytes": sum(e["nbytes"] for e in weight_entries),
+            "flops_per_example": model.flops_per_example(),
+            "activation_bytes_per_example": model.activation_bytes_per_example(),
+            "kernel_launches": {
+                "reference": model.kernel_launches(False),
+                "optimized": model.kernel_launches(True),
+            },
+            # paper-equivalent workload for the simulated-device perf model
+            "sim": model.paper_equivalent,
+            "golden": {
+                "batch": 2,
+                "x_file": gx_file,
+                "y_file": gy_file,
+                "x_dtype": model.input_dtype,
+            },
+            "artifacts": artifacts,
+        }
+        print(f"{name}: lowered {len(artifacts)} artifacts in {time.time() - t0:.1f}s")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Inventory of every fused_linear instantiation in the model zoo at the
+largest serving batch (32) — the inputs to the §Perf VMEM/MXU report.
+
+(name, M, K, N, block_m); M already includes the batch/spatial folding.
+"""
+
+SITES = [
+    # resnet_mini (im2col conv path), batch 32
+    ("resnet.stem 32x32x3->16", 32 * 32 * 32, 27, 16, 1024),
+    ("resnet.b1c1 32x32x16->16", 32 * 32 * 32, 144, 16, 1024),
+    ("resnet.b1c2 32x32x16->16", 32 * 32 * 32, 144, 16, 1024),
+    ("resnet.b2c1 16x16x16->32", 32 * 16 * 16, 144, 32, 1024),
+    ("resnet.b2c2 16x16x32->32", 32 * 16 * 16, 288, 32, 1024),
+    ("resnet.b2proj 1x1", 32 * 16 * 16, 16, 32, 1024),
+    ("resnet.head", 32, 32, 10, 128),
+    # textcnn conv branches, batch 32
+    ("textcnn.conv3", 32 * 62, 192, 64, 128),
+    ("textcnn.conv4", 32 * 61, 256, 64, 128),
+    ("textcnn.conv5", 32 * 60, 320, 64, 128),
+    ("textcnn.head", 32, 192, 4, 128),
+    # bert_tiny projections and FFN, batch 32 x seq 32
+    ("bert.qkv/o proj", 32 * 32, 64, 64, 128),
+    ("bert.ffn1", 32 * 32, 64, 128, 128),
+    ("bert.ffn2", 32 * 32, 128, 64, 128),
+    ("bert.head", 32, 64, 2, 128),
+    # mlp_tabular, batch 32
+    ("mlp.fc0", 32, 32, 128, 128),
+    ("mlp.fc1", 32, 128, 128, 128),
+    ("mlp.fc2", 32, 128, 8, 128),
+]

@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the optimized model format (+ jnp oracles in ref)."""
+
+from . import ref  # noqa: F401
+from .fused_attention import attention, multi_head_attention  # noqa: F401
+from .fused_linear import fused_linear  # noqa: F401
+from .layernorm import layer_norm  # noqa: F401

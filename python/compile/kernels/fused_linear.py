@@ -1,0 +1,102 @@
+"""Pallas fused linear kernel: y = act(x @ w + b) in a single VMEM pass.
+
+This is the TPU rethink of the paper's "optimized format" (TensorRT on GPU):
+instead of CUDA kernel fusion, the matmul, bias add and activation live in
+one Pallas kernel so intermediates never round-trip to HBM. The kernel is
+tiled over (M, N) with the full K-panel resident in VMEM — model-zoo layer
+widths are sized so an (bm, K) x (K, bn) working set fits the ~16 MiB VMEM
+budget (see DESIGN.md §Hardware-Adaptation for the footprint table).
+
+On this sandbox the kernel runs under ``interpret=True`` (CPU). Real-TPU
+lowering would emit a Mosaic custom call targeting the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target`` (>=1).
+
+    Pallas grids must tile the array exactly; the model zoo uses
+    power-of-two-friendly widths so this normally returns ``target``.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (bm, bn) output tile: full-K matmul + bias + activation in VMEM."""
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "gelu":
+        acc = ref.gelu(acc)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def fused_linear(x, w, b, activation: str = "none", block_m: int = 128, block_n: int = 128):
+    """act(x @ w + b) as a Pallas kernel.
+
+    x: (M, K) float32, w: (K, N) float32, b: (N,) float32 -> (M, N) float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+
+    kernel = functools.partial(_linear_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(m, k, n, block_m=128, block_n=128, itemsize=4):
+    """Estimated VMEM working set of one grid step (for DESIGN.md §Perf)."""
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    return itemsize * (bm * k + k * bn + bn + bm * bn)
+
+
+def mxu_utilization_estimate(m, k, n, block_m=128, block_n=128):
+    """Fraction of MXU 128x128 systolic-array cycles doing useful work.
+
+    Ratio of real (bm, k, bn) tile flops to the padded
+    (ceil128(bm), ceil128(k), ceil128(bn)) flops the MXU would issue.
+    """
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+
+    def ceil128(v):
+        return ((v + 127) // 128) * 128
+
+    useful = bm * k * bn
+    issued = ceil128(bm) * ceil128(k) * ceil128(bn)
+    return useful / issued

@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness gate).
+
+Each function here is the mathematical ground truth for the matching kernel
+in this package. pytest (``python/tests/test_kernels.py``) sweeps shapes and
+dtypes with hypothesis and asserts ``assert_allclose`` between the Pallas
+kernel output (interpret=True) and these oracles.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """Tanh-approximation GELU (matches the kernel's in-VMEM activation)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": gelu,
+    "tanh": jnp.tanh,
+}
+
+
+def fused_linear(x, w, b, activation="none"):
+    """y = act(x @ w + b).  x: (M, K), w: (K, N), b: (N,)."""
+    y = jnp.dot(x, w) + b[None, :]
+    return ACTIVATIONS[activation](y)
+
+
+def layer_norm(x, gamma, beta, eps=1e-6):
+    """Row-wise layer norm over the last axis. x: (M, D)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma[None, :] + beta[None, :]
+
+
+def attention(q, k, v, scale=None):
+    """Single-head scaled dot-product attention.
+
+    q: (S, D), k: (S, D), v: (S, D)  ->  (S, D)
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    logits = jnp.dot(q, k.T) * scale
+    weights = jax.nn.softmax(logits, axis=-1)
+    return jnp.dot(weights, v)
+
+
+def softmax_cross_entropy(logits, labels_onehot):
+    """Mean cross-entropy over the batch (used by training-mode checks)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+
+def im2col(x, kh, kw, stride=1, padding=1):
+    """Extract conv patches. x: (B, H, W, C) -> (B, OH, OW, KH*KW*C).
+
+    The optimized conv path in the model zoo lowers conv2d to
+    im2col (cheap data movement) + the Pallas fused_linear kernel
+    (the flops-heavy matmul + bias + activation in one VMEM pass).
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                jax.lax.dynamic_slice(xp, (0, i, j, 0), (b, oh * stride, ow * stride, c))[
+                    :, ::stride, ::stride, :
+                ]
+            )
+    return jnp.concatenate(patches, axis=-1).reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d(x, w, b, stride=1, padding=1, activation="none"):
+    """Reference conv2d via lax.conv_general_dilated + bias + act.
+
+    x: (B, H, W, Cin), w: (KH, KW, Cin, Cout), b: (Cout,).
+    """
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b[None, None, None, :]
+    return ACTIVATIONS[activation](y)

@@ -1,0 +1,49 @@
+"""§Perf L1/L2 report: VMEM footprint + MXU-utilization *estimates* for
+every Pallas kernel instantiation in the model zoo, plus fused-vs-
+reference HLO structure stats.
+
+interpret=True gives CPU-numpy timings only (not a TPU proxy), so per the
+optimization method we report structural metrics: the VMEM working set of
+one grid step (must sit well under the ~16 MiB/core budget) and the MXU
+systolic-array occupancy of each matmul tile. Recorded in EXPERIMENTS.md
+§Perf.
+
+Run: cd python && python -m compile.perf_report
+"""
+
+import json
+import os
+
+from .fused_linear_sites import SITES  # noqa: F401  (re-exported table)
+from .kernels.fused_linear import mxu_utilization_estimate, vmem_footprint_bytes
+
+
+def main():
+    print("=== L1: Pallas kernel VMEM / MXU estimates (per grid step) ===")
+    print(f"{'site':<34}{'M':>7}{'K':>6}{'N':>6}{'block_m':>8}{'VMEM(KiB)':>11}{'MXU occ':>9}")
+    budget = 16 * 1024 * 1024
+    worst = 0.0
+    for name, m, k, n, block_m in SITES:
+        vmem = vmem_footprint_bytes(m, k, n, block_m=block_m)
+        occ = mxu_utilization_estimate(m, k, n, block_m=block_m)
+        worst = max(worst, vmem / budget)
+        print(f"{name:<34}{m:>7}{k:>6}{n:>6}{block_m:>8}{vmem / 1024:>11.1f}{occ:>9.2f}")
+    print(f"\nworst-case VMEM pressure: {100 * worst:.1f}% of a 16 MiB budget")
+
+    manifest_path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        print("\n=== L2: lowered HLO structure (reference vs optimized) ===")
+        print(f"{'model':<14}{'fmt':<11}{'b1 ops':>8}{'b32 ops':>9}{'sim launches':>14}")
+        for name, m in sorted(manifest["models"].items()):
+            for fmt in ("reference", "optimized"):
+                arts = {a["batch"]: a["hlo_ops"] for a in m["artifacts"] if a["format"] == fmt}
+                launches = m["sim"]["kernel_launches"][fmt]
+                print(f"{name:<14}{fmt:<11}{arts.get(1, '-'):>8}{arts.get(32, '-'):>9}{launches:>14}")
+        print("\n(optimized HLO has more *instructions* under interpret=True —")
+        print(" the fusion benefit is in `sim launches`, the real-device dispatch count)")
+
+
+if __name__ == "__main__":
+    main()

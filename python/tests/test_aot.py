@@ -1,0 +1,101 @@
+"""AOT path gate: lowering produces loadable HLO text + coherent manifest."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import MODELS
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Lower a cheap subset once for the whole module."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out", out, "--models", "mlp_tabular,textcnn", "--batches", "1,4"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    with open(os.path.join(out, "manifest.json")) as f:
+        return out, json.load(f)
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, manifest = built
+    for name, entry in manifest["models"].items():
+        for art in entry["artifacts"]:
+            text = open(os.path.join(out, art["file"])).read()
+            assert text.startswith("HloModule"), f"{art['file']} is not HLO text"
+            assert "ENTRY" in text
+
+
+def test_manifest_artifact_grid_complete(built):
+    _, manifest = built
+    for name, entry in manifest["models"].items():
+        combos = {(a["format"], a["batch"]) for a in entry["artifacts"]}
+        assert combos == {(f, b) for f in ("reference", "optimized") for b in (1, 4)}
+
+
+def test_weights_file_matches_param_entries(built):
+    out, manifest = built
+    for name, entry in manifest["models"].items():
+        size = os.path.getsize(os.path.join(out, entry["weights_file"]))
+        assert size == entry["param_bytes"]
+        offsets_ok = 0
+        end = 0
+        for p in entry["params"]:
+            assert p["offset"] == end, "params must be densely packed in order"
+            nelem = int(np.prod(p["shape"])) if p["shape"] else 1
+            assert p["nbytes"] == 4 * nelem
+            end = p["offset"] + p["nbytes"]
+            offsets_ok += 1
+        assert end == size and offsets_ok == len(p and entry["params"])
+
+
+def test_packed_weights_roundtrip_values(built):
+    out, manifest = built
+    model = MODELS["mlp_tabular"]
+    params = model.init_params()
+    entry = manifest["models"]["mlp_tabular"]
+    raw = open(os.path.join(out, entry["weights_file"]), "rb").read()
+    for p in entry["params"]:
+        got = np.frombuffer(raw[p["offset"] : p["offset"] + p["nbytes"]], np.float32).reshape(p["shape"])
+        np.testing.assert_allclose(got, params[p["name"]], rtol=0, atol=0)
+
+
+def test_golden_io_is_reference_output(built):
+    out, manifest = built
+    import jax.numpy as jnp
+
+    for name in ("mlp_tabular", "textcnn"):
+        model = MODELS[name]
+        entry = manifest["models"][name]["golden"]
+        dt = np.float32 if entry["x_dtype"] == "f32" else np.int32
+        x = np.fromfile(os.path.join(out, entry["x_file"]), dt).reshape((entry["batch"],) + model.input_shape)
+        y = np.fromfile(os.path.join(out, entry["y_file"]), np.float32).reshape(entry["batch"], model.num_classes)
+        params = {k: jnp.asarray(v) for k, v in model.init_params().items()}
+        want = np.asarray(model.forward(params, jnp.asarray(x), optimized=False))
+        np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+
+def test_op_count_metric_monotone_in_structure(built):
+    """Optimized (interpret-mode pallas) HLO has more *instructions* but the
+    manifest's kernel_launches metadata must show fusion reducing launches."""
+    _, manifest = built
+    for name, entry in manifest["models"].items():
+        kl = entry["kernel_launches"]
+        assert kl["optimized"] < kl["reference"]
+
+
+def test_flops_scale_reasonably(built):
+    _, manifest = built
+    mlp = manifest["models"]["mlp_tabular"]
+    # 32*128 + 128*128 + 128*8 matmuls, x2 flops each
+    assert mlp["flops_per_example"] == 2 * (32 * 128 + 128 * 128 + 128 * 8)

@@ -1,0 +1,152 @@
+"""L1 gate: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; fixed-seed numpy drives the data. Tolerances are
+float32-appropriate (the kernel accumulates in f32 like the oracle).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attention, fused_linear, layer_norm, multi_head_attention, ref
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- fused_linear
+
+dims = st.sampled_from([1, 2, 3, 4, 7, 8, 16, 24, 32, 48, 64, 96, 128, 130])
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, k=dims, n=dims, act=st.sampled_from(["none", "relu", "gelu", "tanh"]), seed=st.integers(0, 2**16))
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _randn(rng, m, k), _randn(rng, k, n), _randn(rng, n)
+    got = fused_linear(x, w, b, act)
+    want = ref.fused_linear(x, w, b, act)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([4, 64, 256]), blk=st.sampled_from([8, 32, 128, 512]))
+def test_fused_linear_block_size_invariant(m, blk):
+    """Output must not depend on the tiling choice."""
+    rng = np.random.default_rng(m * 1000 + blk)
+    x, w, b = _randn(rng, m, 32), _randn(rng, 32, 16), _randn(rng, 16)
+    base = fused_linear(x, w, b, "relu", block_m=128, block_n=128)
+    tiled = fused_linear(x, w, b, "relu", block_m=blk, block_n=blk)
+    assert_allclose(np.asarray(tiled), np.asarray(base), rtol=RTOL, atol=ATOL)
+
+
+def test_fused_linear_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        fused_linear(_randn(rng, 4, 8), _randn(rng, 9, 3), _randn(rng, 3))
+    with pytest.raises(AssertionError):
+        fused_linear(_randn(rng, 4, 8), _randn(rng, 8, 3), _randn(rng, 4))
+
+
+# ------------------------------------------------------------------ layer_norm
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, d=st.sampled_from([2, 4, 8, 32, 64, 128]), seed=st.integers(0, 2**16))
+def test_layer_norm_matches_ref(m, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = _randn(rng, m, d), _randn(rng, d), _randn(rng, d)
+    got = layer_norm(x, g, b)
+    assert_allclose(np.asarray(got), np.asarray(ref.layer_norm(x, g, b)), rtol=1e-4, atol=1e-4)
+
+
+def test_layer_norm_normalizes_rows():
+    rng = np.random.default_rng(3)
+    x = _randn(rng, 16, 64)
+    g = jnp.ones(64, jnp.float32)
+    b = jnp.zeros(64, jnp.float32)
+    y = np.asarray(layer_norm(x, g, b))
+    assert_allclose(y.mean(axis=-1), np.zeros(16), atol=1e-5)
+    assert_allclose(y.std(axis=-1), np.ones(16), atol=1e-2)
+
+
+# ------------------------------------------------------------------- attention
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([1, 2, 4, 8, 16, 32, 64, 96]),
+    d=st.sampled_from([4, 8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _randn(rng, s, d), _randn(rng, s, d), _randn(rng, s, d)
+    got = attention(q, k, v)
+    assert_allclose(np.asarray(got), np.asarray(ref.attention(q, k, v)), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Each output row lies in the convex hull of V rows: max |out| <= max |v|."""
+    rng = np.random.default_rng(11)
+    q, k, v = _randn(rng, 32, 16), _randn(rng, 32, 16), _randn(rng, 32, 16)
+    out = np.asarray(attention(q, k, v))
+    assert np.abs(out).max() <= np.abs(np.asarray(v)).max() + 1e-5
+
+
+def test_attention_uniform_when_logits_constant():
+    """q == 0 -> uniform weights -> every output row is mean(v)."""
+    s, d = 16, 8
+    rng = np.random.default_rng(5)
+    q = jnp.zeros((s, d), jnp.float32)
+    k, v = _randn(rng, s, d), _randn(rng, s, d)
+    out = np.asarray(attention(q, k, v))
+    assert_allclose(out, np.tile(np.asarray(v).mean(0), (s, 1)), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 2**16))
+def test_multi_head_attention_matches_per_head_ref(h, seed):
+    rng = np.random.default_rng(seed)
+    s, dm = 16, 32
+    q, k, v = _randn(rng, s, dm), _randn(rng, s, dm), _randn(rng, s, dm)
+    got = np.asarray(multi_head_attention(q, k, v, h))
+    dh = dm // h
+    qh = np.asarray(q).reshape(s, h, dh).transpose(1, 0, 2)
+    kh = np.asarray(k).reshape(s, h, dh).transpose(1, 0, 2)
+    vh = np.asarray(v).reshape(s, h, dh).transpose(1, 0, 2)
+    want = np.stack([np.asarray(ref.attention(jnp.asarray(qh[i]), jnp.asarray(kh[i]), jnp.asarray(vh[i]))) for i in range(h)])
+    want = want.transpose(1, 0, 2).reshape(s, dm)
+    assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------- im2col
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    hw=st.sampled_from([4, 8, 12]),
+    c=st.sampled_from([1, 3, 8]),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_im2col_conv_equals_lax_conv(b, hw, c, k, stride, seed):
+    """im2col + matmul == lax.conv for same-padding 2d convs."""
+    rng = np.random.default_rng(seed)
+    pad = k // 2
+    x = _randn(rng, b, hw, hw, c)
+    w = _randn(rng, k, k, c, 5)
+    bias = _randn(rng, 5)
+    want = np.asarray(ref.conv2d(x, w, bias, stride=stride, padding=pad, activation="relu"))
+    cols = ref.im2col(x, k, k, stride=stride, padding=pad)
+    bb, oh, ow, patch = cols.shape
+    got = ref.fused_linear(cols.reshape(bb * oh * ow, patch), w.reshape(patch, 5), bias, "relu")
+    assert_allclose(np.asarray(got).reshape(bb, oh, ow, 5), want, rtol=1e-4, atol=1e-4)

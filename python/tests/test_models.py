@@ -1,0 +1,80 @@
+"""L2 gate: model zoo — optimized (Pallas) format must match reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.model import MODELS, make_entry, param_order
+
+
+def _input(model, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    if model.input_dtype == "f32":
+        return jnp.asarray(rng.standard_normal((batch,) + model.input_shape).astype(np.float32))
+    return jnp.asarray(rng.integers(0, 1000, (batch,) + model.input_shape).astype(np.int32))
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+@pytest.mark.parametrize("batch", [1, 2, 5])
+def test_optimized_matches_reference(name, batch):
+    model = MODELS[name]
+    params = {k: jnp.asarray(v) for k, v in model.init_params().items()}
+    x = _input(model, batch, seed=batch)
+    want = np.asarray(model.forward(params, x, optimized=False))
+    got = np.asarray(model.forward(params, x, optimized=True))
+    assert want.shape == (batch, model.num_classes)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_forward_is_deterministic(name):
+    model = MODELS[name]
+    params = {k: jnp.asarray(v) for k, v in model.init_params().items()}
+    x = _input(model, 2, seed=9)
+    a = np.asarray(model.forward(params, x, optimized=False))
+    b = np.asarray(model.forward(params, x, optimized=False))
+    assert_allclose(a, b, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_init_params_deterministic_and_finite(name):
+    model = MODELS[name]
+    p1, p2 = model.init_params(), model.init_params()
+    assert sorted(p1) == sorted(p2)
+    for k in p1:
+        assert p1[k].dtype == np.float32
+        assert np.isfinite(p1[k]).all()
+        assert_allclose(p1[k], p2[k], rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_entry_signature_matches_param_order(name):
+    model = MODELS[name]
+    fn, keys = make_entry(model, optimized=False)
+    params = model.init_params()
+    assert keys == param_order(params)
+    out = fn(_input(model, 1), *[jnp.asarray(params[k]) for k in keys])
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (1, model.num_classes)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_batch_consistency(name):
+    """Row i of a batched forward == forward of row i alone (no cross-talk)."""
+    model = MODELS[name]
+    params = {k: jnp.asarray(v) for k, v in model.init_params().items()}
+    x = _input(model, 4, seed=13)
+    full = np.asarray(model.forward(params, x, optimized=False))
+    for i in range(4):
+        single = np.asarray(model.forward(params, x[i : i + 1], optimized=False))
+        assert_allclose(single[0], full[i], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_cost_metadata_sanity(name):
+    model = MODELS[name]
+    assert model.flops_per_example() > 0
+    assert model.activation_bytes_per_example() > 0
+    # fusion must strictly reduce launches — that's the converter's point
+    assert model.kernel_launches(True) < model.kernel_launches(False)

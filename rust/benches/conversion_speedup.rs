@@ -1,0 +1,108 @@
+//! Bench X1 + F1/D2 — the converter's value (§3.3) and the automated
+//! workflow timings (Figure 2, the "weeks → minutes" claim of §1).
+//!
+//! X1: per model × device, modeled serving latency of the `optimized`
+//! (Pallas-fused ≈ TensorRT) format vs `reference` (plain op-per-op ≈
+//! SavedModel), plus HLO structure stats. The fused format must win,
+//! most strongly at batch 1 where kernel-launch overhead dominates —
+//! exactly why the paper auto-converts models before deployment.
+//!
+//! F1/D2: wall-clock of each automated pipeline stage
+//! (register → convert+validate → profile) for every zoo model.
+//!
+//! Run: `cargo bench --bench conversion_speedup`
+
+use std::sync::Arc;
+
+use mlmodelci::cluster::preset;
+use mlmodelci::runtime::ArtifactStore;
+use mlmodelci::util::benchkit::Table;
+use mlmodelci::util::clock::wall;
+use mlmodelci::workflow::{Platform, PlatformConfig};
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::load(std::path::Path::new("artifacts"))?);
+
+    println!("=== X1: optimized (fused) vs reference format — modeled serving latency ===\n");
+    let mut t = Table::new(&[
+        "model", "represents", "device", "batch", "ref(ms)", "opt(ms)", "speedup", "ref launches", "opt launches",
+    ]);
+    let mut min_speedup_b1 = f64::INFINITY;
+    for (name, m) in &store.models {
+        for device in ["t4", "v100", "a100"] {
+            let spec = preset(device).unwrap();
+            for batch in [1usize, 32] {
+                let ref_ms = spec.latency_ms(&m.sim.workload("reference"), batch);
+                let opt_ms = spec.latency_ms(&m.sim.workload("optimized"), batch);
+                let speedup = ref_ms / opt_ms;
+                if batch == 1 {
+                    min_speedup_b1 = min_speedup_b1.min(speedup);
+                }
+                t.row(&[
+                    name.clone(),
+                    m.sim.represents.clone(),
+                    device.to_string(),
+                    batch.to_string(),
+                    format!("{:.2}", ref_ms),
+                    format!("{:.2}", opt_ms),
+                    format!("{:.2}x", speedup),
+                    format!("{:.0}", m.sim.launches_reference),
+                    format!("{:.0}", m.sim.launches_optimized),
+                ]);
+            }
+        }
+    }
+    t.print();
+    anyhow::ensure!(min_speedup_b1 > 1.2, "fusion must win clearly at batch 1 (min {min_speedup_b1:.2}x)");
+    println!("\nconversion checks passed: fused format faster everywhere, most at batch 1\n");
+
+    // HLO structure stats (what conversion produced)
+    println!("=== artifact structure (serialized formats per model) ===\n");
+    let mut s = Table::new(&["model", "format", "batch sizes", "hlo ops (b1)", "weights (KiB)"]);
+    for (name, m) in &store.models {
+        for format in m.formats() {
+            let ops = m.artifact(&format, 1).map(|a| a.hlo_ops).unwrap_or(0);
+            s.row(&[
+                name.clone(),
+                format.clone(),
+                format!("{:?}", m.batches(&format)),
+                ops.to_string(),
+                format!("{}", m.param_bytes / 1024),
+            ]);
+        }
+    }
+    s.print();
+
+    // F1/D2: automated pipeline wall-clock per stage, per model
+    println!("\n=== F1/D2: automated pipeline stage timings (Figure 2; 'weeks -> minutes') ===\n");
+    let config = PlatformConfig { auto_batches: Some(vec![1, 8]), profiler_iters: 4, ..Default::default() };
+    let platform = Platform::init(std::path::Path::new("artifacts"), None, wall(), config)?;
+    let mut w = Table::new(&["model", "register(ms)", "convert+validate(ms)", "profile(ms)", "total(ms)", "profile rows"]);
+    let mut grand_total = 0.0;
+    for family in store.models.keys() {
+        let manifest = store.model(family)?;
+        let yaml = format!(
+            "name: d2-{family}\nfamily: {family}\ntask: {}\naccuracy: {}\nconvert: true\nprofile: true\n",
+            manifest.task, manifest.claimed_accuracy
+        );
+        let report = platform.publish(&yaml, format!("{family}-weights").as_bytes())?;
+        anyhow::ensure!(report.conversion.as_ref().unwrap().all_validated());
+        grand_total += report.total_ms();
+        w.row(&[
+            family.clone(),
+            format!("{:.1}", report.register_ms),
+            format!("{:.1}", report.convert_ms),
+            format!("{:.1}", report.profile_ms),
+            format!("{:.1}", report.total_ms()),
+            report.profiles_recorded.to_string(),
+        ]);
+    }
+    w.print();
+    println!(
+        "\nwhole zoo published, converted, validated and profiled in {:.1} s total \
+         (the paper's manual baseline: days-to-weeks per model)",
+        grand_total / 1000.0
+    );
+    platform.shutdown();
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! §Perf micro-bench — L3 hot path: raw engine dispatch latency
+//! (channel round-trip + literal conversion + PJRT execute) per model and
+//! batch size. This is the floor under every serving-instance execution;
+//! the before/after numbers live in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench engine_micro`
+
+use std::sync::Arc;
+
+use mlmodelci::profiler::example_input;
+use mlmodelci::runtime::engine::EngineHandle;
+use mlmodelci::runtime::{ArtifactStore, Tensor};
+use mlmodelci::util::benchkit::{bench, Table};
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::load(std::path::Path::new("artifacts"))?);
+    let engine = EngineHandle::spawn("micro");
+
+    println!("=== engine_micro: raw execute dispatch cost (L3 hot path floor) ===\n");
+    let mut t = Table::new(&["model", "format", "batch", "mean(ms)", "p50(ms)", "min(ms)", "disp/s", "weights(KiB)"]);
+    for family in ["mlp_tabular", "textcnn", "resnet_mini", "bert_tiny"] {
+        let m = store.model(family)?;
+        let weights = store.load_weights(m)?;
+        let wkib = m.param_bytes / 1024;
+        for (format, batch) in [("reference", 1usize), ("reference", 32)] {
+            let entry = m.artifact(format, batch).unwrap();
+            let exe = engine.load(&store.hlo_path(entry), &weights, batch)?;
+            let single = example_input(m, 42);
+            let input = Tensor::stack(&vec![single; batch]);
+            let iters = if family == "resnet_mini" && batch == 32 { 30 } else { 200 };
+            let r = bench(&format!("{family}/{format}/b{batch}"), 5, iters, || {
+                exe.run(&input).unwrap()
+            });
+            t.row(&[
+                family.to_string(),
+                format.to_string(),
+                batch.to_string(),
+                format!("{:.3}", r.mean_ms),
+                format!("{:.3}", r.p50_ms),
+                format!("{:.3}", r.min_ms),
+                format!("{:.0}", 1000.0 / r.mean_ms),
+                wkib.to_string(),
+            ]);
+            exe.unload();
+        }
+    }
+    t.print();
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Bench F3a/F3b — Figure 3 (left & middle panels): model runtime
+//! performance vs **batch size** and vs **device**.
+//!
+//! Regenerates the paper's profiling curves: throughput rises then
+//! saturates with batch size; latency grows with batch; faster devices
+//! win; the optimized (fused) format beats reference most at small batch.
+//! Shape assertions fail loudly if the reproduction regresses.
+//!
+//! Run: `cargo bench --bench profiling_sweep`
+
+use std::sync::Arc;
+
+use mlmodelci::cluster::Cluster;
+use mlmodelci::profiler::{render_table, ProfileRow, Profiler};
+use mlmodelci::runtime::ArtifactStore;
+use mlmodelci::serving::{Frontend, TRITON_LIKE};
+use mlmodelci::util::clock::wall;
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(ArtifactStore::load(std::path::Path::new("artifacts"))?);
+    let cluster = Arc::new(Cluster::default_demo(wall()));
+    let mut profiler = Profiler::new(cluster.clone(), store.clone());
+    profiler.iters = 8;
+
+    let batches = [1usize, 2, 4, 8, 16, 32];
+    let devices = ["node1/t40", "node2/v1000", "node2/a1001"];
+
+    println!("=== F3a/F3b: six-indicator profiling sweep (paper Figure 3, left+middle) ===\n");
+    for model in ["resnet_mini", "bert_tiny"] {
+        let rows = profiler.sweep(
+            model,
+            &["reference", "optimized"],
+            &batches,
+            &devices,
+            &[&TRITON_LIKE],
+            &[Frontend::Grpc],
+        )?;
+        println!("--- {model} ---");
+        println!("{}", render_table(&rows));
+        check_shapes(model, &rows)?;
+    }
+
+    println!("shape checks passed: batching saturates, devices order correctly, fusion wins");
+    cluster.shutdown();
+    Ok(())
+}
+
+/// Assert the qualitative shapes the paper's Figure 3 shows.
+fn check_shapes(model: &str, rows: &[ProfileRow]) -> anyhow::Result<()> {
+    let get = |format: &str, batch: usize, device: &str| -> &ProfileRow {
+        rows.iter()
+            .find(|r| r.combo.format == format && r.combo.batch == batch && r.combo.device == device)
+            .unwrap_or_else(|| panic!("missing row {format}/{batch}/{device}"))
+    };
+    let thr = |r: &ProfileRow| r.indicators.peak_throughput_rps;
+    let lat = |r: &ProfileRow| r.indicators.p50_latency_ms;
+
+    for device in ["node1/t40", "node2/v1000"] {
+        // throughput grows with batch...
+        let t1 = thr(get("reference", 1, device));
+        let t8 = thr(get("reference", 8, device));
+        let t32 = thr(get("reference", 32, device));
+        anyhow::ensure!(t8 > 1.4 * t1, "{model}@{device}: batching should help early ({t1:.0} -> {t8:.0})");
+        anyhow::ensure!(t32 >= t8, "{model}@{device}: throughput should not drop with batch");
+        // ...but flattens (saturation)
+        let early_gain = t8 / t1;
+        let late_gain = t32 / thr(get("reference", 16, device));
+        anyhow::ensure!(
+            late_gain < early_gain,
+            "{model}@{device}: gains must flatten (early x{early_gain:.2}, late x{late_gain:.2})"
+        );
+        // latency grows with batch
+        anyhow::ensure!(lat(get("reference", 32, device)) > lat(get("reference", 1, device)));
+        // fused format wins, most at batch 1
+        let speedup1 = lat(get("reference", 1, device)) / lat(get("optimized", 1, device));
+        let speedup32 = lat(get("reference", 32, device)) / lat(get("optimized", 32, device));
+        anyhow::ensure!(speedup1 > 1.0, "{model}@{device}: optimized must beat reference at b1");
+        anyhow::ensure!(
+            speedup1 >= speedup32 * 0.95,
+            "{model}@{device}: fusion should matter most at small batch ({speedup1:.2} vs {speedup32:.2})"
+        );
+        // memory grows with batch; utilization higher at larger batch
+        anyhow::ensure!(
+            get("reference", 32, device).indicators.memory_mib
+                > get("reference", 1, device).indicators.memory_mib
+        );
+    }
+    // device ordering: t4 < v100 < a100 in throughput at batch 8
+    let t4 = thr(get("reference", 8, "node1/t40"));
+    let v100 = thr(get("reference", 8, "node2/v1000"));
+    let a100 = thr(get("reference", 8, "node2/a1001"));
+    anyhow::ensure!(t4 < v100 && v100 < a100, "{model}: device ordering t4 {t4:.0} < v100 {v100:.0} < a100 {a100:.0}");
+    Ok(())
+}

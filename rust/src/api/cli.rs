@@ -1,0 +1,123 @@
+//! CLI toolkit (§1: "a well-designed command line (CLI) toolkit").
+//!
+//! Hand-rolled argument parsing (clap is unavailable offline). The CLI
+//! fronts the same Platform APIs as REST:
+//!
+//! ```text
+//! mlmodelci serve    [--addr 127.0.0.1:8000] [--artifacts DIR] [--data DIR]
+//! mlmodelci publish  --yaml reg.yml --weights w.bin
+//! mlmodelci list     [--status profiled]
+//! mlmodelci profile  --name NAME
+//! mlmodelci deploy   --name NAME [--system triton-like] [--device ID]
+//! mlmodelci recommend --name NAME [--p99 50]
+//! mlmodelci delete   --name NAME
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+/// Parse argv (without the binary name).
+pub fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let Some(command) = argv.first() else {
+        return Err(usage());
+    };
+    if command.starts_with("--") {
+        return Err(usage());
+    }
+    let mut flags = BTreeMap::new();
+    let mut i = 1;
+    while i < argv.len() {
+        let arg = &argv[i];
+        let Some(key) = arg.strip_prefix("--") else {
+            return Err(format!("unexpected positional argument '{arg}'\n{}", usage()));
+        };
+        // --flag=value or --flag value or boolean --flag
+        if let Some((k, v)) = key.split_once('=') {
+            flags.insert(k.to_string(), v.to_string());
+            i += 1;
+        } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+            flags.insert(key.to_string(), argv[i + 1].clone());
+            i += 2;
+        } else {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(Args { command: command.clone(), flags })
+}
+
+pub fn usage() -> String {
+    "usage: mlmodelci <command> [flags]\n\
+     commands:\n\
+     \x20 serve      start the REST API server (--addr, --artifacts, --data)\n\
+     \x20 publish    register + convert + profile a model (--yaml, --weights)\n\
+     \x20 list       list models (--status, --task, --name)\n\
+     \x20 profile    (re)profile a model (--name)\n\
+     \x20 deploy     deploy a model as MLaaS (--name, --system, --device, --format)\n\
+     \x20 recommend  cost-effective deployment under an SLO (--name, --p99)\n\
+     \x20 delete     remove a model (--name)\n\
+     \x20 demo       run the end-to-end demo pipeline\n\
+     \x20 features   print the Table-1 capability matrix\n\
+     flags: --artifacts DIR (default ./artifacts), --data DIR (default in-memory),\n\
+     \x20      --log-level error|warn|info|debug"
+        .to_string()
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, String> {
+        self.get(key).ok_or_else(|| format!("missing required flag --{key}\n{}", usage()))
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let args = parse_args(&argv(&["publish", "--yaml", "m.yml", "--weights", "w.bin"])).unwrap();
+        assert_eq!(args.command, "publish");
+        assert_eq!(args.get("yaml"), Some("m.yml"));
+        assert_eq!(args.require("weights").unwrap(), "w.bin");
+        assert!(args.require("ghost").is_err());
+    }
+
+    #[test]
+    fn equals_and_boolean_flags() {
+        let args = parse_args(&argv(&["serve", "--addr=0.0.0.0:9000", "--verbose"])).unwrap();
+        assert_eq!(args.get("addr"), Some("0.0.0.0:9000"));
+        assert_eq!(args.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn numeric_flag_parsing() {
+        let args = parse_args(&argv(&["recommend", "--p99", "50.5"])).unwrap();
+        assert_eq!(args.get_f64("p99", 0.0), 50.5);
+        assert_eq!(args.get_f64("missing", 7.0), 7.0);
+    }
+
+    #[test]
+    fn rejects_empty_and_positional() {
+        assert!(parse_args(&[]).is_err());
+        assert!(parse_args(&argv(&["--flag"])).is_err());
+        assert!(parse_args(&argv(&["list", "stray"])).is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Minimal HTTP/1.1 server on `std::net` — the substrate under the
+//! RESTful web interface (no hyper/axum offline).
+//!
+//! Supports request-line + header parsing, Content-Length bodies, and a
+//! handler function per server. One thread per connection (the API is a
+//! control plane, not the inference hot path).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Query string (after '?'), raw.
+    pub query: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Split the path into segments, e.g. "/models/abc" -> ["models", "abc"].
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    /// Parse a query parameter.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == key).then_some(v)
+        })
+    }
+}
+
+/// Response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
+        Response { status, content_type: "application/json", body: body.to_string().into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.as_bytes().to_vec() }
+    }
+
+    pub fn not_found() -> Response {
+        Response::json(404, &crate::util::json::Json::obj().with("error", "not found"))
+    }
+
+    pub fn bad_request(msg: &str) -> Response {
+        Response::json(400, &crate::util::json::Json::obj().with("error", msg))
+    }
+
+    pub fn error(msg: &str) -> Response {
+        Response::json(500, &crate::util::json::Json::obj().with("error", msg))
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            503 => "Service Unavailable",
+            _ => "Internal Server Error",
+        }
+    }
+}
+
+/// Read one request from a stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+    const MAX_BODY: usize = 256 * 1024 * 1024;
+    if len > MAX_BODY {
+        bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request { method, path, query, headers, body })
+}
+
+/// Write a response.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        resp.status,
+        resp.status_text(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// A running HTTP server.
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` ("127.0.0.1:0" for an ephemeral port) and serve
+    /// `handler` until `stop` is called.
+    pub fn serve(
+        addr: &str,
+        handler: impl Fn(&Request) -> Response + Send + Sync + 'static,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handler = Arc::new(handler);
+        let handle = std::thread::Builder::new().name("http-accept".into()).spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((mut conn, _)) => {
+                        conn.set_nonblocking(false).ok();
+                        let handler = handler.clone();
+                        std::thread::spawn(move || {
+                            let resp = match read_request(&mut conn) {
+                                Ok(req) => handler(&req),
+                                Err(e) => Response::bad_request(&format!("{e}")),
+                            };
+                            let _ = write_response(&mut conn, &resp);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+        Ok(HttpServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Tiny blocking HTTP client for tests and the CLI.
+pub fn http_request(addr: &std::net::SocketAddr, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body_bytes = body.unwrap_or("").as_bytes();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nhost: localhost\r\ncontent-length: {}\r\ncontent-type: application/json\r\n\r\n",
+        body_bytes.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.write_all(body_bytes)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line: {status_line}"))?;
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn roundtrip_get_and_post() {
+        let mut server = HttpServer::serve("127.0.0.1:0", |req| match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => Response::json(200, &Json::obj().with("ok", true)),
+            ("POST", "/echo") => Response::text(200, &req.body_text()),
+            _ => Response::not_found(),
+        })
+        .unwrap();
+        let (status, body) = http_request(&server.addr, "GET", "/health", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("true"));
+        let (status, body) = http_request(&server.addr, "POST", "/echo", Some("hello world")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "hello world");
+        let (status, _) = http_request(&server.addr, "GET", "/ghost", None).unwrap();
+        assert_eq!(status, 404);
+        server.stop();
+    }
+
+    #[test]
+    fn segments_and_query() {
+        let req = Request {
+            method: "GET".into(),
+            path: "/models/abc/profiles".into(),
+            query: "status=serving&limit=5".into(),
+            headers: Default::default(),
+            body: vec![],
+        };
+        assert_eq!(req.segments(), vec!["models", "abc", "profiles"]);
+        assert_eq!(req.query_param("status"), Some("serving"));
+        assert_eq!(req.query_param("limit"), Some("5"));
+        assert_eq!(req.query_param("missing"), None);
+    }
+
+    #[test]
+    fn concurrent_requests_served() {
+        let mut server =
+            HttpServer::serve("127.0.0.1:0", |_| Response::text(200, "ok")).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let (status, _) = http_request(&addr, "GET", "/x", None).unwrap();
+                    assert_eq!(status, 200);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+}

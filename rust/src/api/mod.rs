@@ -1,0 +1,7 @@
+//! API layer: HTTP server substrate, REST routes, CLI, Table-1 feature
+//! matrix.
+
+pub mod cli;
+pub mod features;
+pub mod http;
+pub mod rest;

@@ -1,0 +1,350 @@
+//! RESTful API (§1: "a well-designed command line toolkit and web
+//! interface") — the routes the paper's web UI (Figure 4a) sits on.
+//!
+//! Routes:
+//!   GET    /health                     — liveness
+//!   GET    /models                     — list (query: name, task, status)
+//!   POST   /models                     — register {yaml, weights_b64}
+//!   GET    /models/{id}                — full document
+//!   PUT    /models/{id}                — update basic info
+//!   DELETE /models/{id}                — delete
+//!   POST   /models/{id}/convert        — run conversion now
+//!   POST   /models/{id}/profile        — enqueue profiling grid
+//!   POST   /models/{id}/deploy         — deploy {system, device?, format?, frontend?}
+//!   GET    /models/{id}/recommend?p99= — cost-effective deployment choice
+//!   POST   /services/{name}:infer      — inference {input: [...]}
+//!   GET    /services                   — running services + stats
+//!   GET    /metrics                    — prometheus-style exposition
+
+use std::sync::Arc;
+
+use crate::controller::Placement;
+use crate::dispatcher::DeploymentSpec;
+use crate::profiler::example_input;
+use crate::runtime::{DType, Tensor};
+use crate::serving::{Frontend, ALL_SYSTEMS};
+use crate::util::base64;
+use crate::util::json::Json;
+use crate::workflow::Platform;
+
+use super::http::{Request, Response};
+
+/// Route a request against the platform.
+pub fn route(platform: &Arc<Platform>, req: &Request) -> Response {
+    let segs = req.segments();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["health"]) => Response::json(200, &Json::obj().with("ok", true)),
+        ("GET", ["metrics"]) => {
+            // scrape on demand so the exposition is always fresh
+            platform.exporter.scrape();
+            platform.monitor.scrape();
+            let mut text = platform.exporter.expose();
+            text.push_str(&platform.monitor.expose());
+            Response::text(200, &text)
+        }
+        ("GET", ["models"]) => list_models(platform, req),
+        ("POST", ["models"]) => register_model(platform, req),
+        ("GET", ["models", id]) => match platform.hub.get(id) {
+            Ok(doc) => Response::json(200, &doc),
+            Err(_) => Response::not_found(),
+        },
+        ("PUT", ["models", id]) => match Json::parse(&req.body_text()) {
+            Ok(fields) => match platform.housekeeper.update(id, &fields) {
+                Ok(()) => Response::json(200, &Json::obj().with("updated", true)),
+                Err(e) => Response::bad_request(&format!("{e:#}")),
+            },
+            Err(e) => Response::bad_request(&format!("{e}")),
+        },
+        ("DELETE", ["models", id]) => match platform.housekeeper.delete(id) {
+            Ok(true) => Response::json(200, &Json::obj().with("deleted", true)),
+            Ok(false) => Response::not_found(),
+            Err(e) => Response::error(&format!("{e:#}")),
+        },
+        ("POST", ["models", id, "convert"]) => {
+            match platform.converter.convert(&platform.hub, id, platform.config.auto_batches.as_deref()) {
+                Ok(report) => Response::json(
+                    200,
+                    &Json::obj()
+                        .with("validated", report.all_validated())
+                        .with("variants", report.variants.len())
+                        .with("total_ms", report.total_ms),
+                ),
+                Err(e) => Response::bad_request(&format!("{e:#}")),
+            }
+        }
+        ("POST", ["models", id, "profile"]) => profile_model(platform, id),
+        ("POST", ["models", id, "deploy"]) => deploy_model(platform, id, req),
+        ("GET", ["models", id, "recommend"]) => {
+            let slo: f64 = req.query_param("p99").and_then(|v| v.parse().ok()).unwrap_or(1e9);
+            match platform.controller.recommend_deployment(id, slo) {
+                Ok(Some(rec)) => Response::json(200, &rec),
+                Ok(None) => Response::json(200, &Json::obj().with("recommendation", Json::Null)),
+                Err(e) => Response::bad_request(&format!("{e:#}")),
+            }
+        }
+        ("GET", ["services"]) => {
+            let stats = platform.monitor.service_stats(10_000.0);
+            let items: Vec<Json> = stats
+                .iter()
+                .map(|s| {
+                    Json::obj()
+                        .with("name", s.name.as_str())
+                        .with("device", s.device.as_str())
+                        .with("requests_total", s.requests_total)
+                        .with("throughput_rps", s.throughput_rps.unwrap_or(0.0))
+                        .with("queue_depth", s.queue_depth)
+                        .with("memory_mib", s.memory_mib)
+                })
+                .collect();
+            Response::json(200, &Json::Arr(items))
+        }
+        ("POST", ["services", rest]) if rest.ends_with(":infer") => {
+            let name = rest.trim_end_matches(":infer");
+            infer(platform, name, req)
+        }
+        _ => Response::not_found(),
+    }
+}
+
+fn list_models(platform: &Arc<Platform>, req: &Request) -> Response {
+    match platform.housekeeper.retrieve(req.query_param("name"), req.query_param("task"), req.query_param("status")) {
+        Ok(docs) => {
+            // summary view: basic info only
+            let items: Vec<Json> = docs
+                .iter()
+                .map(|d| {
+                    Json::obj()
+                        .with("id", d.get("_id").cloned().unwrap_or(Json::Null))
+                        .with("name", d.get("name").cloned().unwrap_or(Json::Null))
+                        .with("task", d.get("task").cloned().unwrap_or(Json::Null))
+                        .with("status", d.get("status").cloned().unwrap_or(Json::Null))
+                        .with("accuracy", d.get("accuracy").cloned().unwrap_or(Json::Null))
+                })
+                .collect();
+            Response::json(200, &Json::Arr(items))
+        }
+        Err(e) => Response::error(&format!("{e:#}")),
+    }
+}
+
+fn register_model(platform: &Arc<Platform>, req: &Request) -> Response {
+    let body = match Json::parse(&req.body_text()) {
+        Ok(b) => b,
+        Err(e) => return Response::bad_request(&format!("{e}")),
+    };
+    let Some(yaml_text) = body.get("yaml").and_then(Json::as_str) else {
+        return Response::bad_request("missing 'yaml' field");
+    };
+    let weights = match body.get("weights_b64").and_then(Json::as_str) {
+        Some(b64) => match base64::decode(b64) {
+            Ok(w) => w,
+            Err(e) => return Response::bad_request(&format!("weights_b64: {e}")),
+        },
+        None => Vec::new(),
+    };
+    // full automation through the platform (register+convert+profile)
+    match platform.publish(yaml_text, &weights) {
+        Ok(report) => Response::json(
+            201,
+            &Json::obj()
+                .with("id", report.model_id.as_str())
+                .with("register_ms", report.register_ms)
+                .with("convert_ms", report.convert_ms)
+                .with("profile_ms", report.profile_ms)
+                .with("profiles_recorded", report.profiles_recorded),
+        ),
+        Err(e) => Response::bad_request(&format!("{e:#}")),
+    }
+}
+
+fn profile_model(platform: &Arc<Platform>, id: &str) -> Response {
+    let Ok(doc) = platform.hub.get(id) else { return Response::not_found() };
+    let family = doc.get("family").and_then(Json::as_str).unwrap_or_default().to_string();
+    let Ok(manifest) = platform.store.model(&family) else {
+        return Response::bad_request(&format!("unknown family {family}"));
+    };
+    let batches = manifest.batches("reference");
+    let result = platform.controller.enqueue_profiling(
+        id,
+        &family,
+        &["reference", "optimized"],
+        &batches,
+        ALL_SYSTEMS,
+        &[Frontend::Grpc],
+        Placement::Workers,
+    );
+    match result {
+        Ok(()) => {
+            platform.controller.run_until_drained(10_000, 0.0);
+            match platform.controller.flush_results() {
+                Ok(n) => Response::json(200, &Json::obj().with("profiles_recorded", n)),
+                Err(e) => Response::error(&format!("{e:#}")),
+            }
+        }
+        Err(e) => Response::bad_request(&format!("{e:#}")),
+    }
+}
+
+fn deploy_model(platform: &Arc<Platform>, id: &str, req: &Request) -> Response {
+    let body = Json::parse(&req.body_text()).unwrap_or(Json::obj());
+    let spec = DeploymentSpec {
+        device: body.get("device").and_then(Json::as_str).map(str::to_string),
+        system: body.get("system").and_then(Json::as_str).unwrap_or("triton-like").to_string(),
+        format: body.get("format").and_then(Json::as_str).map(str::to_string),
+        frontend: body
+            .get("frontend")
+            .and_then(Json::as_str)
+            .and_then(Frontend::from_str)
+            .unwrap_or(Frontend::Grpc),
+        max_queue: body.get("max_queue").and_then(Json::as_usize).unwrap_or(256),
+    };
+    match platform.dispatcher.deploy(&platform.hub, id, &spec) {
+        Ok(svc) => Response::json(
+            201,
+            &Json::obj()
+                .with("service", svc.model_name.as_str())
+                .with("device", svc.device_id.as_str())
+                .with("system", svc.system_name)
+                .with("format", svc.format.as_str())
+                .with("container", svc.container.id.as_str()),
+        ),
+        Err(e) => Response::bad_request(&format!("{e:#}")),
+    }
+}
+
+fn infer(platform: &Arc<Platform>, name: &str, req: &Request) -> Response {
+    let Some(svc) = platform.dispatcher.find(name) else { return Response::not_found() };
+    let body = Json::parse(&req.body_text()).unwrap_or(Json::obj());
+    // find the model family to know the input shape/dtype
+    let Ok(Some(doc)) = platform.hub.find_by_name(name) else { return Response::not_found() };
+    let family = doc.get("family").and_then(Json::as_str).unwrap_or_default();
+    let Ok(manifest) = platform.store.model(family) else {
+        return Response::error("family missing from manifest");
+    };
+    let input = match body.get("input").and_then(Json::as_arr) {
+        Some(values) => {
+            let n: usize = manifest.input_shape.iter().product();
+            if values.len() != n {
+                return Response::bad_request(&format!("input must have {n} values"));
+            }
+            match manifest.input_dtype {
+                DType::F32 => {
+                    let vals: Vec<f32> =
+                        values.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+                    Tensor::from_f32(&manifest.input_shape, &vals)
+                }
+                DType::I32 => {
+                    let vals: Vec<i32> =
+                        values.iter().map(|v| v.as_i64().unwrap_or(0) as i32).collect();
+                    Tensor::from_i32(&manifest.input_shape, &vals)
+                }
+            }
+        }
+        None => example_input(manifest, 1),
+    };
+    match svc.infer(input) {
+        Ok(reply) => {
+            let logits: Vec<Json> = reply.output.to_f32().iter().map(|&v| Json::Num(v as f64)).collect();
+            Response::json(
+                200,
+                &Json::obj()
+                    .with("output", Json::Arr(logits))
+                    .with("latency_ms", reply.timing.total_ms())
+                    .with("batch", reply.timing.batch),
+            )
+        }
+        Err(e) => Response::error(&format!("{e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::http::{http_request, HttpServer};
+    use crate::util::clock::wall;
+    use crate::workflow::PlatformConfig;
+
+    const YAML: &str = "name: rest-mlp\\nfamily: mlp_tabular\\ntask: tabular\\naccuracy: 0.7\\nconvert: true\\nprofile: false\\n";
+
+    fn server() -> Option<(HttpServer, Arc<Platform>)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let config = PlatformConfig { auto_batches: Some(vec![1, 2]), profiler_iters: 2, ..Default::default() };
+        let platform = Arc::new(Platform::init(&dir, None, wall(), config).unwrap());
+        let p2 = platform.clone();
+        let server = HttpServer::serve("127.0.0.1:0", move |req| route(&p2, req)).unwrap();
+        Some((server, platform))
+    }
+
+    #[test]
+    fn full_rest_lifecycle() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        // health + empty list
+        assert_eq!(http_request(&addr, "GET", "/health", None).unwrap().0, 200);
+        let (_, body) = http_request(&addr, "GET", "/models", None).unwrap();
+        assert_eq!(body, "[]");
+        // register (runs conversion; profiling off in YAML)
+        let weights_b64 = base64::encode(b"some-weights");
+        let req_body = Json::obj()
+            .with("yaml", YAML.replace("\\n", "\n"))
+            .with("weights_b64", weights_b64)
+            .to_string();
+        let (status, body) = http_request(&addr, "POST", "/models", Some(&req_body)).unwrap();
+        assert_eq!(status, 201, "{body}");
+        let created = Json::parse(&body).unwrap();
+        let id = created.get("id").unwrap().as_str().unwrap().to_string();
+        // get document
+        let (status, body) = http_request(&addr, "GET", &format!("/models/{id}"), None).unwrap();
+        assert_eq!(status, 200);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("status").unwrap().as_str(), Some("converted"));
+        // update
+        let (status, _) = http_request(&addr, "PUT", &format!("/models/{id}"), Some(r#"{"accuracy": 0.75}"#)).unwrap();
+        assert_eq!(status, 200);
+        // deploy
+        let (status, body) =
+            http_request(&addr, "POST", &format!("/models/{id}/deploy"), Some(r#"{"system": "triton-like"}"#)).unwrap();
+        assert_eq!(status, 201, "{body}");
+        // infer with default input
+        let (status, body) = http_request(&addr, "POST", "/services/rest-mlp:infer", Some("{}")).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let reply = Json::parse(&body).unwrap();
+        assert_eq!(reply.get("output").unwrap().as_arr().unwrap().len(), 8);
+        // services listing reflects traffic
+        platform.monitor.scrape();
+        let (_, body) = http_request(&addr, "GET", "/services", None).unwrap();
+        assert!(body.contains("rest-mlp"));
+        // metrics exposition
+        let (_, metrics) = http_request(&addr, "GET", "/metrics", None).unwrap();
+        assert!(metrics.contains("device_utilization"));
+        // delete
+        let (status, _) = http_request(&addr, "DELETE", &format!("/models/{id}"), None).unwrap();
+        assert_eq!(status, 200);
+        let (_, body) = http_request(&addr, "GET", "/models", None).unwrap();
+        assert_eq!(body, "[]");
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn rest_error_paths() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        assert_eq!(http_request(&addr, "GET", "/models/ffffffffffffffffffffffff", None).unwrap().0, 404);
+        assert_eq!(http_request(&addr, "POST", "/models", Some("not json")).unwrap().0, 400);
+        assert_eq!(http_request(&addr, "POST", "/models", Some("{}")).unwrap().0, 400);
+        assert_eq!(http_request(&addr, "POST", "/services/ghost:infer", Some("{}")).unwrap().0, 404);
+        assert_eq!(http_request(&addr, "PATCH", "/models", None).unwrap().0, 404);
+        platform.shutdown();
+        server.stop();
+    }
+}

@@ -1,0 +1,172 @@
+//! Cluster topology: nodes of devices plus lookup/placement helpers.
+//!
+//! The paper's demo testbed is a small heterogeneous GPU cluster; ours is
+//! one real CPU-host device plus configurable simulated accelerators.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::engine::EngineHandle;
+use crate::util::clock::SharedClock;
+
+use super::device::Device;
+
+/// A machine holding devices.
+pub struct Node {
+    pub name: String,
+    pub devices: Vec<Arc<Device>>,
+}
+
+/// The whole cluster.
+///
+/// Every device owns its own XLA executor thread (mirroring independent
+/// GPU streams/contexts): work on one device never serializes behind
+/// another device's kernels — which is what makes the controller's
+/// idle-worker profiling actually harmless to online serving (C1).
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    engines: Vec<(String, EngineHandle)>,
+    clock: SharedClock,
+}
+
+impl Cluster {
+    /// Build a cluster from a spec like `[("node0", &["cpu-host", "t4"]), ...]`.
+    pub fn build(spec: &[(&str, &[&str])], clock: SharedClock) -> Result<Cluster> {
+        let mut nodes = Vec::new();
+        let mut engines = Vec::new();
+        for (node_name, kinds) in spec {
+            let mut devices = Vec::new();
+            for (i, kind) in kinds.iter().enumerate() {
+                let id = format!("{node_name}/{kind}{i}");
+                let dev = if *kind == "cpu-host" {
+                    Device::cpu_host(&id, clock.clone())
+                } else {
+                    Device::simulated(&id, kind, clock.clone())?
+                };
+                engines.push((id.clone(), EngineHandle::spawn(&id.replace('/', "-"))));
+                devices.push(dev);
+            }
+            nodes.push(Node { name: node_name.to_string(), devices });
+        }
+        Ok(Cluster { nodes, engines, clock })
+    }
+
+    /// The default demo topology: one host node + two GPU worker nodes
+    /// (mirrors the paper's "serving cluster with idle workers").
+    pub fn default_demo(clock: SharedClock) -> Cluster {
+        Cluster::build(
+            &[
+                ("node0", &["cpu-host"]),
+                ("node1", &["t4", "t4"]),
+                ("node2", &["v100", "a100"]),
+            ],
+            clock,
+        )
+        .expect("default topology is valid")
+    }
+
+    pub fn clock(&self) -> &SharedClock {
+        &self.clock
+    }
+
+    pub fn devices(&self) -> impl Iterator<Item = &Arc<Device>> {
+        self.nodes.iter().flat_map(|n| n.devices.iter())
+    }
+
+    pub fn device(&self, id: &str) -> Result<&Arc<Device>> {
+        self.devices().find(|d| d.id == id).ok_or_else(|| anyhow!("no device '{id}'"))
+    }
+
+    /// The executor thread owned by a device.
+    pub fn engine_for(&self, device_id: &str) -> Result<&EngineHandle> {
+        self.engines
+            .iter()
+            .find(|(id, _)| id == device_id)
+            .map(|(_, e)| e)
+            .ok_or_else(|| anyhow!("no device '{device_id}'"))
+    }
+
+    /// The leader engine (first device\'s executor) — used by the
+    /// converter for compile-and-validate work off the serving path.
+    pub fn leader_engine(&self) -> &EngineHandle {
+        &self.engines[0].1
+    }
+
+    /// Devices grouped by model name ("t4" -> [...]).
+    pub fn by_kind(&self) -> BTreeMap<String, Vec<&Arc<Device>>> {
+        let mut map: BTreeMap<String, Vec<&Arc<Device>>> = BTreeMap::new();
+        for d in self.devices() {
+            map.entry(d.model_name.clone()).or_default().push(d);
+        }
+        map
+    }
+
+    /// Devices whose utilization is below `threshold` (the controller's
+    /// idle test, §3.7).
+    pub fn idle_devices(&self, threshold: f64) -> Vec<&Arc<Device>> {
+        self.devices().filter(|d| d.utilization() < threshold).collect()
+    }
+
+    pub fn shutdown(&self) {
+        for (_, engine) in &self.engines {
+            engine.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::virtual_clock;
+
+    #[test]
+    fn build_and_lookup() {
+        let clock = virtual_clock();
+        let c = Cluster::default_demo(clock);
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.devices().count(), 5);
+        assert!(c.device("node1/t40").is_ok());
+        assert!(c.device("node1/t41").is_ok());
+        assert!(c.device("nope").is_err());
+        let kinds = c.by_kind();
+        assert_eq!(kinds["t4"].len(), 2);
+        assert_eq!(kinds["cpu-host"].len(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn engine_for_maps_device_to_node() {
+        let clock = virtual_clock();
+        let c = Cluster::default_demo(clock);
+        assert!(c.engine_for("node2/a1001").is_ok());
+        assert!(c.engine_for("ghost").is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn idle_devices_follow_utilization() {
+        let clock = virtual_clock();
+        let c = Cluster::default_demo(clock.clone());
+        assert_eq!(c.idle_devices(0.4).len(), 5, "everything starts idle");
+        // make one device busy
+        clock.advance_ms(10_000.0);
+        let dev = c.device("node1/t40").unwrap();
+        for _ in 0..10 {
+            clock.advance_ms(900.0);
+            dev.record_busy(900.0);
+            clock.advance_ms(100.0);
+        }
+        let idle = c.idle_devices(0.4);
+        assert_eq!(idle.len(), 4);
+        assert!(idle.iter().all(|d| d.id != "node1/t40"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn bad_topology_rejected() {
+        let clock = virtual_clock();
+        assert!(Cluster::build(&[("n", &["warp-drive"])], clock).is_err());
+    }
+}

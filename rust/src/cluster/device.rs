@@ -1,0 +1,290 @@
+//! Devices: one *real* CPU PJRT device plus simulated GPUs.
+//!
+//! Every device tracks a memory ledger and a busy-interval window so the
+//! node exporter can report the paper's utilization and memory metrics.
+//! Simulated devices execute numerics on the shared CPU engine but report
+//! latencies from the analytic [`PerfSpec`] — the substitution that makes
+//! Figure 3's device axis reproducible on a CPU-only sandbox.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::util::clock::SharedClock;
+
+use super::perfmodel::{preset, PerfSpec, WorkloadCost};
+
+/// What backs a device's timing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// Real execution on the host CPU via PJRT; measured latencies.
+    CpuHost,
+    /// Simulated accelerator; modeled latencies, real numerics.
+    SimGpu,
+}
+
+/// Sliding window of busy intervals for utilization accounting.
+#[derive(Debug, Default)]
+struct BusyWindow {
+    /// (start_ms, end_ms) of completed busy intervals.
+    intervals: VecDeque<(f64, f64)>,
+}
+
+const UTIL_WINDOW_MS: f64 = 10_000.0;
+
+impl BusyWindow {
+    fn record(&mut self, start_ms: f64, end_ms: f64) {
+        self.intervals.push_back((start_ms, end_ms));
+        let horizon = end_ms - UTIL_WINDOW_MS;
+        while let Some(&(_, e)) = self.intervals.front() {
+            if e < horizon {
+                self.intervals.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Fraction of the trailing window spent busy, clamped to [0, 1].
+    fn utilization(&self, now_ms: f64) -> f64 {
+        let from = now_ms - UTIL_WINDOW_MS;
+        let busy: f64 = self
+            .intervals
+            .iter()
+            .map(|&(s, e)| (e.min(now_ms) - s.max(from)).max(0.0))
+            .sum();
+        (busy / UTIL_WINDOW_MS).clamp(0.0, 1.0)
+    }
+}
+
+/// A cluster device.
+pub struct Device {
+    pub id: String,
+    pub kind: DeviceKind,
+    /// Personality: "cpu-host", "t4", "v100", "a100".
+    pub model_name: String,
+    pub spec: PerfSpec,
+    clock: SharedClock,
+    busy: Mutex<BusyWindow>,
+    /// Bytes currently allocated on the device, in KiB to fit an atomic.
+    allocated_kib: AtomicU64,
+}
+
+impl Device {
+    /// Create the real host device.
+    pub fn cpu_host(id: &str, clock: SharedClock) -> Arc<Device> {
+        Arc::new(Device {
+            id: id.to_string(),
+            kind: DeviceKind::CpuHost,
+            model_name: "cpu-host".into(),
+            spec: preset("cpu").unwrap(),
+            clock,
+            busy: Mutex::new(BusyWindow::default()),
+            allocated_kib: AtomicU64::new(0),
+        })
+    }
+
+    /// Create a simulated accelerator of a preset kind ("t4", ...).
+    pub fn simulated(id: &str, kind: &str, clock: SharedClock) -> Result<Arc<Device>> {
+        let Some(spec) = preset(kind) else {
+            bail!("unknown device kind '{kind}'");
+        };
+        Ok(Arc::new(Device {
+            id: id.to_string(),
+            kind: DeviceKind::SimGpu,
+            model_name: kind.to_string(),
+            spec,
+            clock,
+            busy: Mutex::new(BusyWindow::default()),
+            allocated_kib: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn is_simulated(&self) -> bool {
+        self.kind == DeviceKind::SimGpu
+    }
+
+    /// Latency this device charges for one batched inference, given the
+    /// measured CPU time. Simulated devices use the perf model; the host
+    /// device reports what actually happened.
+    pub fn charge_ms(&self, w: &WorkloadCost, batch: usize, measured_cpu_ms: f64) -> f64 {
+        match self.kind {
+            DeviceKind::CpuHost => measured_cpu_ms,
+            DeviceKind::SimGpu => self.spec.latency_ms(w, batch),
+        }
+    }
+
+    /// Record a busy interval ending now (called by serving instances
+    /// after each batch execution).
+    pub fn record_busy(&self, duration_ms: f64) {
+        let now = self.clock.now_ms();
+        self.busy.lock().unwrap().record(now - duration_ms, now);
+    }
+
+    /// Compute utilization over the trailing window, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        self.busy.lock().unwrap().utilization(self.clock.now_ms())
+    }
+
+    /// Try to allocate device memory; fails when over capacity (the
+    /// dispatcher uses this to reject placements that don't fit).
+    pub fn allocate_mib(&self, mib: f64) -> Result<()> {
+        let want_kib = (mib * 1024.0) as u64;
+        let mut current = self.allocated_kib.load(Ordering::SeqCst);
+        loop {
+            let new = current + want_kib;
+            if new as f64 / 1024.0 > self.spec.memory_mib {
+                bail!(
+                    "device {} out of memory: {:.0} MiB requested, {:.0}/{:.0} MiB in use",
+                    self.id,
+                    mib,
+                    current as f64 / 1024.0,
+                    self.spec.memory_mib
+                );
+            }
+            match self.allocated_kib.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return Ok(()),
+                Err(actual) => current = actual,
+            }
+        }
+    }
+
+    pub fn free_mib(&self, mib: f64) {
+        let kib = (mib * 1024.0) as u64;
+        let mut current = self.allocated_kib.load(Ordering::SeqCst);
+        loop {
+            let new = current.saturating_sub(kib);
+            match self.allocated_kib.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return,
+                Err(actual) => current = actual,
+            }
+        }
+    }
+
+    pub fn memory_used_mib(&self) -> f64 {
+        self.allocated_kib.load(Ordering::SeqCst) as f64 / 1024.0
+    }
+
+    pub fn memory_total_mib(&self) -> f64 {
+        self.spec.memory_mib
+    }
+
+    pub fn clock(&self) -> &SharedClock {
+        &self.clock
+    }
+}
+
+impl std::fmt::Debug for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Device")
+            .field("id", &self.id)
+            .field("kind", &self.kind)
+            .field("model", &self.model_name)
+            .field("used_mib", &self.memory_used_mib())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::{virtual_clock, Clock};
+
+    fn workload() -> WorkloadCost {
+        WorkloadCost {
+            flops_per_example: 1e7,
+            activation_bytes_per_example: 1e5,
+            param_bytes: 1e5,
+            kernel_launches: 20.0,
+        }
+    }
+
+    #[test]
+    fn simulated_device_charges_modeled_time() {
+        let clock = virtual_clock();
+        let dev = Device::simulated("gpu0", "t4", clock).unwrap();
+        let w = workload();
+        let charged = dev.charge_ms(&w, 8, 123.0);
+        assert!((charged - dev.spec.latency_ms(&w, 8)).abs() < 1e-12);
+        assert_ne!(charged, 123.0);
+    }
+
+    #[test]
+    fn host_device_charges_measured_time() {
+        let clock = virtual_clock();
+        let dev = Device::cpu_host("cpu0", clock);
+        assert_eq!(dev.charge_ms(&workload(), 8, 3.5), 3.5);
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let clock = virtual_clock();
+        assert!(Device::simulated("x", "quantum9", clock).is_err());
+    }
+
+    #[test]
+    fn utilization_tracks_busy_window() {
+        let clock = virtual_clock();
+        let dev = Device::simulated("gpu0", "v100", clock.clone()).unwrap();
+        assert_eq!(dev.utilization(), 0.0);
+        // be busy 50% of a 10s window
+        clock.advance_ms(10_000.0);
+        for _ in 0..10 {
+            clock.advance_ms(500.0);
+            dev.record_busy(500.0);
+            clock.advance_ms(500.0);
+        }
+        let util = dev.utilization();
+        assert!((util - 0.5).abs() < 0.06, "expected ~0.5, got {util}");
+    }
+
+    #[test]
+    fn utilization_decays_when_idle() {
+        let clock = virtual_clock();
+        let dev = Device::simulated("gpu0", "t4", clock.clone()).unwrap();
+        clock.advance_ms(1_000.0);
+        dev.record_busy(1_000.0);
+        assert!(dev.utilization() > 0.05);
+        clock.advance_ms(60_000.0);
+        assert_eq!(dev.utilization(), 0.0);
+    }
+
+    #[test]
+    fn memory_ledger_enforces_capacity() {
+        let clock = virtual_clock();
+        let dev = Device::simulated("gpu0", "t4", clock).unwrap(); // 15 GiB
+        dev.allocate_mib(10_000.0).unwrap();
+        assert!(dev.allocate_mib(10_000.0).is_err(), "second 10 GiB must not fit");
+        dev.free_mib(10_000.0);
+        dev.allocate_mib(10_000.0).unwrap();
+        assert!((dev.memory_used_mib() - 10_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn concurrent_allocations_respect_capacity() {
+        let clock = virtual_clock();
+        let dev = Device::simulated("gpu0", "t4", clock).unwrap();
+        let dev2 = dev.clone();
+        let total = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let dev = dev2.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    if dev.allocate_mib(100.0).is_ok() {
+                        total.fetch_add(100, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let granted = total.load(Ordering::SeqCst) as f64;
+        assert!(granted <= dev.memory_total_mib());
+        assert!((dev.memory_used_mib() - granted).abs() < 1.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Simulated heterogeneous cluster: real CPU-host device + modeled GPUs.
+
+#[allow(clippy::module_inception)]
+pub mod cluster;
+pub mod device;
+pub mod perfmodel;
+
+pub use cluster::{Cluster, Node};
+pub use device::{Device, DeviceKind};
+pub use perfmodel::{preset, PerfSpec, WorkloadCost};

@@ -1,0 +1,220 @@
+//! Analytic device performance model — how simulated GPUs get their
+//! latencies (DESIGN.md substitution table: "GPUs (T4, V100, …)").
+//!
+//! Modeled per-request latency for a (model, format, batch) combination:
+//!
+//! ```text
+//! t = launches · t_launch                      (kernel dispatch overhead)
+//!   + max( batch · flops / (peak · eff(batch)) ,        (compute roofline)
+//!          (params + batch · activations) / bandwidth )  (memory roofline)
+//! ```
+//!
+//! `eff(batch) = batch / (batch + batch_half)` captures the occupancy ramp
+//! every accelerator shows: small batches underutilize the device, so
+//! throughput grows with batch size until the compute roofline flattens
+//! it — exactly the Figure 3(a) shape. Format matters through `launches`:
+//! the optimized (fused) artifact issues fewer kernels, which is the
+//! TensorRT effect the paper's converter exists to capture.
+
+/// Static description of a device's performance envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfSpec {
+    /// Peak f32 throughput in GFLOP/s.
+    pub peak_gflops: f64,
+    /// Memory bandwidth in GiB/s.
+    pub mem_bw_gibps: f64,
+    /// Per-kernel-launch overhead in ms (dispatch + driver + framework).
+    pub launch_overhead_ms: f64,
+    /// Batch size at which the device reaches 50% occupancy.
+    pub batch_half: f64,
+    /// Device memory capacity in MiB.
+    pub memory_mib: f64,
+    /// Cloud price in $/hour (the paper's cost axis).
+    pub cost_per_hour: f64,
+}
+
+/// Workload description fed to the model (from the artifact manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadCost {
+    pub flops_per_example: f64,
+    pub activation_bytes_per_example: f64,
+    pub param_bytes: f64,
+    pub kernel_launches: f64,
+}
+
+impl PerfSpec {
+    /// Occupancy efficiency in (0, 1] at a given batch size.
+    pub fn efficiency(&self, batch: usize) -> f64 {
+        let b = batch as f64;
+        b / (b + self.batch_half)
+    }
+
+    /// Modeled latency (ms) for one batched inference.
+    pub fn latency_ms(&self, w: &WorkloadCost, batch: usize) -> f64 {
+        let b = batch as f64;
+        let t_launch = w.kernel_launches * self.launch_overhead_ms;
+        let t_compute =
+            b * w.flops_per_example / (self.peak_gflops * 1e9 * self.efficiency(batch)) * 1e3;
+        let t_mem = (w.param_bytes + b * w.activation_bytes_per_example)
+            / (self.mem_bw_gibps * 1024.0 * 1024.0 * 1024.0)
+            * 1e3;
+        t_launch + t_compute.max(t_mem)
+    }
+
+    /// Modeled steady-state throughput (examples/sec) at a batch size.
+    pub fn throughput_eps(&self, w: &WorkloadCost, batch: usize) -> f64 {
+        batch as f64 / (self.latency_ms(w, batch) / 1e3)
+    }
+
+    /// Memory footprint (MiB) of serving a model at a batch size:
+    /// weights + activations + a fixed runtime overhead.
+    pub fn memory_footprint_mib(&self, w: &WorkloadCost, batch: usize) -> f64 {
+        const RUNTIME_OVERHEAD_MIB: f64 = 64.0;
+        (w.param_bytes + batch as f64 * w.activation_bytes_per_example) / (1024.0 * 1024.0)
+            + RUNTIME_OVERHEAD_MIB
+    }
+
+    /// Cost in $ per million examples at a batch size (the paper's
+    /// performance/cost trade-off guideline, §1).
+    pub fn cost_per_million(&self, w: &WorkloadCost, batch: usize) -> f64 {
+        let eps = self.throughput_eps(w, batch);
+        self.cost_per_hour / 3600.0 / eps * 1e6
+    }
+}
+
+/// Catalog of device personalities (paper testbed: Tesla T4/V100 class).
+pub fn preset(kind: &str) -> Option<PerfSpec> {
+    match kind {
+        // Turing inference card — what the paper's demo cluster used.
+        "t4" => Some(PerfSpec {
+            peak_gflops: 8_100.0,
+            mem_bw_gibps: 300.0,
+            launch_overhead_ms: 0.050,
+            batch_half: 4.0,
+            memory_mib: 15_360.0,
+            cost_per_hour: 0.526,
+        }),
+        // Volta training card.
+        "v100" => Some(PerfSpec {
+            peak_gflops: 15_700.0,
+            mem_bw_gibps: 840.0,
+            launch_overhead_ms: 0.040,
+            batch_half: 6.0,
+            memory_mib: 32_768.0,
+            cost_per_hour: 2.48,
+        }),
+        // Ampere flagship (the "newer device" ablation point).
+        "a100" => Some(PerfSpec {
+            peak_gflops: 19_500.0,
+            mem_bw_gibps: 1_450.0,
+            launch_overhead_ms: 0.030,
+            batch_half: 8.0,
+            memory_mib: 40_960.0,
+            cost_per_hour: 3.67,
+        }),
+        // Host CPU envelope (used only for modeled comparisons; the real
+        // cpu-host device reports measured latencies instead).
+        "cpu" => Some(PerfSpec {
+            peak_gflops: 150.0,
+            mem_bw_gibps: 25.0,
+            launch_overhead_ms: 0.010,
+            batch_half: 1.0,
+            memory_mib: 8_192.0,
+            cost_per_hour: 0.20,
+        }),
+        _ => None,
+    }
+}
+
+pub const SIM_KINDS: &[&str] = &["t4", "v100", "a100"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet_like() -> WorkloadCost {
+        // ResNet50-class paper-equivalent costs (see manifest "sim" block)
+        WorkloadCost {
+            flops_per_example: 4.1e9,
+            activation_bytes_per_example: 4.0e7,
+            param_bytes: 1.02e8,
+            kernel_launches: 175.0,
+        }
+    }
+
+    #[test]
+    fn latency_increases_with_batch() {
+        let spec = preset("t4").unwrap();
+        let w = resnet_like();
+        let l1 = spec.latency_ms(&w, 1);
+        let l32 = spec.latency_ms(&w, 32);
+        assert!(l32 > l1, "bigger batches take longer per request: {l1} vs {l32}");
+    }
+
+    #[test]
+    fn throughput_saturates_with_batch() {
+        // Figure 3(a) shape: throughput grows then flattens.
+        let spec = preset("t4").unwrap();
+        let w = resnet_like();
+        let t1 = spec.throughput_eps(&w, 1);
+        let t8 = spec.throughput_eps(&w, 8);
+        let t32 = spec.throughput_eps(&w, 32);
+        assert!(t8 > 1.5 * t1, "batching should help a lot early: {t1} -> {t8}");
+        let gain_late = spec.throughput_eps(&w, 32) / spec.throughput_eps(&w, 16);
+        assert!(gain_late < 1.5, "gains should flatten: x{gain_late}");
+        assert!(t32 > t8);
+    }
+
+    #[test]
+    fn faster_devices_are_faster() {
+        // Figure 3(b) shape: device ordering.
+        let w = resnet_like();
+        let t4 = preset("t4").unwrap().latency_ms(&w, 8);
+        let v100 = preset("v100").unwrap().latency_ms(&w, 8);
+        let a100 = preset("a100").unwrap().latency_ms(&w, 8);
+        assert!(t4 > v100 && v100 > a100, "t4={t4} v100={v100} a100={a100}");
+    }
+
+    #[test]
+    fn fusion_reduces_latency() {
+        // The converter's raison d'être: fewer launches -> faster.
+        let spec = preset("t4").unwrap();
+        let mut w = resnet_like();
+        let reference = spec.latency_ms(&w, 1);
+        w.kernel_launches = 60.0;
+        let optimized = spec.latency_ms(&w, 1);
+        assert!(optimized < reference);
+        // and the effect shrinks as batch grows (compute dominates)
+        let mut w_ref = resnet_like();
+        let ref32 = spec.latency_ms(&w_ref, 32);
+        w_ref.kernel_launches = 60.0;
+        let opt32 = spec.latency_ms(&w_ref, 32);
+        let small_gain = reference / optimized;
+        let large_gain = ref32 / opt32;
+        assert!(small_gain > large_gain, "fusion matters most at small batch");
+    }
+
+    #[test]
+    fn memory_and_cost_move_sensibly() {
+        let spec = preset("v100").unwrap();
+        let w = resnet_like();
+        assert!(spec.memory_footprint_mib(&w, 32) > spec.memory_footprint_mib(&w, 1));
+        // throughput per dollar should improve with batch
+        assert!(spec.cost_per_million(&w, 32) < spec.cost_per_million(&w, 1));
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(preset("tpu-v9000").is_none());
+    }
+
+    #[test]
+    fn efficiency_bounds() {
+        let spec = preset("a100").unwrap();
+        for b in [1usize, 2, 8, 64, 1024] {
+            let e = spec.efficiency(b);
+            assert!(e > 0.0 && e <= 1.0);
+        }
+        assert!(spec.efficiency(64) > spec.efficiency(1));
+    }
+}

@@ -1,0 +1,371 @@
+//! The controller (§3.7) — MLModelCI's key feature (§1: "elastic
+//! evaluation which only utilizes idle workers while maintaining online
+//! service quality").
+//!
+//! Each `tick`:
+//!   1. scrapes the node exporter (hardware) and monitor (containers),
+//!   2. checks the online-QoS guard (p99 over SLO ⇒ pause profiling),
+//!   3. matches queued profiling jobs to devices whose smoothed
+//!      utilization is under the idle threshold,
+//!   4. runs matched jobs (one combination per tick per device — the
+//!      preemption quantum), re-checking idleness mid-stream; violated
+//!      jobs are requeued at the front.
+//!
+//! The controller also answers "where should this model be deployed" via
+//! the profiler's cost-effectiveness recommendation (§3.7 item 2).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::modelhub::{ModelHub, ModelStatus};
+use crate::monitor::{Monitor, NodeExporter};
+use crate::profiler::profiler::Combination;
+use crate::profiler::{record_to_hub, ProfileRow, Profiler};
+
+use crate::util::json::Json;
+
+use super::policy::{IdlePolicy, QosFeed, SloGuard};
+use super::scheduler::{JobQueue, ProfilingJob};
+
+/// What happened during a tick (observable for tests/benches).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Job ran to completion on a device.
+    Completed { device: String, model: String, batch: usize, format: String },
+    /// Profiling paused: online QoS under pressure.
+    QosPaused { p99_ms: f64 },
+    /// A device failed the idle test while holding a matching job.
+    DeviceBusy { device: String, utilization: f64 },
+    /// Job failed (artifact missing etc.) and was dropped.
+    JobFailed { model: String, error: String },
+}
+
+/// The controller.
+pub struct Controller {
+    pub profiler: Arc<Profiler>,
+    pub monitor: Arc<Monitor>,
+    pub exporter: Arc<NodeExporter>,
+    pub hub: Arc<ModelHub>,
+    pub qos: Arc<QosFeed>,
+    pub idle: IdlePolicy,
+    pub slo: SloGuard,
+    queue: std::sync::Mutex<JobQueue>,
+    /// Completed rows not yet flushed to the hub, per model id.
+    results: std::sync::Mutex<Vec<(String, ProfileRow)>>,
+}
+
+impl Controller {
+    pub fn new(
+        profiler: Arc<Profiler>,
+        monitor: Arc<Monitor>,
+        exporter: Arc<NodeExporter>,
+        hub: Arc<ModelHub>,
+        qos: Arc<QosFeed>,
+        idle: IdlePolicy,
+        slo: SloGuard,
+    ) -> Controller {
+        Controller {
+            profiler,
+            monitor,
+            exporter,
+            hub,
+            qos,
+            idle,
+            slo,
+            queue: std::sync::Mutex::new(JobQueue::new()),
+            results: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Enqueue a model's profiling grid (called after conversion).
+    #[allow(clippy::too_many_arguments)]
+    pub fn enqueue_profiling(
+        &self,
+        model_id: &str,
+        family: &str,
+        formats: &[&str],
+        batches: &[usize],
+        systems: &[&'static crate::serving::ServingSystem],
+        frontends: &[crate::serving::Frontend],
+        placement: super::scheduler::Placement,
+    ) -> Result<()> {
+        // moving Converted/Serving -> Profiling is legal; re-enqueues keep state
+        let status = self.hub.status(model_id)?;
+        if status != ModelStatus::Profiling {
+            self.hub.set_status(model_id, ModelStatus::Profiling)?;
+        }
+        self.queue.lock().unwrap().push_grid(model_id, family, formats, batches, systems, frontends, placement);
+        Ok(())
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// One control-loop iteration. Returns the events that happened.
+    pub fn tick(&self) -> Vec<Event> {
+        let mut events = Vec::new();
+        self.exporter.scrape();
+        self.monitor.scrape();
+        let now = self.profiler.cluster().clock().now_ms();
+
+        // online QoS gate
+        if !self.slo.healthy(&self.qos, now) {
+            let p99 = self.qos.p99_over(now, self.slo.window_ms).unwrap_or(f64::NAN);
+            events.push(Event::QosPaused { p99_ms: p99 });
+            return events;
+        }
+
+        // match jobs to idle devices; one quantum per device per tick
+        let devices: Vec<_> = self.profiler.cluster().devices().cloned().collect();
+        for device in devices {
+            let util = self.exporter.mean_utilization(&device.id, self.idle.window_ms);
+            let job = {
+                let mut q = self.queue.lock().unwrap();
+                if !self.idle.is_idle(util) {
+                    // only report busy devices that actually block work
+                    if q.take_for(&device.id, &device.model_name).map(|j| q.requeue_front(j)).is_some() {
+                        events.push(Event::DeviceBusy {
+                            device: device.id.clone(),
+                            utilization: util.unwrap_or(0.0),
+                        });
+                    }
+                    continue;
+                }
+                q.take_for(&device.id, &device.model_name)
+            };
+            let Some(job) = job else { continue };
+            events.push(self.run_job(job, &device.id));
+        }
+        events
+    }
+
+    fn run_job(&self, job: ProfilingJob, device_id: &str) -> Event {
+        let combo = Combination {
+            model: job.family.clone(),
+            format: job.format.clone(),
+            batch: job.batch,
+            device: device_id.to_string(),
+            system: job.system,
+            frontend: job.frontend,
+        };
+        match self.profiler.profile(&combo) {
+            Ok(row) => {
+                self.results.lock().unwrap().push((job.model_id.clone(), row));
+                Event::Completed {
+                    device: device_id.to_string(),
+                    model: job.family,
+                    batch: job.batch,
+                    format: job.format,
+                }
+            }
+            Err(e) => Event::JobFailed { model: job.model_id, error: format!("{e:#}") },
+        }
+    }
+
+    /// Flush accumulated rows to the model documents; marks models whose
+    /// queue fully drained as Profiled.
+    pub fn flush_results(&self) -> Result<usize> {
+        let rows: Vec<(String, ProfileRow)> = self.results.lock().unwrap().drain(..).collect();
+        let n = rows.len();
+        let mut touched: Vec<String> = Vec::new();
+        for (model_id, row) in rows {
+            record_to_hub(&self.hub, &model_id, &[row])?;
+            if !touched.contains(&model_id) {
+                touched.push(model_id);
+            }
+        }
+        if self.pending_jobs() == 0 {
+            for model_id in touched {
+                if self.hub.status(&model_id)? == ModelStatus::Profiling {
+                    self.hub.set_status(&model_id, ModelStatus::Profiled)?;
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    /// Run ticks until the queue drains or `max_ticks` pass, advancing
+    /// the clock by `tick_ms` between iterations.
+    pub fn run_until_drained(&self, max_ticks: usize, tick_ms: f64) -> Vec<Event> {
+        let clock = self.profiler.cluster().clock().clone();
+        let mut all = Vec::new();
+        for _ in 0..max_ticks {
+            if self.pending_jobs() == 0 {
+                break;
+            }
+            all.extend(self.tick());
+            clock.sleep_ms(tick_ms);
+        }
+        all
+    }
+
+    /// §3.7 item 2: recommend a deployment from stored profiles, under a
+    /// p99 SLO, by modeled cost per million requests.
+    pub fn recommend_deployment(&self, model_id: &str, p99_slo_ms: f64) -> Result<Option<Json>> {
+        let doc = self.hub.get(model_id)?;
+        let profiles = doc.get("profiles").and_then(Json::as_arr).unwrap_or(&[]).to_vec();
+        let mut best: Option<(f64, Json)> = None;
+        for p in profiles {
+            let (Some(p99), Some(rps), Some(device)) = (
+                p.get("p99_ms").and_then(Json::as_f64),
+                p.get("peak_throughput_rps").and_then(Json::as_f64),
+                p.get("device").and_then(Json::as_str),
+            ) else {
+                continue;
+            };
+            if p99 > p99_slo_ms || rps <= 0.0 {
+                continue;
+            }
+            let Ok(dev) = self.profiler.cluster().device(device) else { continue };
+            let cost = dev.spec.cost_per_hour / 3600.0 / rps * 1e6;
+            if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
+                let rec = p.clone().with("dollars_per_million", cost);
+                best = Some((cost, rec));
+            }
+        }
+        Ok(best.map(|(_, j)| j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::controller::scheduler::Placement;
+    use crate::dispatcher::Dispatcher;
+    use crate::modelhub::ModelInfo;
+    use crate::runtime::ArtifactStore;
+    use crate::serving::{Frontend, TRITON_LIKE};
+    use crate::storage::Database;
+    use crate::util::clock::wall;
+
+    fn setup() -> Option<(Arc<Controller>, String)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let store = Arc::new(ArtifactStore::load(&dir).ok()?);
+        let cluster = Arc::new(Cluster::default_demo(wall()));
+        let dispatcher = Arc::new(Dispatcher::new(cluster.clone(), store.clone()));
+        let mut profiler = Profiler::new(cluster.clone(), store);
+        profiler.iters = 2;
+        let profiler = Arc::new(profiler);
+        let monitor = Arc::new(Monitor::new(dispatcher));
+        let exporter = Arc::new(NodeExporter::new(cluster));
+        let hub = Arc::new(ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap());
+        let qos = Arc::new(QosFeed::new());
+        let controller = Arc::new(Controller::new(
+            profiler,
+            monitor,
+            exporter,
+            hub.clone(),
+            qos,
+            IdlePolicy::default(),
+            SloGuard::new(100.0, 2_000.0),
+        ));
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "ctl-mlp".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "tabular".into(),
+                    dataset: "s".into(),
+                    accuracy: 0.7,
+                    convert: true,
+                    profile: true,
+                },
+                b"w",
+            )
+            .unwrap();
+        hub.set_status(&id, ModelStatus::Converting).unwrap();
+        hub.set_status(&id, ModelStatus::Converted).unwrap();
+        Some((controller, id))
+    }
+
+    #[test]
+    fn drains_queue_on_idle_cluster_and_marks_profiled() {
+        let Some((ctl, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        ctl.enqueue_profiling(&id, "mlp_tabular", &["optimized"], &[1, 4], &[&TRITON_LIKE], &[Frontend::Grpc], Placement::Any)
+            .unwrap();
+        assert_eq!(ctl.pending_jobs(), 2);
+        let events = ctl.run_until_drained(20, 1.0);
+        assert_eq!(ctl.pending_jobs(), 0);
+        let completed = events.iter().filter(|e| matches!(e, Event::Completed { .. })).count();
+        assert_eq!(completed, 2);
+        ctl.flush_results().unwrap();
+        assert_eq!(ctl.hub.status(&id).unwrap(), ModelStatus::Profiled);
+        let doc = ctl.hub.get(&id).unwrap();
+        assert_eq!(doc.get("profiles").unwrap().as_arr().unwrap().len(), 2);
+        ctl.profiler.cluster().shutdown();
+    }
+
+    #[test]
+    fn busy_devices_are_skipped() {
+        let Some((ctl, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // make every device look busy
+        let clock = ctl.profiler.cluster().clock().clone();
+        clock.sleep_ms(0.0);
+        for dev in ctl.profiler.cluster().devices() {
+            for _ in 0..100 {
+                dev.record_busy(100.0);
+            }
+        }
+        ctl.exporter.scrape();
+        ctl.enqueue_profiling(&id, "mlp_tabular", &["optimized"], &[1], &[&TRITON_LIKE], &[Frontend::Grpc], Placement::Any)
+            .unwrap();
+        let events = ctl.tick();
+        assert!(events.iter().any(|e| matches!(e, Event::DeviceBusy { .. })));
+        assert!(!events.iter().any(|e| matches!(e, Event::Completed { .. })));
+        assert_eq!(ctl.pending_jobs(), 1, "job stays queued");
+        ctl.profiler.cluster().shutdown();
+    }
+
+    #[test]
+    fn qos_violation_pauses_profiling() {
+        let Some((ctl, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let now = ctl.profiler.cluster().clock().now_ms();
+        for _ in 0..100 {
+            ctl.qos.report(now, 500.0); // SLO is 100ms
+        }
+        ctl.enqueue_profiling(&id, "mlp_tabular", &["optimized"], &[1], &[&TRITON_LIKE], &[Frontend::Grpc], Placement::Any)
+            .unwrap();
+        let events = ctl.tick();
+        assert!(matches!(events[0], Event::QosPaused { .. }));
+        assert_eq!(ctl.pending_jobs(), 1);
+        ctl.profiler.cluster().shutdown();
+    }
+
+    #[test]
+    fn recommendation_comes_from_stored_profiles() {
+        let Some((ctl, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        ctl.enqueue_profiling(
+            &id,
+            "mlp_tabular",
+            &["optimized"],
+            &[1, 8],
+            &[&TRITON_LIKE],
+            &[Frontend::Grpc],
+            Placement::Kind("t4".into()),
+        )
+        .unwrap();
+        ctl.run_until_drained(30, 1.0);
+        ctl.flush_results().unwrap();
+        let rec = ctl.recommend_deployment(&id, 1e9).unwrap().expect("recommendation exists");
+        assert!(rec.get("dollars_per_million").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rec.get("device").unwrap().as_str().unwrap().contains("t4"));
+        assert!(ctl.recommend_deployment(&id, 1e-9).unwrap().is_none());
+        ctl.profiler.cluster().shutdown();
+    }
+}

@@ -1,0 +1,11 @@
+//! Controller (§3.7): elastic profiling on idle workers with an online
+//! QoS guard — the paper's key system feature.
+
+#[allow(clippy::module_inception)]
+pub mod controller;
+pub mod policy;
+pub mod scheduler;
+
+pub use controller::{Controller, Event};
+pub use policy::{IdlePolicy, QosFeed, SloGuard};
+pub use scheduler::{JobQueue, Placement, ProfilingJob};

@@ -1,0 +1,148 @@
+//! Controller policies (§3.7): the idle-worker test and the online-QoS
+//! guard that together make profiling *elastic* — "utilizes idle workers
+//! while maintaining online service quality" (§1).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Idle test: a device may host profiling work only when its (smoothed)
+/// compute utilization is below the user-chosen threshold (§3.7's
+/// example: 40%).
+#[derive(Debug, Clone)]
+pub struct IdlePolicy {
+    pub threshold: f64,
+    /// Smoothing window for the exporter's utilization gauge (ms).
+    pub window_ms: f64,
+}
+
+impl Default for IdlePolicy {
+    fn default() -> Self {
+        IdlePolicy { threshold: 0.40, window_ms: 5_000.0 }
+    }
+}
+
+impl IdlePolicy {
+    pub fn is_idle(&self, mean_utilization: Option<f64>) -> bool {
+        match mean_utilization {
+            None => true, // never observed busy -> idle
+            Some(u) => u < self.threshold,
+        }
+    }
+}
+
+/// Online-QoS guard: profiling pauses whenever online p99 over a trailing
+/// window violates the SLO.
+#[derive(Debug)]
+pub struct SloGuard {
+    pub p99_slo_ms: f64,
+    pub window_ms: f64,
+}
+
+impl SloGuard {
+    pub fn new(p99_slo_ms: f64, window_ms: f64) -> SloGuard {
+        SloGuard { p99_slo_ms, window_ms }
+    }
+
+    pub fn healthy(&self, feed: &QosFeed, now_ms: f64) -> bool {
+        match feed.p99_over(now_ms, self.window_ms) {
+            None => true, // no online traffic -> nothing to protect
+            Some(p99) => p99 <= self.p99_slo_ms,
+        }
+    }
+}
+
+/// Shared feed of online request latencies (clients push, controller
+/// reads). Bounded sliding window.
+#[derive(Debug, Default)]
+pub struct QosFeed {
+    samples: Mutex<VecDeque<(f64, f64)>>, // (t_ms, latency_ms)
+}
+
+const FEED_CAP: usize = 100_000;
+
+impl QosFeed {
+    pub fn new() -> QosFeed {
+        QosFeed::default()
+    }
+
+    pub fn report(&self, t_ms: f64, latency_ms: f64) {
+        let mut q = self.samples.lock().unwrap();
+        if q.len() == FEED_CAP {
+            q.pop_front();
+        }
+        q.push_back((t_ms, latency_ms));
+    }
+
+    /// p99 of latencies within the trailing window, if any.
+    pub fn p99_over(&self, now_ms: f64, window_ms: f64) -> Option<f64> {
+        let q = self.samples.lock().unwrap();
+        let mut vals: Vec<f64> =
+            q.iter().filter(|(t, _)| now_ms - *t <= window_ms).map(|&(_, l)| l).collect();
+        if vals.is_empty() {
+            return None;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((vals.len() as f64 - 1.0) * 0.99).round() as usize;
+        Some(vals[rank.min(vals.len() - 1)])
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_policy_thresholds() {
+        let p = IdlePolicy { threshold: 0.4, window_ms: 1000.0 };
+        assert!(p.is_idle(None));
+        assert!(p.is_idle(Some(0.39)));
+        assert!(!p.is_idle(Some(0.40)));
+        assert!(!p.is_idle(Some(0.95)));
+    }
+
+    #[test]
+    fn qos_feed_windows_and_p99() {
+        let feed = QosFeed::new();
+        for i in 0..100 {
+            feed.report(i as f64, if i == 50 { 100.0 } else { 5.0 });
+        }
+        // the spike is inside the window
+        let p99 = feed.p99_over(100.0, 200.0).unwrap();
+        assert!(p99 >= 5.0 && p99 <= 100.0);
+        // windowing drops old samples
+        assert!(feed.p99_over(100_000.0, 100.0).is_none());
+    }
+
+    #[test]
+    fn slo_guard_vacuous_without_traffic() {
+        let guard = SloGuard::new(10.0, 1000.0);
+        let feed = QosFeed::new();
+        assert!(guard.healthy(&feed, 0.0));
+        for i in 0..200 {
+            feed.report(i as f64, 50.0); // way over SLO
+        }
+        assert!(!guard.healthy(&feed, 200.0));
+    }
+
+    #[test]
+    fn slo_guard_recovers_when_latency_drops() {
+        let guard = SloGuard::new(10.0, 100.0);
+        let feed = QosFeed::new();
+        for i in 0..100 {
+            feed.report(i as f64, 50.0);
+        }
+        assert!(!guard.healthy(&feed, 100.0));
+        for i in 300..400 {
+            feed.report(i as f64, 2.0);
+        }
+        assert!(guard.healthy(&feed, 400.0), "old violations aged out of the window");
+    }
+}

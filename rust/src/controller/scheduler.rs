@@ -1,0 +1,173 @@
+//! Profiling-job queue: what the controller drains onto idle devices.
+//!
+//! A job is one profiling combination pinned to either a specific device
+//! or a device *kind* ("t4", "any"). Preempted jobs are requeued at the
+//! front so progress is work-conserving.
+
+use std::collections::VecDeque;
+
+use crate::serving::{Frontend, ServingSystem};
+
+/// Placement constraint for a job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Placement {
+    Any,
+    /// Any *worker* device (simulated accelerators) — excludes the leader
+    /// cpu-host, whose measured mini-model timings are not comparable to
+    /// the workers' paper-equivalent modeled timings (DESIGN.md).
+    Workers,
+    Kind(String),
+    Device(String),
+}
+
+impl Placement {
+    pub fn matches(&self, device_id: &str, device_kind: &str) -> bool {
+        match self {
+            Placement::Any => true,
+            Placement::Workers => device_kind != "cpu-host",
+            Placement::Kind(k) => k == device_kind,
+            Placement::Device(d) => d == device_id,
+        }
+    }
+}
+
+/// One unit of profiling work (small enough to preempt between units).
+#[derive(Debug, Clone)]
+pub struct ProfilingJob {
+    /// Model-hub document id the results attach to.
+    pub model_id: String,
+    /// Model-zoo family.
+    pub family: String,
+    pub format: String,
+    pub batch: usize,
+    pub system: &'static ServingSystem,
+    pub frontend: Frontend,
+    pub placement: Placement,
+    /// Times this job was preempted (for starvation accounting).
+    pub preemptions: usize,
+}
+
+/// FIFO queue with front-requeue for preempted work.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    jobs: VecDeque<ProfilingJob>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    pub fn push(&mut self, job: ProfilingJob) {
+        self.jobs.push_back(job);
+    }
+
+    /// Enqueue the full profiling grid for a model (§3.4's combinations).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_grid(
+        &mut self,
+        model_id: &str,
+        family: &str,
+        formats: &[&str],
+        batches: &[usize],
+        systems: &[&'static ServingSystem],
+        frontends: &[Frontend],
+        placement: Placement,
+    ) {
+        for format in formats {
+            for &batch in batches {
+                for system in systems {
+                    if !system.supports_format(format) {
+                        continue;
+                    }
+                    for &frontend in frontends {
+                        self.push(ProfilingJob {
+                            model_id: model_id.to_string(),
+                            family: family.to_string(),
+                            format: format.to_string(),
+                            batch,
+                            system,
+                            frontend,
+                            placement: placement.clone(),
+                        preemptions: 0,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Take the first job that can run on the given device.
+    pub fn take_for(&mut self, device_id: &str, device_kind: &str) -> Option<ProfilingJob> {
+        let idx = self.jobs.iter().position(|j| j.placement.matches(device_id, device_kind))?;
+        self.jobs.remove(idx)
+    }
+
+    /// Requeue a preempted job at the front.
+    pub fn requeue_front(&mut self, mut job: ProfilingJob) {
+        job.preemptions += 1;
+        self.jobs.push_front(job);
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{TFS_LIKE, TRITON_LIKE};
+
+    #[test]
+    fn placement_matching() {
+        assert!(Placement::Any.matches("node1/t40", "t4"));
+        assert!(Placement::Kind("t4".into()).matches("node1/t40", "t4"));
+        assert!(!Placement::Kind("v100".into()).matches("node1/t40", "t4"));
+        assert!(Placement::Device("node1/t40".into()).matches("node1/t40", "t4"));
+        assert!(!Placement::Device("node1/t41".into()).matches("node1/t40", "t4"));
+    }
+
+    #[test]
+    fn grid_expansion_skips_unsupported_formats() {
+        let mut q = JobQueue::new();
+        q.push_grid(
+            "id1",
+            "resnet_mini",
+            &["reference", "optimized"],
+            &[1, 8],
+            &[&TFS_LIKE, &TRITON_LIKE],
+            &[Frontend::Grpc],
+            Placement::Any,
+        );
+        // reference: 2 systems x 2 batches; optimized: triton only x 2
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn take_for_respects_placement_and_order() {
+        let mut q = JobQueue::new();
+        q.push_grid("a", "m", &["reference"], &[1], &[&TFS_LIKE], &[Frontend::Rest], Placement::Kind("v100".into()));
+        q.push_grid("b", "m", &["reference"], &[1], &[&TFS_LIKE], &[Frontend::Rest], Placement::Any);
+        assert!(q.take_for("node1/t40", "t4").map(|j| j.model_id) == Some("b".into()));
+        assert!(q.take_for("node1/t40", "t4").is_none(), "v100-pinned job stays queued");
+        assert!(q.take_for("node2/v1000", "v100").is_some());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn requeue_front_counts_preemptions() {
+        let mut q = JobQueue::new();
+        q.push_grid("a", "m", &["reference"], &[1, 2], &[&TFS_LIKE], &[Frontend::Rest], Placement::Any);
+        let job = q.take_for("x", "t4").unwrap();
+        assert_eq!(job.batch, 1);
+        q.requeue_front(job);
+        let again = q.take_for("x", "t4").unwrap();
+        assert_eq!(again.batch, 1, "preempted job runs first");
+        assert_eq!(again.preemptions, 1);
+    }
+}

@@ -1,0 +1,243 @@
+//! Converter (§3.3): turns a registered research model into serialized,
+//! optimized, *validated* serving formats.
+//!
+//! In the paper: PyTorch → TorchScript/ONNX, TF → SavedModel/TensorRT.
+//! Here: each registered model maps to a model-zoo family whose AOT
+//! artifacts exist in two formats — `reference` (plain-jnp HLO ≈
+//! SavedModel) and `optimized` (Pallas-fused HLO ≈ TensorRT engine). The
+//! converter's real work, which we reproduce faithfully, is:
+//!
+//!  1. resolve the registered model to its deployable artifacts,
+//!  2. compile every (format, batch) variant to prove loadability,
+//!  3. validate numerics of each format against the golden reference
+//!     output (the step that makes MLaaS "robust" per §2.2),
+//!  4. record conversion results on the model document.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::modelhub::schema::conversion_record;
+use crate::modelhub::{ModelHub, ModelStatus};
+use crate::runtime::engine::EngineHandle;
+use crate::runtime::{ArtifactStore, Tensor};
+use crate::util::json::Json;
+
+/// Outcome of converting one (format, batch) variant.
+#[derive(Debug, Clone)]
+pub struct VariantResult {
+    pub format: String,
+    pub batch: usize,
+    pub file: String,
+    pub compile_ms: f64,
+    pub validated: bool,
+    pub max_abs_err: f64,
+}
+
+/// Outcome of a whole conversion run.
+#[derive(Debug, Clone)]
+pub struct ConversionReport {
+    pub model_id: String,
+    pub family: String,
+    pub variants: Vec<VariantResult>,
+    pub total_ms: f64,
+}
+
+impl ConversionReport {
+    pub fn all_validated(&self) -> bool {
+        self.variants.iter().all(|v| v.validated)
+    }
+
+    pub fn formats(&self) -> Vec<String> {
+        let mut f: Vec<String> = self.variants.iter().map(|v| v.format.clone()).collect();
+        f.sort();
+        f.dedup();
+        f
+    }
+}
+
+/// Numeric tolerance for format validation (f32 fused-vs-unfused drift).
+pub const VALIDATION_ATOL: f32 = 2e-3;
+
+/// The converter.
+pub struct Converter {
+    store: Arc<ArtifactStore>,
+    engine: EngineHandle,
+}
+
+impl Converter {
+    pub fn new(store: Arc<ArtifactStore>, engine: EngineHandle) -> Converter {
+        Converter { store, engine }
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.store.dir
+    }
+
+    /// Convert a registered model: compile + validate all variants and
+    /// update its document. Batch sizes can be restricted to keep CI fast.
+    pub fn convert(&self, hub: &ModelHub, model_id: &str, batches: Option<&[usize]>) -> Result<ConversionReport> {
+        let t0 = std::time::Instant::now();
+        let doc = hub.get(model_id)?;
+        let family = doc
+            .get("family")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("model {model_id} has no family"))?
+            .to_string();
+        let manifest = self.store.model(&family)?.clone();
+
+        hub.set_status(model_id, ModelStatus::Converting)?;
+        let weights = self.store.load_weights(&manifest)?;
+        let (golden_x, golden_y) = self.store.load_golden(&manifest)?;
+        let golden_batch = manifest.golden.batch;
+
+        let mut variants = Vec::new();
+        for format in manifest.formats() {
+            let all = manifest.batches(&format);
+            let batches: Vec<usize> = match batches {
+                Some(sel) => all.iter().copied().filter(|b| sel.contains(b)).collect(),
+                None => all,
+            };
+            for batch in batches {
+                let entry = manifest
+                    .artifact(&format, batch)
+                    .ok_or_else(|| anyhow!("missing artifact {family}@{format}/b{batch}"))?;
+                let exe = self.engine.load(&self.store.hlo_path(entry), &weights, batch)?;
+                // validate numerics against the golden reference output
+                let (validated, max_abs_err) = if batch >= golden_batch {
+                    let x = golden_x.pad_batch(batch);
+                    let (y, _) = exe.run(&x)?;
+                    let got = y.truncate_batch(golden_batch);
+                    let err = max_abs_diff(&got, &golden_y);
+                    (err <= VALIDATION_ATOL, err as f64)
+                } else {
+                    // batch 1 artifact: validate the first golden row
+                    let x = golden_x.truncate_batch(batch);
+                    let (y, _) = exe.run(&x)?;
+                    let err = max_abs_diff(&y, &golden_y.truncate_batch(batch));
+                    (err <= VALIDATION_ATOL, err as f64)
+                };
+                exe.unload();
+                let v = VariantResult {
+                    format: format.clone(),
+                    batch,
+                    file: entry.file.clone(),
+                    compile_ms: exe.compile_ms,
+                    validated,
+                    max_abs_err,
+                };
+                hub.push_to_array(
+                    model_id,
+                    "conversions",
+                    conversion_record(&v.format, v.batch, &v.file, v.validated, v.max_abs_err, v.compile_ms),
+                )?;
+                variants.push(v);
+            }
+        }
+
+        let report = ConversionReport {
+            model_id: model_id.to_string(),
+            family,
+            variants,
+            total_ms: t0.elapsed().as_secs_f64() * 1000.0,
+        };
+        if report.all_validated() && !report.variants.is_empty() {
+            hub.set_status(model_id, ModelStatus::Converted)?;
+        } else {
+            hub.set_status(model_id, ModelStatus::Failed)?;
+        }
+        Ok(report)
+    }
+}
+
+fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    let (av, bv) = (a.to_f32(), b.to_f32());
+    av.iter().zip(&bv).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelhub::ModelInfo;
+    use crate::storage::Database;
+    use crate::util::clock::wall;
+
+    fn setup() -> Option<(ModelHub, Converter, String)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let store = Arc::new(ArtifactStore::load(&dir).ok()?);
+        let hub = ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap();
+        let engine = EngineHandle::spawn("conv-test");
+        let conv = Converter::new(store.clone(), engine);
+        let weights_bytes = std::fs::read(dir.join("mlp_tabular.weights.bin")).unwrap();
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "my-mlp".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "tabular".into(),
+                    dataset: "synthetic".into(),
+                    accuracy: 0.76,
+                    convert: true,
+                    profile: true,
+                },
+                &weights_bytes,
+            )
+            .unwrap();
+        Some((hub, conv, id))
+    }
+
+    #[test]
+    fn conversion_validates_both_formats() {
+        let Some((hub, conv, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let report = conv.convert(&hub, &id, Some(&[1, 2, 4])).unwrap();
+        assert_eq!(report.formats(), vec!["optimized", "reference"]);
+        assert_eq!(report.variants.len(), 6);
+        assert!(report.all_validated(), "all variants must match golden: {:#?}", report.variants);
+        assert!(report.total_ms > 0.0);
+        // document updated
+        assert_eq!(hub.status(&id).unwrap(), ModelStatus::Converted);
+        let doc = hub.get(&id).unwrap();
+        assert_eq!(doc.get("conversions").unwrap().as_arr().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn optimized_errors_are_small_but_nonzero_somewhere() {
+        let Some((hub, conv, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let report = conv.convert(&hub, &id, Some(&[2])).unwrap();
+        for v in &report.variants {
+            assert!(v.max_abs_err <= VALIDATION_ATOL as f64);
+        }
+    }
+
+    #[test]
+    fn unknown_family_fails_cleanly() {
+        let Some((hub, conv, _)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "ghost".into(),
+                    family: "not_in_manifest".into(),
+                    framework: "jax".into(),
+                    task: "t".into(),
+                    dataset: "d".into(),
+                    accuracy: 0.0,
+                    convert: true,
+                    profile: false,
+                },
+                b"w",
+            )
+            .unwrap();
+        assert!(conv.convert(&hub, &id, None).is_err());
+    }
+}

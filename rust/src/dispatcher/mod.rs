@@ -1,0 +1,264 @@
+//! Dispatcher (§3.5): launches a serving system to load a model in a
+//! containerized manner and dispatches the MLaaS to a device.
+//!
+//! Keeps the registry of running services (the service mesh the monitor
+//! walks) and implements device selection for the deploy API.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::Cluster;
+use crate::modelhub::{ModelHub, ModelStatus};
+use crate::runtime::ArtifactStore;
+use crate::serving::instance::{launch, InstanceConfig, ServiceHandle};
+use crate::serving::systems::{by_name, ServingSystem};
+use crate::serving::Frontend;
+use crate::util::json::Json;
+
+/// User-facing deployment request.
+#[derive(Debug, Clone)]
+pub struct DeploymentSpec {
+    /// Device id, or None for automatic placement on the least-utilized
+    /// device with enough free memory.
+    pub device: Option<String>,
+    pub system: String,
+    /// None = the system's preferred (fastest supported) format.
+    pub format: Option<String>,
+    pub frontend: Frontend,
+    pub max_queue: usize,
+}
+
+impl Default for DeploymentSpec {
+    fn default() -> Self {
+        DeploymentSpec {
+            device: None,
+            system: "triton-like".into(),
+            format: None,
+            frontend: Frontend::Grpc,
+            max_queue: 256,
+        }
+    }
+}
+
+/// The dispatcher.
+pub struct Dispatcher {
+    cluster: Arc<Cluster>,
+    store: Arc<ArtifactStore>,
+    services: Mutex<Vec<ServiceHandle>>,
+}
+
+impl Dispatcher {
+    pub fn new(cluster: Arc<Cluster>, store: Arc<ArtifactStore>) -> Dispatcher {
+        Dispatcher { cluster, store, services: Mutex::new(Vec::new()) }
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn artifact_store(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
+    /// Deploy a registered (and ideally converted) model as a service.
+    pub fn deploy(&self, hub: &ModelHub, model_id: &str, spec: &DeploymentSpec) -> Result<ServiceHandle> {
+        let doc = hub.get(model_id)?;
+        let name = doc.get("name").and_then(Json::as_str).unwrap_or(model_id).to_string();
+        let family = doc
+            .get("family")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("model {model_id} has no family"))?;
+        let manifest = self.store.model(family)?.clone();
+        let system: &'static ServingSystem =
+            by_name(&spec.system).ok_or_else(|| anyhow!("unknown serving system '{}'", spec.system))?;
+        let format = match &spec.format {
+            Some(f) => {
+                if !system.supports_format(f) {
+                    bail!("system {} cannot serve format '{f}'", system.name);
+                }
+                f.clone()
+            }
+            None => system.preferred_format().to_string(),
+        };
+
+        let workload = manifest.sim.workload(&format);
+        let device = match &spec.device {
+            Some(id) => self.cluster.device(id)?.clone(),
+            None => {
+                // automatic placement: least-utilized *worker* that fits
+                // (the leader cpu-host only serves when explicitly named)
+                let max_batch = system.policy.max_batch();
+                let needed =
+                    |d: &Arc<crate::cluster::Device>| d.spec.memory_footprint_mib(&workload, max_batch);
+                let fits = |d: &&Arc<crate::cluster::Device>| {
+                    d.memory_used_mib() + needed(d) <= d.memory_total_mib()
+                };
+                let pick = |sim_only: bool| {
+                    self.cluster
+                        .devices()
+                        .filter(|d| !sim_only || d.is_simulated())
+                        .filter(fits)
+                        .min_by(|a, b| a.utilization().partial_cmp(&b.utilization()).unwrap())
+                        .cloned()
+                };
+                pick(true)
+                    .or_else(|| pick(false))
+                    .ok_or_else(|| anyhow!("no device has room for {name}"))?
+            }
+        };
+        let engine = self.cluster.engine_for(&device.id)?;
+        let weights = self.store.load_weights(&manifest)?;
+        let handle = launch(
+            InstanceConfig {
+                name: name.clone(),
+                manifest,
+                format: format.clone(),
+                system,
+                frontend: spec.frontend,
+                max_queue: spec.max_queue,
+            },
+            device.clone(),
+            engine,
+            &weights,
+            &self.store.dir,
+            self.cluster.clock().clone(),
+        )?;
+        hub.set_status(model_id, ModelStatus::Serving)?;
+        hub.push_to_array(
+            model_id,
+            "deployments",
+            Json::obj()
+                .with("device", device.id.as_str())
+                .with("system", system.name)
+                .with("format", format.as_str())
+                .with("frontend", spec.frontend.as_str())
+                .with("container", handle.container.id.as_str()),
+        )?;
+        self.services.lock().unwrap().push(handle.clone());
+        Ok(handle)
+    }
+
+    /// Running services (stopped handles are pruned on access).
+    pub fn services(&self) -> Vec<ServiceHandle> {
+        let mut guard = self.services.lock().unwrap();
+        guard.retain(|s| !s.is_stopped());
+        guard.clone()
+    }
+
+    pub fn find(&self, model_name: &str) -> Option<ServiceHandle> {
+        self.services().into_iter().find(|s| s.model_name == model_name)
+    }
+
+    pub fn stop_all(&self) {
+        for s in self.services.lock().unwrap().drain(..) {
+            s.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelhub::ModelInfo;
+    use crate::storage::Database;
+    use crate::util::clock::wall;
+
+    fn setup() -> Option<(Arc<Cluster>, Dispatcher, ModelHub, String)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let store = Arc::new(ArtifactStore::load(&dir).ok()?);
+        let cluster = Arc::new(Cluster::default_demo(wall()));
+        let dispatcher = Dispatcher::new(cluster.clone(), store.clone());
+        let hub = ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap();
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "my-mlp".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "tabular".into(),
+                    dataset: "synthetic".into(),
+                    accuracy: 0.76,
+                    convert: true,
+                    profile: true,
+                },
+                b"weights-bytes",
+            )
+            .unwrap();
+        // fast-path the workflow to converted
+        hub.set_status(&id, ModelStatus::Converting).unwrap();
+        hub.set_status(&id, ModelStatus::Converted).unwrap();
+        Some((cluster, dispatcher, hub, id))
+    }
+
+    #[test]
+    fn deploy_to_named_device() {
+        let Some((cluster, dispatcher, hub, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let svc = dispatcher
+            .deploy(
+                &hub,
+                &id,
+                &DeploymentSpec { device: Some("node1/t40".into()), ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(svc.device_id, "node1/t40");
+        assert_eq!(svc.format, "optimized", "triton-like prefers the optimized engine");
+        assert_eq!(hub.status(&id).unwrap(), ModelStatus::Serving);
+        let doc = hub.get(&id).unwrap();
+        assert_eq!(doc.get("deployments").unwrap().as_arr().unwrap().len(), 1);
+        dispatcher.stop_all();
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn automatic_placement_picks_idle_device() {
+        let Some((cluster, dispatcher, hub, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let svc = dispatcher.deploy(&hub, &id, &DeploymentSpec::default()).unwrap();
+        assert!(!svc.device_id.is_empty());
+        dispatcher.stop_all();
+        assert!(dispatcher.services().is_empty());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn bad_system_or_format_rejected() {
+        let Some((cluster, dispatcher, hub, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(dispatcher
+            .deploy(&hub, &id, &DeploymentSpec { system: "imaginary".into(), ..Default::default() })
+            .is_err());
+        assert!(dispatcher
+            .deploy(
+                &hub,
+                &id,
+                &DeploymentSpec {
+                    system: "tfs-like".into(),
+                    format: Some("optimized".into()),
+                    ..Default::default()
+                }
+            )
+            .is_err());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn registry_finds_by_name_and_prunes_stopped() {
+        let Some((cluster, dispatcher, hub, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let svc = dispatcher.deploy(&hub, &id, &DeploymentSpec::default()).unwrap();
+        assert!(dispatcher.find("my-mlp").is_some());
+        svc.stop();
+        assert!(dispatcher.find("my-mlp").is_none());
+        cluster.shutdown();
+    }
+}

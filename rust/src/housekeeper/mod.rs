@@ -1,0 +1,165 @@
+//! Housekeeper (§3.2): the user-facing model-management API.
+//!
+//! "The housekeeper has four key responsibilities ... encapsulated into
+//! four APIs": `register` (YAML + weight file, with conversion/profiling
+//! automation flags), `retrieve` (search), `update`, `delete`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::modelhub::{ModelHub, ModelInfo};
+use crate::storage::Query;
+use crate::util::json::Json;
+use crate::util::yaml;
+
+/// What `register` decided to automate (consumed by the workflow driver).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegistrationOutcome {
+    pub model_id: String,
+    pub trigger_conversion: bool,
+    pub trigger_profiling: bool,
+}
+
+/// The housekeeper.
+pub struct Housekeeper {
+    hub: Arc<ModelHub>,
+}
+
+impl Housekeeper {
+    pub fn new(hub: Arc<ModelHub>) -> Housekeeper {
+        Housekeeper { hub }
+    }
+
+    pub fn hub(&self) -> &Arc<ModelHub> {
+        &self.hub
+    }
+
+    /// Register from YAML text + weight bytes (the paper's register API).
+    pub fn register(&self, yaml_text: &str, weights: &[u8]) -> Result<RegistrationOutcome> {
+        let doc = yaml::parse(yaml_text).map_err(|e| anyhow!("registration YAML: {e}"))?;
+        let info = ModelInfo::from_registration(&doc).map_err(|e| anyhow!("{e}"))?;
+        let model_id = self.hub.create(&info, weights)?;
+        Ok(RegistrationOutcome {
+            model_id,
+            trigger_conversion: info.convert,
+            trigger_profiling: info.profile,
+        })
+    }
+
+    /// Register from files on disk.
+    pub fn register_files(&self, yaml_path: &Path, weights_path: &Path) -> Result<RegistrationOutcome> {
+        let yaml_text = std::fs::read_to_string(yaml_path)?;
+        let weights = std::fs::read(weights_path)?;
+        self.register(&yaml_text, &weights)
+    }
+
+    /// Retrieve: free-text name search plus optional structured filters.
+    pub fn retrieve(&self, name_contains: Option<&str>, task: Option<&str>, status: Option<&str>) -> Result<Vec<Json>> {
+        let mut clauses = Vec::new();
+        if let Some(n) = name_contains {
+            clauses.push(Query::Contains("name".into(), n.to_string()));
+        }
+        if let Some(t) = task {
+            clauses.push(Query::eq("task", t));
+        }
+        if let Some(s) = status {
+            clauses.push(Query::eq("status", s));
+        }
+        let q = if clauses.is_empty() { Query::All } else { Query::and(clauses) };
+        self.hub.find(&q)
+    }
+
+    /// Update: revise stored basic information (guarded fields excluded).
+    pub fn update(&self, model_id: &str, fields: &Json) -> Result<()> {
+        // status and weights move through their own guarded APIs
+        let obj = fields.as_obj().ok_or_else(|| anyhow!("update fields must be an object"))?;
+        for forbidden in ["status", "weights", "_id", "conversions", "profiles", "deployments"] {
+            if obj.contains_key(forbidden) {
+                anyhow::bail!("field '{forbidden}' cannot be updated through the housekeeper");
+            }
+        }
+        self.hub.update_fields(model_id, fields)
+    }
+
+    /// Delete a model (document + unshared weights).
+    pub fn delete(&self, model_id: &str) -> Result<bool> {
+        self.hub.delete(model_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::Database;
+    use crate::util::clock::wall;
+
+    const YAML: &str = "\
+name: demo-mlp
+family: mlp_tabular
+framework: jax
+task: tabular_regression
+dataset: synthetic-32d
+accuracy: 0.76
+convert: true
+profile: false
+";
+
+    fn hk() -> Housekeeper {
+        let hub = ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap();
+        Housekeeper::new(Arc::new(hub))
+    }
+
+    #[test]
+    fn register_parses_automation_flags() {
+        let hk = hk();
+        let out = hk.register(YAML, b"weights").unwrap();
+        assert!(out.trigger_conversion);
+        assert!(!out.trigger_profiling);
+        let doc = hk.hub().get(&out.model_id).unwrap();
+        assert_eq!(doc.get("dataset").unwrap().as_str(), Some("synthetic-32d"));
+    }
+
+    #[test]
+    fn register_rejects_bad_yaml_and_missing_name() {
+        let hk = hk();
+        assert!(hk.register("  broken\n yaml::\n  - x\n", b"w").is_err());
+        assert!(hk.register("framework: jax\n", b"w").is_err());
+    }
+
+    #[test]
+    fn retrieve_filters_compose() {
+        let hk = hk();
+        hk.register(YAML, b"w").unwrap();
+        hk.register(&YAML.replace("demo-mlp", "other-model").replace("tabular_regression", "vision"), b"w2")
+            .unwrap();
+        assert_eq!(hk.retrieve(None, None, None).unwrap().len(), 2);
+        assert_eq!(hk.retrieve(Some("demo"), None, None).unwrap().len(), 1);
+        assert_eq!(hk.retrieve(None, Some("vision"), None).unwrap().len(), 1);
+        assert_eq!(hk.retrieve(Some("demo"), Some("vision"), None).unwrap().len(), 0);
+        assert_eq!(hk.retrieve(None, None, Some("registered")).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn update_guards_system_fields() {
+        let hk = hk();
+        let out = hk.register(YAML, b"w").unwrap();
+        hk.update(&out.model_id, &Json::obj().with("accuracy", 0.81)).unwrap();
+        assert_eq!(
+            hk.hub().get(&out.model_id).unwrap().get("accuracy").unwrap().as_f64(),
+            Some(0.81)
+        );
+        assert!(hk.update(&out.model_id, &Json::obj().with("status", "serving")).is_err());
+        assert!(hk.update(&out.model_id, &Json::obj().with("weights", "tamper")).is_err());
+    }
+
+    #[test]
+    fn delete_via_housekeeper() {
+        let hk = hk();
+        let out = hk.register(YAML, b"w").unwrap();
+        assert!(hk.delete(&out.model_id).unwrap());
+        assert!(!hk.delete(&out.model_id).unwrap());
+        assert_eq!(hk.retrieve(None, None, None).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! MLModelCI — an automatic platform for efficient MLaaS (reproduction).
+#![allow(clippy::new_without_default)]
+
+pub mod api;
+pub mod cluster;
+pub mod controller;
+pub mod converter;
+pub mod dispatcher;
+pub mod housekeeper;
+pub mod modelhub;
+pub mod monitor;
+pub mod profiler;
+pub mod runtime;
+pub mod serving;
+pub mod storage;
+pub mod util;
+pub mod workflow;

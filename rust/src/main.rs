@@ -1,0 +1,218 @@
+//! `mlmodelci` — leader binary: CLI + REST server over the platform.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use mlmodelci::api::cli::{parse_args, usage, Args};
+use mlmodelci::api::features::feature_matrix;
+use mlmodelci::api::http::HttpServer;
+use mlmodelci::api::rest::route;
+use mlmodelci::dispatcher::DeploymentSpec;
+use mlmodelci::profiler::render_table;
+use mlmodelci::serving::Frontend;
+use mlmodelci::util::clock::wall;
+use mlmodelci::util::json::Json;
+use mlmodelci::util::logging;
+use mlmodelci::workflow::{Platform, PlatformConfig};
+
+fn main() {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match parse_args(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(level) = args.get("log-level").and_then(logging::level_from_str) {
+        logging::set_level(level);
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn platform(args: &Args) -> Result<Arc<Platform>> {
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let data = args.get("data").map(PathBuf::from);
+    Ok(Arc::new(Platform::init(&artifacts, data.as_deref(), wall(), PlatformConfig::default())?))
+}
+
+fn model_id_by_name(p: &Platform, name: &str) -> Result<String> {
+    let doc = p.hub.find_by_name(name)?.ok_or_else(|| anyhow!("no model named '{name}'"))?;
+    Ok(doc.get("_id").unwrap().as_str().unwrap().to_string())
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "serve" => {
+            let p = platform(args)?;
+            let addr = args.get("addr").unwrap_or("127.0.0.1:8000");
+            let p2 = p.clone();
+            let server = HttpServer::serve(addr, move |req| route(&p2, req))?;
+            println!("mlmodelci REST API listening on http://{}", server.addr);
+            println!("  try: curl http://{}/health", server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "publish" => {
+            let p = platform(args)?;
+            let yaml = std::fs::read_to_string(args.require("yaml").map_err(|e| anyhow!(e))?)?;
+            let weights = std::fs::read(args.require("weights").map_err(|e| anyhow!(e))?)?;
+            let report = p.publish(&yaml, &weights)?;
+            println!("model id: {}", report.model_id);
+            println!(
+                "register {:.1} ms | convert {:.1} ms | profile {:.1} ms | total {:.1} ms",
+                report.register_ms,
+                report.convert_ms,
+                report.profile_ms,
+                report.total_ms()
+            );
+            if let Some(c) = &report.conversion {
+                println!("conversion: {} variants, all validated: {}", c.variants.len(), c.all_validated());
+            }
+            println!("profiles recorded: {}", report.profiles_recorded);
+            p.shutdown();
+            Ok(())
+        }
+        "list" => {
+            let p = platform(args)?;
+            let docs = p.housekeeper.retrieve(args.get("name"), args.get("task"), args.get("status"))?;
+            for d in docs {
+                println!(
+                    "{}  {:<24} {:<22} {:<10} acc={}",
+                    d.get("_id").and_then(Json::as_str).unwrap_or("?"),
+                    d.get("name").and_then(Json::as_str).unwrap_or("?"),
+                    d.get("task").and_then(Json::as_str).unwrap_or("?"),
+                    d.get("status").and_then(Json::as_str).unwrap_or("?"),
+                    d.get("accuracy").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                );
+            }
+            p.shutdown();
+            Ok(())
+        }
+        "profile" => {
+            let p = platform(args)?;
+            let id = model_id_by_name(&p, args.require("name").map_err(|e| anyhow!(e))?)?;
+            let doc = p.hub.get(&id)?;
+            let family = doc.get("family").and_then(Json::as_str).unwrap_or_default().to_string();
+            let manifest = p.store.model(&family)?;
+            let batches = manifest.batches("reference");
+            p.controller.enqueue_profiling(
+                &id,
+                &family,
+                &["reference", "optimized"],
+                &batches,
+                mlmodelci::serving::ALL_SYSTEMS,
+                &[Frontend::Grpc, Frontend::Rest],
+                mlmodelci::controller::Placement::Any,
+            )?;
+            p.controller.run_until_drained(100_000, 0.0);
+            let n = p.controller.flush_results()?;
+            println!("recorded {n} profile rows for {family}");
+            p.shutdown();
+            Ok(())
+        }
+        "deploy" => {
+            let p = platform(args)?;
+            let name = args.require("name").map_err(|e| anyhow!(e))?;
+            let spec = DeploymentSpec {
+                device: args.get("device").map(str::to_string),
+                system: args.get("system").unwrap_or("triton-like").to_string(),
+                format: args.get("format").map(str::to_string),
+                frontend: args.get("frontend").and_then(Frontend::from_str).unwrap_or(Frontend::Grpc),
+                max_queue: 256,
+            };
+            let svc = p.deploy_by_name(name, &spec)?;
+            println!(
+                "deployed {} on {} via {} ({}, {} frontend); container {}",
+                svc.model_name,
+                svc.device_id,
+                svc.system_name,
+                svc.format,
+                svc.frontend.as_str(),
+                svc.container.id
+            );
+            p.shutdown();
+            Ok(())
+        }
+        "recommend" => {
+            let p = platform(args)?;
+            let id = model_id_by_name(&p, args.require("name").map_err(|e| anyhow!(e))?)?;
+            let slo = args.get_f64("p99", 1e9);
+            match p.controller.recommend_deployment(&id, slo)? {
+                Some(rec) => println!("{}", rec.to_pretty()),
+                None => println!("no profiled combination satisfies p99 <= {slo} ms"),
+            }
+            p.shutdown();
+            Ok(())
+        }
+        "delete" => {
+            let p = platform(args)?;
+            let id = model_id_by_name(&p, args.require("name").map_err(|e| anyhow!(e))?)?;
+            p.housekeeper.delete(&id)?;
+            println!("deleted");
+            p.shutdown();
+            Ok(())
+        }
+        "features" => {
+            let p = platform(args)?;
+            let (table, all_ok) = feature_matrix(&p);
+            println!("{table}");
+            println!("all capabilities verified: {all_ok}");
+            p.shutdown();
+            Ok(())
+        }
+        "demo" => {
+            let p = platform(args)?;
+            demo(&p)?;
+            p.shutdown();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{}", usage())),
+    }
+}
+
+/// End-to-end demo: publish models, print the Figure-3-style profiling
+/// table and a recommendation, deploy and serve a few requests.
+fn demo(p: &Arc<Platform>) -> Result<()> {
+    println!("== MLModelCI demo: publish -> convert -> profile -> deploy ==");
+    for family in ["mlp_tabular", "resnet_mini"] {
+        let manifest = p.store.model(family)?;
+        let yaml = format!(
+            "name: demo-{family}\nfamily: {family}\ntask: {}\naccuracy: {}\nconvert: true\nprofile: true\n",
+            manifest.task, manifest.claimed_accuracy
+        );
+        let report = p.publish(&yaml, b"demo-weights")?;
+        println!(
+            "published demo-{family}: register {:.0} ms, convert {:.0} ms, profile {:.0} ms ({} rows)",
+            report.register_ms, report.convert_ms, report.profile_ms, report.profiles_recorded
+        );
+    }
+    let rows = p.profiler.sweep(
+        "resnet_mini",
+        &["reference", "optimized"],
+        &[1, 8, 32],
+        &["node1/t40", "node2/v1000"],
+        &[&mlmodelci::serving::TRITON_LIKE],
+        &[Frontend::Grpc],
+    )?;
+    println!("\n{}", render_table(&rows));
+    let id = model_id_by_name(p, "demo-resnet_mini")?;
+    if let Some(rec) = p.controller.recommend_deployment(&id, 100.0)? {
+        println!("recommended deployment (p99<=100ms): {rec}");
+    }
+    let svc = p.deploy_by_name("demo-resnet_mini", &DeploymentSpec::default())?;
+    let input = mlmodelci::profiler::example_input(p.store.model("resnet_mini")?, 42);
+    for i in 0..3 {
+        let reply = svc.infer(input.clone())?;
+        println!("inference {i}: latency {:.2} ms (batch {})", reply.timing.total_ms(), reply.timing.batch);
+    }
+    println!("demo complete");
+    Ok(())
+}

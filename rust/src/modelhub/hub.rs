@@ -1,0 +1,234 @@
+//! ModelHub (§3.1): persistence of model documents + weight files.
+//!
+//! Thin typed layer over the document store; the housekeeper exposes the
+//! user-facing CRUD on top of this.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::storage::{BlobRef, Database, Query};
+use crate::util::clock::SharedClock;
+use crate::util::json::Json;
+
+use super::schema::{ModelInfo, ModelStatus};
+
+pub const MODELS: &str = "models";
+
+/// Handle to the model hub.
+pub struct ModelHub {
+    db: Arc<Database>,
+    clock: SharedClock,
+}
+
+impl ModelHub {
+    pub fn new(db: Arc<Database>, clock: SharedClock) -> Result<ModelHub> {
+        // hot query paths get indexes up front
+        db.with_collection(MODELS, |c| {
+            c.create_index("name");
+            c.create_index("status");
+            c.create_index("family");
+        })?;
+        Ok(ModelHub { db, clock })
+    }
+
+    pub fn db(&self) -> &Arc<Database> {
+        &self.db
+    }
+
+    /// Store weights + create the model document. Returns the model id.
+    pub fn create(&self, info: &ModelInfo, weights: &[u8]) -> Result<String> {
+        if self.find_by_name(&info.name)?.is_some() {
+            bail!("model '{}' is already registered", info.name);
+        }
+        let blob = self.db.gridfs().put(&format!("{}.weights.bin", info.name), weights)?;
+        let doc = info.to_doc(&blob, self.clock.now_ms());
+        Ok(self.db.with_collection(MODELS, |c| c.insert(doc))??)
+    }
+
+    pub fn get(&self, id: &str) -> Result<Json> {
+        self.db
+            .with_collection(MODELS, |c| c.get(id).cloned())?
+            .ok_or_else(|| anyhow!("no model with id '{id}'"))
+    }
+
+    pub fn find_by_name(&self, name: &str) -> Result<Option<Json>> {
+        Ok(self.db.with_collection(MODELS, |c| c.find_one(&Query::eq("name", name)).cloned())?)
+    }
+
+    pub fn find(&self, query: &Query) -> Result<Vec<Json>> {
+        Ok(self.db.with_collection(MODELS, |c| {
+            c.find(query).into_iter().cloned().collect::<Vec<_>>()
+        })?)
+    }
+
+    /// Guarded status transition (enforces the Figure-2 workflow).
+    pub fn set_status(&self, id: &str, next: ModelStatus) -> Result<()> {
+        let doc = self.get(id)?;
+        let current = doc
+            .get("status")
+            .and_then(Json::as_str)
+            .and_then(ModelStatus::from_str)
+            .ok_or_else(|| anyhow!("model {id} has no valid status"))?;
+        if !current.can_transition_to(next) {
+            bail!("illegal status transition {} -> {} for model {id}", current.as_str(), next.as_str());
+        }
+        self.db.with_collection(MODELS, |c| {
+            c.update(id, &Json::obj().with("status", next.as_str()))
+        })??;
+        Ok(())
+    }
+
+    pub fn status(&self, id: &str) -> Result<ModelStatus> {
+        let doc = self.get(id)?;
+        doc.get("status")
+            .and_then(Json::as_str)
+            .and_then(ModelStatus::from_str)
+            .ok_or_else(|| anyhow!("model {id} has no valid status"))
+    }
+
+    /// Merge fields into the model document.
+    pub fn update_fields(&self, id: &str, fields: &Json) -> Result<()> {
+        self.db.with_collection(MODELS, |c| c.update(id, fields))??;
+        Ok(())
+    }
+
+    /// Append an element to an array field (conversions / profiles).
+    pub fn push_to_array(&self, id: &str, field: &str, value: Json) -> Result<()> {
+        let doc = self.get(id)?;
+        let mut arr = doc.get(field).and_then(Json::as_arr).map(|a| a.to_vec()).unwrap_or_default();
+        arr.push(value);
+        self.update_fields(id, &Json::obj().with(field, Json::Arr(arr)))
+    }
+
+    /// Load the stored weight bytes of a model.
+    pub fn load_weights(&self, id: &str) -> Result<Vec<u8>> {
+        let doc = self.get(id)?;
+        let blob = doc
+            .get("weights")
+            .and_then(BlobRef::from_json)
+            .ok_or_else(|| anyhow!("model {id} has no weights blob"))?;
+        Ok(self.db.gridfs().get(&blob)?)
+    }
+
+    /// Delete document + weights. Returns false when absent.
+    pub fn delete(&self, id: &str) -> Result<bool> {
+        let Ok(doc) = self.get(id) else { return Ok(false) };
+        if let Some(blob) = doc.get("weights").and_then(BlobRef::from_json) {
+            // weights are content-addressed and may be shared; only drop
+            // the blob when no other model points at it
+            let others = self.db.with_collection(MODELS, |c| {
+                c.all()
+                    .filter(|d| {
+                        d.get("_id") != doc.get("_id")
+                            && d.at(&["weights", "id"]).and_then(Json::as_str) == Some(blob.id.as_str())
+                    })
+                    .count()
+            })?;
+            if others == 0 {
+                self.db.gridfs().delete(&blob.id)?;
+            }
+        }
+        Ok(self.db.with_collection(MODELS, |c| c.delete(doc.get("_id").unwrap().as_str().unwrap()))??)
+    }
+
+    pub fn count(&self) -> Result<usize> {
+        Ok(self.db.with_collection(MODELS, |c| c.len())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::virtual_clock;
+
+    fn hub() -> ModelHub {
+        let clock = virtual_clock();
+        ModelHub::new(Arc::new(Database::in_memory()), clock).unwrap()
+    }
+
+    fn info(name: &str) -> ModelInfo {
+        ModelInfo {
+            name: name.into(),
+            family: "mlp_tabular".into(),
+            framework: "jax".into(),
+            task: "tabular".into(),
+            dataset: "synthetic".into(),
+            accuracy: 0.8,
+            convert: true,
+            profile: true,
+        }
+    }
+
+    #[test]
+    fn create_get_weights_roundtrip() {
+        let hub = hub();
+        let id = hub.create(&info("m1"), b"fakeweights").unwrap();
+        let doc = hub.get(&id).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("m1"));
+        assert_eq!(hub.load_weights(&id).unwrap(), b"fakeweights");
+        assert_eq!(hub.count().unwrap(), 1);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let hub = hub();
+        hub.create(&info("dup"), b"w").unwrap();
+        assert!(hub.create(&info("dup"), b"w2").is_err());
+    }
+
+    #[test]
+    fn status_transitions_guarded() {
+        let hub = hub();
+        let id = hub.create(&info("m"), b"w").unwrap();
+        assert_eq!(hub.status(&id).unwrap(), ModelStatus::Registered);
+        hub.set_status(&id, ModelStatus::Converting).unwrap();
+        hub.set_status(&id, ModelStatus::Converted).unwrap();
+        assert!(hub.set_status(&id, ModelStatus::Registered).is_err());
+        hub.set_status(&id, ModelStatus::Profiling).unwrap();
+        hub.set_status(&id, ModelStatus::Profiled).unwrap();
+        hub.set_status(&id, ModelStatus::Serving).unwrap();
+        // elastic re-profiling is allowed while serving
+        hub.set_status(&id, ModelStatus::Profiling).unwrap();
+    }
+
+    #[test]
+    fn push_to_array_appends() {
+        let hub = hub();
+        let id = hub.create(&info("m"), b"w").unwrap();
+        hub.push_to_array(&id, "conversions", Json::obj().with("format", "optimized")).unwrap();
+        hub.push_to_array(&id, "conversions", Json::obj().with("format", "reference")).unwrap();
+        let doc = hub.get(&id).unwrap();
+        assert_eq!(doc.get("conversions").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn delete_drops_unshared_weights_only() {
+        let hub = hub();
+        let id1 = hub.create(&info("a"), b"shared").unwrap();
+        let id2 = hub.create(&info("b"), b"shared").unwrap();
+        let blob_id = hub
+            .get(&id1)
+            .unwrap()
+            .at(&["weights", "id"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert!(hub.delete(&id1).unwrap());
+        assert!(hub.db().gridfs().exists(&blob_id), "blob still used by model b");
+        assert!(hub.delete(&id2).unwrap());
+        assert!(!hub.db().gridfs().exists(&blob_id), "last reference dropped");
+        assert!(!hub.delete(&id2).unwrap());
+    }
+
+    #[test]
+    fn find_by_query() {
+        let hub = hub();
+        for n in ["resnet-a", "resnet-b", "bert-x"] {
+            hub.create(&info(n), b"w").unwrap();
+        }
+        let hits = hub.find(&Query::Prefix("name".into(), "resnet".into())).unwrap();
+        assert_eq!(hits.len(), 2);
+    }
+}

@@ -1,0 +1,7 @@
+//! ModelHub (§3.1): model documents + weight blobs over the storage layer.
+
+pub mod hub;
+pub mod schema;
+
+pub use hub::ModelHub;
+pub use schema::{ModelInfo, ModelStatus};

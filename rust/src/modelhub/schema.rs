@@ -1,0 +1,221 @@
+//! Model document schema (§3.1): a model is "basic information, dynamic
+//! profiling information and a model weight file".
+
+use crate::storage::BlobRef;
+use crate::util::json::Json;
+
+/// Lifecycle states of a published model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelStatus {
+    Registered,
+    Converting,
+    Converted,
+    Profiling,
+    Profiled,
+    Serving,
+    Failed,
+}
+
+impl ModelStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelStatus::Registered => "registered",
+            ModelStatus::Converting => "converting",
+            ModelStatus::Converted => "converted",
+            ModelStatus::Profiling => "profiling",
+            ModelStatus::Profiled => "profiled",
+            ModelStatus::Serving => "serving",
+            ModelStatus::Failed => "failed",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<ModelStatus> {
+        Some(match s {
+            "registered" => ModelStatus::Registered,
+            "converting" => ModelStatus::Converting,
+            "converted" => ModelStatus::Converted,
+            "profiling" => ModelStatus::Profiling,
+            "profiled" => ModelStatus::Profiled,
+            "serving" => ModelStatus::Serving,
+            "failed" => ModelStatus::Failed,
+            _ => return None,
+        })
+    }
+
+    /// Legal transitions of the housekeeping workflow (Figure 2).
+    pub fn can_transition_to(&self, next: ModelStatus) -> bool {
+        use ModelStatus::*;
+        matches!(
+            (self, next),
+            (Registered, Converting)
+                | (Converting, Converted)
+                | (Converting, Failed)
+                | (Converted, Profiling)
+                | (Profiling, Profiled)
+                | (Profiling, Failed)
+                | (Profiled, Serving)
+                | (Converted, Serving)
+                | (Serving, Profiling)   // elastic re-profiling while serving
+                | (Serving, Serving)     // additional deployments
+                | (Failed, Converting)   // retry
+        )
+    }
+}
+
+/// Typed view over a model document's basic information.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Model-zoo family in the artifact manifest (e.g. "resnet_mini").
+    pub family: String,
+    pub framework: String,
+    pub task: String,
+    pub dataset: String,
+    pub accuracy: f64,
+    pub convert: bool,
+    pub profile: bool,
+}
+
+impl ModelInfo {
+    /// Parse a registration document (the YAML file from §3.2).
+    pub fn from_registration(doc: &Json) -> Result<ModelInfo, String> {
+        let get = |k: &str| doc.get(k).and_then(Json::as_str).map(str::to_string);
+        let name = get("name").ok_or("registration missing 'name'")?;
+        let family = get("family").unwrap_or_else(|| name.clone());
+        Ok(ModelInfo {
+            name,
+            family,
+            framework: get("framework").unwrap_or_else(|| "jax".into()),
+            task: get("task").unwrap_or_else(|| "unknown".into()),
+            dataset: get("dataset").unwrap_or_else(|| "unspecified".into()),
+            accuracy: doc.get("accuracy").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            convert: doc.get("convert").and_then(Json::as_bool).unwrap_or(true),
+            profile: doc.get("profile").and_then(Json::as_bool).unwrap_or(true),
+        })
+    }
+
+    /// Build the stored document (basic-info part).
+    pub fn to_doc(&self, weights: &BlobRef, now_ms: f64) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("family", self.family.as_str())
+            .with("framework", self.framework.as_str())
+            .with("task", self.task.as_str())
+            .with("dataset", self.dataset.as_str())
+            .with("accuracy", self.accuracy)
+            .with("status", ModelStatus::Registered.as_str())
+            .with("created_ms", now_ms)
+            .with("weights", weights.to_json())
+            .with("conversions", Json::Arr(vec![]))
+            .with("profiles", Json::Arr(vec![]))
+    }
+}
+
+/// One conversion result appended to the document.
+pub fn conversion_record(format: &str, batch: usize, file: &str, validated: bool, max_abs_err: f64, compile_ms: f64) -> Json {
+    Json::obj()
+        .with("format", format)
+        .with("batch", batch)
+        .with("file", file)
+        .with("validated", validated)
+        .with("max_abs_err", max_abs_err)
+        .with("compile_ms", compile_ms)
+}
+
+/// One profiling result (the six indicators) appended to the document.
+#[allow(clippy::too_many_arguments)]
+pub fn profile_record(
+    device: &str,
+    format: &str,
+    batch: usize,
+    serving_system: &str,
+    frontend: &str,
+    si: &crate::util::stats::SixIndicators,
+) -> Json {
+    Json::obj()
+        .with("device", device)
+        .with("format", format)
+        .with("batch", batch)
+        .with("serving_system", serving_system)
+        .with("frontend", frontend)
+        .with("peak_throughput_rps", si.peak_throughput_rps)
+        .with("p50_ms", si.p50_latency_ms)
+        .with("p95_ms", si.p95_latency_ms)
+        .with("p99_ms", si.p99_latency_ms)
+        .with("memory_mib", si.memory_mib)
+        .with("utilization", si.utilization)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::yaml;
+
+    #[test]
+    fn status_roundtrip_and_transitions() {
+        for s in [
+            ModelStatus::Registered,
+            ModelStatus::Converting,
+            ModelStatus::Converted,
+            ModelStatus::Profiling,
+            ModelStatus::Profiled,
+            ModelStatus::Serving,
+            ModelStatus::Failed,
+        ] {
+            assert_eq!(ModelStatus::from_str(s.as_str()), Some(s));
+        }
+        assert!(ModelStatus::Registered.can_transition_to(ModelStatus::Converting));
+        assert!(!ModelStatus::Registered.can_transition_to(ModelStatus::Serving));
+        assert!(ModelStatus::Serving.can_transition_to(ModelStatus::Profiling));
+        assert!(ModelStatus::Failed.can_transition_to(ModelStatus::Converting));
+        assert!(!ModelStatus::Profiled.can_transition_to(ModelStatus::Registered));
+    }
+
+    #[test]
+    fn registration_parses_from_yaml() {
+        let doc = yaml::parse(
+            "name: my-resnet\nfamily: resnet_mini\nframework: jax\ntask: image_classification\ndataset: cifar\naccuracy: 0.87\nconvert: true\nprofile: false\n",
+        )
+        .unwrap();
+        let info = ModelInfo::from_registration(&doc).unwrap();
+        assert_eq!(info.name, "my-resnet");
+        assert_eq!(info.family, "resnet_mini");
+        assert!(!info.profile);
+        assert!(info.convert);
+    }
+
+    #[test]
+    fn registration_defaults() {
+        let doc = yaml::parse("name: bare\n").unwrap();
+        let info = ModelInfo::from_registration(&doc).unwrap();
+        assert_eq!(info.family, "bare");
+        assert_eq!(info.framework, "jax");
+        assert!(info.convert && info.profile);
+        assert!(info.accuracy.is_nan());
+    }
+
+    #[test]
+    fn registration_requires_name() {
+        let doc = yaml::parse("framework: jax\n").unwrap();
+        assert!(ModelInfo::from_registration(&doc).is_err());
+    }
+
+    #[test]
+    fn document_shape() {
+        let blob = crate::storage::BlobRef { id: "abc".into(), len: 4, chunks: 1, filename: "w.bin".into() };
+        let info = ModelInfo {
+            name: "m".into(),
+            family: "mlp_tabular".into(),
+            framework: "jax".into(),
+            task: "t".into(),
+            dataset: "d".into(),
+            accuracy: 0.9,
+            convert: true,
+            profile: true,
+        };
+        let doc = info.to_doc(&blob, 123.0);
+        assert_eq!(doc.get("status").unwrap().as_str(), Some("registered"));
+        assert_eq!(doc.at(&["weights", "id"]).unwrap().as_str(), Some("abc"));
+        assert_eq!(doc.get("conversions").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

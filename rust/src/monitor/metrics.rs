@@ -1,0 +1,170 @@
+//! Time-series metric primitives backing the monitor and node exporter
+//! (the prometheus substitute): bounded-history gauges and counters with
+//! simple range queries.
+
+use std::collections::VecDeque;
+
+/// One timestamped observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub t_ms: f64,
+    pub value: f64,
+}
+
+/// A bounded time series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    points: VecDeque<Point>,
+    capacity: usize,
+}
+
+impl Series {
+    pub fn new(name: &str, capacity: usize) -> Series {
+        assert!(capacity > 0);
+        Series { name: name.to_string(), points: VecDeque::new(), capacity }
+    }
+
+    pub fn record(&mut self, t_ms: f64, value: f64) {
+        if self.points.len() == self.capacity {
+            self.points.pop_front();
+        }
+        self.points.push_back(Point { t_ms, value });
+    }
+
+    pub fn latest(&self) -> Option<Point> {
+        self.points.back().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Points with `t_ms` in `[from, to)`.
+    pub fn range(&self, from: f64, to: f64) -> Vec<Point> {
+        self.points.iter().filter(|p| p.t_ms >= from && p.t_ms < to).copied().collect()
+    }
+
+    /// Mean over a trailing window ending at `now_ms`.
+    pub fn mean_over(&self, now_ms: f64, window_ms: f64) -> Option<f64> {
+        let pts = self.range(now_ms - window_ms, now_ms + 1e-9);
+        if pts.is_empty() {
+            return None;
+        }
+        Some(pts.iter().map(|p| p.value).sum::<f64>() / pts.len() as f64)
+    }
+
+    /// Max over a trailing window.
+    pub fn max_over(&self, now_ms: f64, window_ms: f64) -> Option<f64> {
+        self.range(now_ms - window_ms, now_ms + 1e-9)
+            .iter()
+            .map(|p| p.value)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Rate of change per second between first and last point of a window
+    /// (for counters like requests-served).
+    pub fn rate_over(&self, now_ms: f64, window_ms: f64) -> Option<f64> {
+        let pts = self.range(now_ms - window_ms, now_ms + 1e-9);
+        let (first, last) = (pts.first()?, pts.last()?);
+        let dt = (last.t_ms - first.t_ms) / 1000.0;
+        if dt <= 0.0 {
+            return None;
+        }
+        Some((last.value - first.value) / dt)
+    }
+}
+
+/// A labelled registry of series.
+#[derive(Debug, Default)]
+pub struct Registry {
+    series: std::collections::BTreeMap<String, Series>,
+    capacity: usize,
+}
+
+impl Registry {
+    pub fn new(capacity: usize) -> Registry {
+        Registry { series: Default::default(), capacity }
+    }
+
+    pub fn record(&mut self, name: &str, t_ms: f64, value: f64) {
+        let cap = self.capacity.max(1);
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(name, cap))
+            .record(t_ms, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(String::as_str).collect()
+    }
+
+    /// Render the latest values in prometheus exposition format.
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        for (name, s) in &self.series {
+            if let Some(p) = s.latest() {
+                out.push_str(&format!("{name} {v}\n", v = p.value));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_bounded_and_ordered() {
+        let mut s = Series::new("x", 3);
+        for i in 0..5 {
+            s.record(i as f64, i as f64 * 10.0);
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.latest().unwrap().value, 40.0);
+        assert_eq!(s.range(2.0, 4.0).len(), 2);
+    }
+
+    #[test]
+    fn window_aggregates() {
+        let mut s = Series::new("util", 100);
+        for i in 0..10 {
+            s.record(i as f64 * 100.0, if i < 5 { 0.2 } else { 0.8 });
+        }
+        let mean = s.mean_over(900.0, 499.0).unwrap();
+        assert!((mean - 0.8).abs() < 1e-9, "trailing window catches the busy half: {mean}");
+        assert_eq!(s.max_over(900.0, 10_000.0), Some(0.8));
+        assert_eq!(s.mean_over(900.0, 0.5).map(|v| v > 0.0), Some(true));
+        assert!(s.mean_over(-50.0, 10.0).is_none());
+    }
+
+    #[test]
+    fn counter_rate() {
+        let mut s = Series::new("requests_total", 100);
+        for i in 0..=10 {
+            s.record(i as f64 * 1000.0, i as f64 * 50.0); // 50 req/s
+        }
+        let rate = s.rate_over(10_000.0, 10_000.0).unwrap();
+        assert!((rate - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_expose_format() {
+        let mut r = Registry::new(16);
+        r.record("device_utilization{device=\"t4-0\"}", 1.0, 0.37);
+        r.record("container_queue_depth{svc=\"m\"}", 1.0, 4.0);
+        let text = r.expose();
+        assert!(text.contains("device_utilization{device=\"t4-0\"} 0.37"));
+        assert!(text.contains("container_queue_depth{svc=\"m\"} 4"));
+        assert_eq!(r.names().len(), 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Monitor + node exporter (§3.6): the cAdvisor / prometheus / DCGM
+//! substitutes feeding the controller.
+
+pub mod metrics;
+#[allow(clippy::module_inception)]
+pub mod monitor;
+pub mod node_exporter;
+
+pub use metrics::{Registry, Series};
+pub use monitor::{Monitor, ServiceStats};
+pub use node_exporter::NodeExporter;

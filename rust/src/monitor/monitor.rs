@@ -1,0 +1,141 @@
+//! Monitor (§3.6): collects and aggregates running model container
+//! performance — the cAdvisor substitute.
+//!
+//! Periodically snapshots every running service's container counters
+//! (busy time, requests, queue depth, network bytes) into time series
+//! and derives rates the controller and web UI consume.
+
+use std::sync::{Arc, Mutex};
+
+use crate::dispatcher::Dispatcher;
+
+
+use super::metrics::Registry;
+
+/// Container-level monitor.
+pub struct Monitor {
+    dispatcher: Arc<Dispatcher>,
+    registry: Mutex<Registry>,
+}
+
+/// Summary of one service at scrape time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceStats {
+    pub name: String,
+    pub device: String,
+    pub requests_total: u64,
+    pub throughput_rps: Option<f64>,
+    pub queue_depth: usize,
+    pub memory_mib: f64,
+}
+
+impl Monitor {
+    pub fn new(dispatcher: Arc<Dispatcher>) -> Monitor {
+        Monitor { dispatcher, registry: Mutex::new(Registry::new(4096)) }
+    }
+
+    /// Take one scrape of every running container.
+    pub fn scrape(&self) {
+        let now = self.dispatcher.cluster().clock().now_ms();
+        let mut reg = self.registry.lock().unwrap();
+        for svc in self.dispatcher.services() {
+            let u = svc.container.usage_snapshot();
+            let labels = format!("{{svc=\"{}\",device=\"{}\"}}", svc.model_name, svc.device_id);
+            reg.record(&format!("container_requests_total{labels}"), now, u.requests as f64);
+            reg.record(&format!("container_busy_ms_total{labels}"), now, u.busy_ms);
+            reg.record(&format!("container_queue_depth{labels}"), now, u.queue_depth as f64);
+            reg.record(&format!("container_network_bytes_total{labels}"), now, u.network_bytes as f64);
+            reg.record(&format!("container_memory_mib{labels}"), now, u.memory_mib);
+        }
+    }
+
+    /// Current stats for every running service (throughput derived from
+    /// the requests counter over a trailing window).
+    pub fn service_stats(&self, window_ms: f64) -> Vec<ServiceStats> {
+        let now = self.dispatcher.cluster().clock().now_ms();
+        let reg = self.registry.lock().unwrap();
+        self.dispatcher
+            .services()
+            .into_iter()
+            .map(|svc| {
+                let u = svc.container.usage_snapshot();
+                let labels = format!("{{svc=\"{}\",device=\"{}\"}}", svc.model_name, svc.device_id);
+                let throughput = reg
+                    .get(&format!("container_requests_total{labels}"))
+                    .and_then(|s| s.rate_over(now, window_ms));
+                ServiceStats {
+                    name: svc.model_name.clone(),
+                    device: svc.device_id.clone(),
+                    requests_total: u.requests,
+                    throughput_rps: throughput,
+                    queue_depth: u.queue_depth,
+                    memory_mib: u.memory_mib,
+                }
+            })
+            .collect()
+    }
+
+    pub fn expose(&self) -> String {
+        self.registry.lock().unwrap().expose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dispatcher::DeploymentSpec;
+    use crate::modelhub::{ModelHub, ModelInfo, ModelStatus};
+    use crate::runtime::{ArtifactStore, Tensor};
+    use crate::storage::Database;
+    use crate::util::clock::wall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn monitor_scrapes_running_service() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(store) = ArtifactStore::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let cluster = Arc::new(Cluster::default_demo(wall()));
+        let dispatcher = Arc::new(Dispatcher::new(cluster.clone(), Arc::new(store)));
+        let hub = ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap();
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "mon-mlp".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "tabular".into(),
+                    dataset: "synthetic".into(),
+                    accuracy: 0.7,
+                    convert: true,
+                    profile: true,
+                },
+                b"w",
+            )
+            .unwrap();
+        hub.set_status(&id, ModelStatus::Converting).unwrap();
+        hub.set_status(&id, ModelStatus::Converted).unwrap();
+        let svc = dispatcher.deploy(&hub, &id, &DeploymentSpec::default()).unwrap();
+
+        let monitor = Monitor::new(dispatcher.clone());
+        monitor.scrape();
+        let mut rng = Rng::new(5);
+        let vals: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+        for _ in 0..5 {
+            svc.infer(Tensor::from_f32(&[32], &vals)).unwrap();
+        }
+        monitor.scrape();
+        let stats = monitor.service_stats(60_000.0);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].requests_total, 5);
+        assert!(stats[0].memory_mib > 0.0);
+        assert!(stats[0].throughput_rps.unwrap_or(0.0) > 0.0);
+        let text = monitor.expose();
+        assert!(text.contains("container_requests_total{svc=\"mon-mlp\""));
+        dispatcher.stop_all();
+        cluster.shutdown();
+    }
+}

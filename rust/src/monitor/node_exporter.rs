@@ -1,0 +1,116 @@
+//! Node exporter (§3.6): collects hardware status and exposes it —
+//! the prometheus-node-exporter + DCGM-exporter substitute.
+//!
+//! Scrapes every cluster device's utilization and memory into the metric
+//! registry; the controller reads these gauges for its idle test.
+
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::Cluster;
+
+
+use super::metrics::Registry;
+
+/// Device-level hardware exporter.
+pub struct NodeExporter {
+    cluster: Arc<Cluster>,
+    registry: Mutex<Registry>,
+}
+
+impl NodeExporter {
+    pub fn new(cluster: Arc<Cluster>) -> NodeExporter {
+        NodeExporter { cluster, registry: Mutex::new(Registry::new(4096)) }
+    }
+
+    /// Take one scrape of every device.
+    pub fn scrape(&self) {
+        let now = self.cluster.clock().now_ms();
+        let mut reg = self.registry.lock().unwrap();
+        for dev in self.cluster.devices() {
+            reg.record(&format!("device_utilization{{device=\"{}\"}}", dev.id), now, dev.utilization());
+            reg.record(
+                &format!("device_memory_used_mib{{device=\"{}\"}}", dev.id),
+                now,
+                dev.memory_used_mib(),
+            );
+            reg.record(
+                &format!("device_memory_total_mib{{device=\"{}\"}}", dev.id),
+                now,
+                dev.memory_total_mib(),
+            );
+        }
+    }
+
+    /// Latest utilization of a device, if scraped.
+    pub fn utilization(&self, device_id: &str) -> Option<f64> {
+        self.registry
+            .lock()
+            .unwrap()
+            .get(&format!("device_utilization{{device=\"{device_id}\"}}"))
+            .and_then(|s| s.latest())
+            .map(|p| p.value)
+    }
+
+    /// Mean utilization over a trailing window (smooths controller flapping).
+    pub fn mean_utilization(&self, device_id: &str, window_ms: f64) -> Option<f64> {
+        let now = self.cluster.clock().now_ms();
+        self.registry
+            .lock()
+            .unwrap()
+            .get(&format!("device_utilization{{device=\"{device_id}\"}}"))
+            .and_then(|s| s.mean_over(now, window_ms))
+    }
+
+    /// Prometheus-style text exposition of current values.
+    pub fn expose(&self) -> String {
+        self.registry.lock().unwrap().expose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::virtual_clock;
+
+    #[test]
+    fn scrape_records_all_devices() {
+        let clock = virtual_clock();
+        let cluster = Arc::new(Cluster::default_demo(clock.clone()));
+        let exporter = NodeExporter::new(cluster.clone());
+        exporter.scrape();
+        for dev in cluster.devices() {
+            assert_eq!(exporter.utilization(&dev.id), Some(0.0));
+        }
+        let text = exporter.expose();
+        assert!(text.contains("device_memory_total_mib{device=\"node1/t40\"}"));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn utilization_updates_between_scrapes() {
+        let clock = virtual_clock();
+        let cluster = Arc::new(Cluster::default_demo(clock.clone()));
+        let exporter = NodeExporter::new(cluster.clone());
+        clock.advance_ms(10_000.0);
+        let dev = cluster.device("node2/v1000").unwrap();
+        for _ in 0..5 {
+            clock.advance_ms(1_000.0);
+            dev.record_busy(1_000.0);
+            exporter.scrape();
+        }
+        assert!(exporter.utilization("node2/v1000").unwrap() > 0.3);
+        let mean = exporter.mean_utilization("node2/v1000", 10_000.0).unwrap();
+        assert!(mean > 0.1 && mean <= 1.0);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn unknown_device_is_none() {
+        let clock = virtual_clock();
+        let cluster = Arc::new(Cluster::default_demo(clock));
+        let exporter = NodeExporter::new(cluster.clone());
+        exporter.scrape();
+        assert_eq!(exporter.utilization("ghost"), None);
+        cluster.shutdown();
+    }
+}

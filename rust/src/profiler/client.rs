@@ -1,0 +1,238 @@
+//! Load-generating clients (§3.4: "the profiler simulates the real
+//! service behavior by invoking a gRPC client and a model service").
+//!
+//! Two standard shapes: closed-loop (fixed concurrency, think time zero)
+//! for saturation/peak-throughput measurements, and open-loop Poisson
+//! arrivals for latency-under-load and the controller experiments.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::Tensor;
+use crate::serving::ServiceHandle;
+use crate::util::clock::Clock;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+
+/// Result of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadResult {
+    /// Client-observed latency per request (ms).
+    pub latencies_ms: Samples,
+    pub completed: usize,
+    pub rejected: usize,
+    pub errors: usize,
+    pub wall_ms: f64,
+}
+
+impl LoadResult {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.wall_ms / 1000.0)
+    }
+}
+
+/// Build a deterministic random input for a model family.
+pub fn example_input(manifest: &crate::runtime::ModelManifest, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = manifest.input_shape.iter().product();
+    match manifest.input_dtype {
+        crate::runtime::DType::F32 => {
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            Tensor::from_f32(&manifest.input_shape, &vals)
+        }
+        crate::runtime::DType::I32 => {
+            let vals: Vec<i32> = (0..n).map(|_| rng.range(0, 1000) as i32).collect();
+            Tensor::from_i32(&manifest.input_shape, &vals)
+        }
+    }
+}
+
+/// Closed loop: `concurrency` workers each keep one request in flight
+/// until `duration_ms` of wall time elapses.
+pub fn closed_loop(
+    svc: &ServiceHandle,
+    input: &Tensor,
+    concurrency: usize,
+    duration_ms: f64,
+    clock: &dyn Clock,
+) -> LoadResult {
+    let completed = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let lat_us = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let start = clock.now_ms();
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency {
+            let svc = svc.clone();
+            let input = input.clone();
+            let completed = completed.clone();
+            let rejected = rejected.clone();
+            let errors = errors.clone();
+            let lat_us = lat_us.clone();
+            scope.spawn(move || {
+                while clock.now_ms() - start < duration_ms {
+                    match svc.infer(input.clone()) {
+                        Ok(reply) => {
+                            completed.fetch_add(1, Ordering::Relaxed);
+                            lat_us.lock().unwrap().push(reply.timing.total_ms());
+                        }
+                        Err(e) if e.to_string().contains(crate::serving::instance::ERR_QUEUE_FULL) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                            clock.sleep_ms(0.5);
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall_ms = clock.now_ms() - start;
+    let mut latencies = Samples::new();
+    for v in lat_us.lock().unwrap().iter() {
+        latencies.push(*v);
+    }
+    LoadResult {
+        latencies_ms: latencies,
+        completed: completed.load(Ordering::Relaxed) as usize,
+        rejected: rejected.load(Ordering::Relaxed) as usize,
+        errors: errors.load(Ordering::Relaxed) as usize,
+        wall_ms,
+    }
+}
+
+/// Open loop: Poisson arrivals at `rate_rps` for `duration_ms`.
+/// Requests are fired asynchronously; one reaper thread collects replies.
+pub fn open_loop(
+    svc: &ServiceHandle,
+    input: &Tensor,
+    rate_rps: f64,
+    duration_ms: f64,
+    seed: u64,
+    clock: &dyn Clock,
+) -> LoadResult {
+    assert!(rate_rps > 0.0);
+    let mut rng = Rng::new(seed);
+    let start = clock.now_ms();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    let mut errors = 0usize;
+    let mut t_next = start;
+    while t_next - start < duration_ms {
+        let now = clock.now_ms();
+        if now < t_next {
+            clock.sleep_ms(t_next - now);
+        }
+        match svc.infer_async(input.clone()) {
+            Ok(rx) => pending.push(rx),
+            Err(e) if e.to_string().contains(crate::serving::instance::ERR_QUEUE_FULL) => rejected += 1,
+            Err(_) => errors += 1,
+        }
+        t_next += rng.exponential(rate_rps) * 1000.0;
+    }
+    let mut latencies = Samples::new();
+    let mut completed = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(reply)) => {
+                completed += 1;
+                latencies.push(reply.timing.total_ms());
+            }
+            _ => errors += 1,
+        }
+    }
+    let wall_ms = clock.now_ms() - start;
+    LoadResult { latencies_ms: latencies, completed, rejected, errors, wall_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::dispatcher::{DeploymentSpec, Dispatcher};
+    use crate::modelhub::{ModelHub, ModelInfo, ModelStatus};
+    use crate::runtime::ArtifactStore;
+    use crate::storage::Database;
+    use crate::util::clock::wall;
+
+    fn deployed() -> Option<(Arc<Cluster>, Arc<Dispatcher>, ServiceHandle, Tensor)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let store = Arc::new(ArtifactStore::load(&dir).ok()?);
+        let cluster = Arc::new(Cluster::default_demo(wall()));
+        let dispatcher = Arc::new(Dispatcher::new(cluster.clone(), store.clone()));
+        let hub = ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap();
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "load-mlp".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "tabular".into(),
+                    dataset: "s".into(),
+                    accuracy: 0.7,
+                    convert: true,
+                    profile: true,
+                },
+                b"w",
+            )
+            .unwrap();
+        hub.set_status(&id, ModelStatus::Converting).unwrap();
+        hub.set_status(&id, ModelStatus::Converted).unwrap();
+        let svc = dispatcher
+            .deploy(
+                &hub,
+                &id,
+                &DeploymentSpec { device: Some("node2/a1001".into()), ..Default::default() },
+            )
+            .unwrap();
+        let input = example_input(store.model("mlp_tabular").unwrap(), 7);
+        Some((cluster, dispatcher, svc, input))
+    }
+
+    #[test]
+    fn closed_loop_measures_throughput_and_latency() {
+        let Some((cluster, dispatcher, svc, input)) = deployed() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let clock = wall();
+        let r = closed_loop(&svc, &input, 4, 300.0, clock.as_ref());
+        assert!(r.completed > 0, "should complete requests");
+        assert!(r.throughput_rps() > 0.0);
+        assert!(r.latencies_ms.len() == r.completed);
+        dispatcher.stop_all();
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn open_loop_poisson_completes() {
+        let Some((cluster, dispatcher, svc, input)) = deployed() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let clock = wall();
+        let r = open_loop(&svc, &input, 200.0, 250.0, 42, clock.as_ref());
+        assert!(r.completed + r.rejected + r.errors > 10, "should have fired many arrivals");
+        assert_eq!(r.errors, 0, "no hard errors expected");
+        dispatcher.stop_all();
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn example_input_deterministic() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(store) = ArtifactStore::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = store.model("textcnn").unwrap();
+        assert_eq!(example_input(m, 1), example_input(m, 1));
+        assert_ne!(example_input(m, 1), example_input(m, 2));
+        assert_eq!(example_input(m, 1).dtype, crate::runtime::DType::I32);
+    }
+}

@@ -1,0 +1,11 @@
+//! Profiler (§3.4): six-indicator measurement across batch sizes,
+//! devices, serving systems and frontends.
+
+pub mod client;
+#[allow(clippy::module_inception)]
+pub mod profiler;
+pub mod report;
+
+pub use client::{closed_loop, example_input, open_loop, LoadResult};
+pub use profiler::{Combination, ProfileRow, Profiler};
+pub use report::{recommend, record_to_hub, render_table, RecommendedDeployment};

@@ -1,0 +1,260 @@
+//! Profiler (§3.4): measures the six indicators for every
+//! (model, format, batch, device, serving system, frontend) combination.
+//!
+//! Fixed-batch profiling runs the real executable on the node engine and
+//! charges device time analytically — no wall-clock sleeping — so a full
+//! Figure-3 sweep over hundreds of combinations finishes in seconds while
+//! the *numerics* are genuinely executed. (Serving-path profiling with
+//! live queueing is in `client.rs` + the serving_systems bench.)
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, Device};
+use crate::runtime::{ArtifactStore, ModelManifest, Tensor};
+use crate::serving::{Frontend, ServingSystem};
+use crate::util::stats::{Samples, SixIndicators};
+
+use super::client::example_input;
+
+/// One profiling combination.
+#[derive(Debug, Clone)]
+pub struct Combination {
+    pub model: String,
+    pub format: String,
+    pub batch: usize,
+    pub device: String,
+    pub system: &'static ServingSystem,
+    pub frontend: Frontend,
+}
+
+/// A profiled row: combination + the six indicators.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub combo: Combination,
+    pub indicators: SixIndicators,
+}
+
+/// The profiler.
+pub struct Profiler {
+    cluster: Arc<Cluster>,
+    store: Arc<ArtifactStore>,
+    /// Measured iterations per combination.
+    pub iters: usize,
+    /// Compiled-executable cache keyed by (model, format, batch, device):
+    /// re-profiling the same artifact (controller re-runs, sweeps over
+    /// systems/frontends) skips the expensive PJRT compile.
+    exe_cache: std::sync::Mutex<std::collections::HashMap<(String, String, usize, String), crate::runtime::engine::ExeHandle>>,
+}
+
+impl Profiler {
+    pub fn new(cluster: Arc<Cluster>, store: Arc<ArtifactStore>) -> Profiler {
+        Profiler { cluster, store, iters: 12, exe_cache: Default::default() }
+    }
+
+    pub fn store(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// Profile one combination at a fixed batch size.
+    pub fn profile(&self, combo: &Combination) -> Result<ProfileRow> {
+        let manifest = self.store.model(&combo.model)?.clone();
+        let device = self.cluster.device(&combo.device)?.clone();
+        let engine = self.cluster.engine_for(&combo.device)?;
+        let entry = manifest
+            .artifact(&combo.format, combo.batch)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {}@{}/b{}", combo.model, combo.format, combo.batch))?;
+        let cache_key =
+            (combo.model.clone(), combo.format.clone(), combo.batch, combo.device.clone());
+        let exe = {
+            let cached = self.exe_cache.lock().unwrap().get(&cache_key).cloned();
+            match cached {
+                Some(exe) => exe,
+                None => {
+                    let weights = self.store.load_weights(&manifest)?;
+                    let exe = engine.load(&self.store.hlo_path(entry), &weights, combo.batch)?;
+                    self.exe_cache.lock().unwrap().insert(cache_key, exe.clone());
+                    exe
+                }
+            }
+        };
+
+        let single = example_input(&manifest, 1234);
+        let batched = Tensor::stack(&vec![single; combo.batch]);
+        let workload = manifest.sim.workload(&combo.format);
+        let payload = batched.nbytes() + combo.batch * manifest.num_classes * 4;
+
+        // warmup (compile caches, allocator)
+        let _ = exe.run(&batched)?;
+
+        let mut latencies = Samples::new();
+        let mut device_busy_ms = 0.0;
+        let mut total_ms = 0.0;
+        for _ in 0..self.iters {
+            let (_, real_ms) = exe.run(&batched)?;
+            let charged = device.charge_ms(&workload, combo.batch, real_ms);
+            let request_ms = charged
+                + combo.system.request_overhead_ms
+                + combo.frontend.overhead_ms(payload);
+            latencies.push(request_ms);
+            device_busy_ms += charged;
+            total_ms += request_ms;
+        }
+        let throughput = (combo.batch * self.iters) as f64 / (total_ms / 1000.0);
+        let memory = device.spec.memory_footprint_mib(&workload, combo.batch);
+        let utilization = (device_busy_ms / total_ms).clamp(0.0, 1.0);
+        Ok(ProfileRow {
+            combo: combo.clone(),
+            indicators: SixIndicators::from_latencies(&mut latencies, throughput, memory, utilization),
+        })
+    }
+
+    /// Sweep the full cross product (§3.4: "hundreds of combinations").
+    pub fn sweep(
+        &self,
+        model: &str,
+        formats: &[&str],
+        batches: &[usize],
+        devices: &[&str],
+        systems: &[&'static ServingSystem],
+        frontends: &[Frontend],
+    ) -> Result<Vec<ProfileRow>> {
+        let mut rows = Vec::new();
+        for format in formats {
+            for &batch in batches {
+                for device in devices {
+                    for system in systems {
+                        if !system.supports_format(format) {
+                            continue;
+                        }
+                        for &frontend in frontends {
+                            let combo = Combination {
+                                model: model.to_string(),
+                                format: format.to_string(),
+                                batch,
+                                device: device.to_string(),
+                                system,
+                                frontend,
+                            };
+                            rows.push(self.profile(&combo)?);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(rows)
+    }
+
+    /// The device handle for a combination (bench helpers).
+    pub fn device(&self, id: &str) -> Result<Arc<Device>> {
+        Ok(self.cluster.device(id)?.clone())
+    }
+
+    /// Manifest lookup passthrough.
+    pub fn manifest(&self, model: &str) -> Result<ModelManifest> {
+        Ok(self.store.model(model)?.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{ONNXRT_LIKE, TFS_LIKE, TRITON_LIKE};
+    use crate::util::clock::wall;
+
+    fn profiler() -> Option<Profiler> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let store = Arc::new(ArtifactStore::load(&dir).ok()?);
+        let cluster = Arc::new(Cluster::default_demo(wall()));
+        Some(Profiler::new(cluster, store))
+    }
+
+    fn combo(model: &str, format: &str, batch: usize, device: &str) -> Combination {
+        Combination {
+            model: model.into(),
+            format: format.into(),
+            batch,
+            device: device.into(),
+            system: &TRITON_LIKE,
+            frontend: Frontend::Grpc,
+        }
+    }
+
+    #[test]
+    fn six_indicators_produced() {
+        let Some(p) = profiler() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let row = p.profile(&combo("mlp_tabular", "optimized", 4, "node1/t40")).unwrap();
+        let si = &row.indicators;
+        assert!(si.peak_throughput_rps > 0.0);
+        assert!(si.p50_latency_ms > 0.0);
+        assert!(si.p50_latency_ms <= si.p95_latency_ms && si.p95_latency_ms <= si.p99_latency_ms);
+        assert!(si.memory_mib > 0.0);
+        assert!(si.utilization > 0.0 && si.utilization <= 1.0);
+        p.cluster().shutdown();
+    }
+
+    #[test]
+    fn throughput_grows_with_batch_on_gpu() {
+        // Figure 3(a) shape check straight from the profiler.
+        let Some(p) = profiler() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let t1 = p.profile(&combo("resnet_mini", "reference", 1, "node1/t40")).unwrap();
+        let t16 = p.profile(&combo("resnet_mini", "reference", 16, "node1/t40")).unwrap();
+        assert!(
+            t16.indicators.peak_throughput_rps > 1.5 * t1.indicators.peak_throughput_rps,
+            "batch 16 {} should beat batch 1 {}",
+            t16.indicators.peak_throughput_rps,
+            t1.indicators.peak_throughput_rps
+        );
+        p.cluster().shutdown();
+    }
+
+    #[test]
+    fn optimized_beats_reference_on_gpu() {
+        let Some(p) = profiler() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let r = p.profile(&combo("resnet_mini", "reference", 1, "node2/v1000")).unwrap();
+        let o = p.profile(&combo("resnet_mini", "optimized", 1, "node2/v1000")).unwrap();
+        assert!(
+            o.indicators.p50_latency_ms < r.indicators.p50_latency_ms,
+            "optimized {} must beat reference {}",
+            o.indicators.p50_latency_ms,
+            r.indicators.p50_latency_ms
+        );
+        p.cluster().shutdown();
+    }
+
+    #[test]
+    fn sweep_respects_format_support() {
+        let Some(p) = profiler() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rows = p
+            .sweep(
+                "mlp_tabular",
+                &["optimized"],
+                &[1, 4],
+                &["node1/t40"],
+                &[&TFS_LIKE, &TRITON_LIKE, &ONNXRT_LIKE],
+                &[Frontend::Grpc],
+            )
+            .unwrap();
+        // TFS can't serve optimized -> only triton + onnxrt, 2 batches each
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.combo.system.name != "tfs-like"));
+        p.cluster().shutdown();
+    }
+}

@@ -1,0 +1,195 @@
+//! Profile reports: aggregation + rendering of profiling sweeps, and
+//! persistence onto model documents (the "comparison report" of §4.2).
+
+use crate::modelhub::schema::profile_record;
+use crate::modelhub::ModelHub;
+use crate::util::benchkit::Table;
+use crate::util::json::Json;
+
+use super::profiler::ProfileRow;
+
+/// Render rows as the six-indicator table the paper's UI shows.
+pub fn render_table(rows: &[ProfileRow]) -> String {
+    let mut t = Table::new(&[
+        "model", "format", "batch", "device", "system", "frontend",
+        "thruput(e/s)", "p50(ms)", "p95(ms)", "p99(ms)", "mem(MiB)", "util",
+    ]);
+    for r in rows {
+        let si = &r.indicators;
+        t.row(&[
+            r.combo.model.clone(),
+            r.combo.format.clone(),
+            r.combo.batch.to_string(),
+            r.combo.device.clone(),
+            r.combo.system.name.to_string(),
+            r.combo.frontend.as_str().to_string(),
+            format!("{:.1}", si.peak_throughput_rps),
+            format!("{:.2}", si.p50_latency_ms),
+            format!("{:.2}", si.p95_latency_ms),
+            format!("{:.2}", si.p99_latency_ms),
+            format!("{:.0}", si.memory_mib),
+            format!("{:.2}", si.utilization),
+        ]);
+    }
+    t.render()
+}
+
+/// Persist rows onto the model document (`profiles` array).
+pub fn record_to_hub(hub: &ModelHub, model_id: &str, rows: &[ProfileRow]) -> anyhow::Result<()> {
+    for r in rows {
+        hub.push_to_array(
+            model_id,
+            "profiles",
+            profile_record(
+                &r.combo.device,
+                &r.combo.format,
+                r.combo.batch,
+                r.combo.system.name,
+                r.combo.frontend.as_str(),
+                &r.indicators,
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+/// The cost-effectiveness recommendation (§4.2: "help build a more
+/// cost-effective solution"): pick the combination with the lowest
+/// modeled $ per million examples subject to a p99 SLO.
+pub fn recommend(rows: &[ProfileRow], cluster: &crate::cluster::Cluster, p99_slo_ms: f64) -> Option<RecommendedDeployment> {
+    rows.iter()
+        .filter(|r| r.indicators.p99_latency_ms <= p99_slo_ms)
+        .filter_map(|r| {
+            let device = cluster.device(&r.combo.device).ok()?;
+            let eps = r.indicators.peak_throughput_rps;
+            if eps <= 0.0 {
+                return None;
+            }
+            let dollars_per_million = device.spec.cost_per_hour / 3600.0 / eps * 1e6;
+            Some((r, dollars_per_million))
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(r, cost)| RecommendedDeployment {
+            device: r.combo.device.clone(),
+            format: r.combo.format.clone(),
+            batch: r.combo.batch,
+            system: r.combo.system.name.to_string(),
+            p99_ms: r.indicators.p99_latency_ms,
+            throughput_rps: r.indicators.peak_throughput_rps,
+            dollars_per_million: cost,
+        })
+}
+
+/// Output of [`recommend`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecommendedDeployment {
+    pub device: String,
+    pub format: String,
+    pub batch: usize,
+    pub system: String,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+    pub dollars_per_million: f64,
+}
+
+impl RecommendedDeployment {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("device", self.device.as_str())
+            .with("format", self.format.as_str())
+            .with("batch", self.batch)
+            .with("system", self.system.as_str())
+            .with("p99_ms", self.p99_ms)
+            .with("throughput_rps", self.throughput_rps)
+            .with("dollars_per_million", self.dollars_per_million)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::profiler::profiler::{Combination, Profiler};
+    use crate::runtime::ArtifactStore;
+    use crate::serving::{Frontend, TRITON_LIKE};
+    use crate::util::clock::wall;
+    use std::sync::Arc;
+
+    fn rows() -> Option<(Vec<ProfileRow>, Arc<Cluster>)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let store = Arc::new(ArtifactStore::load(&dir).ok()?);
+        let cluster = Arc::new(Cluster::default_demo(wall()));
+        let mut p = Profiler::new(cluster.clone(), store);
+        p.iters = 3;
+        let rows = p
+            .sweep(
+                "mlp_tabular",
+                &["optimized"],
+                &[1, 8],
+                &["node1/t40", "node2/a1001"],
+                &[&TRITON_LIKE],
+                &[Frontend::Grpc],
+            )
+            .unwrap();
+        Some((rows, cluster))
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let Some((rows, cluster)) = rows() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let text = render_table(&rows);
+        assert_eq!(text.lines().count(), rows.len() + 2);
+        assert!(text.contains("thruput(e/s)"));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn recommend_respects_slo_and_prefers_cheap() {
+        let Some((rows, cluster)) = rows() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rec = recommend(&rows, &cluster, 1e9).expect("some combination qualifies");
+        // with no SLO pressure the cheaper T4 should win on $/example
+        assert_eq!(rec.device, "node1/t40");
+        assert!(rec.dollars_per_million > 0.0);
+        // a tiny SLO disqualifies everything
+        assert!(recommend(&rows, &cluster, 1e-6).is_none());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn records_persist_to_hub() {
+        use crate::modelhub::{ModelHub, ModelInfo};
+        use crate::storage::Database;
+        let Some((rows, cluster)) = rows() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let hub = ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap();
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "m".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "t".into(),
+                    dataset: "d".into(),
+                    accuracy: 0.5,
+                    convert: true,
+                    profile: true,
+                },
+                b"w",
+            )
+            .unwrap();
+        record_to_hub(&hub, &id, &rows).unwrap();
+        let doc = hub.get(&id).unwrap();
+        let profiles = doc.get("profiles").unwrap().as_arr().unwrap();
+        assert_eq!(profiles.len(), rows.len());
+        assert!(profiles[0].get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        cluster.shutdown();
+    }
+}

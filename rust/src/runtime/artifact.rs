@@ -1,0 +1,334 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parses `artifacts/manifest.json` into typed descriptors
+//! and loads packed weight files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::{DType, Tensor};
+
+/// One lowered HLO artifact: (model, format, batch) -> file.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub format: String,
+    pub batch: usize,
+    pub file: String,
+    pub hlo_ops: usize,
+}
+
+/// One named parameter tensor inside the packed weights file.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Golden input/output pair for converter validation.
+#[derive(Debug, Clone)]
+pub struct GoldenIo {
+    pub batch: usize,
+    pub x_file: String,
+    pub y_file: String,
+    pub x_dtype: DType,
+}
+
+/// Paper-equivalent workload the simulated-device perf model charges
+/// (the mini model *represents* a production model — see DESIGN.md).
+#[derive(Debug, Clone)]
+pub struct SimEquivalent {
+    pub represents: String,
+    pub flops_per_example: f64,
+    pub activation_bytes_per_example: f64,
+    pub param_bytes: f64,
+    pub launches_reference: f64,
+    pub launches_optimized: f64,
+}
+
+impl SimEquivalent {
+    /// Build the perf-model workload for a given serving format.
+    pub fn workload(&self, format: &str) -> crate::cluster::perfmodel::WorkloadCost {
+        crate::cluster::perfmodel::WorkloadCost {
+            flops_per_example: self.flops_per_example,
+            activation_bytes_per_example: self.activation_bytes_per_example,
+            param_bytes: self.param_bytes,
+            kernel_launches: if format == "optimized" {
+                self.launches_optimized
+            } else {
+                self.launches_reference
+            },
+        }
+    }
+}
+
+/// Everything the manifest records about one model family.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub task: String,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: DType,
+    pub num_classes: usize,
+    pub claimed_accuracy: f64,
+    pub weights_file: String,
+    pub params: Vec<ParamEntry>,
+    pub param_bytes: usize,
+    pub flops_per_example: f64,
+    pub activation_bytes_per_example: f64,
+    pub launches_reference: usize,
+    pub launches_optimized: usize,
+    pub sim: SimEquivalent,
+    pub golden: GoldenIo,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl ModelManifest {
+    /// Kernel-launch count for a format (drives the device perf model).
+    pub fn launches(&self, format: &str) -> usize {
+        if format == "optimized" {
+            self.launches_optimized
+        } else {
+            self.launches_reference
+        }
+    }
+
+    pub fn artifact(&self, format: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.format == format && a.batch == batch)
+    }
+
+    /// Batch sizes available for a format (ascending).
+    pub fn batches(&self, format: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.format == format).map(|a| a.batch).collect();
+        v.sort();
+        v
+    }
+
+    pub fn formats(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.iter().map(|a| a.format.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// Parsed manifest + artifact directory.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl ArtifactStore {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts` first)"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let models_json =
+            root.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in models_json {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(ArtifactStore { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}' in manifest"))
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Load the packed weights as ordered tensors (AOT entry signature order).
+    pub fn load_weights(&self, model: &ModelManifest) -> Result<Vec<Tensor>> {
+        let raw = std::fs::read(self.dir.join(&model.weights_file))
+            .with_context(|| format!("reading weights for {}", model.name))?;
+        if raw.len() != model.param_bytes {
+            bail!("weights file for {} is {} bytes, manifest says {}", model.name, raw.len(), model.param_bytes);
+        }
+        model
+            .params
+            .iter()
+            .map(|p| {
+                let end = p.offset + p.nbytes;
+                if end > raw.len() {
+                    bail!("param {} overruns weights file", p.name);
+                }
+                Ok(Tensor::from_raw(DType::F32, &p.shape, raw[p.offset..end].to_vec()))
+            })
+            .collect()
+    }
+
+    /// Load the golden (input, reference-output) pair for validation.
+    pub fn load_golden(&self, model: &ModelManifest) -> Result<(Tensor, Tensor)> {
+        let g = &model.golden;
+        let mut x_shape = vec![g.batch];
+        x_shape.extend_from_slice(&model.input_shape);
+        let x_raw = std::fs::read(self.dir.join(&g.x_file))?;
+        let y_raw = std::fs::read(self.dir.join(&g.y_file))?;
+        let x = Tensor::from_raw(g.x_dtype, &x_shape, x_raw);
+        let y = Tensor::from_raw(DType::F32, &[g.batch, model.num_classes], y_raw);
+        Ok((x, y))
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelManifest> {
+    let get_str = |k: &str| -> Result<String> {
+        Ok(m.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: missing {k}"))?.to_string())
+    };
+    let get_num = |k: &str| -> Result<f64> {
+        m.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("{name}: missing {k}"))
+    };
+    let input_dtype = DType::from_str(&get_str("input_dtype")?)
+        .ok_or_else(|| anyhow!("{name}: bad input_dtype"))?;
+    let shape_vec = |v: &Json| -> Result<Vec<usize>> {
+        v.as_arr()
+            .ok_or_else(|| anyhow!("{name}: bad shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
+            .collect()
+    };
+    let params = m
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing params"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamEntry {
+                name: p.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                shape: shape_vec(p.get("shape").ok_or_else(|| anyhow!("param shape"))?)?,
+                offset: p.get("offset").and_then(Json::as_usize).ok_or_else(|| anyhow!("offset"))?,
+                nbytes: p.get("nbytes").and_then(Json::as_usize).ok_or_else(|| anyhow!("nbytes"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let artifacts = m
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing artifacts"))?
+        .iter()
+        .map(|a| {
+            Ok(ArtifactEntry {
+                format: a.get("format").and_then(Json::as_str).unwrap_or_default().to_string(),
+                batch: a.get("batch").and_then(Json::as_usize).ok_or_else(|| anyhow!("batch"))?,
+                file: a.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+                hlo_ops: a.get("hlo_ops").and_then(Json::as_usize).unwrap_or(0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let golden_json = m.get("golden").ok_or_else(|| anyhow!("{name}: missing golden"))?;
+    let golden = GoldenIo {
+        batch: golden_json.get("batch").and_then(Json::as_usize).ok_or_else(|| anyhow!("golden batch"))?,
+        x_file: golden_json.get("x_file").and_then(Json::as_str).unwrap_or_default().to_string(),
+        y_file: golden_json.get("y_file").and_then(Json::as_str).unwrap_or_default().to_string(),
+        x_dtype: DType::from_str(golden_json.get("x_dtype").and_then(Json::as_str).unwrap_or("f32"))
+            .ok_or_else(|| anyhow!("golden dtype"))?,
+    };
+    let launches = m.get("kernel_launches").ok_or_else(|| anyhow!("{name}: missing kernel_launches"))?;
+    let sim_json = m.get("sim").ok_or_else(|| anyhow!("{name}: missing sim block"))?;
+    let sim_launches = sim_json.get("kernel_launches").ok_or_else(|| anyhow!("sim launches"))?;
+    let sim = SimEquivalent {
+        represents: sim_json.get("represents").and_then(Json::as_str).unwrap_or("?").to_string(),
+        flops_per_example: sim_json.get("flops_per_example").and_then(Json::as_f64).ok_or_else(|| anyhow!("sim flops"))?,
+        activation_bytes_per_example: sim_json
+            .get("activation_bytes_per_example")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("sim act bytes"))?,
+        param_bytes: sim_json.get("param_bytes").and_then(Json::as_f64).ok_or_else(|| anyhow!("sim param bytes"))?,
+        launches_reference: sim_launches.get("reference").and_then(Json::as_f64).unwrap_or(1.0),
+        launches_optimized: sim_launches.get("optimized").and_then(Json::as_f64).unwrap_or(1.0),
+    };
+    Ok(ModelManifest {
+        name: name.to_string(),
+        task: get_str("task")?,
+        input_shape: shape_vec(m.get("input_shape").ok_or_else(|| anyhow!("input_shape"))?)?,
+        input_dtype,
+        num_classes: m.get("num_classes").and_then(Json::as_usize).ok_or_else(|| anyhow!("num_classes"))?,
+        claimed_accuracy: get_num("claimed_accuracy")?,
+        weights_file: get_str("weights_file")?,
+        params,
+        param_bytes: m.get("param_bytes").and_then(Json::as_usize).ok_or_else(|| anyhow!("param_bytes"))?,
+        flops_per_example: get_num("flops_per_example")?,
+        activation_bytes_per_example: get_num("activation_bytes_per_example")?,
+        launches_reference: launches.get("reference").and_then(Json::as_usize).unwrap_or(1),
+        launches_optimized: launches.get("optimized").and_then(Json::as_usize).unwrap_or(1),
+        sim,
+        golden,
+        artifacts,
+    })
+}
+
+/// Default artifact directory: `$MLMODELCI_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("MLMODELCI_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<ArtifactStore> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactStore::load(&dir).ok()
+    }
+
+    #[test]
+    fn manifest_parses_and_is_complete() {
+        let Some(store) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(store.models.len() >= 4, "expected the full model zoo");
+        for (name, m) in &store.models {
+            assert!(!m.artifacts.is_empty(), "{name} has artifacts");
+            assert_eq!(m.formats(), vec!["optimized", "reference"]);
+            assert!(m.launches_optimized < m.launches_reference, "{name} fusion reduces launches");
+            assert!(m.flops_per_example > 0.0);
+            for a in &m.artifacts {
+                assert!(store.hlo_path(a).exists(), "missing {}", a.file);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_load_and_match_param_entries() {
+        let Some(store) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = store.model("mlp_tabular").unwrap();
+        let weights = store.load_weights(m).unwrap();
+        assert_eq!(weights.len(), m.params.len());
+        for (w, p) in weights.iter().zip(&m.params) {
+            assert_eq!(w.shape, p.shape);
+            assert_eq!(w.nbytes(), p.nbytes);
+        }
+    }
+
+    #[test]
+    fn golden_io_shapes() {
+        let Some(store) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for m in store.models.values() {
+            let (x, y) = store.load_golden(m).unwrap();
+            assert_eq!(x.shape[0], m.golden.batch);
+            assert_eq!(y.shape, vec![m.golden.batch, m.num_classes]);
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = match ArtifactStore::load(Path::new("/nonexistent")) { Err(e) => e, Ok(_) => panic!("should fail") };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,311 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on a
+//! CPU client, and runs them from the serving hot path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
+//! `Sync`), so all XLA objects live on a dedicated **executor thread**
+//! that owns one client and every executable compiled on it. Other
+//! threads talk to it through a channel-backed [`EngineHandle`] /
+//! [`ExeHandle`], exchanging plain byte tensors. This mirrors the real
+//! deployment shape: one worker thread per device, kernels serialized
+//! per stream.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::tensor::Tensor;
+
+type ExeId = u64;
+
+enum Request {
+    Load {
+        hlo_path: PathBuf,
+        weights: Vec<Tensor>,
+        reply: mpsc::Sender<Result<(ExeId, f64)>>,
+    },
+    Run {
+        id: ExeId,
+        input: Tensor,
+        reply: mpsc::Sender<Result<(Tensor, f64)>>,
+    },
+    Unload {
+        id: ExeId,
+    },
+    Shutdown,
+}
+
+/// Handle to an executor thread; cheap to clone and `Send`.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// A compiled executable living on some executor thread.
+#[derive(Clone)]
+pub struct ExeHandle {
+    engine: EngineHandle,
+    id: ExeId,
+    pub batch: usize,
+    pub compile_ms: f64,
+}
+
+impl EngineHandle {
+    /// Spawn a new executor thread with its own PJRT CPU client.
+    pub fn spawn(name: &str) -> EngineHandle {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread_name = format!("xla-exec-{name}");
+        std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || executor_loop(rx))
+            .expect("spawn executor thread");
+        EngineHandle { tx }
+    }
+
+    /// Compile an HLO-text artifact on this executor and bind weights.
+    pub fn load(&self, hlo_path: &Path, weights: &[Tensor], batch: usize) -> Result<ExeHandle> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Load {
+                hlo_path: hlo_path.to_path_buf(),
+                weights: weights.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        let (id, compile_ms) = rx.recv().map_err(|_| anyhow!("executor dropped reply"))??;
+        Ok(ExeHandle { engine: self.clone(), id, batch, compile_ms })
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+impl ExeHandle {
+    /// Execute on a batched input; returns (output, real execution ms).
+    pub fn run(&self, input: &Tensor) -> Result<(Tensor, f64)> {
+        anyhow::ensure!(
+            input.shape.first() == Some(&self.batch),
+            "executable compiled for batch {}, got input shape {:?}",
+            self.batch,
+            input.shape
+        );
+        let (reply, rx) = mpsc::channel();
+        self.engine
+            .tx
+            .send(Request::Run { id: self.id, input: input.clone(), reply })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Drop the compiled executable on the executor side.
+    pub fn unload(&self) {
+        let _ = self.engine.tx.send(Request::Unload { id: self.id });
+    }
+}
+
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+    /// Weights pre-staged as device buffers at load time: executions pass
+    /// them by handle instead of cloning + re-transferring host literals
+    /// on every request (see EXPERIMENTS.md §Perf for the before/after).
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+fn executor_loop(rx: mpsc::Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // fail every request with a clear message
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Load { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT CPU client failed: {e}")));
+                    }
+                    Request::Run { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT CPU client failed: {e}")));
+                    }
+                    Request::Unload { .. } => {}
+                    Request::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    let mut exes: HashMap<ExeId, LoadedExe> = HashMap::new();
+    let mut next_id: ExeId = 1;
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Load { hlo_path, weights, reply } => {
+                let _ = reply.send(do_load(&client, &hlo_path, &weights).map(|loaded| {
+                    let id = next_id;
+                    next_id += 1;
+                    let ms = loaded.1;
+                    exes.insert(id, loaded.0);
+                    (id, ms)
+                }));
+            }
+            Request::Run { id, input, reply } => {
+                let result = match exes.get(&id) {
+                    None => Err(anyhow!("executable {id} not loaded")),
+                    Some(loaded) => do_run(&client, loaded, &input),
+                };
+                let _ = reply.send(result);
+            }
+            Request::Unload { id } => {
+                exes.remove(&id);
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+fn do_load(client: &xla::PjRtClient, hlo_path: &Path, weights: &[Tensor]) -> Result<(LoadedExe, f64)> {
+    let t0 = Instant::now();
+    let path_str = hlo_path.to_str().ok_or_else(|| anyhow!("non-UTF8 path"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .with_context(|| format!("parsing HLO text {hlo_path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).with_context(|| format!("compiling {hlo_path:?}"))?;
+    // one-time host->device transfer of all parameters
+    let weight_bufs = weights
+        .iter()
+        .map(|w| w.to_device_buffer(client))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((LoadedExe { exe, weight_bufs }, t0.elapsed().as_secs_f64() * 1000.0))
+}
+
+fn do_run(client: &xla::PjRtClient, loaded: &LoadedExe, input: &Tensor) -> Result<(Tensor, f64)> {
+    let t0 = Instant::now();
+    // only the request payload crosses host->device on the hot path
+    let input_buf = input.to_device_buffer(client)?;
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + loaded.weight_bufs.len());
+    args.push(&input_buf);
+    args.extend(loaded.weight_bufs.iter());
+    let result = loaded.exe.execute_b(&args)?[0][0].to_literal_sync()?;
+    // artifacts are lowered with return_tuple=True -> unwrap the 1-tuple
+    let out = result.to_tuple1()?;
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    Ok((Tensor::from_literal(&out)?, elapsed_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ArtifactStore;
+    use std::sync::Arc;
+
+    fn store() -> Option<Arc<ArtifactStore>> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactStore::load(&dir).ok().map(Arc::new)
+    }
+
+    #[test]
+    fn load_and_run_reference_artifact() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = EngineHandle::spawn("test");
+        let m = store.model("mlp_tabular").unwrap();
+        let weights = store.load_weights(m).unwrap();
+        let entry = m.artifact("reference", 2).unwrap();
+        let exe = engine.load(&store.hlo_path(entry), &weights, 2).unwrap();
+        assert!(exe.compile_ms > 0.0);
+        let (x, want) = store.load_golden(m).unwrap();
+        let (got, ms) = exe.run(&x).unwrap();
+        assert!(ms >= 0.0);
+        assert_eq!(got.shape, want.shape);
+        for (g, w) in got.to_f32().iter().zip(&want.to_f32()) {
+            assert!((g - w).abs() < 1e-4, "output mismatch: {g} vs {w}");
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn optimized_artifact_matches_golden() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = EngineHandle::spawn("test-opt");
+        let m = store.model("textcnn").unwrap();
+        let weights = store.load_weights(m).unwrap();
+        let entry = m.artifact("optimized", 2).unwrap();
+        let exe = engine.load(&store.hlo_path(entry), &weights, 2).unwrap();
+        let (x, want) = store.load_golden(m).unwrap();
+        let (got, _) = exe.run(&x).unwrap();
+        for (g, w) in got.to_f32().iter().zip(&want.to_f32()) {
+            assert!((g - w).abs() < 1e-3, "optimized mismatch: {g} vs {w}");
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn batch_mismatch_rejected() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = EngineHandle::spawn("test-bm");
+        let m = store.model("mlp_tabular").unwrap();
+        let weights = store.load_weights(m).unwrap();
+        let entry = m.artifact("reference", 4).unwrap();
+        let exe = engine.load(&store.hlo_path(entry), &weights, 4).unwrap();
+        let (x, _) = store.load_golden(m).unwrap(); // batch 2
+        assert!(exe.run(&x).is_err());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn handles_usable_from_many_threads() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = EngineHandle::spawn("test-mt");
+        let m = store.model("mlp_tabular").unwrap();
+        let weights = store.load_weights(m).unwrap();
+        let entry = m.artifact("reference", 2).unwrap();
+        let exe = engine.load(&store.hlo_path(entry), &weights, 2).unwrap();
+        let (x, want) = store.load_golden(m).unwrap();
+        let want = want.to_f32();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let exe = exe.clone();
+            let x = x.clone();
+            let want = want.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let (got, _) = exe.run(&x).unwrap();
+                    for (g, w) in got.to_f32().iter().zip(&want) {
+                        assert!((g - w).abs() < 1e-4);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn unload_frees_and_run_fails() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = EngineHandle::spawn("test-ul");
+        let m = store.model("mlp_tabular").unwrap();
+        let weights = store.load_weights(m).unwrap();
+        let entry = m.artifact("reference", 2).unwrap();
+        let exe = engine.load(&store.hlo_path(entry), &weights, 2).unwrap();
+        exe.unload();
+        let (x, _) = store.load_golden(m).unwrap();
+        assert!(exe.run(&x).is_err());
+        engine.shutdown();
+    }
+}

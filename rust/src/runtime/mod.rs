@@ -1,0 +1,11 @@
+//! Runtime: PJRT CPU client wrapper loading AOT HLO-text artifacts.
+//!
+//! Start-from reference: /opt/xla-example/load_hlo (see DESIGN.md).
+
+pub mod artifact;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::{ArtifactStore, ModelManifest};
+pub use engine::{EngineHandle, ExeHandle};
+pub use tensor::{DType, Tensor};

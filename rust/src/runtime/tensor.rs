@@ -1,0 +1,253 @@
+//! Host-side tensors bridging request payloads and PJRT literals.
+
+use xla::{ElementType, Literal};
+
+/// Element type of a tensor (the subset the model zoo uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Option<DType> {
+        match s {
+            "f32" | "float32" => Some(DType::F32),
+            "s32" | "i32" | "int32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    fn element_type(&self) -> ElementType {
+        match self {
+            DType::F32 => ElementType::F32,
+            DType::I32 => ElementType::S32,
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Raw little-endian bytes, `numel * 4` long.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Tensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Tensor {
+        assert_eq!(values.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    /// Wrap raw bytes (zero-copy of caller's buffer).
+    pub fn from_raw(dtype: DType, shape: &[usize], data: Vec<u8>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>() * dtype.size());
+        Tensor { dtype, shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { dtype, shape: shape.to_vec(), data: vec![0u8; n * dtype.size()] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect()
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data.chunks_exact(4).map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect()
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        Ok(Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )?)
+    }
+
+    /// Transfer to a device buffer on the client's default device
+    /// (hot-path entry: skips the host `Literal` intermediate).
+    ///
+    /// Uses the *typed* transfer API: the crate's
+    /// `buffer_from_host_raw_bytes` passes an `ElementType` discriminant
+    /// where XLA expects a `PrimitiveType`, silently mistyping buffers.
+    pub fn to_device_buffer(&self, client: &xla::PjRtClient) -> anyhow::Result<xla::PjRtBuffer> {
+        let buf = match self.dtype {
+            DType::F32 => {
+                let vals = self.to_f32();
+                client.buffer_from_host_buffer::<f32>(&vals, &self.shape, None)?
+            }
+            DType::I32 => {
+                let vals = self.to_i32();
+                client.buffer_from_host_buffer::<i32>(&vals, &self.shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Convert back from a PJRT literal.
+    pub fn from_literal(lit: &Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let dtype = match shape.ty() {
+            ElementType::F32 => DType::F32,
+            ElementType::S32 => DType::I32,
+            other => anyhow::bail!("unsupported element type {other:?}"),
+        };
+        let tensor = match dtype {
+            DType::F32 => {
+                let v: Vec<f32> = lit.to_vec()?;
+                Tensor::from_f32(&dims, &v)
+            }
+            DType::I32 => {
+                let v: Vec<i32> = lit.to_vec()?;
+                Tensor::from_i32(&dims, &v)
+            }
+        };
+        Ok(tensor)
+    }
+
+    /// Stack a batch of equally-shaped tensors along a new leading axis.
+    pub fn stack(items: &[Tensor]) -> Tensor {
+        assert!(!items.is_empty());
+        let first = &items[0];
+        assert!(items.iter().all(|t| t.shape == first.shape && t.dtype == first.dtype));
+        let mut shape = vec![items.len()];
+        shape.extend_from_slice(&first.shape);
+        let mut data = Vec::with_capacity(first.nbytes() * items.len());
+        for t in items {
+            data.extend_from_slice(&t.data);
+        }
+        Tensor { dtype: first.dtype, shape, data }
+    }
+
+    /// Split a batched tensor back into per-example tensors.
+    pub fn unstack(&self) -> Vec<Tensor> {
+        assert!(!self.shape.is_empty());
+        let n = self.shape[0];
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let stride = self.nbytes() / n.max(1);
+        (0..n)
+            .map(|i| Tensor {
+                dtype: self.dtype,
+                shape: inner.clone(),
+                data: self.data[i * stride..(i + 1) * stride].to_vec(),
+            })
+            .collect()
+    }
+
+    /// Take the first `k` rows of a batched tensor (drop batch padding).
+    pub fn truncate_batch(&self, k: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && k <= self.shape[0]);
+        let stride = self.nbytes() / self.shape[0].max(1);
+        let mut shape = self.shape.clone();
+        shape[0] = k;
+        Tensor { dtype: self.dtype, shape, data: self.data[..k * stride].to_vec() }
+    }
+
+    /// Pad the batch dimension to `k` rows by repeating the last row.
+    pub fn pad_batch(&self, k: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && k >= self.shape[0] && self.shape[0] > 0);
+        let stride = self.nbytes() / self.shape[0];
+        let mut shape = self.shape.clone();
+        shape[0] = k;
+        let mut data = self.data.clone();
+        let last = self.data[self.data.len() - stride..].to_vec();
+        for _ in self.shape[0]..k {
+            data.extend_from_slice(&last);
+        }
+        Tensor { dtype: self.dtype, shape, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert_eq!(t.to_f32(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::from_i32(&[4], &[-1, 0, 7, 42]);
+        assert_eq!(t.to_i32(), vec![-1, 0, 7, 42]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], &[1.0]);
+    }
+
+    #[test]
+    fn stack_unstack_inverse() {
+        let a = Tensor::from_f32(&[3], &[1.0, 2.0, 3.0]);
+        let b = Tensor::from_f32(&[3], &[4.0, 5.0, 6.0]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 3]);
+        let parts = s.unstack();
+        assert_eq!(parts, vec![a, b]);
+    }
+
+    #[test]
+    fn pad_truncate_batch() {
+        let t = Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let padded = t.pad_batch(4);
+        assert_eq!(padded.shape, vec![4, 2]);
+        assert_eq!(padded.to_f32()[6..], [3.0, 4.0]);
+        let back = padded.truncate_batch(2);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 2], &[1.5, -2.0, 0.0, 9.25]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[3, 1], &[5, -6, 7]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

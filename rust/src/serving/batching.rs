@@ -1,0 +1,191 @@
+//! Batching policies — the behavioural core of the "multi serving system"
+//! axis (§3.5, Figure 3 right panel).
+//!
+//! Each dockerized serving system the paper binds models to differs, for
+//! profiling purposes, in *how it forms batches* and how much per-request
+//! overhead it adds. The policy is a pure decision function over queue
+//! state so it can be property-tested exhaustively and reused by both the
+//! serving instance and the analytic profiler.
+
+/// Snapshot of a request queue the policy decides over.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueView {
+    /// Requests currently waiting.
+    pub queued: usize,
+    /// How long the oldest request has waited (ms).
+    pub oldest_wait_ms: f64,
+}
+
+/// A batch-formation policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchPolicy {
+    /// One request per execution (ONNX-Runtime-server-like default).
+    NoBatch,
+    /// Wait for exactly `size` requests, but flush a partial batch after
+    /// `max_wait_ms` to bound tail latency (classic TF-Serving
+    /// `batching_parameters`).
+    Fixed { size: usize, max_wait_ms: f64 },
+    /// Take up to `max_size` as soon as either the batch is full or the
+    /// oldest request has waited `timeout_ms` (Triton dynamic batching).
+    Dynamic { max_size: usize, timeout_ms: f64 },
+}
+
+impl BatchPolicy {
+    /// Decide how many requests to launch now (None = keep waiting).
+    pub fn decide(&self, q: QueueView) -> Option<usize> {
+        if q.queued == 0 {
+            return None;
+        }
+        match *self {
+            BatchPolicy::NoBatch => Some(1),
+            BatchPolicy::Fixed { size, max_wait_ms } => {
+                if q.queued >= size {
+                    Some(size)
+                } else if q.oldest_wait_ms >= max_wait_ms {
+                    Some(q.queued)
+                } else {
+                    None
+                }
+            }
+            BatchPolicy::Dynamic { max_size, timeout_ms } => {
+                if q.queued >= max_size {
+                    Some(max_size)
+                } else if q.oldest_wait_ms >= timeout_ms {
+                    Some(q.queued)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Largest batch this policy will ever form.
+    pub fn max_batch(&self) -> usize {
+        match *self {
+            BatchPolicy::NoBatch => 1,
+            BatchPolicy::Fixed { size, .. } => size,
+            BatchPolicy::Dynamic { max_size, .. } => max_size,
+        }
+    }
+
+    /// Upper bound on added queueing delay (ms) under light load.
+    pub fn worst_case_wait_ms(&self) -> f64 {
+        match *self {
+            BatchPolicy::NoBatch => 0.0,
+            BatchPolicy::Fixed { max_wait_ms, .. } => max_wait_ms,
+            BatchPolicy::Dynamic { timeout_ms, .. } => timeout_ms,
+        }
+    }
+}
+
+/// Round a decided batch size up to the nearest executable batch size
+/// (artifacts exist for {1,2,4,...}); the instance pads the difference.
+pub fn round_up_batch(n: usize, available: &[usize]) -> Option<usize> {
+    available.iter().copied().filter(|&b| b >= n).min()
+}
+
+/// Pick the largest available batch not exceeding the policy's max
+/// (used at deploy time to choose which artifacts to preload).
+pub fn usable_batches(available: &[usize], max_batch: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = available.iter().copied().filter(|&b| b <= max_batch).collect();
+    if v.is_empty() {
+        if let Some(&min) = available.iter().min() {
+            v.push(min); // always keep at least the smallest artifact
+        }
+    }
+    v.sort();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen_pair, gen_u64, run_prop};
+
+    #[test]
+    fn no_batch_always_singles() {
+        let p = BatchPolicy::NoBatch;
+        assert_eq!(p.decide(QueueView { queued: 7, oldest_wait_ms: 0.0 }), Some(1));
+        assert_eq!(p.decide(QueueView { queued: 0, oldest_wait_ms: 99.0 }), None);
+    }
+
+    #[test]
+    fn fixed_waits_then_flushes() {
+        let p = BatchPolicy::Fixed { size: 8, max_wait_ms: 5.0 };
+        assert_eq!(p.decide(QueueView { queued: 3, oldest_wait_ms: 1.0 }), None);
+        assert_eq!(p.decide(QueueView { queued: 8, oldest_wait_ms: 0.0 }), Some(8));
+        assert_eq!(p.decide(QueueView { queued: 12, oldest_wait_ms: 0.0 }), Some(8));
+        // starvation guard: partial flush at timeout
+        assert_eq!(p.decide(QueueView { queued: 3, oldest_wait_ms: 5.0 }), Some(3));
+    }
+
+    #[test]
+    fn dynamic_flushes_on_full_or_timeout() {
+        let p = BatchPolicy::Dynamic { max_size: 16, timeout_ms: 2.0 };
+        assert_eq!(p.decide(QueueView { queued: 16, oldest_wait_ms: 0.0 }), Some(16));
+        assert_eq!(p.decide(QueueView { queued: 40, oldest_wait_ms: 0.0 }), Some(16));
+        assert_eq!(p.decide(QueueView { queued: 5, oldest_wait_ms: 2.5 }), Some(5));
+        assert_eq!(p.decide(QueueView { queued: 5, oldest_wait_ms: 0.5 }), None);
+    }
+
+    #[test]
+    fn round_up_picks_smallest_fit() {
+        let avail = [1, 2, 4, 8, 16, 32];
+        assert_eq!(round_up_batch(1, &avail), Some(1));
+        assert_eq!(round_up_batch(3, &avail), Some(4));
+        assert_eq!(round_up_batch(16, &avail), Some(16));
+        assert_eq!(round_up_batch(33, &avail), None);
+    }
+
+    #[test]
+    fn usable_batches_bounded_but_never_empty() {
+        assert_eq!(usable_batches(&[1, 2, 4, 8], 4), vec![1, 2, 4]);
+        assert_eq!(usable_batches(&[4, 8], 1), vec![4], "fallback to smallest");
+    }
+
+    #[test]
+    fn prop_decision_never_exceeds_queue_or_max() {
+        // For every policy and queue state: decided batch <= queued and <= max_batch.
+        let gen = gen_pair(gen_u64(0, 100), gen_u64(0, 20));
+        run_prop("batch decision bounds", 500, gen, |&(queued, wait)| {
+            let q = QueueView { queued: queued as usize, oldest_wait_ms: wait as f64 };
+            for policy in [
+                BatchPolicy::NoBatch,
+                BatchPolicy::Fixed { size: 8, max_wait_ms: 5.0 },
+                BatchPolicy::Dynamic { max_size: 16, timeout_ms: 2.0 },
+            ] {
+                if let Some(n) = policy.decide(q) {
+                    if n == 0 {
+                        return Err(format!("{policy:?} produced empty batch"));
+                    }
+                    if n > q.queued {
+                        return Err(format!("{policy:?} overshoots queue: {n} > {}", q.queued));
+                    }
+                    if n > policy.max_batch() {
+                        return Err(format!("{policy:?} exceeds max batch: {n}"));
+                    }
+                } else if q.queued > 0 && q.oldest_wait_ms >= policy.worst_case_wait_ms() {
+                    return Err(format!("{policy:?} starves a stale queue: {q:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_round_up_is_minimal_fit() {
+        let gen = gen_u64(1, 64);
+        run_prop("round_up minimal", 300, gen, |&n| {
+            let avail = [1usize, 2, 4, 8, 16, 32, 64];
+            let r = round_up_batch(n as usize, &avail).ok_or("must fit within 64")?;
+            if r < n as usize {
+                return Err(format!("rounded {n} down to {r}"));
+            }
+            // minimality: no available size in [n, r)
+            if avail.iter().any(|&b| b >= n as usize && b < r) {
+                return Err(format!("{r} not minimal for {n}"));
+            }
+            Ok(())
+        });
+    }
+}

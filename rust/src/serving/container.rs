@@ -1,0 +1,161 @@
+//! Container abstraction — the Docker substitute (DESIGN.md).
+//!
+//! The dispatcher launches serving systems "in a containerized manner"
+//! (§3.5); here a container is a named, stateful wrapper around a serving
+//! instance with an image tag, a lifecycle, and resource accounting that
+//! the monitor scrapes (the cAdvisor feed).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// Docker-ish lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    Created,
+    Running,
+    Stopped,
+}
+
+/// Resource usage counters, updated by the serving instance and read by
+/// the monitor.
+#[derive(Debug, Default)]
+pub struct ResourceUsage {
+    /// Total busy compute time (µs) charged to this container.
+    pub busy_us: AtomicU64,
+    /// Requests served.
+    pub requests: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Examples served (requests × batch contribution).
+    pub examples: AtomicU64,
+    /// Bytes moved over the frontend.
+    pub network_bytes: AtomicU64,
+    /// Current queue depth.
+    pub queue_depth: AtomicUsize,
+    /// Device memory held (MiB, fixed at start).
+    pub memory_mib: AtomicU64,
+}
+
+/// A "container": image + state + usage counters.
+pub struct Container {
+    pub id: String,
+    pub image: String,
+    /// e.g. "my-resnet@triton-like@node1/t40"
+    pub name: String,
+    state: Mutex<ContainerState>,
+    pub usage: ResourceUsage,
+    created_ms: f64,
+}
+
+impl Container {
+    pub fn create(name: &str, image: &str, now_ms: f64) -> Container {
+        Container {
+            id: crate::util::idgen::object_id(),
+            image: image.to_string(),
+            name: name.to_string(),
+            state: Mutex::new(ContainerState::Created),
+            usage: ResourceUsage::default(),
+            created_ms: now_ms,
+        }
+    }
+
+    pub fn state(&self) -> ContainerState {
+        *self.state.lock().unwrap()
+    }
+
+    pub fn start(&self) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        match *s {
+            ContainerState::Created => {
+                *s = ContainerState::Running;
+                Ok(())
+            }
+            ContainerState::Running => bail!("container {} already running", self.name),
+            ContainerState::Stopped => bail!("container {} is stopped (immutable)", self.name),
+        }
+    }
+
+    pub fn stop(&self) {
+        *self.state.lock().unwrap() = ContainerState::Stopped;
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.state() == ContainerState::Running
+    }
+
+    pub fn created_ms(&self) -> f64 {
+        self.created_ms
+    }
+
+    /// Record one served batch (instance-side hook).
+    pub fn record_batch(&self, examples: usize, busy_ms: f64, network_bytes: usize) {
+        self.usage.busy_us.fetch_add((busy_ms * 1000.0) as u64, Ordering::Relaxed);
+        self.usage.requests.fetch_add(examples as u64, Ordering::Relaxed);
+        self.usage.batches.fetch_add(1, Ordering::Relaxed);
+        self.usage.examples.fetch_add(examples as u64, Ordering::Relaxed);
+        self.usage.network_bytes.fetch_add(network_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Monitor-facing snapshot.
+    pub fn usage_snapshot(&self) -> ContainerUsage {
+        ContainerUsage {
+            busy_ms: self.usage.busy_us.load(Ordering::Relaxed) as f64 / 1000.0,
+            requests: self.usage.requests.load(Ordering::Relaxed),
+            batches: self.usage.batches.load(Ordering::Relaxed),
+            examples: self.usage.examples.load(Ordering::Relaxed),
+            network_bytes: self.usage.network_bytes.load(Ordering::Relaxed),
+            queue_depth: self.usage.queue_depth.load(Ordering::Relaxed),
+            memory_mib: self.usage.memory_mib.load(Ordering::Relaxed) as f64,
+        }
+    }
+}
+
+/// Plain-data usage snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerUsage {
+    pub busy_ms: f64,
+    pub requests: u64,
+    pub batches: u64,
+    pub examples: u64,
+    pub network_bytes: u64,
+    pub queue_depth: usize,
+    pub memory_mib: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let c = Container::create("svc", "mlmodelci/triton-like:20.08", 0.0);
+        assert_eq!(c.state(), ContainerState::Created);
+        c.start().unwrap();
+        assert!(c.is_running());
+        assert!(c.start().is_err(), "double start rejected");
+        c.stop();
+        assert_eq!(c.state(), ContainerState::Stopped);
+        assert!(c.start().is_err(), "stopped containers don't restart");
+    }
+
+    #[test]
+    fn usage_accumulates() {
+        let c = Container::create("svc", "img", 0.0);
+        c.record_batch(8, 12.5, 4096);
+        c.record_batch(4, 7.5, 2048);
+        let u = c.usage_snapshot();
+        assert_eq!(u.examples, 12);
+        assert_eq!(u.batches, 2);
+        assert!((u.busy_ms - 20.0).abs() < 1e-9);
+        assert_eq!(u.network_bytes, 6144);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let a = Container::create("a", "img", 0.0);
+        let b = Container::create("b", "img", 0.0);
+        assert_ne!(a.id, b.id);
+    }
+}

@@ -1,0 +1,87 @@
+//! Web-service frontends (§3.5): RESTful vs gRPC.
+//!
+//! For profiling, the transports differ in per-request overhead: REST
+//! pays HTTP/1.1 framing + JSON (de)serialization of the tensor payload;
+//! gRPC pays HTTP/2 framing + protobuf binary encoding. Overheads are
+//! charged per request on top of queueing + execution, which is exactly
+//! how they show up in the paper's Figure 3 (serving-platform panel).
+
+/// Transport used by a deployed service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Frontend {
+    Rest,
+    Grpc,
+}
+
+impl Frontend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Frontend::Rest => "rest",
+            Frontend::Grpc => "grpc",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Frontend> {
+        match s.to_ascii_lowercase().as_str() {
+            "rest" | "http" => Some(Frontend::Rest),
+            "grpc" => Some(Frontend::Grpc),
+            _ => None,
+        }
+    }
+
+    /// Per-request transport overhead in ms given the payload size.
+    ///
+    /// Calibrated against common measurements: REST/JSON costs a fixed
+    /// ~0.5 ms (parse + headers) plus ~4 ms/MiB for base64+JSON of the
+    /// tensor body; gRPC/proto costs ~0.15 ms plus ~0.8 ms/MiB.
+    pub fn overhead_ms(&self, payload_bytes: usize) -> f64 {
+        let mib = payload_bytes as f64 / (1024.0 * 1024.0);
+        match self {
+            Frontend::Rest => 0.50 + 4.0 * mib,
+            Frontend::Grpc => 0.15 + 0.8 * mib,
+        }
+    }
+
+    /// Whether the transport supports multiplexing several models on one
+    /// connection (the paper: gRPC "supports to build a service with
+    /// multiple models well").
+    pub fn supports_multi_model(&self) -> bool {
+        matches!(self, Frontend::Grpc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parsing() {
+        assert_eq!(Frontend::from_str("REST"), Some(Frontend::Rest));
+        assert_eq!(Frontend::from_str("http"), Some(Frontend::Rest));
+        assert_eq!(Frontend::from_str("grpc"), Some(Frontend::Grpc));
+        assert_eq!(Frontend::from_str("soap"), None);
+    }
+
+    #[test]
+    fn grpc_cheaper_than_rest_at_all_sizes() {
+        for bytes in [0usize, 1 << 10, 1 << 20, 8 << 20] {
+            assert!(
+                Frontend::Grpc.overhead_ms(bytes) < Frontend::Rest.overhead_ms(bytes),
+                "at {bytes} bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn overhead_grows_with_payload() {
+        let small = Frontend::Rest.overhead_ms(1 << 10);
+        let big = Frontend::Rest.overhead_ms(16 << 20);
+        assert!(big > small * 2.0);
+    }
+
+    #[test]
+    fn multi_model_capability() {
+        assert!(Frontend::Grpc.supports_multi_model());
+        assert!(!Frontend::Rest.supports_multi_model());
+    }
+}

@@ -1,0 +1,557 @@
+//! A serving instance: one deployed MLaaS = container + worker thread +
+//! request queue + batcher + compiled executables on a device.
+//!
+//! The worker loop implements the serving system's batching policy over a
+//! bounded queue, executes batches on the node's XLA engine, charges
+//! device time through the perf model (simulated devices *sleep out* the
+//! difference so queueing and utilization emerge in real time), and
+//! answers each request with its output slice plus a latency breakdown.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::Device;
+use crate::runtime::engine::{EngineHandle, ExeHandle};
+use crate::runtime::{ModelManifest, Tensor};
+use crate::util::clock::SharedClock;
+
+use super::batching::{round_up_batch, usable_batches, QueueView};
+use super::container::Container;
+use super::frontend::Frontend;
+use super::systems::ServingSystem;
+
+/// Latency breakdown for one request (what the profiler aggregates).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTiming {
+    pub queue_ms: f64,
+    /// Charged execution time of the batch this request rode in.
+    pub exec_ms: f64,
+    pub system_ms: f64,
+    pub frontend_ms: f64,
+    /// Batch size the request was served in (after padding).
+    pub batch: usize,
+}
+
+impl RequestTiming {
+    pub fn total_ms(&self) -> f64 {
+        self.queue_ms + self.exec_ms + self.system_ms + self.frontend_ms
+    }
+}
+
+/// Reply to one inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceReply {
+    pub output: Tensor,
+    pub timing: RequestTiming,
+}
+
+struct PendingRequest {
+    input: Tensor,
+    enqueue_ms: f64,
+    payload_bytes: usize,
+    reply: mpsc::Sender<Result<InferenceReply>>,
+}
+
+enum Msg {
+    Req(PendingRequest),
+    Stop,
+}
+
+/// Deployment-time configuration of an instance.
+pub struct InstanceConfig {
+    /// Service name, e.g. "my-resnet".
+    pub name: String,
+    pub manifest: ModelManifest,
+    pub format: String,
+    pub system: &'static ServingSystem,
+    pub frontend: Frontend,
+    pub max_queue: usize,
+}
+
+/// Client-facing handle to a running instance. Clone freely.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: mpsc::Sender<Msg>,
+    queue_depth: Arc<AtomicUsize>,
+    max_queue: usize,
+    stopped: Arc<AtomicBool>,
+    pub container: Arc<Container>,
+    pub device_id: String,
+    pub model_name: String,
+    pub format: String,
+    pub system_name: &'static str,
+    pub frontend: Frontend,
+    pub batches: Vec<usize>,
+    memory_mib: f64,
+    device: Arc<Device>,
+}
+
+/// Error returned when the bounded queue is full (backpressure signal).
+pub const ERR_QUEUE_FULL: &str = "queue full";
+
+impl ServiceHandle {
+    /// Submit one example asynchronously; returns the reply channel.
+    pub fn infer_async(&self, input: Tensor) -> Result<mpsc::Receiver<Result<InferenceReply>>> {
+        if self.stopped.load(Ordering::SeqCst) {
+            bail!("service {} is stopped", self.model_name);
+        }
+        // backpressure: reject instead of queueing unboundedly
+        let depth = self.queue_depth.load(Ordering::SeqCst);
+        if depth >= self.max_queue {
+            bail!("{ERR_QUEUE_FULL}: {depth}/{} on {}", self.max_queue, self.model_name);
+        }
+        let payload_bytes = input.nbytes();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.queue_depth.fetch_add(1, Ordering::SeqCst);
+        self.container.usage.queue_depth.store(self.queue_depth.load(Ordering::SeqCst), Ordering::Relaxed);
+        let req = PendingRequest {
+            input,
+            enqueue_ms: self.device.clock().now_ms(),
+            payload_bytes,
+            reply: reply_tx,
+        };
+        self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("service worker is gone"))?;
+        Ok(reply_rx)
+    }
+
+    /// Submit one example and wait for its reply.
+    pub fn infer(&self, input: Tensor) -> Result<InferenceReply> {
+        let rx = self.infer_async(input)?;
+        rx.recv().map_err(|_| anyhow!("service worker dropped request"))?
+    }
+
+    /// Stop the worker and free device memory.
+    pub fn stop(&self) {
+        if !self.stopped.swap(true, Ordering::SeqCst) {
+            let _ = self.tx.send(Msg::Stop);
+            self.container.stop();
+            self.device.free_mib(self.memory_mib);
+        }
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::SeqCst)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::SeqCst)
+    }
+
+    pub fn memory_mib(&self) -> f64 {
+        self.memory_mib
+    }
+}
+
+/// Launch a serving instance on a device. Compiles (or reuses) the
+/// model's executables for every usable batch size, allocates device
+/// memory, starts the container and worker thread.
+pub fn launch(
+    config: InstanceConfig,
+    device: Arc<Device>,
+    engine: &EngineHandle,
+    weights: &[Tensor],
+    artifact_dir: &std::path::Path,
+    clock: SharedClock,
+) -> Result<ServiceHandle> {
+    if !config.system.supports_format(&config.format) {
+        bail!("serving system {} cannot load format '{}'", config.system.name, config.format);
+    }
+    let available = config.manifest.batches(&config.format);
+    if available.is_empty() {
+        bail!("no artifacts for {} in format {}", config.manifest.name, config.format);
+    }
+    let batches = usable_batches(&available, config.system.policy.max_batch());
+    // compile one executable per usable batch size
+    let mut exes: Vec<(usize, ExeHandle)> = Vec::new();
+    for &b in &batches {
+        let entry = config
+            .manifest
+            .artifact(&config.format, b)
+            .ok_or_else(|| anyhow!("missing artifact {}@{}/b{}", config.manifest.name, config.format, b))?;
+        let exe = engine.load(&artifact_dir.join(&entry.file), weights, b)?;
+        exes.push((b, exe));
+    }
+    // device memory: weights + activations at the largest batch
+    let workload = config.manifest.sim.workload(&config.format);
+    let memory_mib = device.spec.memory_footprint_mib(&workload, *batches.last().unwrap());
+    device.allocate_mib(memory_mib)?;
+
+    let container_name = format!("{}@{}@{}", config.name, config.system.name, device.id);
+    let container = Arc::new(Container::create(&container_name, config.system.image, clock.now_ms()));
+    container.usage.memory_mib.store(memory_mib as u64, Ordering::Relaxed);
+    container.start().expect("fresh container starts");
+
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let queue_depth = Arc::new(AtomicUsize::new(0));
+    let stopped = Arc::new(AtomicBool::new(false));
+
+    let handle = ServiceHandle {
+        tx,
+        queue_depth: queue_depth.clone(),
+        max_queue: config.max_queue,
+        stopped: stopped.clone(),
+        container: container.clone(),
+        device_id: device.id.clone(),
+        model_name: config.name.clone(),
+        format: config.format.clone(),
+        system_name: config.system.name,
+        frontend: config.frontend,
+        batches: batches.clone(),
+        memory_mib,
+        device: device.clone(),
+    };
+
+    let worker = Worker {
+        rx,
+        pending: VecDeque::new(),
+        queue_depth,
+        container,
+        device,
+        clock,
+        exes,
+        batches,
+        workload,
+        system: config.system,
+        frontend: config.frontend,
+    };
+    std::thread::Builder::new()
+        .name(format!("serve-{}", config.name))
+        .spawn(move || worker.run())
+        .expect("spawn serving worker");
+    Ok(handle)
+}
+
+struct Worker {
+    rx: mpsc::Receiver<Msg>,
+    pending: VecDeque<PendingRequest>,
+    queue_depth: Arc<AtomicUsize>,
+    container: Arc<Container>,
+    device: Arc<Device>,
+    clock: SharedClock,
+    exes: Vec<(usize, ExeHandle)>,
+    batches: Vec<usize>,
+    workload: crate::cluster::perfmodel::WorkloadCost,
+    system: &'static ServingSystem,
+    frontend: Frontend,
+}
+
+impl Worker {
+    fn run(mut self) {
+        // poll tick bounds how late a timeout flush can be
+        let tick = Duration::from_micros(200);
+        loop {
+            // drain the channel without blocking, then decide
+            loop {
+                match self.rx.try_recv() {
+                    Ok(Msg::Req(r)) => self.pending.push_back(r),
+                    Ok(Msg::Stop) => {
+                        self.drain_with_error();
+                        return;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        self.drain_with_error();
+                        return;
+                    }
+                }
+            }
+            let now = self.clock.now_ms();
+            let oldest_wait = self.pending.front().map(|r| now - r.enqueue_ms).unwrap_or(0.0);
+            let view = QueueView { queued: self.pending.len(), oldest_wait_ms: oldest_wait };
+            match self.system.policy.decide(view) {
+                Some(n) => self.execute_batch(n),
+                None => {
+                    // wait for work or timeout progress
+                    match self.rx.recv_timeout(tick) {
+                        Ok(Msg::Req(r)) => self.pending.push_back(r),
+                        Ok(Msg::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            self.drain_with_error();
+                            return;
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain_with_error(&mut self) {
+        while let Some(r) = self.pending.pop_front() {
+            self.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            let _ = r.reply.send(Err(anyhow!("service stopped")));
+        }
+    }
+
+    fn execute_batch(&mut self, n: usize) {
+        let n = n.min(self.pending.len()).max(1);
+        // cap at the largest compiled batch
+        let max_b = *self.batches.last().unwrap();
+        let n = n.min(max_b);
+        let exec_batch = round_up_batch(n, &self.batches).unwrap_or(max_b);
+        let reqs: Vec<PendingRequest> = self.pending.drain(..n).collect();
+        self.queue_depth.fetch_sub(n, Ordering::SeqCst);
+        self.container.usage.queue_depth.store(self.queue_depth.load(Ordering::SeqCst), Ordering::Relaxed);
+
+        let dequeue_ms = self.clock.now_ms();
+        let inputs: Vec<Tensor> = reqs.iter().map(|r| r.input.clone()).collect();
+        let stacked = Tensor::stack(&inputs);
+        let padded = if exec_batch > n { stacked.pad_batch(exec_batch) } else { stacked };
+
+        let exe = &self.exes.iter().find(|(b, _)| *b == exec_batch).expect("exe for batch").1;
+        let result = exe.run(&padded);
+
+        match result {
+            Ok((output, real_ms)) => {
+                let charged_ms = self.device.charge_ms(&self.workload, exec_batch, real_ms);
+                // simulated devices: sleep out the modeled remainder so
+                // wall-clock behaviour (queueing, utilization) matches
+                if charged_ms > real_ms {
+                    self.clock.sleep_ms(charged_ms - real_ms);
+                }
+                self.device.record_busy(charged_ms);
+                let outputs = output.truncate_batch(n).unstack();
+                // account *before* replying so monitor counters never lag
+                // behind what clients have observed
+                let total_net: usize =
+                    reqs.iter().zip(&outputs).map(|(r, o)| r.payload_bytes + o.nbytes()).sum();
+                self.container.record_batch(n, charged_ms, total_net);
+                for (req, out) in reqs.iter().zip(outputs) {
+                    let frontend_ms = self.frontend.overhead_ms(req.payload_bytes + out.nbytes());
+                    let timing = RequestTiming {
+                        queue_ms: dequeue_ms - req.enqueue_ms,
+                        exec_ms: charged_ms,
+                        system_ms: self.system.request_overhead_ms,
+                        frontend_ms,
+                        batch: exec_batch,
+                    };
+                    let _ = req.reply.send(Ok(InferenceReply { output: out, timing }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e:#}");
+                for req in reqs {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactStore;
+    use crate::serving::systems::{ONNXRT_LIKE, TFS_LIKE, TRITON_LIKE};
+    use crate::util::clock::wall;
+    use crate::util::rng::Rng;
+
+    fn setup(system: &'static ServingSystem, format: &str, device_kind: &str) -> Option<(ServiceHandle, ArtifactStore, EngineHandle)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let store = ArtifactStore::load(&dir).ok()?;
+        let clock = wall();
+        let engine = EngineHandle::spawn("inst-test");
+        let device = if device_kind == "cpu-host" {
+            Device::cpu_host("test/cpu0", clock.clone())
+        } else {
+            Device::simulated("test/gpu0", device_kind, clock.clone()).unwrap()
+        };
+        let m = store.model("mlp_tabular").unwrap().clone();
+        let weights = store.load_weights(&m).unwrap();
+        let handle = launch(
+            InstanceConfig {
+                name: "svc".into(),
+                manifest: m,
+                format: format.into(),
+                system,
+                frontend: Frontend::Grpc,
+                max_queue: 64,
+            },
+            device,
+            &engine,
+            &weights,
+            &store.dir,
+            clock,
+        )
+        .unwrap();
+        Some((handle, store, engine))
+    }
+
+    fn example_input(store: &ArtifactStore) -> Tensor {
+        let m = store.model("mlp_tabular").unwrap();
+        let mut rng = Rng::new(3);
+        let vals: Vec<f32> = (0..m.input_shape[0]).map(|_| rng.f32()).collect();
+        Tensor::from_f32(&m.input_shape.clone(), &vals)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let Some((svc, store, engine)) = setup(&ONNXRT_LIKE, "reference", "cpu-host") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let reply = svc.infer(example_input(&store)).unwrap();
+        assert_eq!(reply.output.shape, vec![8]); // num_classes for mlp_tabular
+        assert!(reply.timing.total_ms() > 0.0);
+        assert_eq!(reply.timing.batch, 1);
+        svc.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn dynamic_batching_groups_concurrent_requests() {
+        let Some((svc, store, engine)) = setup(&TRITON_LIKE, "optimized", "t4") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let input = example_input(&store);
+        let rxs: Vec<_> = (0..16).map(|_| svc.infer_async(input.clone()).unwrap()).collect();
+        let replies: Vec<InferenceReply> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        let max_batch = replies.iter().map(|r| r.timing.batch).max().unwrap();
+        assert!(max_batch > 1, "16 concurrent requests should be batched, got max batch {max_batch}");
+        svc.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn tfs_fixed_policy_flushes_partial_on_timeout() {
+        let Some((svc, store, engine)) = setup(&TFS_LIKE, "reference", "t4") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // fewer requests than the fixed batch size: must still complete
+        let input = example_input(&store);
+        let rxs: Vec<_> = (0..3).map(|_| svc.infer_async(input.clone()).unwrap()).collect();
+        for rx in rxs {
+            let reply = rx.recv().unwrap().unwrap();
+            assert!(reply.timing.queue_ms <= 50.0, "partial batch should flush at ~4ms");
+        }
+        svc.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn simulated_device_latency_reflects_perf_model() {
+        let Some((svc, store, engine)) = setup(&ONNXRT_LIKE, "reference", "t4") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = store.model("mlp_tabular").unwrap();
+        let modeled = Device::simulated("x", "t4", wall())
+            .unwrap()
+            .spec
+            .latency_ms(&m.sim.workload("reference"), 1);
+        let reply = svc.infer(example_input(&store)).unwrap();
+        assert!(
+            (reply.timing.exec_ms - modeled).abs() < modeled * 0.5 + 1.0,
+            "exec {} should track model {}",
+            reply.timing.exec_ms,
+            modeled
+        );
+        svc.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(store) = ArtifactStore::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let clock = wall();
+        let engine = EngineHandle::spawn("bp-test");
+        let device = Device::simulated("test/gpu0", "t4", clock.clone()).unwrap();
+        let m = store.model("bert_tiny").unwrap().clone(); // slow model
+        let weights = store.load_weights(&m).unwrap();
+        let svc = launch(
+            InstanceConfig {
+                name: "svc".into(),
+                manifest: m,
+                format: "reference".into(),
+                system: &ONNXRT_LIKE,
+                frontend: Frontend::Rest,
+                max_queue: 4,
+            },
+            device,
+            &engine,
+            &weights,
+            &store.dir,
+            clock,
+        )
+        .unwrap();
+        let input = {
+            let m = store.model("bert_tiny").unwrap();
+            let mut rng = Rng::new(1);
+            let ids: Vec<i32> = (0..m.input_shape[0]).map(|_| rng.range(0, 1000) as i32).collect();
+            Tensor::from_i32(&m.input_shape.clone(), &ids)
+        };
+        // flood far beyond the queue bound; expect some rejections
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            match svc.infer_async(input.clone()) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => {
+                    assert!(e.to_string().contains(ERR_QUEUE_FULL));
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "expected backpressure under flood");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        svc.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn stop_frees_device_memory_and_rejects_new_work() {
+        let Some((svc, store, engine)) = setup(&TRITON_LIKE, "optimized", "v100") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let used_before = svc.memory_mib();
+        assert!(used_before > 0.0);
+        svc.stop();
+        assert!(svc.is_stopped());
+        assert!(svc.infer(example_input(&store)).is_err());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn format_support_enforced_at_launch() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(store) = ArtifactStore::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let clock = wall();
+        let engine = EngineHandle::spawn("fmt-test");
+        let device = Device::simulated("test/gpu0", "t4", clock.clone()).unwrap();
+        let m = store.model("mlp_tabular").unwrap().clone();
+        let weights = store.load_weights(&m).unwrap();
+        let err = launch(
+            InstanceConfig {
+                name: "svc".into(),
+                manifest: m,
+                format: "optimized".into(),
+                system: &TFS_LIKE, // TFS can't load optimized engines
+                frontend: Frontend::Rest,
+                max_queue: 8,
+            },
+            device,
+            &engine,
+            &weights,
+            &store.dir,
+            clock,
+        );
+        assert!(err.is_err());
+        engine.shutdown();
+    }
+}

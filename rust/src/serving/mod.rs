@@ -1,0 +1,15 @@
+//! Serving substrate: containerized serving-system personalities with
+//! batching policies, frontends and instances (the TF-Serving / Triton /
+//! ONNX-Runtime + Docker substitute).
+
+pub mod batching;
+pub mod container;
+pub mod frontend;
+pub mod instance;
+pub mod systems;
+
+pub use batching::BatchPolicy;
+pub use container::{Container, ContainerState, ContainerUsage};
+pub use frontend::Frontend;
+pub use instance::{launch, InferenceReply, InstanceConfig, RequestTiming, ServiceHandle};
+pub use systems::{by_name, ServingSystem, ALL_SYSTEMS, ONNXRT_LIKE, TFS_LIKE, TRITON_LIKE};

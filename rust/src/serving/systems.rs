@@ -1,0 +1,106 @@
+//! Serving-system personalities (§3.5): the dockerized serving systems
+//! MLModelCI binds converted models to.
+//!
+//! Each system = a batching policy + a per-request runtime overhead + the
+//! set of model formats it can load — the three properties that shape
+//! Figure 3's serving-platform panel. Names are "-like" because the
+//! substitution rule replaces the real containers with behaviourally
+//! matched substrates (DESIGN.md).
+
+use super::batching::BatchPolicy;
+
+/// Descriptor of one serving system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingSystem {
+    pub name: &'static str,
+    /// Container image tag the dispatcher "pulls".
+    pub image: &'static str,
+    pub policy: BatchPolicy,
+    /// Per-request framework overhead (ms): session setup, tensor copy,
+    /// response marshalling inside the serving process.
+    pub request_overhead_ms: f64,
+    /// Model formats this system can load.
+    pub formats: &'static [&'static str],
+}
+
+/// TF-Serving-like: SavedModel-class (reference) formats, fixed-size
+/// batching with a flush timeout, heavier per-request machinery.
+pub const TFS_LIKE: ServingSystem = ServingSystem {
+    name: "tfs-like",
+    image: "mlmodelci/tfs-like:2.3",
+    policy: BatchPolicy::Fixed { size: 16, max_wait_ms: 4.0 },
+    request_overhead_ms: 0.30,
+    formats: &["reference"],
+};
+
+/// Triton-like: loads optimized (TensorRT-class) and reference formats,
+/// dynamic batching, lean request path.
+pub const TRITON_LIKE: ServingSystem = ServingSystem {
+    name: "triton-like",
+    image: "mlmodelci/triton-like:20.08",
+    policy: BatchPolicy::Dynamic { max_size: 32, timeout_ms: 2.0 },
+    request_overhead_ms: 0.12,
+    formats: &["optimized", "reference"],
+};
+
+/// ONNX-Runtime-server-like: no server-side batching, lightest overhead.
+pub const ONNXRT_LIKE: ServingSystem = ServingSystem {
+    name: "onnxrt-like",
+    image: "mlmodelci/onnxrt-like:1.4",
+    policy: BatchPolicy::NoBatch,
+    request_overhead_ms: 0.08,
+    formats: &["reference", "optimized"],
+};
+
+pub const ALL_SYSTEMS: &[&ServingSystem] = &[&TFS_LIKE, &TRITON_LIKE, &ONNXRT_LIKE];
+
+pub fn by_name(name: &str) -> Option<&'static ServingSystem> {
+    ALL_SYSTEMS.iter().copied().find(|s| s.name == name)
+}
+
+impl ServingSystem {
+    pub fn supports_format(&self, format: &str) -> bool {
+        self.formats.contains(&format)
+    }
+
+    /// The preferred (fastest) format this system can serve.
+    pub fn preferred_format(&self) -> &'static str {
+        if self.supports_format("optimized") {
+            "optimized"
+        } else {
+            "reference"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("tfs-like").unwrap().name, "tfs-like");
+        assert_eq!(by_name("triton-like").unwrap().policy.max_batch(), 32);
+        assert!(by_name("mxnet-server").is_none());
+    }
+
+    #[test]
+    fn format_support_matches_real_systems() {
+        assert!(TFS_LIKE.supports_format("reference"));
+        assert!(!TFS_LIKE.supports_format("optimized"), "TFS doesn't load TensorRT engines");
+        assert!(TRITON_LIKE.supports_format("optimized"));
+        assert_eq!(TRITON_LIKE.preferred_format(), "optimized");
+        assert_eq!(TFS_LIKE.preferred_format(), "reference");
+    }
+
+    #[test]
+    fn personalities_are_distinct() {
+        // the profiling axis only exists if the systems actually differ
+        let policies: Vec<_> = ALL_SYSTEMS.iter().map(|s| &s.policy).collect();
+        assert_ne!(policies[0], policies[1]);
+        assert_ne!(policies[1], policies[2]);
+        let mut overheads: Vec<f64> = ALL_SYSTEMS.iter().map(|s| s.request_overhead_ms).collect();
+        overheads.dedup();
+        assert_eq!(overheads.len(), 3);
+    }
+}

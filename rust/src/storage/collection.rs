@@ -1,0 +1,450 @@
+//! A document collection: insert/find/update/delete over [`Json`]
+//! documents with `_id` assignment, secondary hash indexes, and
+//! append-only JSONL persistence with compaction — the working heart of
+//! the MongoDB substitute.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+
+use crate::util::idgen;
+use crate::util::json::Json;
+
+use super::query::Query;
+
+/// Errors from collection operations.
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    Corrupt(String),
+    NotFound(String),
+    BadDocument(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "io: {e}"),
+            StoreError::Corrupt(m) => write!(f, "corrupt store: {m}"),
+            StoreError::NotFound(id) => write!(f, "document not found: {id}"),
+            StoreError::BadDocument(m) => write!(f, "bad document: {m}"),
+        }
+    }
+}
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, StoreError>;
+
+/// Write-ahead record kinds in the JSONL log.
+const OP_PUT: &str = "put";
+const OP_DEL: &str = "del";
+
+/// An in-memory collection with optional durability.
+pub struct Collection {
+    name: String,
+    docs: BTreeMap<String, Json>,
+    /// field -> value -> ids (secondary hash indexes)
+    indexes: HashMap<String, HashMap<String, Vec<String>>>,
+    /// Path of the JSONL log; `None` = memory-only (tests).
+    log_path: Option<PathBuf>,
+    log: Option<File>,
+    /// Operations since last compaction.
+    dirty_ops: usize,
+}
+
+impl Collection {
+    /// Memory-only collection.
+    pub fn in_memory(name: &str) -> Collection {
+        Collection {
+            name: name.to_string(),
+            docs: BTreeMap::new(),
+            indexes: HashMap::new(),
+            log_path: None,
+            log: None,
+            dirty_ops: 0,
+        }
+    }
+
+    /// Durable collection backed by `<dir>/<name>.jsonl`, replaying any
+    /// existing log.
+    pub fn open(dir: &std::path::Path, name: &str) -> Result<Collection> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.jsonl"));
+        let mut coll = Collection::in_memory(name);
+        if path.exists() {
+            let file = File::open(&path)?;
+            for (lineno, line) in BufReader::new(file).lines().enumerate() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = Json::parse(&line).map_err(|e| {
+                    StoreError::Corrupt(format!("{name}.jsonl line {}: {e}", lineno + 1))
+                })?;
+                let op = rec.get("op").and_then(Json::as_str).unwrap_or(OP_PUT);
+                match op {
+                    OP_PUT => {
+                        let doc = rec
+                            .get("doc")
+                            .cloned()
+                            .ok_or_else(|| StoreError::Corrupt("put without doc".into()))?;
+                        let id = doc
+                            .get("_id")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| StoreError::Corrupt("doc without _id".into()))?
+                            .to_string();
+                        coll.apply_put(id, doc);
+                    }
+                    OP_DEL => {
+                        if let Some(id) = rec.get("id").and_then(Json::as_str) {
+                            coll.apply_del(id);
+                        }
+                    }
+                    other => return Err(StoreError::Corrupt(format!("unknown op '{other}'"))),
+                }
+            }
+        }
+        coll.log = Some(OpenOptions::new().create(true).append(true).open(&path)?);
+        coll.log_path = Some(path);
+        Ok(coll)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    /// Declare a secondary index on a (top-level or dotted) string field.
+    pub fn create_index(&mut self, field: &str) {
+        if self.indexes.contains_key(field) {
+            return;
+        }
+        let mut index: HashMap<String, Vec<String>> = HashMap::new();
+        for (id, doc) in &self.docs {
+            if let Some(v) = lookup_str(doc, field) {
+                index.entry(v.to_string()).or_default().push(id.clone());
+            }
+        }
+        self.indexes.insert(field.to_string(), index);
+    }
+
+    fn apply_put(&mut self, id: String, doc: Json) {
+        if let Some(old) = self.docs.get(&id) {
+            let old = old.clone();
+            self.unindex(&id, &old);
+        }
+        self.index_doc(&id, &doc);
+        self.docs.insert(id, doc);
+    }
+
+    fn apply_del(&mut self, id: &str) {
+        if let Some(old) = self.docs.remove(id) {
+            self.unindex(id, &old);
+        }
+    }
+
+    fn index_doc(&mut self, id: &str, doc: &Json) {
+        for (field, index) in self.indexes.iter_mut() {
+            if let Some(v) = lookup_str(doc, field) {
+                index.entry(v.to_string()).or_default().push(id.to_string());
+            }
+        }
+    }
+
+    fn unindex(&mut self, id: &str, doc: &Json) {
+        for (field, index) in self.indexes.iter_mut() {
+            if let Some(v) = lookup_str(doc, field) {
+                if let Some(ids) = index.get_mut(v) {
+                    ids.retain(|x| x != id);
+                }
+            }
+        }
+    }
+
+    fn log_put(&mut self, doc: &Json) -> Result<()> {
+        if let Some(log) = &mut self.log {
+            let rec = Json::obj().with("op", OP_PUT).with("doc", doc.clone());
+            writeln!(log, "{}", rec)?;
+            self.dirty_ops += 1;
+        }
+        self.maybe_compact()
+    }
+
+    fn log_del(&mut self, id: &str) -> Result<()> {
+        if let Some(log) = &mut self.log {
+            let rec = Json::obj().with("op", OP_DEL).with("id", id);
+            writeln!(log, "{}", rec)?;
+            self.dirty_ops += 1;
+        }
+        self.maybe_compact()
+    }
+
+    fn maybe_compact(&mut self) -> Result<()> {
+        // compact when the log holds 4x more ops than live documents
+        if self.dirty_ops > 64 && self.dirty_ops > 4 * self.docs.len() {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    /// Rewrite the log to contain exactly the live documents.
+    pub fn compact(&mut self) -> Result<()> {
+        let Some(path) = self.log_path.clone() else { return Ok(()) };
+        let tmp = path.with_extension("jsonl.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            for doc in self.docs.values() {
+                let rec = Json::obj().with("op", OP_PUT).with("doc", doc.clone());
+                writeln!(f, "{}", rec)?;
+            }
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        self.log = Some(OpenOptions::new().append(true).open(&path)?);
+        self.dirty_ops = 0;
+        Ok(())
+    }
+
+    /// Insert a document; assigns `_id` when missing. Returns the id.
+    pub fn insert(&mut self, mut doc: Json) -> Result<String> {
+        if doc.as_obj().is_none() {
+            return Err(StoreError::BadDocument("documents must be objects".into()));
+        }
+        let id = match doc.get("_id").and_then(Json::as_str) {
+            Some(id) => id.to_string(),
+            None => {
+                let id = idgen::object_id();
+                doc.set("_id", id.as_str());
+                id
+            }
+        };
+        self.log_put(&doc)?;
+        self.apply_put(id.clone(), doc);
+        Ok(id)
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Json> {
+        self.docs.get(id)
+    }
+
+    /// Find documents matching the query, index-accelerated when possible.
+    pub fn find(&self, query: &Query) -> Vec<&Json> {
+        if let Some((field, value)) = query.index_key() {
+            if let Some(index) = self.indexes.get(field) {
+                let ids = index.get(value).map(|v| v.as_slice()).unwrap_or(&[]);
+                return ids
+                    .iter()
+                    .filter_map(|id| self.docs.get(id))
+                    .filter(|d| query.matches(d))
+                    .collect();
+            }
+        }
+        self.docs.values().filter(|d| query.matches(d)).collect()
+    }
+
+    pub fn find_one(&self, query: &Query) -> Option<&Json> {
+        self.find(query).into_iter().next()
+    }
+
+    pub fn count(&self, query: &Query) -> usize {
+        self.find(query).len()
+    }
+
+    /// Replace a document by id.
+    pub fn replace(&mut self, id: &str, mut doc: Json) -> Result<()> {
+        if !self.docs.contains_key(id) {
+            return Err(StoreError::NotFound(id.to_string()));
+        }
+        doc.set("_id", id);
+        self.log_put(&doc)?;
+        self.apply_put(id.to_string(), doc);
+        Ok(())
+    }
+
+    /// Merge fields into a document (shallow update, like `$set`).
+    pub fn update(&mut self, id: &str, fields: &Json) -> Result<()> {
+        let Some(doc) = self.docs.get(id) else {
+            return Err(StoreError::NotFound(id.to_string()));
+        };
+        let mut merged = doc.clone();
+        if let (Some(dst), Some(src)) = (merged.as_obj_mut(), fields.as_obj()) {
+            for (k, v) in src {
+                dst.insert(k.clone(), v.clone());
+            }
+        } else {
+            return Err(StoreError::BadDocument("update fields must be an object".into()));
+        }
+        merged.set("_id", id);
+        self.log_put(&merged)?;
+        self.apply_put(id.to_string(), merged);
+        Ok(())
+    }
+
+    /// Delete by id. Returns true when something was removed.
+    pub fn delete(&mut self, id: &str) -> Result<bool> {
+        if !self.docs.contains_key(id) {
+            return Ok(false);
+        }
+        self.log_del(id)?;
+        self.apply_del(id);
+        Ok(true)
+    }
+
+    /// All documents (ordered by id).
+    pub fn all(&self) -> impl Iterator<Item = &Json> {
+        self.docs.values()
+    }
+}
+
+fn lookup_str<'a>(doc: &'a Json, field: &str) -> Option<&'a str> {
+    let parts: Vec<&str> = field.split('.').collect();
+    doc.at(&parts).and_then(Json::as_str)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_doc(name: &str, framework: &str, acc: f64) -> Json {
+        Json::obj().with("name", name).with("framework", framework).with("accuracy", acc)
+    }
+
+    #[test]
+    fn insert_assigns_ids_and_get_roundtrips() {
+        let mut c = Collection::in_memory("models");
+        let id = c.insert(model_doc("resnet", "jax", 0.9)).unwrap();
+        assert!(idgen::is_valid(&id));
+        let doc = c.get(&id).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("resnet"));
+        assert_eq!(doc.get("_id").unwrap().as_str(), Some(id.as_str()));
+    }
+
+    #[test]
+    fn insert_rejects_non_objects() {
+        let mut c = Collection::in_memory("x");
+        assert!(c.insert(Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn find_with_and_without_index() {
+        let mut c = Collection::in_memory("models");
+        for i in 0..50 {
+            let fw = if i % 2 == 0 { "jax" } else { "torch" };
+            c.insert(model_doc(&format!("m{i}"), fw, 0.5 + i as f64 / 100.0)).unwrap();
+        }
+        let scan = c.find(&Query::eq("framework", "jax")).len();
+        c.create_index("framework");
+        let indexed = c.find(&Query::eq("framework", "jax")).len();
+        assert_eq!(scan, 25);
+        assert_eq!(indexed, 25);
+        // compound query through the index path
+        let q = Query::and([Query::eq("framework", "torch"), Query::Gt("accuracy".into(), 0.9)]);
+        let hits = c.find(&q);
+        assert!(hits.iter().all(|d| d.get("framework").unwrap().as_str() == Some("torch")));
+        assert!(hits.iter().all(|d| d.get("accuracy").unwrap().as_f64().unwrap() > 0.9));
+    }
+
+    #[test]
+    fn update_merges_and_reindexes() {
+        let mut c = Collection::in_memory("models");
+        c.create_index("status");
+        let id = c.insert(model_doc("m", "jax", 0.8).with("status", "registered")).unwrap();
+        c.update(&id, &Json::obj().with("status", "converted").with("extra", 1i64)).unwrap();
+        assert_eq!(c.find(&Query::eq("status", "registered")).len(), 0);
+        assert_eq!(c.find(&Query::eq("status", "converted")).len(), 1);
+        assert_eq!(c.get(&id).unwrap().get("extra").unwrap().as_i64(), Some(1));
+        // untouched fields survive
+        assert_eq!(c.get(&id).unwrap().get("name").unwrap().as_str(), Some("m"));
+    }
+
+    #[test]
+    fn delete_removes_and_unindexes() {
+        let mut c = Collection::in_memory("models");
+        c.create_index("name");
+        let id = c.insert(model_doc("gone", "jax", 0.5)).unwrap();
+        assert!(c.delete(&id).unwrap());
+        assert!(!c.delete(&id).unwrap(), "second delete is a no-op");
+        assert!(c.find(&Query::eq("name", "gone")).is_empty());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn update_missing_is_not_found() {
+        let mut c = Collection::in_memory("x");
+        assert!(matches!(
+            c.update("000000000000000000000000", &Json::obj()),
+            Err(StoreError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn durable_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
+        let id;
+        {
+            let mut c = Collection::open(&dir, "models").unwrap();
+            id = c.insert(model_doc("persisted", "jax", 0.7)).unwrap();
+            c.insert(model_doc("deleted", "jax", 0.1)).unwrap();
+            let del_id = c.find(&Query::eq("name", "deleted"))[0]
+                .get("_id")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string();
+            c.delete(&del_id).unwrap();
+            c.update(&id, &Json::obj().with("accuracy", 0.75)).unwrap();
+        }
+        let c2 = Collection::open(&dir, "models").unwrap();
+        assert_eq!(c2.len(), 1);
+        let doc = c2.get(&id).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("persisted"));
+        assert_eq!(doc.get("accuracy").unwrap().as_f64(), Some(0.75));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_preserves_state() {
+        let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
+        {
+            let mut c = Collection::open(&dir, "events").unwrap();
+            // churn enough ops to trigger auto-compaction
+            for round in 0..40 {
+                let id = c.insert(model_doc(&format!("m{round}"), "jax", 0.5)).unwrap();
+                for _ in 0..4 {
+                    c.update(&id, &Json::obj().with("accuracy", 0.9)).unwrap();
+                }
+                if round % 2 == 0 {
+                    c.delete(&id).unwrap();
+                }
+            }
+            c.compact().unwrap();
+        }
+        let c2 = Collection::open(&dir, "events").unwrap();
+        assert_eq!(c2.len(), 20);
+        assert!(c2.all().all(|d| d.get("accuracy").unwrap().as_f64() == Some(0.9)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_log_is_reported() {
+        let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad.jsonl"), "this is not json\n").unwrap();
+        assert!(matches!(Collection::open(&dir, "bad"), Err(StoreError::Corrupt(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

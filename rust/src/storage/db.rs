@@ -1,0 +1,141 @@
+//! Database facade: named collections + one blob store under a root
+//! directory — what `mongodb://` + GridFS is to the real MLModelCI.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::collection::{Collection, Result};
+use super::gridfs::GridFs;
+
+/// A database rooted at a directory (or fully in memory).
+pub struct Database {
+    root: Option<PathBuf>,
+    collections: Mutex<HashMap<String, Arc<Mutex<Collection>>>>,
+    gridfs: Arc<GridFs>,
+}
+
+impl Database {
+    /// Durable database at `<root>/collections` + `<root>/blobs`.
+    pub fn open(root: &Path) -> Result<Database> {
+        std::fs::create_dir_all(root)?;
+        Ok(Database {
+            root: Some(root.to_path_buf()),
+            collections: Mutex::new(HashMap::new()),
+            gridfs: Arc::new(GridFs::open(&root.join("blobs"))?),
+        })
+    }
+
+    /// Memory-only database (blobs go to a temp dir).
+    pub fn in_memory() -> Database {
+        let blob_dir = std::env::temp_dir()
+            .join(format!("mlci-mem-{}", crate::util::idgen::object_id()));
+        Database {
+            root: None,
+            collections: Mutex::new(HashMap::new()),
+            gridfs: Arc::new(GridFs::open(&blob_dir).expect("temp blob dir")),
+        }
+    }
+
+    /// Get or create a collection handle.
+    pub fn collection(&self, name: &str) -> Result<Arc<Mutex<Collection>>> {
+        let mut map = self.collections.lock().unwrap();
+        if let Some(c) = map.get(name) {
+            return Ok(c.clone());
+        }
+        let coll = match &self.root {
+            Some(root) => Collection::open(&root.join("collections"), name)?,
+            None => Collection::in_memory(name),
+        };
+        let arc = Arc::new(Mutex::new(coll));
+        map.insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Convenience: lock a collection for a sequence of operations.
+    pub fn with_collection<T>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&mut MutexGuard<'_, Collection>) -> T,
+    ) -> Result<T> {
+        let coll = self.collection(name)?;
+        let mut guard = coll.lock().unwrap();
+        Ok(f(&mut guard))
+    }
+
+    pub fn gridfs(&self) -> &GridFs {
+        &self.gridfs
+    }
+
+    pub fn collection_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.collections.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::query::Query;
+    use crate::util::idgen;
+    use crate::util::json::Json;
+
+    #[test]
+    fn collections_are_cached_handles() {
+        let db = Database::in_memory();
+        let a = db.collection("models").unwrap();
+        let b = db.collection("models").unwrap();
+        a.lock().unwrap().insert(Json::obj().with("name", "x")).unwrap();
+        assert_eq!(b.lock().unwrap().len(), 1);
+        assert_eq!(db.collection_names(), vec!["models"]);
+    }
+
+    #[test]
+    fn durable_database_reopens() {
+        let dir = std::env::temp_dir().join(format!("mlci-db-{}", idgen::object_id()));
+        {
+            let db = Database::open(&dir).unwrap();
+            db.with_collection("models", |c| {
+                c.insert(Json::obj().with("name", "persisted")).unwrap()
+            })
+            .unwrap();
+            let blob = db.gridfs().put("w.bin", b"weights").unwrap();
+            db.with_collection("models", |c| {
+                let id = c.all().next().unwrap().get("_id").unwrap().as_str().unwrap().to_string();
+                c.update(&id, &Json::obj().with("weights", blob.to_json())).unwrap();
+            })
+            .unwrap();
+        }
+        let db2 = Database::open(&dir).unwrap();
+        db2.with_collection("models", |c| {
+            assert_eq!(c.len(), 1);
+            let doc = c.find_one(&Query::eq("name", "persisted")).unwrap();
+            let blob = crate::storage::gridfs::BlobRef::from_json(doc.get("weights").unwrap()).unwrap();
+            assert_eq!(db2.gridfs().get(&blob).unwrap(), b"weights");
+        })
+        .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_writers_do_not_lose_documents() {
+        let db = Arc::new(Database::in_memory());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let db = db.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    db.with_collection("events", |c| {
+                        c.insert(Json::obj().with("thread", t as i64).with("i", i as i64)).unwrap()
+                    })
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        db.with_collection("events", |c| assert_eq!(c.len(), 400)).unwrap();
+    }
+}

@@ -1,0 +1,265 @@
+//! Chunked blob store — the GridFS substitute (§3.1: "its built-in
+//! GridFS ... supports large-capacity storage, which is very useful for
+//! storing large model weight files").
+//!
+//! Blobs are content-addressed (FNV-1a) and stored as fixed-size chunk
+//! files plus a JSON descriptor, mirroring GridFS's `fs.files` /
+//! `fs.chunks` split. Reads verify length and checksum.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::hash::{content_id, Hasher};
+use crate::util::json::Json;
+
+use super::collection::{Result, StoreError};
+
+/// Default chunk size (256 KiB — GridFS's default granularity class).
+pub const DEFAULT_CHUNK: usize = 256 * 1024;
+
+/// Handle to a stored blob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlobRef {
+    pub id: String,
+    pub len: usize,
+    pub chunks: usize,
+    pub filename: String,
+}
+
+impl BlobRef {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id.as_str())
+            .with("len", self.len)
+            .with("chunks", self.chunks)
+            .with("filename", self.filename.as_str())
+    }
+
+    pub fn from_json(v: &Json) -> Option<BlobRef> {
+        Some(BlobRef {
+            id: v.get("id")?.as_str()?.to_string(),
+            len: v.get("len")?.as_usize()?,
+            chunks: v.get("chunks")?.as_usize()?,
+            filename: v.get("filename")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// On-disk chunked blob store.
+pub struct GridFs {
+    root: PathBuf,
+    chunk_size: usize,
+}
+
+impl GridFs {
+    pub fn open(root: &Path) -> Result<GridFs> {
+        Self::with_chunk_size(root, DEFAULT_CHUNK)
+    }
+
+    pub fn with_chunk_size(root: &Path, chunk_size: usize) -> Result<GridFs> {
+        assert!(chunk_size > 0);
+        fs::create_dir_all(root)?;
+        Ok(GridFs { root: root.to_path_buf(), chunk_size })
+    }
+
+    fn blob_dir(&self, id: &str) -> PathBuf {
+        self.root.join(id)
+    }
+
+    /// Store bytes under a logical filename; content-addressed, so storing
+    /// identical content twice is free (dedup, like model re-registration).
+    pub fn put(&self, filename: &str, data: &[u8]) -> Result<BlobRef> {
+        let id = content_id(data);
+        let dir = self.blob_dir(&id);
+        let n_chunks = data.len().div_ceil(self.chunk_size).max(1);
+        let blob = BlobRef { id: id.clone(), len: data.len(), chunks: n_chunks, filename: filename.to_string() };
+        if dir.join("descriptor.json").exists() {
+            return Ok(blob); // dedup hit
+        }
+        let tmp = self.root.join(format!(".tmp-{id}"));
+        fs::create_dir_all(&tmp)?;
+        for (i, chunk) in data.chunks(self.chunk_size.max(1)).enumerate() {
+            fs::write(tmp.join(format!("chunk.{i:06}")), chunk)?;
+        }
+        if data.is_empty() {
+            fs::write(tmp.join("chunk.000000"), b"")?;
+        }
+        let desc = blob
+            .to_json()
+            .with("chunk_size", self.chunk_size)
+            .with("checksum", id.as_str());
+        let mut f = fs::File::create(tmp.join("descriptor.json"))?;
+        f.write_all(desc.to_pretty().as_bytes())?;
+        f.sync_all()?;
+        // atomic publish
+        match fs::rename(&tmp, &dir) {
+            Ok(()) => {}
+            Err(_) if dir.exists() => {
+                fs::remove_dir_all(&tmp).ok(); // concurrent writer won
+            }
+            Err(e) => return Err(e.into()),
+        }
+        Ok(blob)
+    }
+
+    /// Fetch and verify a blob.
+    pub fn get(&self, blob: &BlobRef) -> Result<Vec<u8>> {
+        let dir = self.blob_dir(&blob.id);
+        if !dir.exists() {
+            return Err(StoreError::NotFound(blob.id.clone()));
+        }
+        let mut out = Vec::with_capacity(blob.len);
+        let mut hasher = Hasher::new();
+        for i in 0..blob.chunks {
+            let path = dir.join(format!("chunk.{i:06}"));
+            let chunk = fs::read(&path)
+                .map_err(|_| StoreError::Corrupt(format!("missing chunk {i} of {}", blob.id)))?;
+            hasher.update(&chunk);
+            out.extend_from_slice(&chunk);
+        }
+        if out.len() != blob.len {
+            return Err(StoreError::Corrupt(format!(
+                "blob {} length {} != descriptor {}",
+                blob.id,
+                out.len(),
+                blob.len
+            )));
+        }
+        if hasher.finish_hex() != blob.id {
+            return Err(StoreError::Corrupt(format!("blob {} checksum mismatch", blob.id)));
+        }
+        Ok(out)
+    }
+
+    /// Stream one chunk (for range reads of large weight files).
+    pub fn get_chunk(&self, blob: &BlobRef, index: usize) -> Result<Vec<u8>> {
+        if index >= blob.chunks {
+            return Err(StoreError::NotFound(format!("{} chunk {index}", blob.id)));
+        }
+        Ok(fs::read(self.blob_dir(&blob.id).join(format!("chunk.{index:06}")))?)
+    }
+
+    pub fn exists(&self, id: &str) -> bool {
+        self.blob_dir(id).join("descriptor.json").exists()
+    }
+
+    pub fn delete(&self, id: &str) -> Result<bool> {
+        let dir = self.blob_dir(id);
+        if !dir.exists() {
+            return Ok(false);
+        }
+        fs::remove_dir_all(dir)?;
+        Ok(true)
+    }
+
+    /// Total bytes stored (capacity accounting for the monitor).
+    pub fn total_bytes(&self) -> Result<u64> {
+        let mut total = 0;
+        for entry in fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if entry.file_type()?.is_dir() {
+                for chunk in fs::read_dir(entry.path())? {
+                    let chunk = chunk?;
+                    if chunk.file_name().to_string_lossy().starts_with("chunk.") {
+                        total += chunk.metadata()?.len();
+                    }
+                }
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::idgen;
+    use crate::util::rng::Rng;
+
+    fn tmp() -> PathBuf {
+        std::env::temp_dir().join(format!("mlci-gridfs-{}", idgen::object_id()))
+    }
+
+    #[test]
+    fn put_get_roundtrip_multichunk() {
+        let dir = tmp();
+        let fs = GridFs::with_chunk_size(&dir, 1024).unwrap();
+        let mut rng = Rng::new(1);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.range(0, 256) as u8).collect();
+        let blob = fs.put("weights.bin", &data).unwrap();
+        assert_eq!(blob.chunks, 10);
+        assert_eq!(fs.get(&blob).unwrap(), data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_blob_roundtrips() {
+        let dir = tmp();
+        let fs = GridFs::open(&dir).unwrap();
+        let blob = fs.put("empty.bin", &[]).unwrap();
+        assert_eq!(fs.get(&blob).unwrap(), Vec::<u8>::new());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn content_addressing_dedups() {
+        let dir = tmp();
+        let fs = GridFs::open(&dir).unwrap();
+        let a = fs.put("a.bin", b"same-bytes").unwrap();
+        let b = fs.put("b.bin", b"same-bytes").unwrap();
+        assert_eq!(a.id, b.id);
+        assert_eq!(fs.total_bytes().unwrap(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmp();
+        let fs = GridFs::with_chunk_size(&dir, 8).unwrap();
+        let blob = fs.put("w.bin", b"0123456789abcdef").unwrap();
+        // flip bytes in chunk 1
+        let chunk_path = dir.join(&blob.id).join("chunk.000001");
+        std::fs::write(&chunk_path, b"XXXXXXXX").unwrap();
+        assert!(matches!(fs.get(&blob), Err(StoreError::Corrupt(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_blob_not_found() {
+        let dir = tmp();
+        let fs = GridFs::open(&dir).unwrap();
+        let ghost = BlobRef { id: "deadbeefdeadbeef".into(), len: 4, chunks: 1, filename: "x".into() };
+        assert!(matches!(fs.get(&ghost), Err(StoreError::NotFound(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delete_and_exists() {
+        let dir = tmp();
+        let fs = GridFs::open(&dir).unwrap();
+        let blob = fs.put("w.bin", b"bytes").unwrap();
+        assert!(fs.exists(&blob.id));
+        assert!(fs.delete(&blob.id).unwrap());
+        assert!(!fs.exists(&blob.id));
+        assert!(!fs.delete(&blob.id).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn blobref_json_roundtrip() {
+        let blob = BlobRef { id: "abc123".into(), len: 42, chunks: 1, filename: "w.bin".into() };
+        assert_eq!(BlobRef::from_json(&blob.to_json()), Some(blob));
+    }
+
+    #[test]
+    fn chunk_range_reads() {
+        let dir = tmp();
+        let fs = GridFs::with_chunk_size(&dir, 4).unwrap();
+        let blob = fs.put("w.bin", b"0123456789").unwrap();
+        assert_eq!(fs.get_chunk(&blob, 0).unwrap(), b"0123");
+        assert_eq!(fs.get_chunk(&blob, 2).unwrap(), b"89");
+        assert!(fs.get_chunk(&blob, 3).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Storage substrate — the MongoDB + GridFS substitute (DESIGN.md
+//! substitution table): JSON document collections with queries, indexes
+//! and JSONL durability, plus a chunked content-addressed blob store.
+
+pub mod collection;
+pub mod db;
+pub mod gridfs;
+pub mod query;
+
+pub use collection::{Collection, Result, StoreError};
+pub use db::Database;
+pub use gridfs::{BlobRef, GridFs};
+pub use query::Query;

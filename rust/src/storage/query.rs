@@ -1,0 +1,153 @@
+//! Query language for the document store — the Mongo-ish subset the
+//! housekeeper's `retrieve` API needs (§3.2): field equality, comparisons,
+//! set membership, prefix match, and/or composition.
+
+use crate::util::json::Json;
+
+/// A predicate over documents.
+#[derive(Debug, Clone)]
+pub enum Query {
+    /// Matches every document.
+    All,
+    /// Field equals value (dot-path supported: "profiling.batch").
+    Eq(String, Json),
+    /// Field numerically greater than.
+    Gt(String, f64),
+    /// Field numerically less than.
+    Lt(String, f64),
+    /// Field value is one of the given values.
+    In(String, Vec<Json>),
+    /// String field starts with prefix.
+    Prefix(String, String),
+    /// String field contains substring (the paper's retrieve-by-name search).
+    Contains(String, String),
+    /// Field exists (non-null).
+    Exists(String),
+    And(Vec<Query>),
+    Or(Vec<Query>),
+    Not(Box<Query>),
+}
+
+impl Query {
+    pub fn and(queries: impl IntoIterator<Item = Query>) -> Query {
+        Query::And(queries.into_iter().collect())
+    }
+
+    pub fn or(queries: impl IntoIterator<Item = Query>) -> Query {
+        Query::Or(queries.into_iter().collect())
+    }
+
+    pub fn eq(field: &str, value: impl Into<Json>) -> Query {
+        Query::Eq(field.to_string(), value.into())
+    }
+
+    /// Resolve a dot path inside a document.
+    fn lookup<'a>(doc: &'a Json, path: &str) -> Option<&'a Json> {
+        let parts: Vec<&str> = path.split('.').collect();
+        doc.at(&parts)
+    }
+
+    /// Evaluate the predicate against a document.
+    pub fn matches(&self, doc: &Json) -> bool {
+        match self {
+            Query::All => true,
+            Query::Eq(f, v) => Self::lookup(doc, f) == Some(v),
+            Query::Gt(f, v) => {
+                Self::lookup(doc, f).and_then(Json::as_f64).map(|x| x > *v).unwrap_or(false)
+            }
+            Query::Lt(f, v) => {
+                Self::lookup(doc, f).and_then(Json::as_f64).map(|x| x < *v).unwrap_or(false)
+            }
+            Query::In(f, vs) => {
+                Self::lookup(doc, f).map(|x| vs.iter().any(|v| v == x)).unwrap_or(false)
+            }
+            Query::Prefix(f, p) => Self::lookup(doc, f)
+                .and_then(Json::as_str)
+                .map(|s| s.starts_with(p.as_str()))
+                .unwrap_or(false),
+            Query::Contains(f, sub) => Self::lookup(doc, f)
+                .and_then(Json::as_str)
+                .map(|s| s.contains(sub.as_str()))
+                .unwrap_or(false),
+            Query::Exists(f) => {
+                Self::lookup(doc, f).map(|v| !v.is_null()).unwrap_or(false)
+            }
+            Query::And(qs) => qs.iter().all(|q| q.matches(doc)),
+            Query::Or(qs) => qs.iter().any(|q| q.matches(doc)),
+            Query::Not(q) => !q.matches(doc),
+        }
+    }
+
+    /// If this query pins an indexable field to an exact string value,
+    /// return (field, value) — lets collections use hash indexes.
+    pub fn index_key(&self) -> Option<(&str, &str)> {
+        match self {
+            Query::Eq(f, Json::Str(s)) => Some((f.as_str(), s.as_str())),
+            Query::And(qs) => qs.iter().find_map(|q| q.index_key()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> Json {
+        Json::parse(
+            r#"{"name": "resnet_mini", "framework": "jax", "accuracy": 0.87,
+                "profiling": {"batch": 8, "p99_ms": 12.5},
+                "tags": "cv,classification", "deleted": null}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn eq_and_dotpath() {
+        assert!(Query::eq("name", "resnet_mini").matches(&doc()));
+        assert!(!Query::eq("name", "bert").matches(&doc()));
+        assert!(Query::eq("profiling.batch", 8i64).matches(&doc()));
+    }
+
+    #[test]
+    fn comparisons() {
+        assert!(Query::Gt("accuracy".into(), 0.8).matches(&doc()));
+        assert!(!Query::Gt("accuracy".into(), 0.9).matches(&doc()));
+        assert!(Query::Lt("profiling.p99_ms".into(), 20.0).matches(&doc()));
+        // missing / non-numeric fields never match comparisons
+        assert!(!Query::Gt("name".into(), 0.0).matches(&doc()));
+        assert!(!Query::Gt("nope".into(), 0.0).matches(&doc()));
+    }
+
+    #[test]
+    fn membership_prefix_contains() {
+        assert!(Query::In("framework".into(), vec!["torch".into(), "jax".into()]).matches(&doc()));
+        assert!(Query::Prefix("name".into(), "resnet".into()).matches(&doc()));
+        assert!(Query::Contains("tags".into(), "classif".into()).matches(&doc()));
+        assert!(!Query::Contains("tags".into(), "nlp".into()).matches(&doc()));
+    }
+
+    #[test]
+    fn exists_treats_null_as_absent() {
+        assert!(Query::Exists("accuracy".into()).matches(&doc()));
+        assert!(!Query::Exists("deleted".into()).matches(&doc()));
+        assert!(!Query::Exists("ghost".into()).matches(&doc()));
+    }
+
+    #[test]
+    fn boolean_composition() {
+        let q = Query::and([Query::eq("framework", "jax"), Query::Gt("accuracy".into(), 0.5)]);
+        assert!(q.matches(&doc()));
+        let q2 = Query::or([Query::eq("name", "zzz"), Query::eq("name", "resnet_mini")]);
+        assert!(q2.matches(&doc()));
+        assert!(Query::Not(Box::new(q2)).matches(&doc()) == false);
+    }
+
+    #[test]
+    fn index_key_extraction() {
+        assert_eq!(Query::eq("name", "x").index_key(), Some(("name", "x")));
+        let q = Query::and([Query::Gt("a".into(), 1.0), Query::eq("name", "y")]);
+        assert_eq!(q.index_key(), Some(("name", "y")));
+        assert_eq!(Query::All.index_key(), None);
+    }
+}

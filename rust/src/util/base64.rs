@@ -1,0 +1,102 @@
+//! Standard base64 (RFC 4648 with padding) — needed by the REST API to
+//! carry weight files in JSON bodies. No crates offline, so built here.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes to base64 text.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn decode_char(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some((c - b'A') as u32),
+        b'a'..=b'z' => Some((c - b'a') as u32 + 26),
+        b'0'..=b'9' => Some((c - b'0') as u32 + 52),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Decode base64 text (whitespace tolerated, padding required for tail).
+pub fn decode(text: &str) -> Result<Vec<u8>, String> {
+    let clean: Vec<u8> = text.bytes().filter(|b| !b.is_ascii_whitespace()).collect();
+    if clean.len() % 4 != 0 {
+        return Err(format!("base64 length {} not a multiple of 4", clean.len()));
+    }
+    let mut out = Vec::with_capacity(clean.len() / 4 * 3);
+    for chunk in clean.chunks(4) {
+        let pads = chunk.iter().filter(|&&c| c == b'=').count();
+        if pads > 2 || (pads > 0 && (chunk[0] == b'=' || chunk[1] == b'=')) {
+            return Err("misplaced padding".into());
+        }
+        let mut n: u32 = 0;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if c == b'=' {
+                if i < 2 || chunk[i..].iter().any(|&x| x != b'=') {
+                    return Err("misplaced padding".into());
+                }
+                0
+            } else {
+                decode_char(c).ok_or_else(|| format!("invalid base64 char '{}'", c as char))?
+            };
+            n = (n << 6) | v;
+        }
+        out.push((n >> 16) as u8);
+        if pads < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pads < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        assert_eq!(encode(b""), "");
+        assert_eq!(encode(b"f"), "Zg==");
+        assert_eq!(encode(b"fo"), "Zm8=");
+        assert_eq!(encode(b"foo"), "Zm9v");
+        assert_eq!(encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert_eq!(decode("Zg==").unwrap(), b"f");
+    }
+
+    #[test]
+    fn roundtrip_binary() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        for len in [0usize, 1, 2, 3, 4, 255, 1000] {
+            let data: Vec<u8> = (0..len).map(|_| rng.range(0, 256) as u8).collect();
+            assert_eq!(decode(&encode(&data)).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode("a").is_err());
+        assert!(decode("ab=c").is_err());
+        assert!(decode("====").is_err());
+        assert!(decode("Zm9v!b==").is_err());
+    }
+
+    #[test]
+    fn tolerates_whitespace() {
+        assert_eq!(decode("Zm9v\nYmFy\n").unwrap(), b"foobar");
+    }
+}

@@ -1,0 +1,143 @@
+//! Clock abstraction: wall-clock for serving, virtual clock for the
+//! simulated cluster and deterministic tests/benches.
+//!
+//! The controller experiment (C1) needs hours of simulated load in
+//! milliseconds of real time, so everything time-dependent takes a
+//! `&dyn Clock` (or a [`SharedClock`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Milliseconds since an arbitrary epoch.
+pub trait Clock: Send + Sync {
+    fn now_ms(&self) -> f64;
+    /// Sleep (wall clock) or advance (virtual clock).
+    fn sleep_ms(&self, ms: f64);
+}
+
+/// Real wall clock backed by `Instant`.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1000.0
+    }
+
+    fn sleep_ms(&self, ms: f64) {
+        if ms > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1000.0));
+        }
+    }
+}
+
+/// Discrete virtual clock; `sleep_ms` advances it instantly.
+///
+/// Time is stored as integer microseconds in an atomic so many simulated
+/// workers can share one clock without locks.
+pub struct VirtualClock {
+    micros: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { micros: AtomicU64::new(0) }
+    }
+
+    pub fn advance_ms(&self, ms: f64) {
+        self.micros.fetch_add((ms * 1000.0) as u64, Ordering::SeqCst);
+    }
+
+    /// Move the clock forward to at least `t_ms` (never backwards).
+    pub fn advance_to_ms(&self, t_ms: f64) {
+        let target = (t_ms * 1000.0) as u64;
+        self.micros.fetch_max(target, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> f64 {
+        self.micros.load(Ordering::SeqCst) as f64 / 1000.0
+    }
+
+    fn sleep_ms(&self, ms: f64) {
+        self.advance_ms(ms);
+    }
+}
+
+/// Shareable clock handle.
+pub type SharedClock = Arc<dyn Clock>;
+
+pub fn wall() -> SharedClock {
+    Arc::new(WallClock::new())
+}
+
+pub fn virtual_clock() -> Arc<VirtualClock> {
+    Arc::new(VirtualClock::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        c.sleep_ms(2.0);
+        let b = c.now_ms();
+        assert!(b >= a + 1.0, "slept {a} -> {b}");
+    }
+
+    #[test]
+    fn virtual_clock_advances_instantly() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        c.sleep_ms(1_000_000.0); // a thousand simulated seconds, instantly
+        assert_eq!(c.now_ms(), 1_000_000.0);
+    }
+
+    #[test]
+    fn advance_to_never_goes_backwards() {
+        let c = VirtualClock::new();
+        c.advance_to_ms(500.0);
+        c.advance_to_ms(100.0);
+        assert_eq!(c.now_ms(), 500.0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let c = virtual_clock();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            for _ in 0..1000 {
+                c2.advance_ms(1.0);
+            }
+        });
+        for _ in 0..1000 {
+            c.advance_ms(1.0);
+        }
+        h.join().unwrap();
+        assert_eq!(c.now_ms(), 2000.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Content hashing for the blob store (GridFS substitute) — FNV-1a 64-bit,
+//! rendered as hex. Not cryptographic; used for content addressing and
+//! integrity checks of weight files and artifacts inside one deployment.
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hex-rendered content id, `16` lowercase hex chars.
+pub fn content_id(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a(bytes))
+}
+
+/// Incremental hasher for chunked streams.
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u64,
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: 0xcbf29ce484222325 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+
+    pub fn finish_hex(&self) -> String {
+        format!("{:016x}", self.state)
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut h = Hasher::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finish(), fnv1a(data));
+    }
+
+    #[test]
+    fn content_id_format() {
+        let id = content_id(b"weights");
+        assert_eq!(id.len(), 16);
+        assert!(id.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn distinct_content_distinct_ids() {
+        assert_ne!(content_id(b"model-a"), content_id(b"model-b"));
+    }
+}

@@ -1,0 +1,63 @@
+//! ObjectId-style identifiers for the document store: 24 hex chars
+//! combining a time component, a process nonce and a sequence counter —
+//! sortable by creation order within a process, collision-free across
+//! processes with overwhelming probability (like MongoDB ObjectIds).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+fn process_nonce() -> u32 {
+    // stable within a process, distinct across processes
+    use std::sync::OnceLock;
+    static NONCE: OnceLock<u32> = OnceLock::new();
+    *NONCE.get_or_init(|| {
+        let pid = std::process::id();
+        let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().subsec_nanos();
+        pid ^ t
+    })
+}
+
+/// Generate a fresh 24-hex-char id.
+pub fn object_id() -> String {
+    let secs = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_secs() as u32;
+    let seq = COUNTER.fetch_add(1, Ordering::Relaxed);
+    format!("{:08x}{:08x}{:08x}", secs, process_nonce(), seq as u32)
+}
+
+/// Validate the shape of an id (24 lowercase hex chars).
+pub fn is_valid(id: &str) -> bool {
+    id.len() == 24 && id.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_valid_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let id = object_id();
+            assert!(is_valid(&id), "bad id {id}");
+            assert!(seen.insert(id), "duplicate id");
+        }
+    }
+
+    #[test]
+    fn ids_sort_by_creation_within_process() {
+        let a = object_id();
+        let b = object_id();
+        assert!(a < b, "{a} should sort before {b}");
+    }
+
+    #[test]
+    fn validation_rejects_junk() {
+        assert!(!is_valid(""));
+        assert!(!is_valid("xyz"));
+        assert!(!is_valid(&"g".repeat(24)));
+        assert!(!is_valid(&"A".repeat(24)));
+        assert!(is_valid(&"0123456789abcdef01234567".to_string()));
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrates: everything the offline sandbox forced us to build
+//! in-repo instead of pulling from crates.io (serde/rand/criterion/...).
+
+pub mod benchkit;
+pub mod clock;
+pub mod hash;
+pub mod idgen;
+pub mod json;
+pub mod base64;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod yaml;

@@ -1,0 +1,271 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Deterministic per seed, with naive-but-effective shrinking: on failure
+//! the framework re-runs the property on progressively "smaller" inputs
+//! produced by the generator's `shrink` method and reports the smallest
+//! failing case. Used for invariants on the coordinator: routing,
+//! batching, document-store queries, controller scheduling.
+//!
+//! ```ignore
+//! run_prop("batch never exceeds max", 500, gen_vec(gen_u64(0, 100), 0, 64),
+//!          |items| check_batching(items));
+//! ```
+
+use super::rng::Rng;
+
+/// A generator producing values of `T` plus shrink candidates.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + std::fmt::Debug + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Gen<T> {
+        Gen { gen: Box::new(gen), shrink: Box::new(shrink) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (shrinking degrades to no-op).
+    pub fn map<U: Clone + std::fmt::Debug + 'static>(
+        self,
+        f: impl Fn(T) -> U + Clone + 'static,
+    ) -> Gen<U> {
+        let g = self.gen;
+        Gen::new(move |rng| f(g(rng)), |_| Vec::new())
+    }
+}
+
+/// Integers in [lo, hi], shrinking toward lo.
+pub fn gen_u64(lo: u64, hi: u64) -> Gen<u64> {
+    Gen::new(
+        move |rng| rng.range(lo, hi + 1),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.sort();
+            out.dedup();
+            out.retain(|&x| x != v);
+            out
+        },
+    )
+}
+
+/// Floats in [lo, hi), shrinking toward lo.
+pub fn gen_f64(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(
+        move |rng| lo + rng.f64() * (hi - lo),
+        move |&v| {
+            let mid = lo + (v - lo) / 2.0;
+            if (v - lo).abs() > 1e-9 {
+                vec![lo, mid]
+            } else {
+                vec![]
+            }
+        },
+    )
+}
+
+/// Vectors with length in [min_len, max_len], shrinking by halving and
+/// element dropping.
+pub fn gen_vec<T: Clone + std::fmt::Debug + 'static>(
+    elem: Gen<T>,
+    min_len: usize,
+    max_len: usize,
+) -> Gen<Vec<T>> {
+    let elem = std::rc::Rc::new(elem);
+    let elem2 = elem.clone();
+    Gen::new(
+        move |rng| {
+            let len = rng.usize(min_len, max_len + 1);
+            (0..len).map(|_| elem.sample(rng)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut out: Vec<Vec<T>> = Vec::new();
+            if v.len() > min_len {
+                out.push(v[..v.len() / 2.max(min_len)].to_vec());
+                let mut dropped = v.clone();
+                dropped.pop();
+                out.push(dropped);
+            }
+            // shrink one element
+            if let Some(first) = v.first() {
+                for s in elem2.shrinks(first).into_iter().take(2) {
+                    let mut copy = v.clone();
+                    copy[0] = s;
+                    out.push(copy);
+                }
+            }
+            out
+        },
+    )
+}
+
+/// ASCII identifier strings (for document keys/names).
+pub fn gen_ident(max_len: usize) -> Gen<String> {
+    Gen::new(
+        move |rng| {
+            let len = rng.usize(1, max_len + 1);
+            (0..len)
+                .map(|_| {
+                    let c = rng.usize(0, 36);
+                    if c < 26 {
+                        (b'a' + c as u8) as char
+                    } else {
+                        (b'0' + (c - 26) as u8) as char
+                    }
+                })
+                .collect()
+        },
+        |s: &String| {
+            if s.len() > 1 {
+                vec![s[..s.len() / 2].to_string(), s[..s.len() - 1].to_string()]
+            } else {
+                vec![]
+            }
+        },
+    )
+}
+
+/// Pair generator.
+pub fn gen_pair<A: Clone + std::fmt::Debug + 'static, B: Clone + std::fmt::Debug + 'static>(
+    a: Gen<A>,
+    b: Gen<B>,
+) -> Gen<(A, B)> {
+    let a = std::rc::Rc::new(a);
+    let b = std::rc::Rc::new(b);
+    let (a2, b2) = (a.clone(), b.clone());
+    Gen::new(
+        move |rng| (a.sample(rng), b.sample(rng)),
+        move |(x, y)| {
+            let mut out = Vec::new();
+            for xs in a2.shrinks(x).into_iter().take(2) {
+                out.push((xs, y.clone()));
+            }
+            for ys in b2.shrinks(y).into_iter().take(2) {
+                out.push((x.clone(), ys));
+            }
+            out
+        },
+    )
+}
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases; on failure shrink up to 200 steps and panic
+/// with the minimal counterexample.
+pub fn run_prop<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(0x5eed ^ fnv_str(name));
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in gen.shrinks(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, after {steps} shrink steps)\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+fn fnv_str(s: &str) -> u64 {
+    super::hash::fnv1a(s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run_prop("add commutes", 200, gen_pair(gen_u64(0, 1000), gen_u64(0, 1000)), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            run_prop("all < 50", 500, gen_u64(0, 1000), |&v| {
+                if v < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 50"))
+                }
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // the shrinker should walk down close to the boundary (50)
+        assert!(msg.contains("input: 5"), "should shrink near 50, got: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let gen = gen_vec(gen_u64(0, 9), 2, 5);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let v = gen.sample(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+
+    #[test]
+    fn ident_generator_valid_chars() {
+        let gen = gen_ident(8);
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let s = gen.sample(&mut rng);
+            assert!(!s.is_empty() && s.len() <= 8);
+            assert!(s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit()));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        // same property name -> same seed -> same first sample
+        let gen1 = gen_u64(0, u64::MAX - 1);
+        let mut r1 = Rng::new(0x5eed ^ fnv_str("x"));
+        let mut r2 = Rng::new(0x5eed ^ fnv_str("x"));
+        assert_eq!(gen1.sample(&mut r1), gen1.sample(&mut r2));
+    }
+}

@@ -1,0 +1,265 @@
+//! Latency/throughput statistics — the math behind the paper's six
+//! profiling indicators (§3.4: peak throughput, P50/P95/P99 latency,
+//! memory usage, compute utilization).
+
+/// Streaming reservoir of raw samples with percentile queries.
+///
+/// Profiling runs are bounded (thousands of requests), so we keep exact
+/// samples; `percentile` sorts lazily and caches.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Samples {
+        Samples::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (self.values.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let n = self.values.len();
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            return self.values[lo];
+        }
+        let w = rank - lo as f64;
+        self.values[lo] * (1.0 - w) + self.values[hi] * w
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// The paper's six indicators for one profiling combination.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SixIndicators {
+    /// Requests * batch / second at saturation.
+    pub peak_throughput_rps: f64,
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Peak device memory in MiB (weights + activations + runtime).
+    pub memory_mib: f64,
+    /// Fraction of the window the device compute was busy, in [0, 1].
+    pub utilization: f64,
+}
+
+impl SixIndicators {
+    pub fn from_latencies(latencies_ms: &mut Samples, throughput_rps: f64, memory_mib: f64, utilization: f64) -> SixIndicators {
+        SixIndicators {
+            peak_throughput_rps: throughput_rps,
+            p50_latency_ms: latencies_ms.p50(),
+            p95_latency_ms: latencies_ms.p95(),
+            p99_latency_ms: latencies_ms.p99(),
+            memory_mib,
+            utilization,
+        }
+    }
+}
+
+/// Exponentially-weighted moving average — smooths monitor gauges.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Ewma {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, sample: f64) -> f64 {
+        let v = match self.value {
+            None => sample,
+            Some(prev) => self.alpha * sample + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Fixed-window counter for computing rates (requests/sec over a window).
+#[derive(Debug, Clone)]
+pub struct WindowRate {
+    window_ms: f64,
+    events: std::collections::VecDeque<(f64, f64)>, // (t_ms, weight)
+}
+
+impl WindowRate {
+    pub fn new(window_ms: f64) -> WindowRate {
+        WindowRate { window_ms, events: Default::default() }
+    }
+
+    pub fn record(&mut self, t_ms: f64, weight: f64) {
+        self.events.push_back((t_ms, weight));
+        self.evict(t_ms);
+    }
+
+    fn evict(&mut self, now_ms: f64) {
+        while let Some(&(t, _)) = self.events.front() {
+            if now_ms - t > self.window_ms {
+                self.events.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Weighted events per second within the trailing window.
+    pub fn rate_per_sec(&mut self, now_ms: f64) -> f64 {
+        self.evict(now_ms);
+        let total: f64 = self.events.iter().map(|&(_, w)| w).sum();
+        total / (self.window_ms / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact_on_known_data() {
+        let mut s = Samples::new();
+        for v in 1..=100 {
+            s.push(v as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Samples::new();
+        s.push(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.p50().is_nan());
+    }
+
+    #[test]
+    fn mean_std_minmax() {
+        let mut s = Samples::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(v);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert!((s.stddev() - 2.138).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut s = Samples::new();
+        let mut rng = crate::util::rng::Rng::new(4);
+        for _ in 0..1000 {
+            s.push(rng.f64() * 100.0);
+        }
+        let (p50, p95, p99) = (s.p50(), s.p95(), s.p99());
+        assert!(p50 <= p95 && p95 <= p99);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        let mut last = 0.0;
+        for _ in 0..20 {
+            last = e.update(20.0);
+        }
+        assert!((last - 20.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn window_rate_evicts() {
+        let mut w = WindowRate::new(1000.0);
+        for i in 0..10 {
+            w.record(i as f64 * 100.0, 1.0);
+        }
+        // at t=900 all 10 events are inside the window
+        assert!((w.rate_per_sec(900.0) - 10.0).abs() < 1e-9);
+        // at t=2500 everything expired
+        assert_eq!(w.rate_per_sec(2500.0), 0.0);
+    }
+
+    #[test]
+    fn six_indicators_assembled() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            s.push(v);
+        }
+        let si = SixIndicators::from_latencies(&mut s, 250.0, 512.0, 0.8);
+        assert_eq!(si.peak_throughput_rps, 250.0);
+        assert_eq!(si.p50_latency_ms, 3.0);
+        assert!(si.p99_latency_ms > si.p95_latency_ms * 0.9);
+    }
+}

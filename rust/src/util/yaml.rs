@@ -1,0 +1,333 @@
+//! YAML-subset parser for model registration files (§3.2: "register accepts
+//! a YAML file").
+//!
+//! Supports the subset real MLModelCI registration files use: nested
+//! block mappings, block sequences (`- item`), inline scalars (str, int,
+//! float, bool, null), quoted strings, comments, and flow-style lists
+//! (`[a, b]`). Anchors/aliases/multi-doc are intentionally out of scope.
+//! Parses into [`Json`] so registration docs flow straight into the
+//! document store.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for YamlError {}
+
+/// One significant (non-blank, non-comment) line.
+struct Line {
+    num: usize,
+    indent: usize,
+    text: String,
+}
+
+/// Parse a YAML document into a [`Json`] value.
+pub fn parse(src: &str) -> Result<Json, YamlError> {
+    let lines = significant_lines(src);
+    if lines.is_empty() {
+        return Ok(Json::obj());
+    }
+    let (value, consumed) = parse_block(&lines, 0, lines[0].indent)?;
+    if consumed != lines.len() {
+        return Err(YamlError {
+            line: lines[consumed].num,
+            msg: "unexpected dedent/content after document".into(),
+        });
+    }
+    Ok(value)
+}
+
+fn significant_lines(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line { num: i + 1, indent, text: trimmed.trim_start().to_string() });
+    }
+    out
+}
+
+/// Strip a trailing `# comment` that is not inside quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '#' if !in_single && !in_double => {
+                // `#` only begins a comment at start or after whitespace
+                if i == 0 || line[..i].ends_with(' ') || line[..i].ends_with('\t') {
+                    return &line[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a block (mapping or sequence) starting at `start` with `indent`.
+fn parse_block(lines: &[Line], start: usize, indent: usize) -> Result<(Json, usize), YamlError> {
+    if lines[start].text.starts_with("- ") || lines[start].text == "-" {
+        parse_sequence(lines, start, indent)
+    } else {
+        parse_mapping(lines, start, indent)
+    }
+}
+
+fn parse_sequence(lines: &[Line], start: usize, indent: usize) -> Result<(Json, usize), YamlError> {
+    let mut items = Vec::new();
+    let mut i = start;
+    while i < lines.len() && lines[i].indent == indent {
+        let line = &lines[i];
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start();
+        if rest.is_empty() {
+            // nested block on following lines
+            if i + 1 < lines.len() && lines[i + 1].indent > indent {
+                let (v, next) = parse_block(lines, i + 1, lines[i + 1].indent)?;
+                items.push(v);
+                i = next;
+            } else {
+                items.push(Json::Null);
+                i += 1;
+            }
+        } else if rest.contains(": ") || rest.ends_with(':') {
+            // inline first key of a nested mapping: `- name: x`
+            let virt = Line { num: line.num, indent: indent + 2, text: rest.to_string() };
+            let mut sub = vec![virt];
+            let mut j = i + 1;
+            while j < lines.len() && lines[j].indent > indent {
+                sub.push(Line {
+                    num: lines[j].num,
+                    indent: lines[j].indent,
+                    text: lines[j].text.clone(),
+                });
+                j += 1;
+            }
+            let (v, consumed) = parse_mapping(&sub, 0, indent + 2)?;
+            if consumed != sub.len() {
+                return Err(YamlError { line: sub[consumed].num, msg: "bad nested mapping in sequence".into() });
+            }
+            items.push(v);
+            i = j;
+        } else {
+            items.push(scalar(rest));
+            i += 1;
+        }
+    }
+    Ok((Json::Arr(items), i))
+}
+
+fn parse_mapping(lines: &[Line], start: usize, indent: usize) -> Result<(Json, usize), YamlError> {
+    let mut map = BTreeMap::new();
+    let mut i = start;
+    while i < lines.len() {
+        let line = &lines[i];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError { line: line.num, msg: "unexpected indent".into() });
+        }
+        let (key, rest) = split_key(&line.text)
+            .ok_or_else(|| YamlError { line: line.num, msg: "expected 'key: value'".into() })?;
+        if rest.is_empty() {
+            // value is a nested block (or null if nothing indented follows)
+            if i + 1 < lines.len() && lines[i + 1].indent > indent {
+                let (v, next) = parse_block(lines, i + 1, lines[i + 1].indent)?;
+                map.insert(key, v);
+                i = next;
+            } else {
+                map.insert(key, Json::Null);
+                i += 1;
+            }
+        } else {
+            map.insert(key, scalar(rest));
+            i += 1;
+        }
+    }
+    Ok((Json::Obj(map), i))
+}
+
+/// Split `key: rest` respecting quoted keys.
+fn split_key(text: &str) -> Option<(String, &str)> {
+    if let Some(stripped) = text.strip_prefix('"') {
+        let end = stripped.find('"')?;
+        let key = stripped[..end].to_string();
+        let after = stripped[end + 1..].trim_start();
+        let rest = after.strip_prefix(':')?;
+        return Some((key, rest.trim_start()));
+    }
+    let idx = text.find(':')?;
+    let (k, r) = text.split_at(idx);
+    let rest = &r[1..];
+    if !rest.is_empty() && !rest.starts_with(' ') {
+        return None; // `a:b` is a scalar, not a mapping
+    }
+    Some((k.trim().to_string(), rest.trim_start()))
+}
+
+/// Parse an inline scalar (including flow lists).
+fn scalar(text: &str) -> Json {
+    let t = text.trim();
+    if let Some(inner) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        if inner.trim().is_empty() {
+            return Json::Arr(vec![]);
+        }
+        return Json::Arr(split_flow(inner).into_iter().map(|p| scalar(p.trim())).collect());
+    }
+    if let Some(inner) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Json::Str(inner.replace("\\\"", "\"").replace("\\n", "\n"));
+    }
+    if let Some(inner) = t.strip_prefix('\'').and_then(|s| s.strip_suffix('\'')) {
+        return Json::Str(inner.replace("''", "'"));
+    }
+    match t {
+        "null" | "~" | "" => return Json::Null,
+        "true" | "True" | "yes" => return Json::Bool(true),
+        "false" | "False" | "no" => return Json::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<i64>() {
+        return Json::Num(n as f64);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Json::Num(f);
+    }
+    Json::Str(t.to_string())
+}
+
+/// Split a flow list body on top-level commas (respects nested brackets/quotes).
+fn split_flow(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REG: &str = r#"
+# model registration (paper §3.2)
+name: resnet_mini
+framework: jax
+task: image_classification
+dataset: cifar10-synthetic
+accuracy: 0.871
+inputs:
+  - name: image
+    shape: [1, 32, 32, 3]
+    dtype: f32
+outputs:
+  - name: logits
+    shape: [1, 10]
+convert: true
+profile: true
+"#;
+
+    #[test]
+    fn parses_registration_file() {
+        let doc = parse(REG).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("resnet_mini"));
+        assert_eq!(doc.get("accuracy").unwrap().as_f64(), Some(0.871));
+        assert_eq!(doc.get("convert").unwrap().as_bool(), Some(true));
+        let inputs = doc.get("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(inputs.len(), 1);
+        assert_eq!(inputs[0].get("name").unwrap().as_str(), Some("image"));
+        let shape = inputs[0].get("shape").unwrap().as_arr().unwrap();
+        assert_eq!(shape.iter().map(|v| v.as_i64().unwrap()).collect::<Vec<_>>(), vec![1, 32, 32, 3]);
+    }
+
+    #[test]
+    fn nested_mappings() {
+        let doc = parse("a:\n  b:\n    c: 1\n  d: two\n").unwrap();
+        assert_eq!(doc.at(&["a", "b", "c"]).unwrap().as_i64(), Some(1));
+        assert_eq!(doc.at(&["a", "d"]).unwrap().as_str(), Some("two"));
+    }
+
+    #[test]
+    fn sequences_of_scalars() {
+        let doc = parse("items:\n  - 1\n  - 2.5\n  - x\n").unwrap();
+        let items = doc.get("items").unwrap().as_arr().unwrap();
+        assert_eq!(items[0].as_i64(), Some(1));
+        assert_eq!(items[1].as_f64(), Some(2.5));
+        assert_eq!(items[2].as_str(), Some("x"));
+    }
+
+    #[test]
+    fn quoted_strings_and_comments() {
+        let doc = parse("a: \"he # llo\"  # trailing\nb: 'it''s'\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_str(), Some("he # llo"));
+        assert_eq!(doc.get("b").unwrap().as_str(), Some("it's"));
+    }
+
+    #[test]
+    fn booleans_and_null() {
+        let doc = parse("a: yes\nb: False\nc: ~\nd:\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("b").unwrap().as_bool(), Some(false));
+        assert!(doc.get("c").unwrap().is_null());
+        assert!(doc.get("d").unwrap().is_null());
+    }
+
+    #[test]
+    fn flow_list_nested() {
+        let doc = parse("shape: [[1, 2], [3, 4]]\n").unwrap();
+        let outer = doc.get("shape").unwrap().as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_arr().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn empty_doc_is_object() {
+        assert_eq!(parse("").unwrap(), Json::obj());
+        assert_eq!(parse("# just a comment\n").unwrap(), Json::obj());
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = parse("a: 1\n   bogus line without colon\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn colon_in_value_is_scalar() {
+        let doc = parse("url: http://x/y:z\n").unwrap();
+        assert_eq!(doc.get("url").unwrap().as_str(), Some("http://x/y:z"));
+    }
+}

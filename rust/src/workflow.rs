@@ -1,0 +1,271 @@
+//! End-to-end workflow (Figure 2): register → convert → profile → deploy.
+//!
+//! [`Platform`] is the assembled system — every §3 module wired together
+//! — and `publish` is the paper's one-call automation: after it returns,
+//! the model is converted, validated, profiled and ready to deploy (the
+//! "weeks to minutes" claim, measured per stage in [`PublishReport`]).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::Cluster;
+use crate::controller::{Controller, IdlePolicy, Placement, QosFeed, SloGuard};
+use crate::converter::{Converter, ConversionReport};
+use crate::dispatcher::{DeploymentSpec, Dispatcher};
+use crate::housekeeper::Housekeeper;
+use crate::modelhub::ModelHub;
+use crate::monitor::{Monitor, NodeExporter};
+use crate::profiler::Profiler;
+use crate::runtime::ArtifactStore;
+use crate::serving::{Frontend, ServiceHandle, ALL_SYSTEMS};
+use crate::storage::Database;
+use crate::util::clock::SharedClock;
+use crate::util::json::Json;
+
+/// Per-stage wall-clock timings of one publish (experiment D2).
+#[derive(Debug, Clone)]
+pub struct PublishReport {
+    pub model_id: String,
+    pub register_ms: f64,
+    pub convert_ms: f64,
+    pub profile_ms: f64,
+    pub conversion: Option<ConversionReport>,
+    pub profiles_recorded: usize,
+}
+
+impl PublishReport {
+    pub fn total_ms(&self) -> f64 {
+        self.register_ms + self.convert_ms + self.profile_ms
+    }
+}
+
+/// Tuning knobs for the automated pipeline.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Batch sizes converted + profiled automatically (all available if None).
+    pub auto_batches: Option<Vec<usize>>,
+    pub idle: IdlePolicy,
+    pub p99_slo_ms: f64,
+    pub profiler_iters: usize,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            auto_batches: Some(vec![1, 8, 32]),
+            idle: IdlePolicy::default(),
+            p99_slo_ms: 200.0,
+            profiler_iters: 8,
+        }
+    }
+}
+
+/// The fully-wired MLModelCI platform.
+pub struct Platform {
+    pub db: Arc<Database>,
+    pub hub: Arc<ModelHub>,
+    pub housekeeper: Housekeeper,
+    pub store: Arc<ArtifactStore>,
+    pub cluster: Arc<Cluster>,
+    pub dispatcher: Arc<Dispatcher>,
+    pub converter: Converter,
+    pub profiler: Arc<Profiler>,
+    pub monitor: Arc<Monitor>,
+    pub exporter: Arc<NodeExporter>,
+    pub qos: Arc<QosFeed>,
+    pub controller: Arc<Controller>,
+    pub config: PlatformConfig,
+}
+
+impl Platform {
+    /// Assemble the platform: artifacts + optional durable data dir +
+    /// demo cluster topology.
+    pub fn init(artifact_dir: &Path, data_dir: Option<&Path>, clock: SharedClock, config: PlatformConfig) -> Result<Platform> {
+        let store = Arc::new(ArtifactStore::load(artifact_dir)?);
+        let db = Arc::new(match data_dir {
+            Some(dir) => Database::open(dir)?,
+            None => Database::in_memory(),
+        });
+        let hub = Arc::new(ModelHub::new(db.clone(), clock.clone())?);
+        let housekeeper = Housekeeper::new(hub.clone());
+        let cluster = Arc::new(Cluster::default_demo(clock));
+        let dispatcher = Arc::new(Dispatcher::new(cluster.clone(), store.clone()));
+        let converter = Converter::new(store.clone(), cluster.leader_engine().clone());
+        let mut profiler = Profiler::new(cluster.clone(), store.clone());
+        profiler.iters = config.profiler_iters;
+        let profiler = Arc::new(profiler);
+        let monitor = Arc::new(Monitor::new(dispatcher.clone()));
+        let exporter = Arc::new(NodeExporter::new(cluster.clone()));
+        let qos = Arc::new(QosFeed::new());
+        let controller = Arc::new(Controller::new(
+            profiler.clone(),
+            monitor.clone(),
+            exporter.clone(),
+            hub.clone(),
+            qos.clone(),
+            config.idle.clone(),
+            SloGuard::new(config.p99_slo_ms, 5_000.0),
+        ));
+        Ok(Platform {
+            db,
+            hub,
+            housekeeper,
+            store,
+            cluster,
+            dispatcher,
+            converter,
+            profiler,
+            monitor,
+            exporter,
+            qos,
+            controller,
+            config,
+        })
+    }
+
+    /// The paper's automated publish: register + (convert) + (profile).
+    pub fn publish(&self, yaml_text: &str, weights: &[u8]) -> Result<PublishReport> {
+        let t0 = Instant::now();
+        let outcome = self.housekeeper.register(yaml_text, weights)?;
+        let register_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        let batches = self.config.auto_batches.clone();
+        let mut conversion = None;
+        let t1 = Instant::now();
+        if outcome.trigger_conversion {
+            conversion = Some(self.converter.convert(&self.hub, &outcome.model_id, batches.as_deref())?);
+        }
+        let convert_ms = t1.elapsed().as_secs_f64() * 1000.0;
+
+        let t2 = Instant::now();
+        let mut profiles_recorded = 0;
+        if outcome.trigger_profiling && conversion.as_ref().map(|c| c.all_validated()).unwrap_or(false) {
+            let doc = self.hub.get(&outcome.model_id)?;
+            let family = doc.get("family").and_then(Json::as_str).unwrap_or_default().to_string();
+            let manifest = self.store.model(&family)?;
+            let all = manifest.batches("reference");
+            let batches: Vec<usize> = match &batches {
+                Some(sel) => all.iter().copied().filter(|b| sel.contains(b)).collect(),
+                None => all,
+            };
+            self.controller.enqueue_profiling(
+                &outcome.model_id,
+                &family,
+                &["reference", "optimized"],
+                &batches,
+                ALL_SYSTEMS,
+                &[Frontend::Grpc, Frontend::Rest],
+                Placement::Workers,
+            )?;
+            self.controller.run_until_drained(10_000, 0.0);
+            profiles_recorded = self.controller.flush_results()?;
+        }
+        let profile_ms = t2.elapsed().as_secs_f64() * 1000.0;
+
+        Ok(PublishReport {
+            model_id: outcome.model_id,
+            register_ms,
+            convert_ms,
+            profile_ms,
+            conversion,
+            profiles_recorded,
+        })
+    }
+
+    /// Deploy a published model by name.
+    pub fn deploy_by_name(&self, name: &str, spec: &DeploymentSpec) -> Result<ServiceHandle> {
+        let doc = self
+            .hub
+            .find_by_name(name)?
+            .ok_or_else(|| anyhow::anyhow!("no model named '{name}'"))?;
+        let id = doc.get("_id").unwrap().as_str().unwrap();
+        self.dispatcher.deploy(&self.hub, id, spec)
+    }
+
+    pub fn shutdown(&self) {
+        self.dispatcher.stop_all();
+        self.cluster.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::wall;
+
+    const YAML: &str = "\
+name: wf-mlp
+family: mlp_tabular
+framework: jax
+task: tabular_regression
+dataset: synthetic
+accuracy: 0.76
+convert: true
+profile: true
+";
+
+    fn platform() -> Option<Platform> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let config = PlatformConfig {
+            auto_batches: Some(vec![1, 4]),
+            profiler_iters: 2,
+            ..Default::default()
+        };
+        Some(Platform::init(&dir, None, wall(), config).unwrap())
+    }
+
+    #[test]
+    fn publish_runs_full_pipeline() {
+        let Some(p) = platform() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let report = p.publish(YAML, b"weights").unwrap();
+        assert!(report.conversion.as_ref().unwrap().all_validated());
+        assert!(report.profiles_recorded > 0);
+        assert!(report.total_ms() > 0.0);
+        // model ends Profiled with profiles + conversions recorded
+        let doc = p.hub.get(&report.model_id).unwrap();
+        assert_eq!(doc.get("status").unwrap().as_str(), Some("profiled"));
+        assert!(!doc.get("profiles").unwrap().as_arr().unwrap().is_empty());
+        assert!(!doc.get("conversions").unwrap().as_arr().unwrap().is_empty());
+        p.shutdown();
+    }
+
+    #[test]
+    fn publish_then_deploy_and_infer() {
+        let Some(p) = platform() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let report = p.publish(&YAML.replace("wf-mlp", "wf-mlp2"), b"weights").unwrap();
+        let svc = p.deploy_by_name("wf-mlp2", &DeploymentSpec::default()).unwrap();
+        let input = crate::profiler::example_input(&p.store.model("mlp_tabular").unwrap(), 1);
+        let reply = svc.infer(input).unwrap();
+        assert_eq!(reply.output.shape, vec![8]);
+        // recommendation exists after profiling
+        let rec = p.controller.recommend_deployment(&report.model_id, 1e9).unwrap();
+        assert!(rec.is_some());
+        p.shutdown();
+    }
+
+    #[test]
+    fn publish_honors_profile_false() {
+        let Some(p) = platform() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let yaml = YAML.replace("wf-mlp", "wf-noprofile").replace("profile: true", "profile: false");
+        let report = p.publish(&yaml, b"weights").unwrap();
+        assert_eq!(report.profiles_recorded, 0);
+        let doc = p.hub.get(&report.model_id).unwrap();
+        assert_eq!(doc.get("status").unwrap().as_str(), Some("converted"));
+        p.shutdown();
+    }
+}

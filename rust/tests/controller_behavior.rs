@@ -1,0 +1,211 @@
+//! Integration: controller scheduling semantics — placement matching,
+//! preemption/requeue ordering, QoS-gate hysteresis, and the full
+//! profile-then-recommend loop over multiple models.
+
+use std::sync::Arc;
+
+use mlmodelci::cluster::Cluster;
+use mlmodelci::controller::{Controller, Event, IdlePolicy, Placement, QosFeed, SloGuard};
+use mlmodelci::dispatcher::Dispatcher;
+use mlmodelci::modelhub::{ModelHub, ModelInfo, ModelStatus};
+use mlmodelci::monitor::{Monitor, NodeExporter};
+use mlmodelci::profiler::Profiler;
+use mlmodelci::runtime::ArtifactStore;
+use mlmodelci::serving::{Frontend, TRITON_LIKE};
+use mlmodelci::storage::Database;
+use mlmodelci::util::clock::wall;
+use mlmodelci::util::json::Json;
+
+fn setup() -> Option<(Arc<Controller>, Arc<ModelHub>)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let store = Arc::new(ArtifactStore::load(&dir).ok()?);
+    let cluster = Arc::new(Cluster::default_demo(wall()));
+    let dispatcher = Arc::new(Dispatcher::new(cluster.clone(), store.clone()));
+    let mut profiler = Profiler::new(cluster.clone(), store);
+    profiler.iters = 2;
+    let profiler = Arc::new(profiler);
+    let monitor = Arc::new(Monitor::new(dispatcher));
+    let exporter = Arc::new(NodeExporter::new(cluster));
+    let hub = Arc::new(ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap());
+    let qos = Arc::new(QosFeed::new());
+    Some((
+        Arc::new(Controller::new(
+            profiler,
+            monitor,
+            exporter,
+            hub.clone(),
+            qos,
+            IdlePolicy::default(),
+            SloGuard::new(100.0, 1_000.0),
+        )),
+        hub,
+    ))
+}
+
+fn register(hub: &ModelHub, name: &str, family: &str) -> String {
+    let id = hub
+        .create(
+            &ModelInfo {
+                name: name.into(),
+                family: family.into(),
+                framework: "jax".into(),
+                task: "t".into(),
+                dataset: "d".into(),
+                accuracy: 0.8,
+                convert: true,
+                profile: true,
+            },
+            b"w",
+        )
+        .unwrap();
+    hub.set_status(&id, ModelStatus::Converting).unwrap();
+    hub.set_status(&id, ModelStatus::Converted).unwrap();
+    id
+}
+
+#[test]
+fn placement_kinds_route_to_matching_devices_only() {
+    let Some((ctl, hub)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let id = register(&hub, "placed", "mlp_tabular");
+    ctl.enqueue_profiling(
+        &id,
+        "mlp_tabular",
+        &["reference"],
+        &[1, 2],
+        &[&TRITON_LIKE],
+        &[Frontend::Grpc],
+        Placement::Kind("a100".into()),
+    )
+    .unwrap();
+    let events = ctl.run_until_drained(50, 1.0);
+    for e in &events {
+        if let Event::Completed { device, .. } = e {
+            assert!(device.contains("a100"), "job ran on wrong device: {device}");
+        }
+    }
+    assert_eq!(events.iter().filter(|e| matches!(e, Event::Completed { .. })).count(), 2);
+    ctl.profiler.cluster().shutdown();
+}
+
+#[test]
+fn workers_placement_never_uses_cpu_host() {
+    let Some((ctl, hub)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let id = register(&hub, "workers-only", "mlp_tabular");
+    ctl.enqueue_profiling(
+        &id,
+        "mlp_tabular",
+        &["reference", "optimized"],
+        &[1, 4],
+        &[&TRITON_LIKE],
+        &[Frontend::Grpc, Frontend::Rest],
+        Placement::Workers,
+    )
+    .unwrap();
+    let events = ctl.run_until_drained(100, 1.0);
+    let devices: Vec<&String> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Completed { device, .. } => Some(device),
+            _ => None,
+        })
+        .collect();
+    assert!(!devices.is_empty());
+    assert!(devices.iter().all(|d| !d.contains("cpu-host")), "{devices:?}");
+    ctl.profiler.cluster().shutdown();
+}
+
+#[test]
+fn qos_gate_opens_and_closes_with_latency() {
+    let Some((ctl, hub)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let id = register(&hub, "gated", "mlp_tabular");
+    ctl.enqueue_profiling(
+        &id,
+        "mlp_tabular",
+        &["reference"],
+        &[1],
+        &[&TRITON_LIKE],
+        &[Frontend::Grpc],
+        Placement::Any,
+    )
+    .unwrap();
+    // poison the QoS feed -> gate closed
+    let clock = ctl.profiler.cluster().clock().clone();
+    for _ in 0..200 {
+        ctl.qos.report(clock.now_ms(), 500.0);
+    }
+    let events = ctl.tick();
+    assert!(matches!(events[0], Event::QosPaused { .. }));
+    assert_eq!(ctl.pending_jobs(), 1);
+    // time passes; violations age out of the 1s window -> gate opens
+    std::thread::sleep(std::time::Duration::from_millis(1100));
+    let events = ctl.tick();
+    assert!(
+        events.iter().any(|e| matches!(e, Event::Completed { .. })),
+        "gate should reopen after violations age out: {events:?}"
+    );
+    ctl.flush_results().unwrap();
+    ctl.profiler.cluster().shutdown();
+}
+
+#[test]
+fn multi_model_queue_drains_fairly_and_both_get_profiled_status() {
+    let Some((ctl, hub)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let id_a = register(&hub, "multi-a", "mlp_tabular");
+    let id_b = register(&hub, "multi-b", "textcnn");
+    for (id, family) in [(&id_a, "mlp_tabular"), (&id_b, "textcnn")] {
+        ctl.enqueue_profiling(
+            id,
+            family,
+            &["reference"],
+            &[1, 4],
+            &[&TRITON_LIKE],
+            &[Frontend::Grpc],
+            Placement::Workers,
+        )
+        .unwrap();
+    }
+    ctl.run_until_drained(100, 1.0);
+    ctl.flush_results().unwrap();
+    for id in [&id_a, &id_b] {
+        assert_eq!(hub.status(id).unwrap(), ModelStatus::Profiled);
+        let doc = hub.get(id).unwrap();
+        assert_eq!(doc.get("profiles").unwrap().as_arr().unwrap().len(), 2);
+    }
+    // recommendations exist for both and respect the cheaper-device rule
+    for id in [&id_a, &id_b] {
+        let rec = ctl.recommend_deployment(id, 1e9).unwrap().unwrap();
+        assert!(rec.get("dollars_per_million").unwrap().as_f64().unwrap() > 0.0);
+    }
+    ctl.profiler.cluster().shutdown();
+}
+
+#[test]
+fn failed_jobs_do_not_wedge_the_queue() {
+    let Some((ctl, hub)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let id = register(&hub, "mixed", "mlp_tabular");
+    // one good job and one impossible job (batch with no artifact)
+    ctl.enqueue_profiling(&id, "mlp_tabular", &["reference"], &[1, 999], &[&TRITON_LIKE], &[Frontend::Grpc], Placement::Any)
+        .unwrap();
+    let events = ctl.run_until_drained(50, 1.0);
+    let failed = events.iter().filter(|e| matches!(e, Event::JobFailed { .. })).count();
+    let done = events.iter().filter(|e| matches!(e, Event::Completed { .. })).count();
+    assert_eq!(failed, 1);
+    assert_eq!(done, 1);
+    assert_eq!(ctl.pending_jobs(), 0, "queue fully drained despite the failure");
+    ctl.profiler.cluster().shutdown();
+}

@@ -1,0 +1,147 @@
+//! Integration: the full Figure-2 workflow against a *durable* database —
+//! publish → convert → profile → deploy → infer → restart → verify.
+
+use std::sync::Arc;
+
+use mlmodelci::dispatcher::DeploymentSpec;
+use mlmodelci::modelhub::ModelStatus;
+use mlmodelci::profiler::example_input;
+use mlmodelci::util::clock::wall;
+use mlmodelci::util::json::Json;
+use mlmodelci::workflow::{Platform, PlatformConfig};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn fast_config() -> PlatformConfig {
+    PlatformConfig { auto_batches: Some(vec![1, 4]), profiler_iters: 2, ..Default::default() }
+}
+
+const YAML: &str = "\
+name: it-mlp
+family: mlp_tabular
+framework: jax
+task: tabular_regression
+dataset: synthetic-32d
+accuracy: 0.76
+convert: true
+profile: true
+";
+
+#[test]
+fn durable_workflow_survives_restart() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let data_dir = std::env::temp_dir().join(format!("mlci-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&data_dir);
+
+    let model_id;
+    {
+        let p = Platform::init(&artifacts, Some(&data_dir), wall(), fast_config()).unwrap();
+        let report = p.publish(YAML, b"integration-weights").unwrap();
+        model_id = report.model_id.clone();
+        assert!(report.conversion.unwrap().all_validated());
+        assert!(report.profiles_recorded > 0);
+        assert_eq!(p.hub.status(&model_id).unwrap(), ModelStatus::Profiled);
+        p.shutdown();
+    }
+
+    // "restart": fresh platform over the same data dir
+    {
+        let p = Platform::init(&artifacts, Some(&data_dir), wall(), fast_config()).unwrap();
+        let doc = p.hub.get(&model_id).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("it-mlp"));
+        assert_eq!(doc.get("status").unwrap().as_str(), Some("profiled"));
+        let conversions = doc.get("conversions").unwrap().as_arr().unwrap();
+        assert!(!conversions.is_empty(), "conversion records persisted");
+        let profiles = doc.get("profiles").unwrap().as_arr().unwrap();
+        assert!(!profiles.is_empty(), "profiling records persisted");
+        // weight blob survived too
+        let weights = p.hub.load_weights(&model_id).unwrap();
+        assert_eq!(weights, b"integration-weights");
+
+        // deploy + infer after restart
+        let svc = p.deploy_by_name("it-mlp", &DeploymentSpec::default()).unwrap();
+        let input = example_input(p.store.model("mlp_tabular").unwrap(), 1);
+        let reply = svc.infer(input).unwrap();
+        assert_eq!(reply.output.shape, vec![8]);
+        // recommendation from persisted profiles
+        let rec = p.controller.recommend_deployment(&model_id, 1e9).unwrap();
+        assert!(rec.is_some());
+        p.shutdown();
+    }
+    std::fs::remove_dir_all(&data_dir).ok();
+}
+
+#[test]
+fn status_machine_follows_figure_2() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let p = Platform::init(&artifacts, None, wall(), fast_config()).unwrap();
+    let out = p.housekeeper.register(&YAML.replace("it-mlp", "fig2-mlp"), b"w").unwrap();
+    assert_eq!(p.hub.status(&out.model_id).unwrap(), ModelStatus::Registered);
+    // conversion walks Registered -> Converting -> Converted
+    let report = p.converter.convert(&p.hub, &out.model_id, Some(&[1])).unwrap();
+    assert!(report.all_validated());
+    assert_eq!(p.hub.status(&out.model_id).unwrap(), ModelStatus::Converted);
+    // deploy walks Converted -> Serving
+    let svc = p.deploy_by_name("fig2-mlp", &DeploymentSpec::default()).unwrap();
+    assert_eq!(p.hub.status(&out.model_id).unwrap(), ModelStatus::Serving);
+    svc.stop();
+    // the housekeeper cannot corrupt the status machine
+    assert!(p.housekeeper.update(&out.model_id, &Json::obj().with("status", "registered")).is_err());
+    p.shutdown();
+}
+
+#[test]
+fn every_zoo_family_publishes_and_serves() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let p = Platform::init(&artifacts, None, wall(), fast_config()).unwrap();
+    let families: Vec<String> = p.store.models.keys().cloned().collect();
+    assert!(families.len() >= 4, "full zoo expected");
+    for family in &families {
+        let manifest = p.store.model(family).unwrap();
+        let yaml = format!(
+            "name: all-{family}\nfamily: {family}\ntask: {}\naccuracy: 0.8\nconvert: true\nprofile: false\n",
+            manifest.task
+        );
+        let report = p.publish(&yaml, b"w").unwrap();
+        assert!(report.conversion.unwrap().all_validated(), "{family} must validate");
+        let svc = p
+            .deploy_by_name(
+                &format!("all-{family}"),
+                &DeploymentSpec { format: Some("reference".into()), ..Default::default() },
+            )
+            .unwrap();
+        let input = example_input(manifest, 9);
+        let reply = svc.infer(input).unwrap();
+        assert_eq!(reply.output.shape, vec![manifest.num_classes], "{family} output shape");
+        assert!(reply.output.to_f32().iter().all(|v| v.is_finite()), "{family} finite logits");
+        svc.stop();
+    }
+    p.shutdown();
+}
+
+#[test]
+fn failed_validation_marks_model_failed() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let p = Platform::init(&artifacts, None, wall(), fast_config()).unwrap();
+    // a model whose family doesn't exist fails cleanly at convert time
+    let out = p.housekeeper.register("name: broken\nfamily: does_not_exist\n", b"w").unwrap();
+    assert!(p.converter.convert(&p.hub, &out.model_id, None).is_err());
+    // and the model is still retrievable (not corrupted)
+    assert!(p.hub.get(&out.model_id).is_ok());
+    p.shutdown();
+}

@@ -1,0 +1,238 @@
+//! Integration: serving correctness under concurrency, batching and
+//! padding — every reply must match the reference single-example output
+//! regardless of which (possibly padded) batch it rode in.
+
+use std::sync::Arc;
+
+use mlmodelci::cluster::{Cluster, Device};
+use mlmodelci::profiler::example_input;
+use mlmodelci::runtime::engine::EngineHandle;
+use mlmodelci::runtime::{ArtifactStore, Tensor};
+use mlmodelci::serving::instance::{launch, InstanceConfig};
+use mlmodelci::serving::{Frontend, ONNXRT_LIKE, TFS_LIKE, TRITON_LIKE};
+use mlmodelci::util::clock::wall;
+use mlmodelci::util::rng::Rng;
+
+fn store() -> Option<Arc<ArtifactStore>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactStore::load(&dir).ok().map(Arc::new)
+}
+
+/// Ground truth: run each distinct input alone at batch 1.
+fn reference_outputs(
+    store: &ArtifactStore,
+    family: &str,
+    inputs: &[Tensor],
+) -> Vec<Vec<f32>> {
+    let engine = EngineHandle::spawn("stress-ref");
+    let m = store.model(family).unwrap();
+    let weights = store.load_weights(m).unwrap();
+    let entry = m.artifact("reference", 1).unwrap();
+    let exe = engine.load(&store.hlo_path(entry), &weights, 1).unwrap();
+    let outs: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| {
+            let batched = Tensor::stack(std::slice::from_ref(x));
+            let (y, _) = exe.run(&batched).unwrap();
+            y.truncate_batch(1).unstack()[0].to_f32()
+        })
+        .collect();
+    engine.shutdown();
+    outs
+}
+
+#[test]
+fn batched_replies_match_reference_under_concurrency() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let clock = wall();
+    let engine = EngineHandle::spawn("stress");
+    let device = Device::simulated("stress/t4", "t4", clock.clone()).unwrap();
+    let m = store.model("textcnn").unwrap().clone();
+    let weights = store.load_weights(&m).unwrap();
+    let svc = launch(
+        InstanceConfig {
+            name: "stress".into(),
+            manifest: m.clone(),
+            format: "reference".into(),
+            system: &TRITON_LIKE,
+            frontend: Frontend::Grpc,
+            max_queue: 1024,
+        },
+        device,
+        &engine,
+        &weights,
+        &store.dir,
+        clock,
+    )
+    .unwrap();
+
+    // 8 distinct inputs, each sent many times concurrently
+    let inputs: Vec<Tensor> = (0..8).map(|i| example_input(&m, 100 + i)).collect();
+    let expected = reference_outputs(&store, "textcnn", &inputs);
+
+    let mut handles = Vec::new();
+    for round in 0..4 {
+        for (idx, input) in inputs.iter().enumerate() {
+            let svc = svc.clone();
+            let input = input.clone();
+            let want = expected[idx].clone();
+            handles.push(std::thread::spawn(move || {
+                let reply = svc.infer(input).unwrap();
+                let got = reply.output.to_f32();
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-3,
+                        "round {round}: batched output diverged: {g} vs {w} (batch {})",
+                        reply.timing.batch
+                    );
+                }
+                reply.timing.batch
+            }));
+        }
+    }
+    let batches: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(batches.iter().any(|&b| b > 1), "concurrency should produce real batches: {batches:?}");
+    svc.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn every_system_preserves_correctness() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = store.model("mlp_tabular").unwrap().clone();
+    let inputs: Vec<Tensor> = (0..4).map(|i| example_input(&m, 300 + i)).collect();
+    let expected = reference_outputs(&store, "mlp_tabular", &inputs);
+    for system in [&TFS_LIKE, &TRITON_LIKE, &ONNXRT_LIKE] {
+        let clock = wall();
+        let engine = EngineHandle::spawn("sys-test");
+        let device = Device::simulated("sys/v100", "v100", clock.clone()).unwrap();
+        let weights = store.load_weights(&m).unwrap();
+        let svc = launch(
+            InstanceConfig {
+                name: format!("sys-{}", system.name),
+                manifest: m.clone(),
+                format: "reference".into(),
+                system,
+                frontend: Frontend::Rest,
+                max_queue: 256,
+            },
+            device,
+            &engine,
+            &weights,
+            &store.dir,
+            clock,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| svc.infer_async(inputs[i % 4].clone()).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.recv().unwrap().unwrap();
+            let got = reply.output.to_f32();
+            for (g, w) in got.iter().zip(&expected[i % 4]) {
+                assert!((g - w).abs() < 1e-3, "{}: output diverged", system.name);
+            }
+        }
+        svc.stop();
+        engine.shutdown();
+    }
+}
+
+#[test]
+fn queue_depth_accounting_is_exact() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let clock = wall();
+    let engine = EngineHandle::spawn("depth");
+    let device = Device::simulated("d/t4", "t4", clock.clone()).unwrap();
+    let m = store.model("mlp_tabular").unwrap().clone();
+    let weights = store.load_weights(&m).unwrap();
+    let svc = launch(
+        InstanceConfig {
+            name: "depth".into(),
+            manifest: m.clone(),
+            format: "reference".into(),
+            system: &TRITON_LIKE,
+            frontend: Frontend::Grpc,
+            max_queue: 512,
+        },
+        device,
+        &engine,
+        &weights,
+        &store.dir,
+        clock,
+    )
+    .unwrap();
+    let input = example_input(&m, 5);
+    let rxs: Vec<_> = (0..64).map(|_| svc.infer_async(input.clone()).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    // after everything drains the depth must return to exactly zero
+    for _ in 0..50 {
+        if svc.queue_depth() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(svc.queue_depth(), 0);
+    let u = svc.container.usage_snapshot();
+    assert_eq!(u.examples, 64);
+    assert!(u.batches <= 64);
+    svc.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn memory_is_freed_on_stop_and_refused_when_full() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let clock = wall();
+    let engine = EngineHandle::spawn("mem");
+    // bert represents BERT-base: ~big footprint; t4 has 15 GiB
+    let device = Device::simulated("m/t4", "t4", clock.clone()).unwrap();
+    let m = store.model("bert_tiny").unwrap().clone();
+    let weights = store.load_weights(&m).unwrap();
+    let mk = |name: &str| InstanceConfig {
+        name: name.into(),
+        manifest: m.clone(),
+        format: "reference".into(),
+        system: &TRITON_LIKE,
+        frontend: Frontend::Grpc,
+        max_queue: 8,
+    };
+    let mut services = Vec::new();
+    let mut launched = 0;
+    for i in 0..64 {
+        match launch(mk(&format!("m{i}")), device.clone(), &engine, &weights, &store.dir, clock.clone()) {
+            Ok(svc) => {
+                launched += 1;
+                services.push(svc);
+            }
+            Err(e) => {
+                assert!(format!("{e:#}").contains("out of memory"), "unexpected error: {e:#}");
+                break;
+            }
+        }
+    }
+    assert!(launched > 0, "at least one instance fits");
+    assert!(launched < 64, "device must eventually fill up (launched {launched})");
+    let used_before = device.memory_used_mib();
+    assert!(used_before > 0.0);
+    for svc in &services {
+        svc.stop();
+    }
+    assert!(device.memory_used_mib() < used_before / 10.0, "memory freed on stop");
+    engine.shutdown();
+}

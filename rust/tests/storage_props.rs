@@ -1,0 +1,200 @@
+//! Property/model-based tests of the storage substrate: a random op
+//! sequence applied both to the real Collection and a trivial in-memory
+//! model must agree at every step; GridFS round-trips arbitrary blobs.
+
+use std::collections::HashMap;
+
+use mlmodelci::storage::{Collection, GridFs, Query};
+use mlmodelci::util::json::Json;
+use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop};
+use mlmodelci::util::rng::Rng;
+
+/// Model-based test: Collection vs HashMap under random insert / update /
+/// delete / find-by-status, both memory-only and durable with reopen.
+#[test]
+fn collection_agrees_with_model_under_random_ops() {
+    run_prop("collection model equivalence", 30, gen_vec(gen_u64(0, 9), 10, 120), |ops| {
+        let mut coll = Collection::in_memory("m");
+        coll.create_index("status");
+        let mut model: HashMap<String, (String, i64)> = HashMap::new(); // id -> (status, version)
+        let mut rng = Rng::new(ops.iter().sum::<u64>() ^ 0xfeed);
+        let statuses = ["registered", "converted", "profiled", "serving"];
+        for &op in ops {
+            match op {
+                0..=3 => {
+                    // insert
+                    let status = *rng.choose(&statuses);
+                    let doc = Json::obj().with("status", status).with("version", 0i64);
+                    let id = coll.insert(doc).map_err(|e| e.to_string())?;
+                    model.insert(id, (status.to_string(), 0));
+                }
+                4..=5 => {
+                    // update a random live doc
+                    if let Some(id) = pick_key(&model, &mut rng) {
+                        let status = *rng.choose(&statuses);
+                        let v = model[&id].1 + 1;
+                        coll.update(&id, &Json::obj().with("status", status).with("version", v))
+                            .map_err(|e| e.to_string())?;
+                        model.insert(id, (status.to_string(), v));
+                    }
+                }
+                6 => {
+                    // delete
+                    if let Some(id) = pick_key(&model, &mut rng) {
+                        let removed = coll.delete(&id).map_err(|e| e.to_string())?;
+                        if !removed {
+                            return Err(format!("delete lost id {id}"));
+                        }
+                        model.remove(&id);
+                    }
+                }
+                _ => {
+                    // compare a status query against the model
+                    let status = *rng.choose(&statuses);
+                    let got = coll.count(&Query::eq("status", status));
+                    let want = model.values().filter(|(s, _)| s == status).count();
+                    if got != want {
+                        return Err(format!("count(status={status}) = {got}, model says {want}"));
+                    }
+                }
+            }
+            if coll.len() != model.len() {
+                return Err(format!("len {} != model {}", coll.len(), model.len()));
+            }
+        }
+        // full-state comparison at the end
+        for (id, (status, version)) in &model {
+            let doc = coll.get(id).ok_or(format!("missing {id}"))?;
+            if doc.get("status").and_then(Json::as_str) != Some(status.as_str()) {
+                return Err(format!("status mismatch for {id}"));
+            }
+            if doc.get("version").and_then(Json::as_i64) != Some(*version) {
+                return Err(format!("version mismatch for {id}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn pick_key(model: &HashMap<String, (String, i64)>, rng: &mut Rng) -> Option<String> {
+    if model.is_empty() {
+        return None;
+    }
+    let keys: Vec<&String> = model.keys().collect();
+    Some((*rng.choose(&keys)).clone())
+}
+
+#[test]
+fn durable_collection_replay_equals_live_state() {
+    let dir = std::env::temp_dir().join(format!("mlci-prop-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut expected: HashMap<String, f64> = HashMap::new();
+    {
+        let mut coll = Collection::open(&dir, "replay").unwrap();
+        let mut rng = Rng::new(77);
+        let mut ids = Vec::new();
+        for i in 0..200 {
+            match rng.usize(0, 3) {
+                0 | 1 => {
+                    let acc = rng.f64();
+                    let id = coll
+                        .insert(Json::obj().with("i", i as i64).with("accuracy", acc))
+                        .unwrap();
+                    expected.insert(id.clone(), acc);
+                    ids.push(id);
+                }
+                _ if !ids.is_empty() => {
+                    let id = ids[rng.usize(0, ids.len())].clone();
+                    if expected.contains_key(&id) {
+                        if rng.bool(0.5) {
+                            let acc = rng.f64();
+                            coll.update(&id, &Json::obj().with("accuracy", acc)).unwrap();
+                            expected.insert(id.clone(), acc);
+                        } else {
+                            coll.delete(&id).unwrap();
+                            expected.remove(&id);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        coll.compact().unwrap();
+    }
+    let coll = Collection::open(&dir, "replay").unwrap();
+    assert_eq!(coll.len(), expected.len());
+    for (id, acc) in &expected {
+        let doc = coll.get(id).unwrap();
+        assert!((doc.get("accuracy").unwrap().as_f64().unwrap() - acc).abs() < 1e-12);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn gridfs_roundtrips_arbitrary_blobs() {
+    let dir = std::env::temp_dir().join(format!("mlci-gfs-prop-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fs = GridFs::with_chunk_size(&dir, 64).unwrap();
+    run_prop("gridfs roundtrip", 40, gen_vec(gen_u64(0, 255), 0, 600), |bytes| {
+        let data: Vec<u8> = bytes.iter().map(|&b| b as u8).collect();
+        let blob = fs.put("blob.bin", &data).map_err(|e| e.to_string())?;
+        let back = fs.get(&blob).map_err(|e| e.to_string())?;
+        if back != data {
+            return Err(format!("roundtrip mismatch at len {}", data.len()));
+        }
+        if blob.len != data.len() {
+            return Err("descriptor length wrong".into());
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn json_parse_render_fixpoint_on_random_docs() {
+    run_prop("json fixpoint", 60, gen_vec(gen_u64(0, u64::MAX - 1), 1, 12), |seeds| {
+        let mut rng = Rng::new(seeds[0]);
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+        if parsed != doc {
+            return Err(format!("parse(render(x)) != x for {text}"));
+        }
+        let pretty = doc.to_pretty();
+        let reparsed = Json::parse(&pretty).map_err(|e| e.to_string())?;
+        if reparsed != doc {
+            return Err("pretty-printing changed the value".into());
+        }
+        Ok(())
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.usize(0, 4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range(0, 2_000_000) as f64) - 1_000_000.0),
+            _ => Json::Str(random_string(rng)),
+        };
+    }
+    match rng.usize(0, 6) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num(rng.f64() * 1e6),
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr((0..rng.usize(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut obj = Json::obj();
+            for _ in 0..rng.usize(0, 4) {
+                obj.set(&random_string(rng), random_json(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+fn random_string(rng: &mut Rng) -> String {
+    let pool = ["name", "model", "p99", "δ-latency", "a\"b", "tab\t", "line\n", "emoji🦀", ""];
+    (*rng.choose(&pool)).to_string()
+}
