@@ -1,0 +1,318 @@
+//! §Perf — zero-copy JSON scan path vs the seed tree parser.
+//!
+//! Measures the four hot shapes the storage/API layers actually run:
+//!   parse    — full-document ingest (WAL replay, request bodies)
+//!   extract  — single-field read (status checks, index builds)
+//!   replay   — WAL line → stored record (Collection::open inner loop):
+//!              seed = Json::parse(record) + doc.clone() into the map,
+//!              scan = offset scan + Doc of the doc span, no tree
+//!   query    — replay N docs then run an eq+gt predicate over all of
+//!              them (Query::matches on trees vs matches_scan on spans)
+//!   serialize— legacy char-wise format!-based writer vs the pre-sized
+//!              escape-aware canonical writer
+//!
+//! Run: `cargo bench --bench json_scan` (flags: `--smoke` for tiny
+//! iteration counts, `--out PATH` for the JSON report, default
+//! `BENCH_json_scan.json`). Results land in EXPERIMENTS.md §Perf.
+
+use mlmodelci::storage::Query;
+use mlmodelci::util::benchkit::{bench, f2, Table};
+use mlmodelci::util::jscan::{self, Doc};
+use mlmodelci::util::json::Json;
+
+/// A representative model document (schema.rs shape) with `profiles`
+/// grown to the requested length.
+fn model_doc(i: usize, profiles: usize) -> Json {
+    let mut doc = Json::obj()
+        .with("_id", format!("{:024x}", i))
+        .with("name", format!("resnet-mini-{i}"))
+        .with("family", "resnet_mini")
+        .with("framework", "jax")
+        .with("task", "image_classification")
+        .with("dataset", "cifar-10")
+        .with("accuracy", 0.87)
+        .with("status", if i % 3 == 0 { "profiled" } else { "serving" })
+        .with("created_ms", 1_722_000_000_000.0 + i as f64)
+        .with(
+            "weights",
+            Json::obj()
+                .with("id", format!("{:016x}", i * 7919))
+                .with("len", 1_048_576usize)
+                .with("chunks", 4usize)
+                .with("filename", format!("resnet-mini-{i}.weights.bin")),
+        );
+    let mut profs = Vec::with_capacity(profiles);
+    for p in 0..profiles {
+        profs.push(
+            Json::obj()
+                .with("device", if p % 2 == 0 { "sim-gpu-0" } else { "sim-cpu-0" })
+                .with("format", if p % 2 == 0 { "optimized" } else { "reference" })
+                .with("batch", 1usize << (p % 6))
+                .with("serving_system", "triton-like")
+                .with("frontend", "grpc")
+                .with("peak_throughput_rps", 1000.0 + p as f64 * 3.5)
+                .with("p50_ms", 2.0 + p as f64 * 0.1)
+                .with("p95_ms", 5.0 + p as f64 * 0.2)
+                .with("p99_ms", 8.0 + p as f64 * 0.3)
+                .with("memory_mib", 512.0)
+                .with("utilization", 0.65),
+        );
+    }
+    doc.set("profiles", Json::Arr(profs));
+    doc
+}
+
+/// The seed serializer, verbatim (char-wise, format!-allocating), kept
+/// here as the baseline after json.rs moved to the shared writer.
+fn legacy_to_string(v: &Json) -> String {
+    fn write(v: &Json, out: &mut String) {
+        match v {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{}", n));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write(item, out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, val)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    write(val, out);
+                }
+                out.push('}');
+            }
+        }
+    }
+    fn write_escaped(out: &mut String, s: &str) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    let mut out = String::new();
+    write(v, &mut out);
+    out
+}
+
+struct Case {
+    name: String,
+    baseline_ms: f64,
+    scan_ms: f64,
+    bytes_per_iter: usize,
+}
+
+impl Case {
+    fn speedup(&self) -> f64 {
+        self.baseline_ms / self.scan_ms
+    }
+
+    fn mbps(&self, ms: f64) -> f64 {
+        (self.bytes_per_iter as f64 / 1e6) / (ms / 1e3)
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_json_scan.json".to_string());
+    let (warmup, iters) = if smoke { (1, 3) } else { (20, 200) };
+
+    println!("=== json_scan: zero-copy scan path vs seed tree parser ===");
+    println!("(iters={iters}, warmup={warmup}{})\n", if smoke { ", SMOKE" } else { "" });
+
+    let mut cases: Vec<Case> = Vec::new();
+
+    // --- parse throughput: small / profiled / large documents ---------
+    for (label, profiles) in [("parse/small", 0usize), ("parse/profiled", 24), ("parse/large", 200)] {
+        let text = model_doc(1, profiles).to_string();
+        let base = bench(label, warmup, iters, || Json::parse(&text).unwrap());
+        let scan = bench(label, warmup, iters, || jscan::scan(&text).unwrap());
+        cases.push(Case {
+            name: label.to_string(),
+            baseline_ms: base.mean_ms,
+            scan_ms: scan.mean_ms,
+            bytes_per_iter: text.len(),
+        });
+    }
+
+    // --- single-field extraction (status read / index build shape) ----
+    {
+        let text = model_doc(2, 24).to_string();
+        let base = bench("extract", warmup, iters, || {
+            let doc = Json::parse(&text).unwrap();
+            doc.get("status").and_then(Json::as_str).map(str::to_string)
+        });
+        let scan = bench("extract", warmup, iters, || {
+            let offsets = jscan::scan(&text).unwrap();
+            offsets.root(&text).get("status").and_then(|v| v.as_str()).map(|s| s.into_owned())
+        });
+        cases.push(Case {
+            name: "extract/status".to_string(),
+            baseline_ms: base.mean_ms,
+            scan_ms: scan.mean_ms,
+            bytes_per_iter: text.len(),
+        });
+    }
+
+    // --- WAL replay: line -> stored record ----------------------------
+    let n_docs = if smoke { 20 } else { 2000 };
+    let lines: Vec<String> = (0..n_docs)
+        .map(|i| {
+            let doc = model_doc(i, 8);
+            format!("{{\"doc\":{},\"op\":\"put\"}}", doc.to_string())
+        })
+        .collect();
+    let wal_bytes: usize = lines.iter().map(String::len).sum();
+    let replay_iters = if smoke { 2 } else { 30 };
+    {
+        let base = bench("replay", if smoke { 1 } else { 3 }, replay_iters, || {
+            // seed shape: full tree per record + doc.clone() into the map
+            let mut docs = std::collections::BTreeMap::new();
+            for line in &lines {
+                let rec = Json::parse(line).unwrap();
+                let doc = rec.get("doc").cloned().unwrap();
+                let id = doc.get("_id").and_then(Json::as_str).unwrap().to_string();
+                docs.insert(id, doc);
+            }
+            docs.len()
+        });
+        let scan = bench("replay", if smoke { 1 } else { 3 }, replay_iters, || {
+            // scan shape: offsets over the record, Doc over the doc span
+            let mut docs = std::collections::BTreeMap::new();
+            for line in &lines {
+                let rec = jscan::scan(line).unwrap();
+                let doc_ref = rec.root(line).get("doc").unwrap();
+                let doc = Doc::parse(doc_ref.raw()).unwrap();
+                let id = doc.str_field("_id").unwrap().into_owned();
+                docs.insert(id, doc);
+            }
+            docs.len()
+        });
+        cases.push(Case {
+            name: format!("replay/{n_docs}docs"),
+            baseline_ms: base.mean_ms,
+            scan_ms: scan.mean_ms,
+            bytes_per_iter: wal_bytes,
+        });
+    }
+
+    // --- query over a replayed collection ------------------------------
+    {
+        let q = Query::and([
+            Query::eq("status", "serving"),
+            Query::Gt("accuracy".into(), 0.5),
+        ]);
+        let trees: Vec<Json> =
+            (0..n_docs).map(|i| model_doc(i, 8)).collect();
+        let docs: Vec<Doc> = trees.iter().map(Doc::from_json).collect();
+        let base = bench("query", warmup, replay_iters, || {
+            trees.iter().filter(|d| q.matches(d)).count()
+        });
+        let scan = bench("query", warmup, replay_iters, || {
+            docs.iter().filter(|d| q.matches_scan(d.root())).count()
+        });
+        cases.push(Case {
+            name: format!("query/{n_docs}docs"),
+            baseline_ms: base.mean_ms,
+            scan_ms: scan.mean_ms,
+            bytes_per_iter: docs.iter().map(Doc::len_bytes).sum(),
+        });
+    }
+
+    // --- serialization --------------------------------------------------
+    {
+        let doc = model_doc(3, 24);
+        let text_len = doc.to_string().len();
+        let base = bench("serialize", warmup, iters, || legacy_to_string(&doc));
+        let scan = bench("serialize", warmup, iters, || jscan::json_to_string(&doc));
+        cases.push(Case {
+            name: "serialize/profiled".to_string(),
+            baseline_ms: base.mean_ms,
+            scan_ms: scan.mean_ms,
+            bytes_per_iter: text_len,
+        });
+    }
+
+    // --- report ---------------------------------------------------------
+    let mut t = Table::new(&[
+        "case",
+        "seed(ms)",
+        "scan(ms)",
+        "speedup",
+        "seed(MB/s)",
+        "scan(MB/s)",
+    ]);
+    for c in &cases {
+        t.row(&[
+            c.name.clone(),
+            format!("{:.4}", c.baseline_ms),
+            format!("{:.4}", c.scan_ms),
+            format!("{:.2}x", c.speedup()),
+            f2(c.mbps(c.baseline_ms)),
+            f2(c.mbps(c.scan_ms)),
+        ]);
+    }
+    t.print();
+
+    // machine-readable report (written with the canonical serializer)
+    let mut report = Json::obj()
+        .with("bench", "json_scan")
+        .with("iters", iters as i64)
+        .with("smoke", smoke)
+        .with("doc_count", n_docs as i64);
+    let results: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            Json::obj()
+                .with("case", c.name.as_str())
+                .with("seed_ms", c.baseline_ms)
+                .with("scan_ms", c.scan_ms)
+                .with("speedup", (c.speedup() * 100.0).round() / 100.0)
+                .with("seed_mb_per_s", (c.mbps(c.baseline_ms) * 10.0).round() / 10.0)
+                .with("scan_mb_per_s", (c.mbps(c.scan_ms) * 10.0).round() / 10.0)
+        })
+        .collect();
+    report.set("results", Json::Arr(results));
+    std::fs::write(&out_path, report.to_pretty()).expect("write bench report");
+    println!("\nreport written to {out_path}");
+
+    let parse_speedup =
+        cases.iter().find(|c| c.name == "parse/profiled").map(|c| c.speedup()).unwrap_or(0.0);
+    let extract_speedup =
+        cases.iter().find(|c| c.name == "extract/status").map(|c| c.speedup()).unwrap_or(0.0);
+    println!(
+        "headline: parse {parse_speedup:.2}x, single-field extract {extract_speedup:.2}x vs seed parser"
+    );
+}

@@ -52,8 +52,17 @@ pub struct Response {
 }
 
 impl Response {
+    /// Encode a [`Json`](crate::util::json::Json) body through the
+    /// shared pre-sized canonical serializer.
     pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
-        Response { status, content_type: "application/json", body: body.to_string().into_bytes() }
+        let encoded = crate::util::jscan::json_to_string(body);
+        Response { status, content_type: "application/json", body: encoded.into_bytes() }
+    }
+
+    /// Send an already-serialized JSON body verbatim (the zero-copy
+    /// path for documents stored as raw text).
+    pub fn raw_json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
     }
 
     pub fn text(status: u16, body: &str) -> Response {

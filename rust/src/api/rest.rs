@@ -18,12 +18,15 @@
 
 use std::sync::Arc;
 
+use std::borrow::Cow;
+
 use crate::controller::Placement;
 use crate::dispatcher::DeploymentSpec;
 use crate::profiler::example_input;
 use crate::runtime::{DType, Tensor};
 use crate::serving::{Frontend, ALL_SYSTEMS};
 use crate::util::base64;
+use crate::util::jscan::{self, Kind};
 use crate::util::json::Json;
 use crate::workflow::Platform;
 
@@ -44,8 +47,9 @@ pub fn route(platform: &Arc<Platform>, req: &Request) -> Response {
         }
         ("GET", ["models"]) => list_models(platform, req),
         ("POST", ["models"]) => register_model(platform, req),
-        ("GET", ["models", id]) => match platform.hub.get(id) {
-            Ok(doc) => Response::json(200, &doc),
+        // stored raw text goes out verbatim — no tree, no re-encoding
+        ("GET", ["models", id]) => match platform.hub.get_raw(id) {
+            Ok(raw) => Response::raw_json(200, raw),
             Err(_) => Response::not_found(),
         },
         ("PUT", ["models", id]) => match Json::parse(&req.body_text()) {
@@ -107,43 +111,37 @@ pub fn route(platform: &Arc<Platform>, req: &Request) -> Response {
 }
 
 fn list_models(platform: &Arc<Platform>, req: &Request) -> Response {
-    match platform.housekeeper.retrieve(req.query_param("name"), req.query_param("task"), req.query_param("status")) {
-        Ok(docs) => {
-            // summary view: basic info only
-            let items: Vec<Json> = docs
-                .iter()
-                .map(|d| {
-                    Json::obj()
-                        .with("id", d.get("_id").cloned().unwrap_or(Json::Null))
-                        .with("name", d.get("name").cloned().unwrap_or(Json::Null))
-                        .with("task", d.get("task").cloned().unwrap_or(Json::Null))
-                        .with("status", d.get("status").cloned().unwrap_or(Json::Null))
-                        .with("accuracy", d.get("accuracy").cloned().unwrap_or(Json::Null))
-                })
-                .collect();
-            Response::json(200, &Json::Arr(items))
-        }
+    // summary view (basic info only), projected span-wise out of the
+    // stored documents — no per-document tree or clone
+    match platform.housekeeper.retrieve_summaries(
+        req.query_param("name"),
+        req.query_param("task"),
+        req.query_param("status"),
+    ) {
+        Ok(body) => Response::raw_json(200, body),
         Err(e) => Response::error(&format!("{e:#}")),
     }
 }
 
 fn register_model(platform: &Arc<Platform>, req: &Request) -> Response {
-    let body = match Json::parse(&req.body_text()) {
+    // scan the body instead of materializing it: weights_b64 can be
+    // many MiB and borrows straight out of the request text here
+    let body = match jscan::Doc::from_raw(req.body_text()) {
         Ok(b) => b,
         Err(e) => return Response::bad_request(&format!("{e}")),
     };
-    let Some(yaml_text) = body.get("yaml").and_then(Json::as_str) else {
+    let Some(yaml_text) = body.str_field("yaml") else {
         return Response::bad_request("missing 'yaml' field");
     };
-    let weights = match body.get("weights_b64").and_then(Json::as_str) {
-        Some(b64) => match base64::decode(b64) {
+    let weights = match body.str_field("weights_b64") {
+        Some(b64) => match base64::decode(&b64) {
             Ok(w) => w,
             Err(e) => return Response::bad_request(&format!("weights_b64: {e}")),
         },
         None => Vec::new(),
     };
     // full automation through the platform (register+convert+profile)
-    match platform.publish(yaml_text, &weights) {
+    match platform.publish(&yaml_text, &weights) {
         Ok(report) => Response::json(
             201,
             &Json::obj()
@@ -158,8 +156,11 @@ fn register_model(platform: &Arc<Platform>, req: &Request) -> Response {
 }
 
 fn profile_model(platform: &Arc<Platform>, id: &str) -> Response {
-    let Ok(doc) = platform.hub.get(id) else { return Response::not_found() };
-    let family = doc.get("family").and_then(Json::as_str).unwrap_or_default().to_string();
+    // single-field read through the scan path
+    let Ok(family) = platform.hub.get_field_str(id, "family") else {
+        return Response::not_found();
+    };
+    let family = family.unwrap_or_default();
     let Ok(manifest) = platform.store.model(&family) else {
         return Response::bad_request(&format!("unknown family {family}"));
     };
@@ -186,17 +187,21 @@ fn profile_model(platform: &Arc<Platform>, id: &str) -> Response {
 }
 
 fn deploy_model(platform: &Arc<Platform>, id: &str, req: &Request) -> Response {
-    let body = Json::parse(&req.body_text()).unwrap_or(Json::obj());
+    let body = jscan::Doc::from_raw(req.body_text()).ok();
+    let field = |k: &str| body.as_ref().and_then(|b| b.str_field(k)).map(Cow::into_owned);
     let spec = DeploymentSpec {
-        device: body.get("device").and_then(Json::as_str).map(str::to_string),
-        system: body.get("system").and_then(Json::as_str).unwrap_or("triton-like").to_string(),
-        format: body.get("format").and_then(Json::as_str).map(str::to_string),
-        frontend: body
-            .get("frontend")
-            .and_then(Json::as_str)
+        device: field("device"),
+        system: field("system").unwrap_or_else(|| "triton-like".to_string()),
+        format: field("format"),
+        frontend: field("frontend")
+            .as_deref()
             .and_then(Frontend::from_str)
             .unwrap_or(Frontend::Grpc),
-        max_queue: body.get("max_queue").and_then(Json::as_usize).unwrap_or(256),
+        max_queue: body
+            .as_ref()
+            .and_then(|b| b.get_path("max_queue"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(256),
     };
     match platform.dispatcher.deploy(&platform.hub, id, &spec) {
         Ok(svc) => Response::json(
@@ -214,14 +219,19 @@ fn deploy_model(platform: &Arc<Platform>, id: &str, req: &Request) -> Response {
 
 fn infer(platform: &Arc<Platform>, name: &str, req: &Request) -> Response {
     let Some(svc) = platform.dispatcher.find(name) else { return Response::not_found() };
-    let body = Json::parse(&req.body_text()).unwrap_or(Json::obj());
+    // scan the body: the input array is read element-wise off its spans
+    // instead of being materialized as a Vec<Json>
+    let body = jscan::Doc::from_raw(req.body_text()).ok();
     // find the model family to know the input shape/dtype
-    let Ok(Some(doc)) = platform.hub.find_by_name(name) else { return Response::not_found() };
-    let family = doc.get("family").and_then(Json::as_str).unwrap_or_default();
-    let Ok(manifest) = platform.store.model(family) else {
+    let Ok(Some(family)) = platform.hub.family_of_name(name) else { return Response::not_found() };
+    let Ok(manifest) = platform.store.model(&family) else {
         return Response::error("family missing from manifest");
     };
-    let input = match body.get("input").and_then(Json::as_arr) {
+    let input_arr = body
+        .as_ref()
+        .and_then(|b| b.get("input"))
+        .filter(|v| v.kind() == Kind::Arr);
+    let input = match input_arr {
         Some(values) => {
             let n: usize = manifest.input_shape.iter().product();
             if values.len() != n {
@@ -230,12 +240,12 @@ fn infer(platform: &Arc<Platform>, name: &str, req: &Request) -> Response {
             match manifest.input_dtype {
                 DType::F32 => {
                     let vals: Vec<f32> =
-                        values.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+                        values.items().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
                     Tensor::from_f32(&manifest.input_shape, &vals)
                 }
                 DType::I32 => {
                     let vals: Vec<i32> =
-                        values.iter().map(|v| v.as_i64().unwrap_or(0) as i32).collect();
+                        values.items().map(|v| v.as_i64().unwrap_or(0) as i32).collect();
                     Tensor::from_i32(&manifest.input_shape, &vals)
                 }
             }

@@ -22,7 +22,6 @@ use crate::modelhub::schema::conversion_record;
 use crate::modelhub::{ModelHub, ModelStatus};
 use crate::runtime::engine::EngineHandle;
 use crate::runtime::{ArtifactStore, Tensor};
-use crate::util::json::Json;
 
 /// Outcome of converting one (format, batch) variant.
 #[derive(Debug, Clone)]
@@ -79,12 +78,10 @@ impl Converter {
     /// update its document. Batch sizes can be restricted to keep CI fast.
     pub fn convert(&self, hub: &ModelHub, model_id: &str, batches: Option<&[usize]>) -> Result<ConversionReport> {
         let t0 = std::time::Instant::now();
-        let doc = hub.get(model_id)?;
-        let family = doc
-            .get("family")
-            .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("model {model_id} has no family"))?
-            .to_string();
+        // single-field read through the zero-copy scan path
+        let family = hub
+            .get_field_str(model_id, "family")?
+            .ok_or_else(|| anyhow!("model {model_id} has no family"))?;
         let manifest = self.store.model(&family)?.clone();
 
         hub.set_status(model_id, ModelStatus::Converting)?;

@@ -55,8 +55,7 @@ impl Housekeeper {
         self.register(&yaml_text, &weights)
     }
 
-    /// Retrieve: free-text name search plus optional structured filters.
-    pub fn retrieve(&self, name_contains: Option<&str>, task: Option<&str>, status: Option<&str>) -> Result<Vec<Json>> {
+    fn retrieve_query(name_contains: Option<&str>, task: Option<&str>, status: Option<&str>) -> Query {
         let mut clauses = Vec::new();
         if let Some(n) = name_contains {
             clauses.push(Query::Contains("name".into(), n.to_string()));
@@ -67,8 +66,30 @@ impl Housekeeper {
         if let Some(s) = status {
             clauses.push(Query::eq("status", s));
         }
-        let q = if clauses.is_empty() { Query::All } else { Query::and(clauses) };
-        self.hub.find(&q)
+        if clauses.is_empty() {
+            Query::All
+        } else {
+            Query::and(clauses)
+        }
+    }
+
+    /// Retrieve: free-text name search plus optional structured filters.
+    pub fn retrieve(&self, name_contains: Option<&str>, task: Option<&str>, status: Option<&str>) -> Result<Vec<Json>> {
+        self.hub.find(&Self::retrieve_query(name_contains, task, status))
+    }
+
+    /// Retrieve as a serialized summary array (the REST list view):
+    /// basic-info fields are projected span-wise out of each stored
+    /// document via the interest-set scan path — no tree per document,
+    /// no re-escaping, ready to send as a response body.
+    pub fn retrieve_summaries(
+        &self,
+        name_contains: Option<&str>,
+        task: Option<&str>,
+        status: Option<&str>,
+    ) -> Result<String> {
+        let q = Self::retrieve_query(name_contains, task, status);
+        self.hub.find_summaries(&q, crate::modelhub::SUMMARY_FIELDS)
     }
 
     /// Update: revise stored basic information (guarded fields excluded).
@@ -139,6 +160,22 @@ profile: false
         assert_eq!(hk.retrieve(None, Some("vision"), None).unwrap().len(), 1);
         assert_eq!(hk.retrieve(Some("demo"), Some("vision"), None).unwrap().len(), 0);
         assert_eq!(hk.retrieve(None, None, Some("registered")).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn retrieve_summaries_match_retrieve() {
+        let hk = hk();
+        hk.register(YAML, b"w").unwrap();
+        hk.register(&YAML.replace("demo-mlp", "other-model"), b"w2").unwrap();
+        let raw = hk.retrieve_summaries(Some("demo"), None, None).unwrap();
+        let arr = Json::parse(&raw).unwrap();
+        let items = arr.as_arr().unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].get("name").unwrap().as_str(), Some("demo-mlp"));
+        assert_eq!(items[0].get("status").unwrap().as_str(), Some("registered"));
+        assert_eq!(items[0].get("accuracy").unwrap().as_f64(), Some(0.76));
+        assert!(items[0].get("id").unwrap().as_str().is_some());
+        assert_eq!(hk.retrieve_summaries(Some("ghost"), None, None).unwrap(), "[]");
     }
 
     #[test]

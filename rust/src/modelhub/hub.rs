@@ -1,14 +1,21 @@
 //! ModelHub (§3.1): persistence of model documents + weight files.
 //!
 //! Thin typed layer over the document store; the housekeeper exposes the
-//! user-facing CRUD on top of this.
+//! user-facing CRUD on top of this. Reads ride the zero-copy scan path:
+//! single-field lookups ([`ModelHub::get_field_str`], status checks,
+//! weights descriptors) and the REST summary projection
+//! ([`ModelHub::find_summaries`]) never materialize a document tree;
+//! [`Json`] trees are built only where callers mutate or consume whole
+//! documents.
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::storage::{BlobRef, Database, Query};
+use crate::storage::{BlobRef, Database, Doc, Query};
 use crate::util::clock::SharedClock;
+use crate::util::jscan;
 use crate::util::json::Json;
 
 use super::schema::{ModelInfo, ModelStatus};
@@ -38,7 +45,10 @@ impl ModelHub {
 
     /// Store weights + create the model document. Returns the model id.
     pub fn create(&self, info: &ModelInfo, weights: &[u8]) -> Result<String> {
-        if self.find_by_name(&info.name)?.is_some() {
+        let taken = self
+            .db
+            .with_collection(MODELS, |c| c.find_one(&Query::eq("name", info.name.as_str())).is_some())?;
+        if taken {
             bail!("model '{}' is already registered", info.name);
         }
         let blob = self.db.gridfs().put(&format!("{}.weights.bin", info.name), weights)?;
@@ -46,30 +56,92 @@ impl ModelHub {
         Ok(self.db.with_collection(MODELS, |c| c.insert(doc))??)
     }
 
+    /// Materialize a full document (callers that read many fields or
+    /// mutate). Single-field readers should use [`Self::get_field_str`].
     pub fn get(&self, id: &str) -> Result<Json> {
         self.db
-            .with_collection(MODELS, |c| c.get(id).cloned())?
+            .with_collection(MODELS, |c| c.get(id).map(Doc::to_json))?
+            .ok_or_else(|| anyhow!("no model with id '{id}'"))
+    }
+
+    /// The document's serialized form, verbatim — what the REST layer
+    /// returns for `GET /models/{id}` without any re-encoding.
+    pub fn get_raw(&self, id: &str) -> Result<String> {
+        self.db
+            .with_collection(MODELS, |c| c.get(id).map(|d| d.raw().to_string()))?
+            .ok_or_else(|| anyhow!("no model with id '{id}'"))
+    }
+
+    /// Single (dotted-path) string field read through the scan path.
+    /// `Ok(None)` = model exists but field is absent/non-string.
+    pub fn get_field_str(&self, id: &str, path: &str) -> Result<Option<String>> {
+        self.db
+            .with_collection(MODELS, |c| {
+                c.get(id).map(|d| d.str_field(path).map(Cow::into_owned))
+            })?
             .ok_or_else(|| anyhow!("no model with id '{id}'"))
     }
 
     pub fn find_by_name(&self, name: &str) -> Result<Option<Json>> {
-        Ok(self.db.with_collection(MODELS, |c| c.find_one(&Query::eq("name", name)).cloned())?)
+        Ok(self
+            .db
+            .with_collection(MODELS, |c| c.find_one(&Query::eq("name", name)).map(Doc::to_json))?)
+    }
+
+    /// Family of the model registered under `name` (scan path).
+    /// `Ok(None)` = no such model.
+    pub fn family_of_name(&self, name: &str) -> Result<Option<String>> {
+        Ok(self.db.with_collection(MODELS, |c| {
+            c.find_one(&Query::eq("name", name))
+                .map(|d| d.str_field("family").map(Cow::into_owned).unwrap_or_default())
+        })?)
     }
 
     pub fn find(&self, query: &Query) -> Result<Vec<Json>> {
         Ok(self.db.with_collection(MODELS, |c| {
-            c.find(query).into_iter().cloned().collect::<Vec<_>>()
+            c.find(query).into_iter().map(Doc::to_json).collect::<Vec<_>>()
+        })?)
+    }
+
+    /// Interest-set projection: serialize the matching documents into a
+    /// JSON array of `{out_key: value}` summaries. Field values are
+    /// copied span-for-span out of each document's raw text — no
+    /// document tree, no re-escaping. `fields` pairs are
+    /// `(output_key, dotted_doc_path)`; missing fields render as null.
+    pub fn find_summaries(&self, query: &Query, fields: &[(&str, &str)]) -> Result<String> {
+        let paths: Vec<&str> = fields.iter().map(|(_, p)| *p).collect();
+        Ok(self.db.with_collection(MODELS, |c| {
+            let mut out = String::with_capacity(2 + 64 * fields.len());
+            out.push('[');
+            let mut first = true;
+            for doc in c.find(query) {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push('{');
+                let values = jscan::extract(doc.root(), &paths);
+                for (i, (key, _)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    jscan::write_escaped(&mut out, key);
+                    out.push(':');
+                    match values[i] {
+                        Some(v) => out.push_str(v.raw()),
+                        None => out.push_str("null"),
+                    }
+                }
+                out.push('}');
+            }
+            out.push(']');
+            out
         })?)
     }
 
     /// Guarded status transition (enforces the Figure-2 workflow).
     pub fn set_status(&self, id: &str, next: ModelStatus) -> Result<()> {
-        let doc = self.get(id)?;
-        let current = doc
-            .get("status")
-            .and_then(Json::as_str)
-            .and_then(ModelStatus::from_str)
-            .ok_or_else(|| anyhow!("model {id} has no valid status"))?;
+        let current = self.status(id)?;
         if !current.can_transition_to(next) {
             bail!("illegal status transition {} -> {} for model {id}", current.as_str(), next.as_str());
         }
@@ -80,10 +152,9 @@ impl ModelHub {
     }
 
     pub fn status(&self, id: &str) -> Result<ModelStatus> {
-        let doc = self.get(id)?;
-        doc.get("status")
-            .and_then(Json::as_str)
-            .and_then(ModelStatus::from_str)
+        self.db
+            .with_collection(MODELS, |c| c.get(id).map(ModelStatus::of_doc))?
+            .ok_or_else(|| anyhow!("no model with id '{id}'"))?
             .ok_or_else(|| anyhow!("model {id} has no valid status"))
     }
 
@@ -94,42 +165,57 @@ impl ModelHub {
     }
 
     /// Append an element to an array field (conversions / profiles).
+    /// Only the target array is materialized, not the whole document.
     pub fn push_to_array(&self, id: &str, field: &str, value: Json) -> Result<()> {
-        let doc = self.get(id)?;
-        let mut arr = doc.get(field).and_then(Json::as_arr).map(|a| a.to_vec()).unwrap_or_default();
-        arr.push(value);
-        self.update_fields(id, &Json::obj().with(field, Json::Arr(arr)))
+        let arr = self
+            .db
+            .with_collection(MODELS, |c| c.get(id).map(|d| d.get(field).map(|v| v.to_json())))?
+            .ok_or_else(|| anyhow!("no model with id '{id}'"))?;
+        let mut items = match arr {
+            Some(Json::Arr(v)) => v,
+            _ => Vec::new(),
+        };
+        items.push(value);
+        self.update_fields(id, &Json::obj().with(field, Json::Arr(items)))
     }
 
     /// Load the stored weight bytes of a model.
     pub fn load_weights(&self, id: &str) -> Result<Vec<u8>> {
-        let doc = self.get(id)?;
-        let blob = doc
-            .get("weights")
-            .and_then(BlobRef::from_json)
+        let blob = self
+            .db
+            .with_collection(MODELS, |c| {
+                c.get(id).map(|d| d.get("weights").and_then(BlobRef::from_scan))
+            })?
+            .ok_or_else(|| anyhow!("no model with id '{id}'"))?
             .ok_or_else(|| anyhow!("model {id} has no weights blob"))?;
         Ok(self.db.gridfs().get(&blob)?)
     }
 
     /// Delete document + weights. Returns false when absent.
     pub fn delete(&self, id: &str) -> Result<bool> {
-        let Ok(doc) = self.get(id) else { return Ok(false) };
-        if let Some(blob) = doc.get("weights").and_then(BlobRef::from_json) {
-            // weights are content-addressed and may be shared; only drop
-            // the blob when no other model points at it
-            let others = self.db.with_collection(MODELS, |c| {
-                c.all()
-                    .filter(|d| {
-                        d.get("_id") != doc.get("_id")
-                            && d.at(&["weights", "id"]).and_then(Json::as_str) == Some(blob.id.as_str())
-                    })
-                    .count()
-            })?;
-            if others == 0 {
+        // weights are content-addressed and may be shared; only drop the
+        // blob when no other model points at it. One lock hold for the
+        // read-check-delete so concurrent deletes can't double-free.
+        let (deleted, unshared) = self.db.with_collection(MODELS, |c| {
+            let blob = match c.get(id) {
+                Some(doc) => doc.get("weights").and_then(BlobRef::from_scan),
+                None => return Ok((false, None)),
+            };
+            let unshared = blob.filter(|b| {
+                !c.all().any(|d| {
+                    d.str_field("_id").as_deref() != Some(id)
+                        && d.str_field("weights.id").as_deref() == Some(b.id.as_str())
+                })
+            });
+            let deleted = c.delete(id)?;
+            Ok::<_, crate::storage::StoreError>((deleted, unshared))
+        })??;
+        if deleted {
+            if let Some(blob) = unshared {
                 self.db.gridfs().delete(&blob.id)?;
             }
         }
-        Ok(self.db.with_collection(MODELS, |c| c.delete(doc.get("_id").unwrap().as_str().unwrap()))??)
+        Ok(deleted)
     }
 
     pub fn count(&self) -> Result<usize> {
@@ -168,6 +254,14 @@ mod tests {
         assert_eq!(doc.get("name").unwrap().as_str(), Some("m1"));
         assert_eq!(hub.load_weights(&id).unwrap(), b"fakeweights");
         assert_eq!(hub.count().unwrap(), 1);
+        // raw read returns the stored serialization verbatim
+        let raw = hub.get_raw(&id).unwrap();
+        assert_eq!(Json::parse(&raw).unwrap(), doc);
+        // scan-path single-field read
+        assert_eq!(hub.get_field_str(&id, "family").unwrap().as_deref(), Some("mlp_tabular"));
+        assert_eq!(hub.get_field_str(&id, "weights.filename").unwrap().as_deref(), Some("m1.weights.bin"));
+        assert_eq!(hub.get_field_str(&id, "accuracy").unwrap(), None, "non-string field");
+        assert!(hub.get_field_str("ffffffffffffffffffffffff", "family").is_err());
     }
 
     #[test]
@@ -207,14 +301,7 @@ mod tests {
         let hub = hub();
         let id1 = hub.create(&info("a"), b"shared").unwrap();
         let id2 = hub.create(&info("b"), b"shared").unwrap();
-        let blob_id = hub
-            .get(&id1)
-            .unwrap()
-            .at(&["weights", "id"])
-            .unwrap()
-            .as_str()
-            .unwrap()
-            .to_string();
+        let blob_id = hub.get_field_str(&id1, "weights.id").unwrap().unwrap();
         assert!(hub.delete(&id1).unwrap());
         assert!(hub.db().gridfs().exists(&blob_id), "blob still used by model b");
         assert!(hub.delete(&id2).unwrap());
@@ -230,5 +317,28 @@ mod tests {
         }
         let hits = hub.find(&Query::Prefix("name".into(), "resnet".into())).unwrap();
         assert_eq!(hits.len(), 2);
+        assert_eq!(hub.family_of_name("bert-x").unwrap().as_deref(), Some("mlp_tabular"));
+        assert_eq!(hub.family_of_name("ghost").unwrap(), None);
+    }
+
+    #[test]
+    fn summaries_project_interest_fields_only() {
+        let hub = hub();
+        let id = hub.create(&info("sum-model"), b"w").unwrap();
+        let out = hub
+            .find_summaries(
+                &Query::All,
+                &[("id", "_id"), ("name", "name"), ("status", "status"), ("ghost", "nope")],
+            )
+            .unwrap();
+        let arr = Json::parse(&out).unwrap();
+        let items = arr.as_arr().unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].get("id").unwrap().as_str(), Some(id.as_str()));
+        assert_eq!(items[0].get("name").unwrap().as_str(), Some("sum-model"));
+        assert_eq!(items[0].get("status").unwrap().as_str(), Some("registered"));
+        assert!(items[0].get("ghost").unwrap().is_null());
+        // empty result set renders as an empty array
+        assert_eq!(hub.find_summaries(&Query::eq("name", "zzz"), &[("n", "name")]).unwrap(), "[]");
     }
 }

@@ -4,4 +4,4 @@ pub mod hub;
 pub mod schema;
 
 pub use hub::ModelHub;
-pub use schema::{ModelInfo, ModelStatus};
+pub use schema::{ModelInfo, ModelStatus, SUMMARY_FIELDS};

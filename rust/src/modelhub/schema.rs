@@ -2,7 +2,20 @@
 //! profiling information and a model weight file".
 
 use crate::storage::BlobRef;
+use crate::util::jscan::Doc;
 use crate::util::json::Json;
+
+/// Interest set for the REST list view: `(output_key, document path)` —
+/// the "basic information" slice of a model document (§3.1), extracted
+/// span-wise by [`crate::modelhub::ModelHub::find_summaries`] without
+/// materializing any document.
+pub const SUMMARY_FIELDS: &[(&str, &str)] = &[
+    ("id", "_id"),
+    ("name", "name"),
+    ("task", "task"),
+    ("status", "status"),
+    ("accuracy", "accuracy"),
+];
 
 /// Lifecycle states of a published model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,6 +53,11 @@ impl ModelStatus {
             "failed" => ModelStatus::Failed,
             _ => return None,
         })
+    }
+
+    /// Read the status straight off a scanned document (no tree build).
+    pub fn of_doc(doc: &Doc) -> Option<ModelStatus> {
+        doc.str_field("status").and_then(|s| ModelStatus::from_str(&s))
     }
 
     /// Legal transitions of the housekeeping workflow (Figure 2).

@@ -1,13 +1,16 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! Rust runtime. Parses `artifacts/manifest.json` into typed descriptors
-//! and loads packed weight files.
+//! Rust runtime. Scans `artifacts/manifest.json` into typed descriptors
+//! (via the zero-copy offset scanner — the manifest carries per-model
+//! param/artifact tables that are read field-wise without building an
+//! intermediate JSON tree) and loads packed weight files.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::util::json::Json;
+use crate::util::jscan::{self, Kind, ValueRef};
 
 use super::tensor::{DType, Tensor};
 
@@ -124,17 +127,23 @@ pub struct ArtifactStore {
 }
 
 impl ArtifactStore {
-    /// Load `<dir>/manifest.json`.
+    /// Load `<dir>/manifest.json` (one scan pass; typed fields are read
+    /// straight off the offset spans).
     pub fn load(dir: &Path) -> Result<ArtifactStore> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {manifest_path:?} (run `make artifacts` first)"))?;
-        let root = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
-        let models_json =
-            root.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        let offsets = jscan::scan(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let models_json = offsets
+            .root(&text)
+            .get("models")
+            .filter(|v| v.kind() == Kind::Obj)
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?;
         let mut models = BTreeMap::new();
-        for (name, m) in models_json {
-            models.insert(name.clone(), parse_model(name, m)?);
+        for (name, m) in models_json.entries() {
+            let name = name.into_owned();
+            let parsed = parse_model(&name, m)?;
+            models.insert(name, parsed);
         }
         Ok(ArtifactStore { dir: dir.to_path_buf(), models })
     }
@@ -180,86 +189,105 @@ impl ArtifactStore {
     }
 }
 
-fn parse_model(name: &str, m: &Json) -> Result<ModelManifest> {
+fn parse_model(name: &str, m: ValueRef<'_>) -> Result<ModelManifest> {
     let get_str = |k: &str| -> Result<String> {
-        Ok(m.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: missing {k}"))?.to_string())
+        Ok(m.get(k)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("{name}: missing {k}"))?
+            .into_owned())
     };
     let get_num = |k: &str| -> Result<f64> {
-        m.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("{name}: missing {k}"))
+        m.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("{name}: missing {k}"))
     };
     let input_dtype = DType::from_str(&get_str("input_dtype")?)
         .ok_or_else(|| anyhow!("{name}: bad input_dtype"))?;
-    let shape_vec = |v: &Json| -> Result<Vec<usize>> {
-        v.as_arr()
-            .ok_or_else(|| anyhow!("{name}: bad shape"))?
-            .iter()
-            .map(|d| d.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
-            .collect()
+    let shape_vec = |v: ValueRef<'_>| -> Result<Vec<usize>> {
+        if v.kind() != Kind::Arr {
+            bail!("{name}: bad shape");
+        }
+        v.items().map(|d| d.as_usize().ok_or_else(|| anyhow!("{name}: bad dim"))).collect()
     };
+    let str_or_empty =
+        |v: ValueRef<'_>, k: &str| v.get(k).and_then(|x| x.as_str()).map(Cow::into_owned).unwrap_or_default();
     let params = m
         .get("params")
-        .and_then(Json::as_arr)
+        .filter(|v| v.kind() == Kind::Arr)
         .ok_or_else(|| anyhow!("{name}: missing params"))?
-        .iter()
+        .items()
         .map(|p| {
             Ok(ParamEntry {
-                name: p.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                name: str_or_empty(p, "name"),
                 shape: shape_vec(p.get("shape").ok_or_else(|| anyhow!("param shape"))?)?,
-                offset: p.get("offset").and_then(Json::as_usize).ok_or_else(|| anyhow!("offset"))?,
-                nbytes: p.get("nbytes").and_then(Json::as_usize).ok_or_else(|| anyhow!("nbytes"))?,
+                offset: p.get("offset").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("offset"))?,
+                nbytes: p.get("nbytes").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("nbytes"))?,
             })
         })
         .collect::<Result<Vec<_>>>()?;
     let artifacts = m
         .get("artifacts")
-        .and_then(Json::as_arr)
+        .filter(|v| v.kind() == Kind::Arr)
         .ok_or_else(|| anyhow!("{name}: missing artifacts"))?
-        .iter()
+        .items()
         .map(|a| {
             Ok(ArtifactEntry {
-                format: a.get("format").and_then(Json::as_str).unwrap_or_default().to_string(),
-                batch: a.get("batch").and_then(Json::as_usize).ok_or_else(|| anyhow!("batch"))?,
-                file: a.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
-                hlo_ops: a.get("hlo_ops").and_then(Json::as_usize).unwrap_or(0),
+                format: str_or_empty(a, "format"),
+                batch: a.get("batch").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("batch"))?,
+                file: str_or_empty(a, "file"),
+                hlo_ops: a.get("hlo_ops").and_then(|v| v.as_usize()).unwrap_or(0),
             })
         })
         .collect::<Result<Vec<_>>>()?;
     let golden_json = m.get("golden").ok_or_else(|| anyhow!("{name}: missing golden"))?;
     let golden = GoldenIo {
-        batch: golden_json.get("batch").and_then(Json::as_usize).ok_or_else(|| anyhow!("golden batch"))?,
-        x_file: golden_json.get("x_file").and_then(Json::as_str).unwrap_or_default().to_string(),
-        y_file: golden_json.get("y_file").and_then(Json::as_str).unwrap_or_default().to_string(),
-        x_dtype: DType::from_str(golden_json.get("x_dtype").and_then(Json::as_str).unwrap_or("f32"))
-            .ok_or_else(|| anyhow!("golden dtype"))?,
+        batch: golden_json
+            .get("batch")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("golden batch"))?,
+        x_file: str_or_empty(golden_json, "x_file"),
+        y_file: str_or_empty(golden_json, "y_file"),
+        x_dtype: DType::from_str(
+            golden_json.get("x_dtype").and_then(|v| v.as_str()).as_deref().unwrap_or("f32"),
+        )
+        .ok_or_else(|| anyhow!("golden dtype"))?,
     };
     let launches = m.get("kernel_launches").ok_or_else(|| anyhow!("{name}: missing kernel_launches"))?;
     let sim_json = m.get("sim").ok_or_else(|| anyhow!("{name}: missing sim block"))?;
     let sim_launches = sim_json.get("kernel_launches").ok_or_else(|| anyhow!("sim launches"))?;
     let sim = SimEquivalent {
-        represents: sim_json.get("represents").and_then(Json::as_str).unwrap_or("?").to_string(),
-        flops_per_example: sim_json.get("flops_per_example").and_then(Json::as_f64).ok_or_else(|| anyhow!("sim flops"))?,
+        represents: sim_json
+            .get("represents")
+            .and_then(|v| v.as_str())
+            .map(Cow::into_owned)
+            .unwrap_or_else(|| "?".to_string()),
+        flops_per_example: sim_json
+            .get("flops_per_example")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("sim flops"))?,
         activation_bytes_per_example: sim_json
             .get("activation_bytes_per_example")
-            .and_then(Json::as_f64)
+            .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow!("sim act bytes"))?,
-        param_bytes: sim_json.get("param_bytes").and_then(Json::as_f64).ok_or_else(|| anyhow!("sim param bytes"))?,
-        launches_reference: sim_launches.get("reference").and_then(Json::as_f64).unwrap_or(1.0),
-        launches_optimized: sim_launches.get("optimized").and_then(Json::as_f64).unwrap_or(1.0),
+        param_bytes: sim_json
+            .get("param_bytes")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("sim param bytes"))?,
+        launches_reference: sim_launches.get("reference").and_then(|v| v.as_f64()).unwrap_or(1.0),
+        launches_optimized: sim_launches.get("optimized").and_then(|v| v.as_f64()).unwrap_or(1.0),
     };
     Ok(ModelManifest {
         name: name.to_string(),
         task: get_str("task")?,
         input_shape: shape_vec(m.get("input_shape").ok_or_else(|| anyhow!("input_shape"))?)?,
         input_dtype,
-        num_classes: m.get("num_classes").and_then(Json::as_usize).ok_or_else(|| anyhow!("num_classes"))?,
+        num_classes: m.get("num_classes").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("num_classes"))?,
         claimed_accuracy: get_num("claimed_accuracy")?,
         weights_file: get_str("weights_file")?,
         params,
-        param_bytes: m.get("param_bytes").and_then(Json::as_usize).ok_or_else(|| anyhow!("param_bytes"))?,
+        param_bytes: m.get("param_bytes").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("param_bytes"))?,
         flops_per_example: get_num("flops_per_example")?,
         activation_bytes_per_example: get_num("activation_bytes_per_example")?,
-        launches_reference: launches.get("reference").and_then(Json::as_usize).unwrap_or(1),
-        launches_optimized: launches.get("optimized").and_then(Json::as_usize).unwrap_or(1),
+        launches_reference: launches.get("reference").and_then(|v| v.as_usize()).unwrap_or(1),
+        launches_optimized: launches.get("optimized").and_then(|v| v.as_usize()).unwrap_or(1),
         sim,
         golden,
         artifacts,

@@ -1,7 +1,23 @@
-//! A document collection: insert/find/update/delete over [`Json`]
+//! A document collection: insert/find/update/delete over scanned JSON
 //! documents with `_id` assignment, secondary hash indexes, and
 //! append-only JSONL persistence with compaction — the working heart of
 //! the MongoDB substitute.
+//!
+//! Documents are held as [`Doc`]s (raw serialized text + offset table,
+//! see [`crate::util::jscan`]) rather than [`Json`] trees:
+//!
+//! * WAL replay in [`Collection::open`] scans each line once and never
+//!   materializes a tree — `_id` and indexed fields are read straight
+//!   off the offset spans.
+//! * [`Collection::find`] evaluates queries through
+//!   [`Query::matches_scan`], so a full collection scan touches only
+//!   the fields the predicate names.
+//! * WAL appends and compaction embed `Doc::raw()` verbatim — no
+//!   `doc.clone()`, no per-record re-serialization.
+//!
+//! [`Json`] remains the mutation type: `insert`/`replace` take a tree,
+//! serialize it once canonically and scan that; `update` materializes
+//! the stored doc only because a merge actually mutates it.
 
 use std::collections::{BTreeMap, HashMap};
 use std::fs::{File, OpenOptions};
@@ -9,6 +25,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
 
 use crate::util::idgen;
+use crate::util::jscan::{self, Doc};
 use crate::util::json::Json;
 
 use super::query::Query;
@@ -49,7 +66,7 @@ const OP_DEL: &str = "del";
 /// An in-memory collection with optional durability.
 pub struct Collection {
     name: String,
-    docs: BTreeMap<String, Json>,
+    docs: BTreeMap<String, Doc>,
     /// field -> value -> ids (secondary hash indexes)
     indexes: HashMap<String, HashMap<String, Vec<String>>>,
     /// Path of the JSONL log; `None` = memory-only (tests).
@@ -73,7 +90,7 @@ impl Collection {
     }
 
     /// Durable collection backed by `<dir>/<name>.jsonl`, replaying any
-    /// existing log.
+    /// existing log. Replay is scan-only: no document tree is built.
     pub fn open(dir: &std::path::Path, name: &str) -> Result<Collection> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{name}.jsonl"));
@@ -85,26 +102,30 @@ impl Collection {
                 if line.trim().is_empty() {
                     continue;
                 }
-                let rec = Json::parse(&line).map_err(|e| {
+                let rec = jscan::scan(&line).map_err(|e| {
                     StoreError::Corrupt(format!("{name}.jsonl line {}: {e}", lineno + 1))
                 })?;
-                let op = rec.get("op").and_then(Json::as_str).unwrap_or(OP_PUT);
-                match op {
+                let root = rec.root(&line);
+                let op = root.get("op").and_then(|v| v.as_str());
+                match op.as_deref().unwrap_or(OP_PUT) {
                     OP_PUT => {
-                        let doc = rec
+                        let doc_ref = root
                             .get("doc")
-                            .cloned()
                             .ok_or_else(|| StoreError::Corrupt("put without doc".into()))?;
+                        // re-scan just the doc's span so the stored
+                        // offsets are rooted at the doc, not the record
+                        let doc = Doc::parse(doc_ref.raw()).map_err(|e| {
+                            StoreError::Corrupt(format!("{name}.jsonl line {}: {e}", lineno + 1))
+                        })?;
                         let id = doc
-                            .get("_id")
-                            .and_then(Json::as_str)
-                            .ok_or_else(|| StoreError::Corrupt("doc without _id".into()))?
-                            .to_string();
+                            .str_field("_id")
+                            .map(|s| s.into_owned())
+                            .ok_or_else(|| StoreError::Corrupt("doc without _id".into()))?;
                         coll.apply_put(id, doc);
                     }
                     OP_DEL => {
-                        if let Some(id) = rec.get("id").and_then(Json::as_str) {
-                            coll.apply_del(id);
+                        if let Some(id) = root.get("id").and_then(|v| v.as_str()) {
+                            coll.apply_del(&id);
                         }
                     }
                     other => return Err(StoreError::Corrupt(format!("unknown op '{other}'"))),
@@ -129,22 +150,24 @@ impl Collection {
     }
 
     /// Declare a secondary index on a (top-level or dotted) string field.
+    /// The build reads only the indexed field off each document's spans.
     pub fn create_index(&mut self, field: &str) {
         if self.indexes.contains_key(field) {
             return;
         }
         let mut index: HashMap<String, Vec<String>> = HashMap::new();
         for (id, doc) in &self.docs {
-            if let Some(v) = lookup_str(doc, field) {
-                index.entry(v.to_string()).or_default().push(id.clone());
+            if let Some(v) = doc.str_field(field) {
+                index.entry(v.into_owned()).or_default().push(id.clone());
             }
         }
         self.indexes.insert(field.to_string(), index);
     }
 
-    fn apply_put(&mut self, id: String, doc: Json) {
-        if let Some(old) = self.docs.get(&id) {
-            let old = old.clone();
+    fn apply_put(&mut self, id: String, doc: Doc) {
+        // take the old doc out first: unindexing needs it by value, and
+        // this is what lets put/replace run clone-free
+        if let Some(old) = self.docs.remove(&id) {
             self.unindex(&id, &old);
         }
         self.index_doc(&id, &doc);
@@ -157,28 +180,33 @@ impl Collection {
         }
     }
 
-    fn index_doc(&mut self, id: &str, doc: &Json) {
+    fn index_doc(&mut self, id: &str, doc: &Doc) {
         for (field, index) in self.indexes.iter_mut() {
-            if let Some(v) = lookup_str(doc, field) {
-                index.entry(v.to_string()).or_default().push(id.to_string());
+            if let Some(v) = doc.str_field(field) {
+                index.entry(v.into_owned()).or_default().push(id.to_string());
             }
         }
     }
 
-    fn unindex(&mut self, id: &str, doc: &Json) {
+    fn unindex(&mut self, id: &str, doc: &Doc) {
         for (field, index) in self.indexes.iter_mut() {
-            if let Some(v) = lookup_str(doc, field) {
-                if let Some(ids) = index.get_mut(v) {
+            if let Some(v) = doc.str_field(field) {
+                if let Some(ids) = index.get_mut(v.as_ref()) {
                     ids.retain(|x| x != id);
                 }
             }
         }
     }
 
-    fn log_put(&mut self, doc: &Json) -> Result<()> {
+    /// Append a put record: the doc's canonical raw text is embedded
+    /// verbatim (one buffer build, no record tree, no doc clone).
+    fn log_put(&mut self, doc_raw: &str) -> Result<()> {
         if let Some(log) = &mut self.log {
-            let rec = Json::obj().with("op", OP_PUT).with("doc", doc.clone());
-            writeln!(log, "{}", rec)?;
+            let mut rec = String::with_capacity(doc_raw.len() + 24);
+            rec.push_str("{\"doc\":");
+            rec.push_str(doc_raw);
+            rec.push_str(",\"op\":\"put\"}");
+            writeln!(log, "{rec}")?;
             self.dirty_ops += 1;
         }
         self.maybe_compact()
@@ -186,8 +214,11 @@ impl Collection {
 
     fn log_del(&mut self, id: &str) -> Result<()> {
         if let Some(log) = &mut self.log {
-            let rec = Json::obj().with("op", OP_DEL).with("id", id);
-            writeln!(log, "{}", rec)?;
+            let mut rec = String::with_capacity(id.len() + 24);
+            rec.push_str("{\"id\":");
+            jscan::write_escaped(&mut rec, id);
+            rec.push_str(",\"op\":\"del\"}");
+            writeln!(log, "{rec}")?;
             self.dirty_ops += 1;
         }
         self.maybe_compact()
@@ -201,15 +232,15 @@ impl Collection {
         Ok(())
     }
 
-    /// Rewrite the log to contain exactly the live documents.
+    /// Rewrite the log to contain exactly the live documents. Pure byte
+    /// copies: each stored doc's raw text is written as-is.
     pub fn compact(&mut self) -> Result<()> {
         let Some(path) = self.log_path.clone() else { return Ok(()) };
         let tmp = path.with_extension("jsonl.tmp");
         {
             let mut f = File::create(&tmp)?;
             for doc in self.docs.values() {
-                let rec = Json::obj().with("op", OP_PUT).with("doc", doc.clone());
-                writeln!(f, "{}", rec)?;
+                writeln!(f, "{{\"doc\":{},\"op\":\"put\"}}", doc.raw())?;
             }
             f.sync_all()?;
         }
@@ -232,31 +263,38 @@ impl Collection {
                 id
             }
         };
-        self.log_put(&doc)?;
-        self.apply_put(id.clone(), doc);
+        let stored = Doc::from_json(&doc);
+        self.log_put(stored.raw())?;
+        self.apply_put(id.clone(), stored);
         Ok(id)
     }
 
-    pub fn get(&self, id: &str) -> Option<&Json> {
+    pub fn get(&self, id: &str) -> Option<&Doc> {
         self.docs.get(id)
     }
 
-    /// Find documents matching the query, index-accelerated when possible.
-    pub fn find(&self, query: &Query) -> Vec<&Json> {
+    /// Materialize one document as a [`Json`] tree (mutation/API edge).
+    pub fn get_json(&self, id: &str) -> Option<Json> {
+        self.docs.get(id).map(Doc::to_json)
+    }
+
+    /// Find documents matching the query, index-accelerated when
+    /// possible. Matching walks offset spans — no trees are built.
+    pub fn find(&self, query: &Query) -> Vec<&Doc> {
         if let Some((field, value)) = query.index_key() {
             if let Some(index) = self.indexes.get(field) {
                 let ids = index.get(value).map(|v| v.as_slice()).unwrap_or(&[]);
                 return ids
                     .iter()
                     .filter_map(|id| self.docs.get(id))
-                    .filter(|d| query.matches(d))
+                    .filter(|d| query.matches_scan(d.root()))
                     .collect();
             }
         }
-        self.docs.values().filter(|d| query.matches(d)).collect()
+        self.docs.values().filter(|d| query.matches_scan(d.root())).collect()
     }
 
-    pub fn find_one(&self, query: &Query) -> Option<&Json> {
+    pub fn find_one(&self, query: &Query) -> Option<&Doc> {
         self.find(query).into_iter().next()
     }
 
@@ -270,27 +308,33 @@ impl Collection {
             return Err(StoreError::NotFound(id.to_string()));
         }
         doc.set("_id", id);
-        self.log_put(&doc)?;
-        self.apply_put(id.to_string(), doc);
+        let stored = Doc::from_json(&doc);
+        self.log_put(stored.raw())?;
+        self.apply_put(id.to_string(), stored);
         Ok(())
     }
 
     /// Merge fields into a document (shallow update, like `$set`).
     pub fn update(&mut self, id: &str, fields: &Json) -> Result<()> {
-        let Some(doc) = self.docs.get(id) else {
-            return Err(StoreError::NotFound(id.to_string()));
-        };
-        let mut merged = doc.clone();
-        if let (Some(dst), Some(src)) = (merged.as_obj_mut(), fields.as_obj()) {
-            for (k, v) in src {
-                dst.insert(k.clone(), v.clone());
-            }
-        } else {
+        let Some(src) = fields.as_obj() else {
             return Err(StoreError::BadDocument("update fields must be an object".into()));
+        };
+        let mut merged = match self.docs.get(id) {
+            Some(doc) => doc.to_json(),
+            None => return Err(StoreError::NotFound(id.to_string())),
+        };
+        match merged.as_obj_mut() {
+            Some(dst) => {
+                for (k, v) in src {
+                    dst.insert(k.clone(), v.clone());
+                }
+            }
+            None => return Err(StoreError::BadDocument("stored document is not an object".into())),
         }
         merged.set("_id", id);
-        self.log_put(&merged)?;
-        self.apply_put(id.to_string(), merged);
+        let stored = Doc::from_json(&merged);
+        self.log_put(stored.raw())?;
+        self.apply_put(id.to_string(), stored);
         Ok(())
     }
 
@@ -305,14 +349,9 @@ impl Collection {
     }
 
     /// All documents (ordered by id).
-    pub fn all(&self) -> impl Iterator<Item = &Json> {
+    pub fn all(&self) -> impl Iterator<Item = &Doc> {
         self.docs.values()
     }
-}
-
-fn lookup_str<'a>(doc: &'a Json, field: &str) -> Option<&'a str> {
-    let parts: Vec<&str> = field.split('.').collect();
-    doc.at(&parts).and_then(Json::as_str)
 }
 
 #[cfg(test)]
@@ -323,14 +362,20 @@ mod tests {
         Json::obj().with("name", name).with("framework", framework).with("accuracy", acc)
     }
 
+    fn str_field(doc: &Doc, field: &str) -> Option<String> {
+        doc.str_field(field).map(|s| s.into_owned())
+    }
+
     #[test]
     fn insert_assigns_ids_and_get_roundtrips() {
         let mut c = Collection::in_memory("models");
         let id = c.insert(model_doc("resnet", "jax", 0.9)).unwrap();
         assert!(idgen::is_valid(&id));
         let doc = c.get(&id).unwrap();
-        assert_eq!(doc.get("name").unwrap().as_str(), Some("resnet"));
-        assert_eq!(doc.get("_id").unwrap().as_str(), Some(id.as_str()));
+        assert_eq!(str_field(doc, "name").as_deref(), Some("resnet"));
+        assert_eq!(str_field(doc, "_id").as_deref(), Some(id.as_str()));
+        // raw form parses back to the same tree
+        assert_eq!(Json::parse(doc.raw()).unwrap(), doc.to_json());
     }
 
     #[test]
@@ -354,8 +399,8 @@ mod tests {
         // compound query through the index path
         let q = Query::and([Query::eq("framework", "torch"), Query::Gt("accuracy".into(), 0.9)]);
         let hits = c.find(&q);
-        assert!(hits.iter().all(|d| d.get("framework").unwrap().as_str() == Some("torch")));
-        assert!(hits.iter().all(|d| d.get("accuracy").unwrap().as_f64().unwrap() > 0.9));
+        assert!(hits.iter().all(|d| str_field(d, "framework").as_deref() == Some("torch")));
+        assert!(hits.iter().all(|d| d.f64_field("accuracy").unwrap() > 0.9));
     }
 
     #[test]
@@ -366,9 +411,9 @@ mod tests {
         c.update(&id, &Json::obj().with("status", "converted").with("extra", 1i64)).unwrap();
         assert_eq!(c.find(&Query::eq("status", "registered")).len(), 0);
         assert_eq!(c.find(&Query::eq("status", "converted")).len(), 1);
-        assert_eq!(c.get(&id).unwrap().get("extra").unwrap().as_i64(), Some(1));
+        assert_eq!(c.get(&id).unwrap().i64_field("extra"), Some(1));
         // untouched fields survive
-        assert_eq!(c.get(&id).unwrap().get("name").unwrap().as_str(), Some("m"));
+        assert_eq!(str_field(c.get(&id).unwrap(), "name").as_deref(), Some("m"));
     }
 
     #[test]
@@ -386,7 +431,7 @@ mod tests {
     fn update_missing_is_not_found() {
         let mut c = Collection::in_memory("x");
         assert!(matches!(
-            c.update("000000000000000000000000", &Json::obj()),
+            c.update("000000000000000000000000", &Json::obj().with("k", 1i64)),
             Err(StoreError::NotFound(_))
         ));
     }
@@ -399,20 +444,15 @@ mod tests {
             let mut c = Collection::open(&dir, "models").unwrap();
             id = c.insert(model_doc("persisted", "jax", 0.7)).unwrap();
             c.insert(model_doc("deleted", "jax", 0.1)).unwrap();
-            let del_id = c.find(&Query::eq("name", "deleted"))[0]
-                .get("_id")
-                .unwrap()
-                .as_str()
-                .unwrap()
-                .to_string();
+            let del_id = str_field(c.find(&Query::eq("name", "deleted"))[0], "_id").unwrap();
             c.delete(&del_id).unwrap();
             c.update(&id, &Json::obj().with("accuracy", 0.75)).unwrap();
         }
         let c2 = Collection::open(&dir, "models").unwrap();
         assert_eq!(c2.len(), 1);
         let doc = c2.get(&id).unwrap();
-        assert_eq!(doc.get("name").unwrap().as_str(), Some("persisted"));
-        assert_eq!(doc.get("accuracy").unwrap().as_f64(), Some(0.75));
+        assert_eq!(str_field(doc, "name").as_deref(), Some("persisted"));
+        assert_eq!(doc.f64_field("accuracy"), Some(0.75));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -435,7 +475,7 @@ mod tests {
         }
         let c2 = Collection::open(&dir, "events").unwrap();
         assert_eq!(c2.len(), 20);
-        assert!(c2.all().all(|d| d.get("accuracy").unwrap().as_f64() == Some(0.9)));
+        assert!(c2.all().all(|d| d.f64_field("accuracy") == Some(0.9)));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -445,6 +485,22 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("bad.jsonl"), "this is not json\n").unwrap();
         assert!(matches!(Collection::open(&dir, "bad"), Err(StoreError::Corrupt(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wal_records_replay_across_escaped_ids() {
+        let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
+        {
+            let mut c = Collection::open(&dir, "esc").unwrap();
+            // a custom _id with characters the WAL writer must escape
+            c.insert(Json::obj().with("_id", "we\"ird\nid").with("k", 1i64)).unwrap();
+            c.insert(Json::obj().with("_id", "plain").with("k", 2i64)).unwrap();
+            c.delete("we\"ird\nid").unwrap();
+        }
+        let c2 = Collection::open(&dir, "esc").unwrap();
+        assert_eq!(c2.len(), 1);
+        assert_eq!(c2.get("plain").unwrap().i64_field("k"), Some(2));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

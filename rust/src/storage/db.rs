@@ -102,7 +102,7 @@ mod tests {
             .unwrap();
             let blob = db.gridfs().put("w.bin", b"weights").unwrap();
             db.with_collection("models", |c| {
-                let id = c.all().next().unwrap().get("_id").unwrap().as_str().unwrap().to_string();
+                let id = c.all().next().unwrap().str_field("_id").unwrap().into_owned();
                 c.update(&id, &Json::obj().with("weights", blob.to_json())).unwrap();
             })
             .unwrap();
@@ -111,7 +111,8 @@ mod tests {
         db2.with_collection("models", |c| {
             assert_eq!(c.len(), 1);
             let doc = c.find_one(&Query::eq("name", "persisted")).unwrap();
-            let blob = crate::storage::gridfs::BlobRef::from_json(doc.get("weights").unwrap()).unwrap();
+            let blob =
+                crate::storage::gridfs::BlobRef::from_scan(doc.get("weights").unwrap()).unwrap();
             assert_eq!(db2.gridfs().get(&blob).unwrap(), b"weights");
         })
         .unwrap();

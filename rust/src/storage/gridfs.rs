@@ -44,6 +44,16 @@ impl BlobRef {
             filename: v.get("filename")?.as_str()?.to_string(),
         })
     }
+
+    /// Read a descriptor straight off a scanned document span (no tree).
+    pub fn from_scan(v: crate::util::jscan::ValueRef<'_>) -> Option<BlobRef> {
+        Some(BlobRef {
+            id: v.get("id")?.as_str()?.into_owned(),
+            len: v.get("len")?.as_usize()?,
+            chunks: v.get("chunks")?.as_usize()?,
+            filename: v.get("filename")?.as_str()?.into_owned(),
+        })
+    }
 }
 
 /// On-disk chunked blob store.

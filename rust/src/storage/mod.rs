@@ -11,3 +11,6 @@ pub use collection::{Collection, Result, StoreError};
 pub use db::Database;
 pub use gridfs::{BlobRef, GridFs};
 pub use query::Query;
+
+// the scanned-document types stored records are made of
+pub use crate::util::jscan::{Doc, ValueRef};

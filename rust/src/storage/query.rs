@@ -1,7 +1,15 @@
 //! Query language for the document store — the Mongo-ish subset the
 //! housekeeper's `retrieve` API needs (§3.2): field equality, comparisons,
 //! set membership, prefix match, and/or composition.
+//!
+//! Predicates evaluate over *either* representation of a document: a
+//! materialized [`Json`] tree, or (the hot path) a scanned document's
+//! [`ValueRef`] cursor — so collection scans never build a tree just to
+//! check a match.
 
+use std::borrow::Cow;
+
+use crate::util::jscan::ValueRef;
 use crate::util::json::Json;
 
 /// A predicate over documents.
@@ -28,6 +36,59 @@ pub enum Query {
     Not(Box<Query>),
 }
 
+/// One document field under evaluation: tree node or scanned span.
+#[derive(Clone, Copy)]
+enum View<'a> {
+    Tree(&'a Json),
+    Scan(ValueRef<'a>),
+}
+
+impl<'a> View<'a> {
+    fn get(self, key: &str) -> Option<View<'a>> {
+        match self {
+            View::Tree(j) => j.get(key).map(View::Tree),
+            View::Scan(v) => v.get(key).map(View::Scan),
+        }
+    }
+
+    /// Resolve a dot path without allocating the split.
+    fn lookup(self, path: &str) -> Option<View<'a>> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    fn as_f64(self) -> Option<f64> {
+        match self {
+            View::Tree(j) => j.as_f64(),
+            View::Scan(v) => v.as_f64(),
+        }
+    }
+
+    fn as_str(self) -> Option<Cow<'a, str>> {
+        match self {
+            View::Tree(j) => j.as_str().map(Cow::Borrowed),
+            View::Scan(v) => v.as_str(),
+        }
+    }
+
+    fn is_null(self) -> bool {
+        match self {
+            View::Tree(j) => j.is_null(),
+            View::Scan(v) => v.is_null(),
+        }
+    }
+
+    fn eq_json(self, other: &Json) -> bool {
+        match self {
+            View::Tree(j) => j == other,
+            View::Scan(v) => v.eq_json(other),
+        }
+    }
+}
+
 impl Query {
     pub fn and(queries: impl IntoIterator<Item = Query>) -> Query {
         Query::And(queries.into_iter().collect())
@@ -41,40 +102,44 @@ impl Query {
         Query::Eq(field.to_string(), value.into())
     }
 
-    /// Resolve a dot path inside a document.
-    fn lookup<'a>(doc: &'a Json, path: &str) -> Option<&'a Json> {
-        let parts: Vec<&str> = path.split('.').collect();
-        doc.at(&parts)
+    /// Evaluate the predicate against a materialized document.
+    pub fn matches(&self, doc: &Json) -> bool {
+        self.eval(View::Tree(doc))
     }
 
-    /// Evaluate the predicate against a document.
-    pub fn matches(&self, doc: &Json) -> bool {
+    /// Evaluate the predicate against a scanned document (zero-copy
+    /// path: field lookups walk offset spans, no tree is built).
+    pub fn matches_scan(&self, doc: ValueRef<'_>) -> bool {
+        self.eval(View::Scan(doc))
+    }
+
+    fn eval(&self, doc: View<'_>) -> bool {
         match self {
             Query::All => true,
-            Query::Eq(f, v) => Self::lookup(doc, f) == Some(v),
+            Query::Eq(f, v) => doc.lookup(f).map(|x| x.eq_json(v)).unwrap_or(false),
             Query::Gt(f, v) => {
-                Self::lookup(doc, f).and_then(Json::as_f64).map(|x| x > *v).unwrap_or(false)
+                doc.lookup(f).and_then(View::as_f64).map(|x| x > *v).unwrap_or(false)
             }
             Query::Lt(f, v) => {
-                Self::lookup(doc, f).and_then(Json::as_f64).map(|x| x < *v).unwrap_or(false)
+                doc.lookup(f).and_then(View::as_f64).map(|x| x < *v).unwrap_or(false)
             }
             Query::In(f, vs) => {
-                Self::lookup(doc, f).map(|x| vs.iter().any(|v| v == x)).unwrap_or(false)
+                doc.lookup(f).map(|x| vs.iter().any(|v| x.eq_json(v))).unwrap_or(false)
             }
-            Query::Prefix(f, p) => Self::lookup(doc, f)
-                .and_then(Json::as_str)
+            Query::Prefix(f, p) => doc
+                .lookup(f)
+                .and_then(View::as_str)
                 .map(|s| s.starts_with(p.as_str()))
                 .unwrap_or(false),
-            Query::Contains(f, sub) => Self::lookup(doc, f)
-                .and_then(Json::as_str)
+            Query::Contains(f, sub) => doc
+                .lookup(f)
+                .and_then(View::as_str)
                 .map(|s| s.contains(sub.as_str()))
                 .unwrap_or(false),
-            Query::Exists(f) => {
-                Self::lookup(doc, f).map(|v| !v.is_null()).unwrap_or(false)
-            }
-            Query::And(qs) => qs.iter().all(|q| q.matches(doc)),
-            Query::Or(qs) => qs.iter().any(|q| q.matches(doc)),
-            Query::Not(q) => !q.matches(doc),
+            Query::Exists(f) => doc.lookup(f).map(|v| !v.is_null()).unwrap_or(false),
+            Query::And(qs) => qs.iter().all(|q| q.eval(doc)),
+            Query::Or(qs) => qs.iter().any(|q| q.eval(doc)),
+            Query::Not(q) => !q.eval(doc),
         }
     }
 
@@ -92,55 +157,63 @@ impl Query {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::jscan;
+
+    const DOC: &str = r#"{"name": "resnet_mini", "framework": "jax", "accuracy": 0.87,
+                "profiling": {"batch": 8, "p99_ms": 12.5},
+                "tags": "cv,classification", "deleted": null}"#;
 
     fn doc() -> Json {
-        Json::parse(
-            r#"{"name": "resnet_mini", "framework": "jax", "accuracy": 0.87,
-                "profiling": {"batch": 8, "p99_ms": 12.5},
-                "tags": "cv,classification", "deleted": null}"#,
-        )
-        .unwrap()
+        Json::parse(DOC).unwrap()
+    }
+
+    /// Every predicate asserted below is checked against BOTH document
+    /// representations so the two evaluation paths can't drift apart.
+    fn check(q: &Query, expected: bool) {
+        assert_eq!(q.matches(&doc()), expected, "tree eval of {q:?}");
+        let offsets = jscan::scan(DOC).unwrap();
+        assert_eq!(q.matches_scan(offsets.root(DOC)), expected, "scan eval of {q:?}");
     }
 
     #[test]
     fn eq_and_dotpath() {
-        assert!(Query::eq("name", "resnet_mini").matches(&doc()));
-        assert!(!Query::eq("name", "bert").matches(&doc()));
-        assert!(Query::eq("profiling.batch", 8i64).matches(&doc()));
+        check(&Query::eq("name", "resnet_mini"), true);
+        check(&Query::eq("name", "bert"), false);
+        check(&Query::eq("profiling.batch", 8i64), true);
     }
 
     #[test]
     fn comparisons() {
-        assert!(Query::Gt("accuracy".into(), 0.8).matches(&doc()));
-        assert!(!Query::Gt("accuracy".into(), 0.9).matches(&doc()));
-        assert!(Query::Lt("profiling.p99_ms".into(), 20.0).matches(&doc()));
+        check(&Query::Gt("accuracy".into(), 0.8), true);
+        check(&Query::Gt("accuracy".into(), 0.9), false);
+        check(&Query::Lt("profiling.p99_ms".into(), 20.0), true);
         // missing / non-numeric fields never match comparisons
-        assert!(!Query::Gt("name".into(), 0.0).matches(&doc()));
-        assert!(!Query::Gt("nope".into(), 0.0).matches(&doc()));
+        check(&Query::Gt("name".into(), 0.0), false);
+        check(&Query::Gt("nope".into(), 0.0), false);
     }
 
     #[test]
     fn membership_prefix_contains() {
-        assert!(Query::In("framework".into(), vec!["torch".into(), "jax".into()]).matches(&doc()));
-        assert!(Query::Prefix("name".into(), "resnet".into()).matches(&doc()));
-        assert!(Query::Contains("tags".into(), "classif".into()).matches(&doc()));
-        assert!(!Query::Contains("tags".into(), "nlp".into()).matches(&doc()));
+        check(&Query::In("framework".into(), vec!["torch".into(), "jax".into()]), true);
+        check(&Query::Prefix("name".into(), "resnet".into()), true);
+        check(&Query::Contains("tags".into(), "classif".into()), true);
+        check(&Query::Contains("tags".into(), "nlp".into()), false);
     }
 
     #[test]
     fn exists_treats_null_as_absent() {
-        assert!(Query::Exists("accuracy".into()).matches(&doc()));
-        assert!(!Query::Exists("deleted".into()).matches(&doc()));
-        assert!(!Query::Exists("ghost".into()).matches(&doc()));
+        check(&Query::Exists("accuracy".into()), true);
+        check(&Query::Exists("deleted".into()), false);
+        check(&Query::Exists("ghost".into()), false);
     }
 
     #[test]
     fn boolean_composition() {
         let q = Query::and([Query::eq("framework", "jax"), Query::Gt("accuracy".into(), 0.5)]);
-        assert!(q.matches(&doc()));
+        check(&q, true);
         let q2 = Query::or([Query::eq("name", "zzz"), Query::eq("name", "resnet_mini")]);
-        assert!(q2.matches(&doc()));
-        assert!(Query::Not(Box::new(q2)).matches(&doc()) == false);
+        check(&q2, true);
+        check(&Query::Not(Box::new(q2)), false);
     }
 
     #[test]

@@ -1,0 +1,1116 @@
+//! Zero-copy JSON scan path (squirrel-json-style offset scanner).
+//!
+//! [`Json::parse`] fully materializes a tree: one `String` per key, one
+//! `BTreeMap`/`Vec` per container, one `Json` enum per value. Every model
+//! document, WAL record, REST payload and profiling report flows through
+//! that path, so the storage and API layers pay tree-building costs even
+//! when a query only needs one field. This module is the fix:
+//!
+//! * [`scan`] — a single validating forward pass over the input that
+//!   produces an [`Offsets`] table: a flat pre-order `Vec<Node>` of
+//!   byte spans into the original text. No per-key `String` allocations,
+//!   no intermediate tree, no number conversion until a field is read.
+//! * [`ValueRef`] — a `Copy` cursor over `(text, offsets)` with the same
+//!   accessor surface as [`Json`] (`get`/`at`/`as_str`/`as_f64`/...).
+//!   Strings borrow from the input (`Cow::Borrowed`) unless they contain
+//!   escapes. [`ValueRef::to_json`] converts lazily when mutation is
+//!   actually needed.
+//! * [`extract`] — the interest-set API: pull just the requested
+//!   (dotted) fields out of a document in one pass over its top-level
+//!   entries. Used by collection scans, secondary-index builds and the
+//!   REST summary view.
+//! * [`Doc`] — an owned `(raw, Offsets)` pair: what the document store
+//!   keeps in memory. `Doc::raw()` *is* the serialized form, so WAL
+//!   appends, compaction and REST responses are byte copies.
+//! * [`json_to_string`] / [`write_json`] — the pre-sized, escape-aware
+//!   canonical serializer shared by the WAL append path, GridFS
+//!   descriptors and the HTTP response encoder ([`Json::to_string`]
+//!   delegates here).
+//!
+//! Accept/reject behavior matches [`Json::parse`] (validated by the
+//! differential property tests in `rust/tests/json_scan_props.rs`) with
+//! one documented divergence: the scanner bounds container nesting at
+//! [`MAX_DEPTH`] to keep the recursive pass stack-safe, while the seed
+//! parser recurses without limit.
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::json::{Json, JsonError};
+
+/// Largest magnitude whose every integer is exactly representable in
+/// f64: 2^53. Shared by `as_i64` (here and on [`Json`]) and the
+/// integer fast path of the serializer.
+pub const I64_SAFE: f64 = 9_007_199_254_740_992.0;
+
+/// Container nesting bound for the scanner's recursive pass.
+pub const MAX_DEPTH: usize = 512;
+
+/// Value kind of a scanned node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Null,
+    Bool,
+    Num,
+    Str,
+    Arr,
+    Obj,
+}
+
+/// Sentinel for "this node has no key" (array elements, the root).
+const NO_KEY: u32 = u32::MAX;
+
+/// One scanned value: spans into the source text instead of owned data.
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    kind: Kind,
+    /// Str payload contains escape sequences (unescape on access).
+    escaped: bool,
+    /// Key span contains escape sequences.
+    key_escaped: bool,
+    /// Payload for Bool nodes.
+    bool_val: bool,
+    /// Key span inside the quotes; `key_start == NO_KEY` means no key.
+    key_start: u32,
+    key_end: u32,
+    /// Value span. For Str: inside the quotes. For everything else the
+    /// full token (containers: `{`..`}` inclusive).
+    start: u32,
+    end: u32,
+    /// Absolute node index of the next sibling; 0 = none (the root is
+    /// node 0 and can never be a sibling target).
+    next: u32,
+    /// Child count for Arr/Obj.
+    count: u32,
+}
+
+/// The offset table produced by [`scan`]: detached from the text so an
+/// owning type ([`Doc`]) needs no self-references.
+#[derive(Debug, Clone, Default)]
+pub struct Offsets {
+    nodes: Vec<Node>,
+}
+
+impl Offsets {
+    /// Cursor to the root value. `text` must be the exact string this
+    /// table was scanned from.
+    pub fn root<'a>(&'a self, text: &'a str) -> ValueRef<'a> {
+        ValueRef { text, nodes: &self.nodes, idx: 0 }
+    }
+
+    /// Number of scanned nodes (diagnostics / benches).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Scan a JSON document into an offset table: one forward pass, no
+/// allocations besides the node vector.
+pub fn scan(text: &str) -> Result<Offsets, JsonError> {
+    // spans are u32; refuse inputs whose offsets could wrap (>= keeps
+    // the NO_KEY sentinel unreachable as a real offset)
+    if text.len() >= u32::MAX as usize {
+        return Err(JsonError { pos: 0, msg: "document too large for u32 spans".to_string() });
+    }
+    let mut s = Scanner { b: text.as_bytes(), pos: 0, nodes: Vec::with_capacity(8), depth: 0 };
+    s.skip_ws();
+    s.value(NO_KEY, 0, false)?;
+    s.skip_ws();
+    if s.pos != s.b.len() {
+        return Err(s.err("trailing characters after document"));
+    }
+    Ok(Offsets { nodes: s.nodes })
+}
+
+struct Scanner<'a> {
+    b: &'a [u8],
+    pos: usize,
+    nodes: Vec<Node>,
+    depth: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        Some(c)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn push(&mut self, kind: Kind, key_start: u32, key_end: u32, key_escaped: bool) -> usize {
+        self.nodes.push(Node {
+            kind,
+            escaped: false,
+            key_escaped,
+            bool_val: false,
+            key_start,
+            key_end,
+            start: self.pos as u32,
+            end: self.pos as u32,
+            next: 0,
+            count: 0,
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Scan one value; returns its node index.
+    fn value(&mut self, key_start: u32, key_end: u32, key_escaped: bool) -> Result<usize, JsonError> {
+        match self.peek() {
+            Some(b'{') => self.container(Kind::Obj, key_start, key_end, key_escaped),
+            Some(b'[') => self.container(Kind::Arr, key_start, key_end, key_escaped),
+            Some(b'"') => {
+                let idx = self.push(Kind::Str, key_start, key_end, key_escaped);
+                let (start, end, escaped) = self.string_span()?;
+                let n = &mut self.nodes[idx];
+                n.start = start;
+                n.end = end;
+                n.escaped = escaped;
+                Ok(idx)
+            }
+            Some(b't') => self.keyword("true", Kind::Bool, true, key_start, key_end, key_escaped),
+            Some(b'f') => self.keyword("false", Kind::Bool, false, key_start, key_end, key_escaped),
+            Some(b'n') => self.keyword("null", Kind::Null, false, key_start, key_end, key_escaped),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(key_start, key_end, key_escaped),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn keyword(
+        &mut self,
+        word: &str,
+        kind: Kind,
+        bool_val: bool,
+        key_start: u32,
+        key_end: u32,
+        key_escaped: bool,
+    ) -> Result<usize, JsonError> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            let idx = self.push(kind, key_start, key_end, key_escaped);
+            self.pos += word.len();
+            let n = &mut self.nodes[idx];
+            n.end = self.pos as u32;
+            n.bool_val = bool_val;
+            Ok(idx)
+        } else {
+            Err(self.err(&format!("expected '{}'", word)))
+        }
+    }
+
+    fn container(
+        &mut self,
+        kind: Kind,
+        key_start: u32,
+        key_end: u32,
+        key_escaped: bool,
+    ) -> Result<usize, JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            self.depth -= 1;
+            return Err(self.err("nesting too deep"));
+        }
+        let idx = self.push(kind, key_start, key_end, key_escaped);
+        let open = if kind == Kind::Obj { b'{' } else { b'[' };
+        let close = if kind == Kind::Obj { b'}' } else { b']' };
+        self.expect(open)?;
+        self.skip_ws();
+        let mut count: u32 = 0;
+        let mut prev: Option<usize> = None;
+        if self.peek() == Some(close) {
+            self.pos += 1;
+        } else {
+            loop {
+                self.skip_ws();
+                let child = if kind == Kind::Obj {
+                    let (ks, ke, kesc) = self.string_span()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    self.value(ks, ke, kesc)?
+                } else {
+                    self.value(NO_KEY, 0, false)?
+                };
+                if let Some(p) = prev {
+                    self.nodes[p].next = child as u32;
+                }
+                prev = Some(child);
+                count += 1;
+                self.skip_ws();
+                match self.bump() {
+                    Some(b',') => continue,
+                    Some(c) if c == close => break,
+                    _ => {
+                        let msg = if kind == Kind::Obj {
+                            "expected ',' or '}' in object"
+                        } else {
+                            "expected ',' or ']' in array"
+                        };
+                        return Err(self.err(msg));
+                    }
+                }
+            }
+        }
+        let end = self.pos as u32;
+        let n = &mut self.nodes[idx];
+        n.count = count;
+        n.end = end;
+        self.depth -= 1;
+        Ok(idx)
+    }
+
+    /// Validate a string and return its inside-the-quotes span plus an
+    /// "it has escapes" flag. No unescaping happens here.
+    fn string_span(&mut self) -> Result<(u32, u32, bool), JsonError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok((start as u32, (self.pos - 1) as u32, escaped)),
+                Some(b'\\') => {
+                    escaped = true;
+                    self.escape_tail()?;
+                }
+                Some(c) if c < 0x20 => return Err(self.err("control character in string")),
+                // bytes >= 0x80 are valid UTF-8 continuation/lead bytes
+                // because the input arrived as &str
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// Validate the remainder of an escape sequence after `\`.
+    fn escape_tail(&mut self) -> Result<(), JsonError> {
+        match self.bump() {
+            Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => Ok(()),
+            Some(b'u') => {
+                let cp = self.hex4()?;
+                if (0xD800..0xDC00).contains(&cp) {
+                    if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                        return Err(self.err("unpaired surrogate"));
+                    }
+                    let low = self.hex4()?;
+                    if !(0xDC00..0xE000).contains(&low) {
+                        return Err(self.err("invalid low surrogate"));
+                    }
+                    Ok(())
+                } else if (0xDC00..0xE000).contains(&cp) {
+                    Err(self.err("unpaired surrogate"))
+                } else {
+                    Ok(())
+                }
+            }
+            _ => Err(self.err("invalid escape")),
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self, key_start: u32, key_end: u32, key_escaped: bool) -> Result<usize, JsonError> {
+        let idx = self.push(Kind::Num, key_start, key_end, key_escaped);
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // validate now (same accept set as Json::parse); the f64 itself
+        // is only produced lazily when the field is actually read
+        if text.parse::<f64>().is_err() {
+            return Err(self.err("invalid number"));
+        }
+        let n = &mut self.nodes[idx];
+        n.start = start as u32;
+        n.end = self.pos as u32;
+        Ok(idx)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cursors
+
+/// A borrowed cursor over one scanned value. `Copy`, 3 words.
+#[derive(Debug, Clone, Copy)]
+pub struct ValueRef<'a> {
+    text: &'a str,
+    nodes: &'a [Node],
+    idx: usize,
+}
+
+impl<'a> ValueRef<'a> {
+    fn node(&self) -> &'a Node {
+        &self.nodes[self.idx]
+    }
+
+    fn at_idx(&self, idx: usize) -> ValueRef<'a> {
+        ValueRef { text: self.text, nodes: self.nodes, idx }
+    }
+
+    pub fn kind(&self) -> Kind {
+        self.node().kind
+    }
+
+    pub fn is_null(&self) -> bool {
+        self.node().kind == Kind::Null
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        let n = self.node();
+        (n.kind == Kind::Bool).then_some(n.bool_val)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        let n = self.node();
+        if n.kind != Kind::Num {
+            return None;
+        }
+        self.text[n.start as usize..n.end as usize].parse::<f64>().ok()
+    }
+
+    /// Same exact ±2^53 window as [`Json::as_i64`].
+    pub fn as_i64(&self) -> Option<i64> {
+        match self.as_f64() {
+            Some(n) if n.fract() == 0.0 && n.abs() <= I64_SAFE => Some(n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    /// String payload: borrowed from the input unless it contains escape
+    /// sequences (then unescaped into an owned string).
+    pub fn as_str(&self) -> Option<Cow<'a, str>> {
+        let n = self.node();
+        if n.kind != Kind::Str {
+            return None;
+        }
+        let raw = &self.text[n.start as usize..n.end as usize];
+        Some(if n.escaped { Cow::Owned(unescape(raw)) } else { Cow::Borrowed(raw) })
+    }
+
+    /// The exact source text of this value (for strings: including the
+    /// quotes). When the source is canonical this *is* its serialization,
+    /// so embedding it in an output buffer is a straight byte copy.
+    pub fn raw(&self) -> &'a str {
+        let n = self.node();
+        match n.kind {
+            Kind::Str => &self.text[(n.start - 1) as usize..(n.end + 1) as usize],
+            _ => &self.text[n.start as usize..n.end as usize],
+        }
+    }
+
+    /// The key this value sits under in its parent object, if any.
+    pub fn key(&self) -> Option<Cow<'a, str>> {
+        let n = self.node();
+        if n.key_start == NO_KEY {
+            return None;
+        }
+        let raw = &self.text[n.key_start as usize..n.key_end as usize];
+        Some(if n.key_escaped { Cow::Owned(unescape(raw)) } else { Cow::Borrowed(raw) })
+    }
+
+    /// Child count for containers, 0 otherwise.
+    pub fn len(&self) -> usize {
+        self.node().count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn key_matches(&self, node: &Node, key: &str) -> bool {
+        if node.key_start == NO_KEY {
+            return false;
+        }
+        let raw = &self.text[node.key_start as usize..node.key_end as usize];
+        if !node.key_escaped {
+            raw == key
+        } else {
+            unescape(raw) == key
+        }
+    }
+
+    /// Object field lookup. Duplicate keys resolve to the *last*
+    /// occurrence, matching `Json::parse`'s map-insert semantics.
+    pub fn get(&self, key: &str) -> Option<ValueRef<'a>> {
+        let n = self.node();
+        if n.kind != Kind::Obj || n.count == 0 {
+            return None;
+        }
+        let mut found = None;
+        let mut child = Some(self.idx + 1);
+        while let Some(ci) = child {
+            let cn = &self.nodes[ci];
+            if self.key_matches(cn, key) {
+                found = Some(ci);
+            }
+            child = (cn.next != 0).then_some(cn.next as usize);
+        }
+        found.map(|i| self.at_idx(i))
+    }
+
+    /// Path access mirroring [`Json::at`].
+    pub fn at(&self, path: &[&str]) -> Option<ValueRef<'a>> {
+        let mut cur = *self;
+        for key in path {
+            cur = cur.get(key)?;
+        }
+        Some(cur)
+    }
+
+    /// Dotted-path access: `v.get_path("profiling.p99_ms")`.
+    pub fn get_path(&self, dotted: &str) -> Option<ValueRef<'a>> {
+        let mut cur = *self;
+        for key in dotted.split('.') {
+            cur = cur.get(key)?;
+        }
+        Some(cur)
+    }
+
+    /// Iterate array elements (empty for non-arrays).
+    pub fn items(&self) -> Items<'a> {
+        let n = self.node();
+        let first = (n.kind == Kind::Arr && n.count > 0).then_some(self.idx + 1);
+        Items { text: self.text, nodes: self.nodes, next: first }
+    }
+
+    /// Iterate object entries in source order (empty for non-objects).
+    /// Duplicate keys are yielded as-is.
+    pub fn entries(&self) -> Entries<'a> {
+        let n = self.node();
+        let first = (n.kind == Kind::Obj && n.count > 0).then_some(self.idx + 1);
+        Entries { text: self.text, nodes: self.nodes, next: first }
+    }
+
+    /// Materialize this subtree into a [`Json`] value (the mutation
+    /// escape hatch). Duplicate object keys collapse last-wins, exactly
+    /// like `Json::parse`.
+    pub fn to_json(&self) -> Json {
+        let n = self.node();
+        match n.kind {
+            Kind::Null => Json::Null,
+            Kind::Bool => Json::Bool(n.bool_val),
+            Kind::Num => Json::Num(self.as_f64().unwrap_or(f64::NAN)),
+            Kind::Str => Json::Str(self.as_str().map(Cow::into_owned).unwrap_or_default()),
+            Kind::Arr => Json::Arr(self.items().map(|v| v.to_json()).collect()),
+            Kind::Obj => {
+                let mut m = BTreeMap::new();
+                for (k, v) in self.entries() {
+                    m.insert(k.into_owned(), v.to_json());
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    /// Structural equality against a materialized [`Json`] value,
+    /// without materializing this side (containers excepted for
+    /// objects, which are rare in query predicates).
+    pub fn eq_json(&self, other: &Json) -> bool {
+        match (self.kind(), other) {
+            (Kind::Null, Json::Null) => true,
+            (Kind::Bool, Json::Bool(b)) => self.as_bool() == Some(*b),
+            (Kind::Num, Json::Num(x)) => self.as_f64() == Some(*x),
+            (Kind::Str, Json::Str(s)) => self.as_str().map(|c| c.as_ref() == s.as_str()).unwrap_or(false),
+            (Kind::Arr, Json::Arr(items)) => {
+                self.len() == items.len()
+                    && self.items().zip(items.iter()).all(|(a, b)| a.eq_json(b))
+            }
+            (Kind::Obj, Json::Obj(_)) => self.to_json() == *other,
+            _ => false,
+        }
+    }
+}
+
+/// Array-element iterator.
+pub struct Items<'a> {
+    text: &'a str,
+    nodes: &'a [Node],
+    next: Option<usize>,
+}
+
+impl<'a> Iterator for Items<'a> {
+    type Item = ValueRef<'a>;
+
+    fn next(&mut self) -> Option<ValueRef<'a>> {
+        let idx = self.next?;
+        let node = &self.nodes[idx];
+        self.next = (node.next != 0).then_some(node.next as usize);
+        Some(ValueRef { text: self.text, nodes: self.nodes, idx })
+    }
+}
+
+/// Object-entry iterator.
+pub struct Entries<'a> {
+    text: &'a str,
+    nodes: &'a [Node],
+    next: Option<usize>,
+}
+
+impl<'a> Iterator for Entries<'a> {
+    type Item = (Cow<'a, str>, ValueRef<'a>);
+
+    fn next(&mut self) -> Option<(Cow<'a, str>, ValueRef<'a>)> {
+        let idx = self.next?;
+        let node = &self.nodes[idx];
+        self.next = (node.next != 0).then_some(node.next as usize);
+        let v = ValueRef { text: self.text, nodes: self.nodes, idx };
+        let key = v.key().unwrap_or(Cow::Borrowed(""));
+        Some((key, v))
+    }
+}
+
+/// Interest-set extraction: resolve each (possibly dotted) field path in
+/// a single pass over the document's top-level entries. Later duplicate
+/// keys overwrite earlier ones, preserving last-wins semantics.
+pub fn extract<'a>(root: ValueRef<'a>, fields: &[&str]) -> Vec<Option<ValueRef<'a>>> {
+    let mut out: Vec<Option<ValueRef<'a>>> = vec![None; fields.len()];
+    if root.kind() != Kind::Obj {
+        return out;
+    }
+    for (key, val) in root.entries() {
+        for (i, field) in fields.iter().enumerate() {
+            match field.split_once('.') {
+                None => {
+                    if key.as_ref() == *field {
+                        out[i] = Some(val);
+                    }
+                }
+                Some((head, rest)) => {
+                    if key.as_ref() == head {
+                        out[i] = val.get_path(rest);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Unescape a validated string payload (the inside-the-quotes span).
+/// Plain byte runs are copied slice-wise; invalid sequences (which the
+/// scanner never produces) degrade to U+FFFD instead of panicking.
+pub fn unescape(raw: &str) -> String {
+    let b = raw.as_bytes();
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'\\' {
+            let start = i;
+            while i < b.len() && b[i] != b'\\' {
+                i += 1;
+            }
+            out.push_str(&raw[start..i]);
+            continue;
+        }
+        i += 1;
+        match b.get(i).copied() {
+            Some(b'"') => {
+                out.push('"');
+                i += 1;
+            }
+            Some(b'\\') => {
+                out.push('\\');
+                i += 1;
+            }
+            Some(b'/') => {
+                out.push('/');
+                i += 1;
+            }
+            Some(b'b') => {
+                out.push('\u{8}');
+                i += 1;
+            }
+            Some(b'f') => {
+                out.push('\u{c}');
+                i += 1;
+            }
+            Some(b'n') => {
+                out.push('\n');
+                i += 1;
+            }
+            Some(b'r') => {
+                out.push('\r');
+                i += 1;
+            }
+            Some(b't') => {
+                out.push('\t');
+                i += 1;
+            }
+            Some(b'u') => {
+                i += 1;
+                let hi = hex4_at(b, i);
+                i += 4;
+                let cp = match hi {
+                    Some(h) if (0xD800..0xDC00).contains(&h) => {
+                        // validated input has "\uXXXX" right here
+                        if b.get(i) == Some(&b'\\') && b.get(i + 1) == Some(&b'u') {
+                            let lo = hex4_at(b, i + 2);
+                            i += 6;
+                            match lo {
+                                Some(l) if (0xDC00..0xE000).contains(&l) => {
+                                    Some(0x10000 + ((h - 0xD800) << 10) + (l - 0xDC00))
+                                }
+                                _ => None,
+                            }
+                        } else {
+                            None
+                        }
+                    }
+                    other => other,
+                };
+                out.push(cp.and_then(char::from_u32).unwrap_or('\u{FFFD}'));
+            }
+            _ => {
+                out.push('\u{FFFD}');
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn hex4_at(b: &[u8], at: usize) -> Option<u32> {
+    if at + 4 > b.len() {
+        return None;
+    }
+    let mut v = 0u32;
+    for &c in &b[at..at + 4] {
+        v = v * 16 + (c as char).to_digit(16)?;
+    }
+    Some(v)
+}
+
+// ---------------------------------------------------------------------------
+// owned documents
+
+/// An owned scanned document: the raw serialized text plus its offset
+/// table. This is what the document store keeps per record — `raw()` is
+/// the WAL/HTTP wire form for free, and field reads go through the
+/// offsets without ever building a tree.
+#[derive(Debug, Clone)]
+pub struct Doc {
+    raw: String,
+    offsets: Offsets,
+}
+
+impl Doc {
+    /// Scan borrowed text into an owned document.
+    pub fn parse(text: &str) -> Result<Doc, JsonError> {
+        Ok(Doc { offsets: scan(text)?, raw: text.to_string() })
+    }
+
+    /// Scan an already-owned string (no copy).
+    pub fn from_raw(raw: String) -> Result<Doc, JsonError> {
+        let offsets = scan(&raw)?;
+        Ok(Doc { raw, offsets })
+    }
+
+    /// Canonical-serialize a [`Json`] value and scan it (one pass each).
+    pub fn from_json(v: &Json) -> Doc {
+        let raw = json_to_string(v);
+        let offsets = scan(&raw).expect("canonical serialization is scannable");
+        Doc { raw, offsets }
+    }
+
+    /// The serialized form this document was scanned from.
+    pub fn raw(&self) -> &str {
+        &self.raw
+    }
+
+    pub fn root(&self) -> ValueRef<'_> {
+        self.offsets.root(&self.raw)
+    }
+
+    pub fn get(&self, key: &str) -> Option<ValueRef<'_>> {
+        self.root().get(key)
+    }
+
+    pub fn at(&self, path: &[&str]) -> Option<ValueRef<'_>> {
+        self.root().at(path)
+    }
+
+    pub fn get_path(&self, dotted: &str) -> Option<ValueRef<'_>> {
+        self.root().get_path(dotted)
+    }
+
+    /// Dotted-path string read (the secondary-index/lookup workhorse).
+    pub fn str_field(&self, dotted: &str) -> Option<Cow<'_, str>> {
+        self.get_path(dotted).and_then(|v| v.as_str())
+    }
+
+    pub fn f64_field(&self, dotted: &str) -> Option<f64> {
+        self.get_path(dotted).and_then(|v| v.as_f64())
+    }
+
+    pub fn i64_field(&self, dotted: &str) -> Option<i64> {
+        self.get_path(dotted).and_then(|v| v.as_i64())
+    }
+
+    /// Materialize the whole document (mutation escape hatch).
+    pub fn to_json(&self) -> Json {
+        self.root().to_json()
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.raw.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// canonical serializer
+
+/// Serialize compactly into a fresh pre-sized buffer.
+pub fn json_to_string(v: &Json) -> String {
+    let mut out = String::with_capacity(size_hint(v));
+    write_value(v, &mut out, None, 0);
+    out
+}
+
+/// Pretty-serialize (2-space indent) into a fresh pre-sized buffer.
+pub fn json_to_pretty(v: &Json) -> String {
+    let mut out = String::with_capacity(size_hint(v) * 2);
+    write_value(v, &mut out, Some(2), 0);
+    out
+}
+
+/// Append the compact serialization of `v` to `out`.
+pub fn write_json(v: &Json, out: &mut String) {
+    write_value(v, out, None, 0);
+}
+
+/// Serialized-size estimate used to pre-size output buffers.
+fn size_hint(v: &Json) -> usize {
+    match v {
+        Json::Null => 4,
+        Json::Bool(_) => 5,
+        Json::Num(_) => 12,
+        Json::Str(s) => s.len() + 8,
+        Json::Arr(items) => 2 + items.iter().map(|x| size_hint(x) + 1).sum::<usize>(),
+        Json::Obj(map) => 2 + map.iter().map(|(k, x)| k.len() + 4 + size_hint(x)).sum::<usize>(),
+    }
+}
+
+fn write_value(v: &Json, out: &mut String, indent: Option<usize>, depth: usize) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => write_num(out, *n),
+        Json::Str(s) => write_escaped(out, s),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline(out, indent, depth + 1);
+                write_value(item, out, indent, depth + 1);
+            }
+            if !items.is_empty() {
+                newline(out, indent, depth);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline(out, indent, depth + 1);
+                write_escaped(out, k);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(val, out, indent, depth + 1);
+            }
+            if !map.is_empty() {
+                newline(out, indent, depth);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+/// Number formatting: integers inside the exact ±2^53 window print as
+/// integers; everything else defers to float formatting. Writes through
+/// `fmt::Write` — no intermediate `format!` allocation. Non-finite
+/// values (NaN/±inf — e.g. an unset `accuracy`) serialize as `null`:
+/// the seed writer emitted literal `NaN`, which no JSON parser (ours
+/// included) accepts back, silently corrupting WAL lines.
+pub fn write_num(out: &mut String, n: f64) {
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() <= I64_SAFE {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{}", n);
+    }
+}
+
+/// Escape-aware string writer: contiguous safe runs are appended
+/// slice-wise instead of char-by-char.
+pub fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    for (i, &c) in bytes.iter().enumerate() {
+        let escape: Option<&str> = match c {
+            b'"' => Some("\\\""),
+            b'\\' => Some("\\\\"),
+            b'\n' => Some("\\n"),
+            b'\r' => Some("\\r"),
+            b'\t' => Some("\\t"),
+            c if c < 0x20 => None, // \uXXXX slow path below
+            _ => continue,
+        };
+        out.push_str(&s[start..i]);
+        match escape {
+            Some(e) => out.push_str(e),
+            None => {
+                let _ = write!(out, "\\u{:04x}", c);
+            }
+        }
+        start = i + 1;
+    }
+    out.push_str(&s[start..]);
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{"name":"resnet_mini","framework":"jax","accuracy":0.87,"profiling":{"batch":8,"p99_ms":12.5},"tags":["cv","classification"],"deleted":null,"ok":true}"#;
+
+    #[test]
+    fn scan_and_field_access() {
+        let offsets = scan(DOC).unwrap();
+        let root = offsets.root(DOC);
+        assert_eq!(root.kind(), Kind::Obj);
+        assert_eq!(root.len(), 7);
+        assert_eq!(root.get("name").unwrap().as_str().as_deref(), Some("resnet_mini"));
+        assert_eq!(root.get("accuracy").unwrap().as_f64(), Some(0.87));
+        assert_eq!(root.get_path("profiling.p99_ms").unwrap().as_f64(), Some(12.5));
+        assert_eq!(root.get_path("profiling.batch").unwrap().as_i64(), Some(8));
+        assert!(root.get("deleted").unwrap().is_null());
+        assert_eq!(root.get("ok").unwrap().as_bool(), Some(true));
+        assert!(root.get("ghost").is_none());
+        let tags: Vec<String> =
+            root.get("tags").unwrap().items().map(|v| v.as_str().unwrap().into_owned()).collect();
+        assert_eq!(tags, vec!["cv", "classification"]);
+    }
+
+    #[test]
+    fn strings_borrow_unless_escaped() {
+        let text = r#"{"plain":"abc","esc":"a\nb"}"#;
+        let offsets = scan(text).unwrap();
+        let root = offsets.root(text);
+        assert!(matches!(root.get("plain").unwrap().as_str().unwrap(), Cow::Borrowed("abc")));
+        match root.get("esc").unwrap().as_str().unwrap() {
+            Cow::Owned(s) => assert_eq!(s, "a\nb"),
+            Cow::Borrowed(_) => panic!("escaped string must be owned"),
+        }
+    }
+
+    #[test]
+    fn scan_agrees_with_parse_on_basics() {
+        for text in [
+            "null",
+            "true",
+            "42",
+            "-3.5e2",
+            r#""hi""#,
+            r#"{"a":[1,2,{"b":null}],"c":"x"}"#,
+            r#""a\n\t\"\\Aé""#,
+            "\"héllo 世界\"",
+            r#""😀""#,
+            r#""\ud83d\ude00""#,
+        ] {
+            let via_scan = scan(text).unwrap().root(text).to_json();
+            let via_parse = Json::parse(text).unwrap();
+            assert_eq!(via_scan, via_parse, "mismatch for {text}");
+        }
+    }
+
+    #[test]
+    fn scan_rejects_what_parse_rejects() {
+        for bad in [
+            "{",
+            "[1,]",
+            "01a",
+            "\"unterminated",
+            "{}extra",
+            "{\"a\" 1}",
+            r#""\ud800""#,
+            r#""\q""#,
+            "",
+        ] {
+            assert!(scan(bad).is_err(), "scanner accepted {bad:?}");
+            assert!(Json::parse(bad).is_err(), "parser accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_resolve_last_wins() {
+        let text = r#"{"a":1,"a":2}"#;
+        let offsets = scan(text).unwrap();
+        assert_eq!(offsets.root(text).get("a").unwrap().as_i64(), Some(2));
+        assert_eq!(offsets.root(text).to_json(), Json::parse(text).unwrap());
+    }
+
+    #[test]
+    fn raw_spans_are_exact() {
+        let offsets = scan(DOC).unwrap();
+        let root = offsets.root(DOC);
+        assert_eq!(root.raw(), DOC);
+        assert_eq!(root.get("name").unwrap().raw(), r#""resnet_mini""#);
+        assert_eq!(root.get("profiling").unwrap().raw(), r#"{"batch":8,"p99_ms":12.5}"#);
+        assert_eq!(root.get("tags").unwrap().raw(), r#"["cv","classification"]"#);
+    }
+
+    #[test]
+    fn interest_extraction_single_pass() {
+        let offsets = scan(DOC).unwrap();
+        let root = offsets.root(DOC);
+        let got = extract(root, &["name", "profiling.p99_ms", "missing", "ok"]);
+        assert_eq!(got[0].unwrap().as_str().as_deref(), Some("resnet_mini"));
+        assert_eq!(got[1].unwrap().as_f64(), Some(12.5));
+        assert!(got[2].is_none());
+        assert_eq!(got[3].unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn doc_roundtrip_and_str_fields() {
+        let v = Json::obj()
+            .with("name", "m")
+            .with("nested", Json::obj().with("k", "v"))
+            .with("n", 3i64);
+        let doc = Doc::from_json(&v);
+        assert_eq!(doc.to_json(), v);
+        assert_eq!(doc.raw(), v.to_string());
+        assert_eq!(doc.str_field("nested.k").as_deref(), Some("v"));
+        assert_eq!(doc.i64_field("n"), Some(3));
+        assert!(doc.str_field("n").is_none());
+    }
+
+    #[test]
+    fn depth_limit_guards_recursion() {
+        let deep_ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(scan(&deep_ok).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(scan(&too_deep).is_err());
+    }
+
+    #[test]
+    fn eq_json_matches_tree_equality() {
+        let text = r#"{"s":"x","n":2,"b":false,"z":null,"a":[1,"y"],"o":{"k":1}}"#;
+        let offsets = scan(text).unwrap();
+        let root = offsets.root(text);
+        let tree = Json::parse(text).unwrap();
+        for key in ["s", "n", "b", "z", "a", "o"] {
+            assert!(root.get(key).unwrap().eq_json(tree.get(key).unwrap()), "eq for {key}");
+        }
+        assert!(!root.get("s").unwrap().eq_json(&Json::Str("other".into())));
+        assert!(!root.get("n").unwrap().eq_json(&Json::Num(3.0)));
+        assert!(!root.get("a").unwrap().eq_json(&Json::Arr(vec![])));
+    }
+
+    #[test]
+    fn serializer_matches_legacy_format() {
+        let src = r#"{"b":[1,2.5,"x"],"a":{"k":true,"z":null},"e":"tab\tline\nquote\"","u":""}"#;
+        let v = Json::parse(src).unwrap();
+        let compact = json_to_string(&v);
+        assert_eq!(Json::parse(&compact).unwrap(), v, "compact round-trips");
+        let pretty = json_to_pretty(&v);
+        assert_eq!(Json::parse(&pretty).unwrap(), v, "pretty round-trips");
+        // canonical: stable under re-serialization
+        assert_eq!(json_to_string(&Json::parse(&compact).unwrap()), compact);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        let doc = Json::obj().with("accuracy", f64::NAN).with("inf", f64::INFINITY);
+        let text = json_to_string(&doc);
+        assert_eq!(text, r#"{"accuracy":null,"inf":null}"#);
+        // and therefore stays scannable + parseable
+        assert!(scan(&text).is_ok());
+        assert!(Json::parse(&text).is_ok());
+        let stored = Doc::from_json(&doc);
+        assert!(stored.get("accuracy").unwrap().is_null());
+    }
+
+    #[test]
+    fn write_num_integer_window() {
+        let mut s = String::new();
+        write_num(&mut s, 9007199254740992.0);
+        assert_eq!(s, "9007199254740992");
+        s.clear();
+        write_num(&mut s, -9007199254740992.0);
+        assert_eq!(s, "-9007199254740992");
+        s.clear();
+        write_num(&mut s, 2.5);
+        assert_eq!(s, "2.5");
+    }
+}

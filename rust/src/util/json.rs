@@ -60,8 +60,13 @@ impl Json {
     }
 
     pub fn as_i64(&self) -> Option<i64> {
+        // exact ±2^53 window: every integer in it is representable in
+        // f64, so the cast below is lossless (the old `< 9.0e15` bound
+        // silently rejected valid values between 9.0e15 and 2^53)
         match self {
-            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => Some(*n as i64),
+            Json::Num(n) if n.fract() == 0.0 && n.abs() <= super::jscan::I64_SAFE => {
+                Some(*n as i64)
+            }
             _ => None,
         }
     }
@@ -128,95 +133,16 @@ impl Json {
         Ok(v)
     }
 
-    /// Compact serialization.
+    /// Compact serialization (pre-sized escape-aware writer shared with
+    /// the WAL/GridFS/HTTP paths — see [`super::jscan`]).
     pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
+        super::jscan::json_to_string(self)
     }
 
     /// Pretty serialization with 2-space indent.
     pub fn to_pretty(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, Some(2), 0);
-        out
+        super::jscan::json_to_pretty(self)
     }
-
-    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
-        match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(true) => out.push_str("true"),
-            Json::Bool(false) => out.push_str("false"),
-            Json::Num(n) => write_num(out, *n),
-            Json::Str(s) => write_escaped(out, s),
-            Json::Arr(items) => {
-                out.push('[');
-                for (i, item) in items.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    newline(out, indent, depth + 1);
-                    item.write(out, indent, depth + 1);
-                }
-                if !items.is_empty() {
-                    newline(out, indent, depth);
-                }
-                out.push(']');
-            }
-            Json::Obj(map) => {
-                out.push('{');
-                for (i, (k, v)) in map.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    newline(out, indent, depth + 1);
-                    write_escaped(out, k);
-                    out.push(':');
-                    if indent.is_some() {
-                        out.push(' ');
-                    }
-                    v.write(out, indent, depth + 1);
-                }
-                if !map.is_empty() {
-                    newline(out, indent, depth);
-                }
-                out.push('}');
-            }
-        }
-    }
-}
-
-fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
-    if let Some(w) = indent {
-        out.push('\n');
-        for _ in 0..w * depth {
-            out.push(' ');
-        }
-    }
-}
-
-fn write_num(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 9.0e15 {
-        out.push_str(&format!("{}", n as i64));
-    } else {
-        out.push_str(&format!("{}", n));
-    }
-}
-
-fn write_escaped(out: &mut String, s: &str) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
 }
 
 impl fmt::Display for Json {
@@ -578,5 +504,29 @@ mod tests {
         let v = Json::parse("1234567890123").unwrap();
         assert_eq!(v.as_i64(), Some(1234567890123));
         assert_eq!(v.to_string(), "1234567890123");
+    }
+
+    #[test]
+    fn as_i64_exact_two_pow_53_window() {
+        const MAX: i64 = 9_007_199_254_740_992; // 2^53
+        // boundary values on both signs are accepted and exact
+        assert_eq!(Json::Num(MAX as f64).as_i64(), Some(MAX));
+        assert_eq!(Json::Num(-MAX as f64).as_i64(), Some(-MAX));
+        assert_eq!(Json::Num((MAX - 1) as f64).as_i64(), Some(MAX - 1));
+        assert_eq!(Json::Num(-(MAX - 1) as f64).as_i64(), Some(-(MAX - 1)));
+        // values the old asymmetric `< 9.0e15` bound wrongly rejected
+        assert_eq!(Json::Num(9_000_000_000_000_001.0).as_i64(), Some(9_000_000_000_000_001));
+        assert_eq!(Json::Num(-9_000_000_000_000_001.0).as_i64(), Some(-9_000_000_000_000_001));
+        // outside the window integers are no longer exactly representable
+        assert_eq!(Json::Num(MAX as f64 * 2.0).as_i64(), None);
+        assert_eq!(Json::Num(-(MAX as f64) * 2.0).as_i64(), None);
+        assert_eq!(Json::Num(1e300).as_i64(), None);
+        // non-integers and non-numbers still refuse
+        assert_eq!(Json::Num(1.5).as_i64(), None);
+        assert_eq!(Json::Str("1".into()).as_i64(), None);
+        // round-trip through text at the boundary
+        let v = Json::parse("9007199254740992").unwrap();
+        assert_eq!(v.as_i64(), Some(MAX));
+        assert_eq!(v.to_string(), "9007199254740992");
     }
 }

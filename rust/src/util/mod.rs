@@ -5,6 +5,7 @@ pub mod benchkit;
 pub mod clock;
 pub mod hash;
 pub mod idgen;
+pub mod jscan;
 pub mod json;
 pub mod base64;
 pub mod logging;

@@ -23,7 +23,6 @@ use crate::runtime::ArtifactStore;
 use crate::serving::{Frontend, ServiceHandle, ALL_SYSTEMS};
 use crate::storage::Database;
 use crate::util::clock::SharedClock;
-use crate::util::json::Json;
 
 /// Per-stage wall-clock timings of one publish (experiment D2).
 #[derive(Debug, Clone)]
@@ -143,8 +142,8 @@ impl Platform {
         let t2 = Instant::now();
         let mut profiles_recorded = 0;
         if outcome.trigger_profiling && conversion.as_ref().map(|c| c.all_validated()).unwrap_or(false) {
-            let doc = self.hub.get(&outcome.model_id)?;
-            let family = doc.get("family").and_then(Json::as_str).unwrap_or_default().to_string();
+            // single-field read through the zero-copy scan path
+            let family = self.hub.get_field_str(&outcome.model_id, "family")?.unwrap_or_default();
             let manifest = self.store.model(&family)?;
             let all = manifest.batches("reference");
             let batches: Vec<usize> = match &batches {

@@ -1,0 +1,279 @@
+//! Differential + property tests pitting the zero-copy scanner
+//! (`util::jscan`) against the seed tree parser (`Json::parse`):
+//! on any input the two must agree on accept/reject, and on accepted
+//! input `scan(text).to_json() == parse(text)`. Random-mutation cases
+//! mirror squirrel-json's fuzz-corpus idea in miniature.
+
+use std::borrow::Cow;
+
+use mlmodelci::util::jscan::{self, Doc};
+use mlmodelci::util::json::Json;
+use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop};
+use mlmodelci::util::rng::Rng;
+
+/// The two parsers must agree byte-for-byte on this input.
+fn differential(text: &str) -> Result<(), String> {
+    let tree = Json::parse(text);
+    let scanned = jscan::scan(text);
+    match (&tree, &scanned) {
+        (Ok(t), Ok(offsets)) => {
+            let via_scan = offsets.root(text).to_json();
+            if &via_scan != t {
+                return Err(format!("value mismatch for {text:?}: {via_scan:?} != {t:?}"));
+            }
+            // round-trip: the canonical serialization re-parses to the
+            // same value through BOTH parsers. Non-finite numbers (e.g.
+            // a mutated "1e999" overflowing to inf) deliberately
+            // serialize as null, so they can't round-trip by value.
+            if has_non_finite(t) {
+                return Ok(());
+            }
+            let canon = t.to_string();
+            let t2 = Json::parse(&canon).map_err(|e| format!("reparse: {e}"))?;
+            let s2 = jscan::scan(&canon).map_err(|e| format!("rescan: {e}"))?;
+            if t2 != *t || s2.root(&canon).to_json() != *t {
+                return Err(format!("round-trip drift for {text:?}"));
+            }
+            Ok(())
+        }
+        (Err(_), Err(_)) => Ok(()),
+        (Ok(_), Err(e)) => Err(format!("scanner rejected valid input {text:?}: {e}")),
+        (Err(e), Ok(_)) => Err(format!("scanner accepted invalid input {text:?} (parser: {e})")),
+    }
+}
+
+#[test]
+fn differential_on_random_documents() {
+    run_prop("scan == parse on random docs", 150, gen_vec(gen_u64(0, u64::MAX - 1), 1, 4), |seeds| {
+        let mut rng = Rng::new(seeds[0]);
+        let doc = random_json(&mut rng, 4);
+        differential(&doc.to_string())?;
+        differential(&doc.to_pretty())
+    });
+}
+
+#[test]
+fn differential_on_mutated_documents() {
+    // flip/insert/delete bytes of valid documents: both parsers must
+    // still agree on accept/reject (the fuzz-corpus idea)
+    run_prop("scan == parse on mutations", 300, gen_vec(gen_u64(0, u64::MAX - 1), 2, 4), |seeds| {
+        let mut rng = Rng::new(seeds[0] ^ 0xf077);
+        let doc = random_json(&mut rng, 3);
+        let mut text = doc.to_string().into_bytes();
+        let mutations = 1 + (seeds[1] % 3) as usize;
+        for _ in 0..mutations {
+            if text.is_empty() {
+                break;
+            }
+            let at = rng.usize(0, text.len());
+            match rng.usize(0, 3) {
+                0 => text[at] = b"{}[]\",:0123456789abcdef\\"[rng.usize(0, 24)],
+                1 => {
+                    text.insert(at, b",{}[]\""[rng.usize(0, 6)]);
+                }
+                _ => {
+                    text.remove(at);
+                }
+            }
+        }
+        // mutations can break UTF-8; both sides only ever see &str
+        match String::from_utf8(text) {
+            Ok(s) => differential(&s),
+            Err(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn escape_sequences_and_surrogates() {
+    for text in [
+        r#""\u0041\u00e9\u4e16""#,        // BMP escapes
+        r#""\ud83d\ude00""#,              // surrogate pair
+        r#""\ud83d\ude00 tail""#,         // pair followed by plain text
+        r#""a\"b\\c\/d\be\ff\ng\rh\ti""#, // every simple escape
+        r#"{"k\u0041":"v\u0042"}"#,       // escapes inside keys
+        r#""\u0000""#,                     // escaped NUL
+    ] {
+        differential(text).unwrap();
+        // unescaped values must equal what the tree parser produced
+        let offsets = jscan::scan(text).unwrap();
+        let tree = Json::parse(text).unwrap();
+        match (&tree, offsets.root(text).as_str()) {
+            (Json::Str(expect), Some(got)) => assert_eq!(got.as_ref(), expect.as_str()),
+            (Json::Obj(_), None) => {}
+            other => panic!("unexpected shape for {text}: {other:?}"),
+        }
+    }
+    for bad in [
+        r#""\ud800""#,        // lone high surrogate
+        r#""\udc00""#,        // lone low surrogate
+        r#""\ud800A""#,  // high surrogate + non-low
+        r#""\uZZZZ""#,        // bad hex
+        r#""\u00""#,          // truncated
+        r#""\x41""#,          // unknown escape
+    ] {
+        differential(bad).unwrap(); // both must reject
+        assert!(jscan::scan(bad).is_err(), "scanner accepted {bad}");
+    }
+}
+
+#[test]
+fn deep_nesting_within_bounds() {
+    for depth in [1usize, 10, 100, 200] {
+        let text = format!(
+            "{}{}{}{}",
+            "[".repeat(depth),
+            r#"{"k":"v"}"#,
+            "]".repeat(depth),
+            ""
+        );
+        differential(&text).unwrap();
+    }
+    // unbalanced versions must fail on both sides
+    let unbalanced = format!("{}1", "[".repeat(50));
+    differential(&unbalanced).unwrap();
+}
+
+#[test]
+fn malformed_corpus_rejected_by_both() {
+    for bad in [
+        "",
+        "   ",
+        "{",
+        "}",
+        "[",
+        "]",
+        "[1,]",
+        "{\"a\":}",
+        "{\"a\" 1}",
+        "{:1}",
+        "{1:2}",
+        "tru",
+        "nul",
+        "falsey",
+        "01a",
+        "--1",
+        "1e",
+        "+1",
+        "\"unterminated",
+        "{}extra",
+        "[1 2]",
+        "{\"a\":1,}",
+        "\u{1}",
+    ] {
+        differential(bad).unwrap();
+    }
+}
+
+#[test]
+fn accepted_oddities_match_seed_parser() {
+    // the seed parser is lenient in spots; the scanner must be lenient
+    // in exactly the same spots
+    for odd in ["1.", "-0", "1e9", "1E+9", "1e-9", "  [1,\n2]\t", "0.5", "-0.5"] {
+        differential(odd).unwrap();
+        assert!(jscan::scan(odd).is_ok(), "seed parser accepts {odd}, scanner must too");
+    }
+}
+
+#[test]
+fn doc_wal_shape_roundtrips() {
+    // the collection's WAL record shape, built by hand the way the
+    // store writes it: {"doc":<raw>,"op":"put"}
+    let model = Json::obj()
+        .with("_id", "abc123")
+        .with("name", "m\"odel with \\ chars\n")
+        .with("accuracy", 0.87)
+        .with("profiles", vec!["a", "b"]);
+    let doc = Doc::from_json(&model);
+    let line = format!("{{\"doc\":{},\"op\":\"put\"}}", doc.raw());
+    let offsets = jscan::scan(&line).unwrap();
+    let root = offsets.root(&line);
+    assert_eq!(root.get("op").unwrap().as_str(), Some(Cow::Borrowed("put")));
+    let embedded = Doc::parse(root.get("doc").unwrap().raw()).unwrap();
+    assert_eq!(embedded.to_json(), model);
+    assert_eq!(embedded.str_field("_id").as_deref(), Some("abc123"));
+}
+
+#[test]
+fn interest_extraction_agrees_with_tree_lookup() {
+    run_prop("extract == tree at()", 100, gen_vec(gen_u64(0, u64::MAX - 1), 1, 3), |seeds| {
+        let mut rng = Rng::new(seeds[0] ^ 0x1772);
+        let doc = random_json(&mut rng, 3);
+        let Json::Obj(_) = &doc else { return Ok(()) };
+        let text = doc.to_string();
+        let offsets = jscan::scan(&text).map_err(|e| e.to_string())?;
+        let fields = ["name", "model", "p99", "a\"b", "nested.name"];
+        let got = jscan::extract(offsets.root(&text), &fields);
+        for (i, f) in fields.iter().enumerate() {
+            let parts: Vec<&str> = f.split('.').collect();
+            let want = doc.at(&parts);
+            match (want, got[i]) {
+                (None, None) => {}
+                (Some(w), Some(g)) => {
+                    if g.to_json() != *w {
+                        return Err(format!("field {f}: {:?} != {w:?}", g.to_json()));
+                    }
+                }
+                (w, g) => return Err(format!("field {f}: presence mismatch {w:?} vs {:?}", g.map(|v| v.to_json()))),
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+
+fn has_non_finite(v: &Json) -> bool {
+    match v {
+        Json::Num(n) => !n.is_finite(),
+        Json::Arr(items) => items.iter().any(has_non_finite),
+        Json::Obj(map) => map.values().any(has_non_finite),
+        _ => false,
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return random_scalar(rng);
+    }
+    match rng.usize(0, 8) {
+        0 | 1 | 2 => random_scalar(rng),
+        3 | 4 => Json::Arr((0..rng.usize(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut obj = Json::obj();
+            for _ in 0..rng.usize(0, 5) {
+                obj.set(&random_string(rng), random_json(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+fn random_scalar(rng: &mut Rng) -> Json {
+    match rng.usize(0, 6) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num((rng.range(0, 2_000_000) as f64) - 1_000_000.0),
+        3 => Json::Num(rng.f64() * 1e9),
+        4 => Json::Num(9_007_199_254_740_992.0 - rng.range(0, 3) as f64), // 2^53 boundary
+        _ => Json::Str(random_string(rng)),
+    }
+}
+
+fn random_string(rng: &mut Rng) -> String {
+    let pool = [
+        "name",
+        "model",
+        "p99",
+        "δ-latency",
+        "a\"b",
+        "tab\t",
+        "line\n",
+        "emoji🦀",
+        "",
+        "back\\slash",
+        "ctl\u{1}char",
+        "nested",
+    ];
+    (*rng.choose(&pool)).to_string()
+}

@@ -65,10 +65,10 @@ fn collection_agrees_with_model_under_random_ops() {
         // full-state comparison at the end
         for (id, (status, version)) in &model {
             let doc = coll.get(id).ok_or(format!("missing {id}"))?;
-            if doc.get("status").and_then(Json::as_str) != Some(status.as_str()) {
+            if doc.str_field("status").as_deref() != Some(status.as_str()) {
                 return Err(format!("status mismatch for {id}"));
             }
-            if doc.get("version").and_then(Json::as_i64) != Some(*version) {
+            if doc.i64_field("version") != Some(*version) {
                 return Err(format!("version mismatch for {id}"));
             }
         }
@@ -125,7 +125,7 @@ fn durable_collection_replay_equals_live_state() {
     assert_eq!(coll.len(), expected.len());
     for (id, acc) in &expected {
         let doc = coll.get(id).unwrap();
-        assert!((doc.get("accuracy").unwrap().as_f64().unwrap() - acc).abs() < 1e-12);
+        assert!((doc.f64_field("accuracy").unwrap() - acc).abs() < 1e-12);
     }
     std::fs::remove_dir_all(&dir).ok();
 }

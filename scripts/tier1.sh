@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification: release build + quiet test run + a smoke pass of
+# the json_scan bench (tiny iteration counts) so the bench binary can't
+# bit-rot. Run from anywhere; operates on the rust/ crate.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+echo "== tier1: json_scan bench smoke =="
+# --smoke keeps iteration counts tiny; report goes to a scratch file so
+# the committed BENCH_json_scan.json is only refreshed deliberately
+cargo bench --bench json_scan -- --smoke --out /tmp/BENCH_json_scan.smoke.json
+echo "== tier1: OK =="
