@@ -11,11 +11,19 @@
 //!   serialize— legacy char-wise format!-based writer vs the pre-sized
 //!              escape-aware canonical writer
 //!
+//!   wal_replay— full `Collection::open` of a multi-segment on-disk
+//!              log: single-file line-by-line replay (BufReader +
+//!              per-line String + rescan, the pre-segmentation shape)
+//!              vs mmap'd segments scanned in place with pooled
+//!              buffers and parallel sealed-segment parsing
+//!
 //! Run: `cargo bench --bench json_scan` (flags: `--smoke` for tiny
 //! iteration counts, `--out PATH` for the JSON report, default
 //! `BENCH_json_scan.json`). Results land in EXPERIMENTS.md §Perf.
 
-use mlmodelci::storage::Query;
+use std::io::BufRead;
+
+use mlmodelci::storage::{Collection, Query, WalOptions};
 use mlmodelci::util::benchkit::{bench, f2, Table};
 use mlmodelci::util::jscan::{self, Doc};
 use mlmodelci::util::json::Json;
@@ -249,6 +257,57 @@ fn main() {
             scan_ms: scan.mean_ms,
             bytes_per_iter: docs.iter().map(Doc::len_bytes).sum(),
         });
+    }
+
+    // --- segmented WAL replay off disk ---------------------------------
+    {
+        let root = std::env::temp_dir().join(format!("mlci-bench-wal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        // build a real multi-segment log by inserting through a
+        // collection with a small segment budget
+        let opts = WalOptions { segment_bytes: 256 * 1024, replay_threads: 0 };
+        {
+            let mut c = Collection::open_with(&root, "bench", opts.clone()).unwrap();
+            for i in 0..n_docs {
+                c.insert(model_doc(i, 8)).unwrap();
+            }
+        }
+        // the pre-segmentation shape: the same records in one file,
+        // replayed line-by-line (BufReader, per-line String, rescan of
+        // the doc span)
+        let single = root.join("single.jsonl");
+        {
+            let mut out = String::new();
+            for i in 0..n_docs {
+                out.push_str(&format!("{{\"doc\":{},\"op\":\"put\"}}\n", model_doc(i, 8).to_string()));
+            }
+            std::fs::write(&single, out).unwrap();
+        }
+        let wal_disk_bytes = std::fs::metadata(&single).unwrap().len() as usize;
+        let base = bench("wal_replay", if smoke { 1 } else { 3 }, replay_iters, || {
+            let file = std::fs::File::open(&single).unwrap();
+            let mut docs = std::collections::BTreeMap::new();
+            for line in std::io::BufReader::new(file).lines() {
+                let line = line.unwrap();
+                let rec = jscan::scan(&line).unwrap();
+                let doc_ref = rec.root(&line).get("doc").unwrap();
+                let doc = Doc::parse(doc_ref.raw()).unwrap();
+                let id = doc.str_field("_id").unwrap().into_owned();
+                docs.insert(id, doc);
+            }
+            docs.len()
+        });
+        let scan = bench("wal_replay", if smoke { 1 } else { 3 }, replay_iters, || {
+            let c = Collection::open_with(&root, "bench", opts.clone()).unwrap();
+            c.len()
+        });
+        cases.push(Case {
+            name: format!("wal_replay/{n_docs}docs"),
+            baseline_ms: base.mean_ms,
+            scan_ms: scan.mean_ms,
+            bytes_per_iter: wal_disk_bytes,
+        });
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     // --- serialization --------------------------------------------------

@@ -124,35 +124,40 @@ fn list_models(platform: &Arc<Platform>, req: &Request) -> Response {
 }
 
 fn register_model(platform: &Arc<Platform>, req: &Request) -> Response {
-    // scan the body instead of materializing it: weights_b64 can be
-    // many MiB and borrows straight out of the request text here
-    let body = match jscan::Doc::from_raw(req.body_text()) {
-        Ok(b) => b,
-        Err(e) => return Response::bad_request(&format!("{e}")),
-    };
-    let Some(yaml_text) = body.str_field("yaml") else {
-        return Response::bad_request("missing 'yaml' field");
-    };
-    let weights = match body.str_field("weights_b64") {
-        Some(b64) => match base64::decode(&b64) {
-            Ok(w) => w,
-            Err(e) => return Response::bad_request(&format!("weights_b64: {e}")),
-        },
-        None => Vec::new(),
-    };
-    // full automation through the platform (register+convert+profile)
-    match platform.publish(&yaml_text, &weights) {
-        Ok(report) => Response::json(
-            201,
-            &Json::obj()
-                .with("id", report.model_id.as_str())
-                .with("register_ms", report.register_ms)
-                .with("convert_ms", report.convert_ms)
-                .with("profile_ms", report.profile_ms)
-                .with("profiles_recorded", report.profiles_recorded),
-        ),
-        Err(e) => Response::bad_request(&format!("{e:#}")),
-    }
+    // scan the body in place with a pooled offset table instead of
+    // materializing it: weights_b64 can be many MiB and borrows
+    // straight out of the request text, and steady-state registration
+    // allocates no scan buffers at all
+    let body = req.body_text();
+    jscan::with_pooled_offsets(|offsets| {
+        if let Err(e) = jscan::scan_into(&body, offsets) {
+            return Response::bad_request(&format!("{e}"));
+        }
+        let root = offsets.root(&body);
+        let Some(yaml_text) = root.get("yaml").and_then(|v| v.as_str()) else {
+            return Response::bad_request("missing 'yaml' field");
+        };
+        let weights = match root.get("weights_b64").and_then(|v| v.as_str()) {
+            Some(b64) => match base64::decode(&b64) {
+                Ok(w) => w,
+                Err(e) => return Response::bad_request(&format!("weights_b64: {e}")),
+            },
+            None => Vec::new(),
+        };
+        // full automation through the platform (register+convert+profile)
+        match platform.publish(&yaml_text, &weights) {
+            Ok(report) => Response::json(
+                201,
+                &Json::obj()
+                    .with("id", report.model_id.as_str())
+                    .with("register_ms", report.register_ms)
+                    .with("convert_ms", report.convert_ms)
+                    .with("profile_ms", report.profile_ms)
+                    .with("profiles_recorded", report.profiles_recorded),
+            ),
+            Err(e) => Response::bad_request(&format!("{e:#}")),
+        }
+    })
 }
 
 fn profile_model(platform: &Arc<Platform>, id: &str) -> Response {
@@ -219,38 +224,47 @@ fn deploy_model(platform: &Arc<Platform>, id: &str, req: &Request) -> Response {
 
 fn infer(platform: &Arc<Platform>, name: &str, req: &Request) -> Response {
     let Some(svc) = platform.dispatcher.find(name) else { return Response::not_found() };
-    // scan the body: the input array is read element-wise off its spans
-    // instead of being materialized as a Vec<Json>
-    let body = jscan::Doc::from_raw(req.body_text()).ok();
     // find the model family to know the input shape/dtype
     let Ok(Some(family)) = platform.hub.family_of_name(name) else { return Response::not_found() };
     let Ok(manifest) = platform.store.model(&family) else {
         return Response::error("family missing from manifest");
     };
-    let input_arr = body
-        .as_ref()
-        .and_then(|b| b.get("input"))
-        .filter(|v| v.kind() == Kind::Arr);
-    let input = match input_arr {
-        Some(values) => {
-            let n: usize = manifest.input_shape.iter().product();
-            if values.len() != n {
-                return Response::bad_request(&format!("input must have {n} values"));
-            }
-            match manifest.input_dtype {
-                DType::F32 => {
-                    let vals: Vec<f32> =
-                        values.items().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
-                    Tensor::from_f32(&manifest.input_shape, &vals)
+    // scan the body with a pooled offset table: the input array is read
+    // element-wise off its spans instead of being materialized as a
+    // Vec<Json>, and the scan itself reuses a pooled buffer
+    let body = req.body_text();
+    let input = jscan::with_pooled_offsets(|offsets| {
+        let scanned = jscan::scan_into(&body, offsets).is_ok();
+        let input_arr = if scanned {
+            offsets.root(&body).get("input").filter(|v| v.kind() == Kind::Arr)
+        } else {
+            None
+        };
+        match input_arr {
+            Some(values) => {
+                let n: usize = manifest.input_shape.iter().product();
+                if values.len() != n {
+                    return Err(Response::bad_request(&format!("input must have {n} values")));
                 }
-                DType::I32 => {
-                    let vals: Vec<i32> =
-                        values.items().map(|v| v.as_i64().unwrap_or(0) as i32).collect();
-                    Tensor::from_i32(&manifest.input_shape, &vals)
-                }
+                Ok(match manifest.input_dtype {
+                    DType::F32 => {
+                        let vals: Vec<f32> =
+                            values.items().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+                        Tensor::from_f32(&manifest.input_shape, &vals)
+                    }
+                    DType::I32 => {
+                        let vals: Vec<i32> =
+                            values.items().map(|v| v.as_i64().unwrap_or(0) as i32).collect();
+                        Tensor::from_i32(&manifest.input_shape, &vals)
+                    }
+                })
             }
+            None => Ok(example_input(manifest, 1)),
         }
-        None => example_input(manifest, 1),
+    });
+    let input = match input {
+        Ok(tensor) => tensor,
+        Err(resp) => return resp,
     };
     match svc.infer(input) {
         Ok(reply) => {

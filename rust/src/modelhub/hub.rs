@@ -140,13 +140,24 @@ impl ModelHub {
     }
 
     /// Guarded status transition (enforces the Figure-2 workflow).
+    /// Check and write happen under one lock hold: with separate holds,
+    /// two interleaved transitions could both read the same "current"
+    /// status and both pass the guard — e.g. two concurrent
+    /// `registered -> converting` claims both succeeding.
     pub fn set_status(&self, id: &str, next: ModelStatus) -> Result<()> {
-        let current = self.status(id)?;
-        if !current.can_transition_to(next) {
-            bail!("illegal status transition {} -> {} for model {id}", current.as_str(), next.as_str());
-        }
-        self.db.with_collection(MODELS, |c| {
-            c.update(id, &Json::obj().with("status", next.as_str()))
+        self.db.with_collection(MODELS, |c| -> Result<()> {
+            let doc = c.get(id).ok_or_else(|| anyhow!("no model with id '{id}'"))?;
+            let current = ModelStatus::of_doc(doc)
+                .ok_or_else(|| anyhow!("model {id} has no valid status"))?;
+            if !current.can_transition_to(next) {
+                bail!(
+                    "illegal status transition {} -> {} for model {id}",
+                    current.as_str(),
+                    next.as_str()
+                );
+            }
+            c.update(id, &Json::obj().with("status", next.as_str()))?;
+            Ok(())
         })??;
         Ok(())
     }
@@ -166,17 +177,21 @@ impl ModelHub {
 
     /// Append an element to an array field (conversions / profiles).
     /// Only the target array is materialized, not the whole document.
+    /// Read-append-write happens under one lock hold: with separate
+    /// holds, two concurrent appends could both read the same array and
+    /// the second write would silently drop the first element.
     pub fn push_to_array(&self, id: &str, field: &str, value: Json) -> Result<()> {
-        let arr = self
-            .db
-            .with_collection(MODELS, |c| c.get(id).map(|d| d.get(field).map(|v| v.to_json())))?
-            .ok_or_else(|| anyhow!("no model with id '{id}'"))?;
-        let mut items = match arr {
-            Some(Json::Arr(v)) => v,
-            _ => Vec::new(),
-        };
-        items.push(value);
-        self.update_fields(id, &Json::obj().with(field, Json::Arr(items)))
+        self.db.with_collection(MODELS, |c| -> Result<()> {
+            let doc = c.get(id).ok_or_else(|| anyhow!("no model with id '{id}'"))?;
+            let mut items = match doc.get(field).map(|v| v.to_json()) {
+                Some(Json::Arr(v)) => v,
+                _ => Vec::new(),
+            };
+            items.push(value);
+            c.update(id, &Json::obj().with(field, Json::Arr(items)))?;
+            Ok(())
+        })??;
+        Ok(())
     }
 
     /// Load the stored weight bytes of a model.
@@ -294,6 +309,62 @@ mod tests {
         hub.push_to_array(&id, "conversions", Json::obj().with("format", "reference")).unwrap();
         let doc = hub.get(&id).unwrap();
         assert_eq!(doc.get("conversions").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn concurrent_array_pushes_lose_nothing() {
+        // regression: push_to_array used to read under one lock hold
+        // and write under another, so interleaved appends dropped
+        // elements. Hammer one document from many threads.
+        let hub = Arc::new(hub());
+        let id = hub.create(&info("m"), b"w").unwrap();
+        let threads = 8usize;
+        let per_thread = 25usize;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let hub = hub.clone();
+            let id = id.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    hub.push_to_array(
+                        &id,
+                        "profiles",
+                        Json::obj().with("thread", t as i64).with("i", i as i64),
+                    )
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let doc = hub.get(&id).unwrap();
+        assert_eq!(
+            doc.get("profiles").unwrap().as_arr().unwrap().len(),
+            threads * per_thread,
+            "concurrent appends must not lose elements"
+        );
+    }
+
+    #[test]
+    fn concurrent_status_transitions_admit_exactly_one_claim() {
+        // regression: set_status used to read the current status under
+        // one lock hold and write under another, so two racers could
+        // both pass the Figure-2 guard. registered -> converting is
+        // legal exactly once (converting -> converting is not).
+        let hub = Arc::new(hub());
+        let id = hub.create(&info("m"), b"w").unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let hub = hub.clone();
+            let id = id.clone();
+            handles.push(std::thread::spawn(move || {
+                hub.set_status(&id, ModelStatus::Converting).is_ok()
+            }));
+        }
+        let wins = handles.into_iter().map(|h| h.join().unwrap()).filter(|&ok| ok).count();
+        assert_eq!(wins, 1, "exactly one racer may claim the transition");
+        assert_eq!(hub.status(&id).unwrap(), ModelStatus::Converting);
     }
 
     #[test]

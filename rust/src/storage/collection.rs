@@ -1,17 +1,22 @@
 //! A document collection: insert/find/update/delete over scanned JSON
 //! documents with `_id` assignment, secondary hash indexes, and
-//! append-only JSONL persistence with compaction — the working heart of
+//! segmented-WAL persistence with compaction — the working heart of
 //! the MongoDB substitute.
 //!
 //! Documents are held as [`Doc`]s (raw serialized text + offset table,
 //! see [`crate::util::jscan`]) rather than [`Json`] trees:
 //!
-//! * WAL replay in [`Collection::open`] scans each line once and never
-//!   materializes a tree — `_id` and indexed fields are read straight
-//!   off the offset spans.
+//! * Durability lives in the segmented [`Wal`](super::wal::Wal):
+//!   [`Collection::open`] replays mmap'd segments (sealed segments in
+//!   parallel) with pooled scan tables — no per-line `String`, no
+//!   `BufReader`; `_id` and indexed fields are read straight off the
+//!   offset spans and stored docs are detached from the scanned record
+//!   in place.
 //! * [`Collection::find`] evaluates queries through
 //!   [`Query::matches_scan`], so a full collection scan touches only
-//!   the fields the predicate names.
+//!   the fields the predicate names. Secondary-index postings are kept
+//!   id-sorted, so index-accelerated finds return hits in exactly the
+//!   order a full scan would.
 //! * WAL appends and compaction embed `Doc::raw()` verbatim — no
 //!   `doc.clone()`, no per-record re-serialization.
 //!
@@ -20,15 +25,13 @@
 //! the stored doc only because a merge actually mutates it.
 
 use std::collections::{BTreeMap, HashMap};
-use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, Write};
-use std::path::PathBuf;
 
 use crate::util::idgen;
-use crate::util::jscan::{self, Doc};
+use crate::util::jscan::Doc;
 use crate::util::json::Json;
 
 use super::query::Query;
+use super::wal::{Wal, WalOp, WalOptions};
 
 /// Errors from collection operations.
 #[derive(Debug)]
@@ -59,19 +62,15 @@ impl From<std::io::Error> for StoreError {
 
 pub type Result<T> = std::result::Result<T, StoreError>;
 
-/// Write-ahead record kinds in the JSONL log.
-const OP_PUT: &str = "put";
-const OP_DEL: &str = "del";
-
 /// An in-memory collection with optional durability.
 pub struct Collection {
     name: String,
     docs: BTreeMap<String, Doc>,
-    /// field -> value -> ids (secondary hash indexes)
+    /// field -> value -> ids (secondary hash indexes; posting lists are
+    /// kept sorted by id so indexed finds match full-scan order)
     indexes: HashMap<String, HashMap<String, Vec<String>>>,
-    /// Path of the JSONL log; `None` = memory-only (tests).
-    log_path: Option<PathBuf>,
-    log: Option<File>,
+    /// Segmented write-ahead log; `None` = memory-only (tests).
+    wal: Option<Wal>,
     /// Operations since last compaction.
     dirty_ops: usize,
 }
@@ -83,57 +82,31 @@ impl Collection {
             name: name.to_string(),
             docs: BTreeMap::new(),
             indexes: HashMap::new(),
-            log_path: None,
-            log: None,
+            wal: None,
             dirty_ops: 0,
         }
     }
 
-    /// Durable collection backed by `<dir>/<name>.jsonl`, replaying any
-    /// existing log. Replay is scan-only: no document tree is built.
+    /// Durable collection backed by the segmented WAL under
+    /// `<dir>/<name>.wal/` (a legacy `<dir>/<name>.jsonl` log is
+    /// migrated in). Replay is scan-only and mmap-backed: sealed
+    /// segments parse in parallel and no document tree is built.
     pub fn open(dir: &std::path::Path, name: &str) -> Result<Collection> {
-        std::fs::create_dir_all(dir)?;
-        let path = dir.join(format!("{name}.jsonl"));
+        Collection::open_with(dir, name, WalOptions::default())
+    }
+
+    /// [`Collection::open`] with explicit WAL tuning (segment size,
+    /// replay parallelism) — benches and tests.
+    pub fn open_with(dir: &std::path::Path, name: &str, opts: WalOptions) -> Result<Collection> {
+        let (wal, ops) = Wal::open(dir, name, opts)?;
         let mut coll = Collection::in_memory(name);
-        if path.exists() {
-            let file = File::open(&path)?;
-            for (lineno, line) in BufReader::new(file).lines().enumerate() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let rec = jscan::scan(&line).map_err(|e| {
-                    StoreError::Corrupt(format!("{name}.jsonl line {}: {e}", lineno + 1))
-                })?;
-                let root = rec.root(&line);
-                let op = root.get("op").and_then(|v| v.as_str());
-                match op.as_deref().unwrap_or(OP_PUT) {
-                    OP_PUT => {
-                        let doc_ref = root
-                            .get("doc")
-                            .ok_or_else(|| StoreError::Corrupt("put without doc".into()))?;
-                        // re-scan just the doc's span so the stored
-                        // offsets are rooted at the doc, not the record
-                        let doc = Doc::parse(doc_ref.raw()).map_err(|e| {
-                            StoreError::Corrupt(format!("{name}.jsonl line {}: {e}", lineno + 1))
-                        })?;
-                        let id = doc
-                            .str_field("_id")
-                            .map(|s| s.into_owned())
-                            .ok_or_else(|| StoreError::Corrupt("doc without _id".into()))?;
-                        coll.apply_put(id, doc);
-                    }
-                    OP_DEL => {
-                        if let Some(id) = root.get("id").and_then(|v| v.as_str()) {
-                            coll.apply_del(&id);
-                        }
-                    }
-                    other => return Err(StoreError::Corrupt(format!("unknown op '{other}'"))),
-                }
+        for op in ops {
+            match op {
+                WalOp::Put { id, doc } => coll.apply_put(id, doc),
+                WalOp::Del { id } => coll.apply_del(&id),
             }
         }
-        coll.log = Some(OpenOptions::new().create(true).append(true).open(&path)?);
-        coll.log_path = Some(path);
+        coll.wal = Some(wal);
         Ok(coll)
     }
 
@@ -156,12 +129,20 @@ impl Collection {
             return;
         }
         let mut index: HashMap<String, Vec<String>> = HashMap::new();
+        // docs iterate in id order, so each posting list builds sorted
         for (id, doc) in &self.docs {
             if let Some(v) = doc.str_field(field) {
                 index.entry(v.into_owned()).or_default().push(id.clone());
             }
         }
         self.indexes.insert(field.to_string(), index);
+    }
+
+    /// `(distinct values, total posting entries)` of a secondary index —
+    /// diagnostics, and the churn tests' proof that dead entries don't
+    /// accumulate.
+    pub fn index_stats(&self, field: &str) -> Option<(usize, usize)> {
+        self.indexes.get(field).map(|ix| (ix.len(), ix.values().map(Vec::len).sum()))
     }
 
     fn apply_put(&mut self, id: String, doc: Doc) {
@@ -183,7 +164,11 @@ impl Collection {
     fn index_doc(&mut self, id: &str, doc: &Doc) {
         for (field, index) in self.indexes.iter_mut() {
             if let Some(v) = doc.str_field(field) {
-                index.entry(v.into_owned()).or_default().push(id.to_string());
+                let ids = index.entry(v.into_owned()).or_default();
+                // sorted insert keeps indexed finds in full-scan order
+                if let Err(pos) = ids.binary_search_by(|x| x.as_str().cmp(id)) {
+                    ids.insert(pos, id.to_string());
+                }
             }
         }
     }
@@ -191,8 +176,19 @@ impl Collection {
     fn unindex(&mut self, id: &str, doc: &Doc) {
         for (field, index) in self.indexes.iter_mut() {
             if let Some(v) = doc.str_field(field) {
-                if let Some(ids) = index.get_mut(v.as_ref()) {
-                    ids.retain(|x| x != id);
+                let now_empty = match index.get_mut(v.as_ref()) {
+                    Some(ids) => {
+                        if let Ok(pos) = ids.binary_search_by(|x| x.as_str().cmp(id)) {
+                            ids.remove(pos);
+                        }
+                        ids.is_empty()
+                    }
+                    None => false,
+                };
+                if now_empty {
+                    // drop dead posting lists — they otherwise
+                    // accumulate forever under insert/delete churn
+                    index.remove(v.as_ref());
                 }
             }
         }
@@ -201,29 +197,26 @@ impl Collection {
     /// Append a put record: the doc's canonical raw text is embedded
     /// verbatim (one buffer build, no record tree, no doc clone).
     fn log_put(&mut self, doc_raw: &str) -> Result<()> {
-        if let Some(log) = &mut self.log {
-            let mut rec = String::with_capacity(doc_raw.len() + 24);
-            rec.push_str("{\"doc\":");
-            rec.push_str(doc_raw);
-            rec.push_str(",\"op\":\"put\"}");
-            writeln!(log, "{rec}")?;
+        if let Some(wal) = &mut self.wal {
+            wal.append_put(doc_raw)?;
             self.dirty_ops += 1;
         }
-        self.maybe_compact()
+        Ok(())
     }
 
     fn log_del(&mut self, id: &str) -> Result<()> {
-        if let Some(log) = &mut self.log {
-            let mut rec = String::with_capacity(id.len() + 24);
-            rec.push_str("{\"id\":");
-            jscan::write_escaped(&mut rec, id);
-            rec.push_str(",\"op\":\"del\"}");
-            writeln!(log, "{rec}")?;
+        if let Some(wal) = &mut self.wal {
+            wal.append_del(id)?;
             self.dirty_ops += 1;
         }
-        self.maybe_compact()
+        Ok(())
     }
 
+    /// Opportunistic compaction, called by the public mutators *after*
+    /// the op has been applied to `docs`. Running it from inside
+    /// `log_put`/`log_del` (as the seed did) would snapshot the pre-op
+    /// state and then drop the segment holding the just-logged record —
+    /// the op would silently vanish on the next replay.
     fn maybe_compact(&mut self) -> Result<()> {
         // compact when the log holds 4x more ops than live documents
         if self.dirty_ops > 64 && self.dirty_ops > 4 * self.docs.len() {
@@ -232,20 +225,18 @@ impl Collection {
         Ok(())
     }
 
-    /// Rewrite the log to contain exactly the live documents. Pure byte
-    /// copies: each stored doc's raw text is written as-is.
+    /// Rewrite the log to contain exactly the live documents: the WAL
+    /// publishes a new base segment and drops the ones it supersedes.
+    /// Pure byte copies: each stored doc's raw text is written as-is.
     pub fn compact(&mut self) -> Result<()> {
-        let Some(path) = self.log_path.clone() else { return Ok(()) };
-        let tmp = path.with_extension("jsonl.tmp");
-        {
-            let mut f = File::create(&tmp)?;
-            for doc in self.docs.values() {
-                writeln!(f, "{{\"doc\":{},\"op\":\"put\"}}", doc.raw())?;
+        let Some(wal) = self.wal.as_mut() else { return Ok(()) };
+        let docs = &self.docs;
+        wal.compact(|w| {
+            for doc in docs.values() {
+                Wal::write_put_record(w, doc.raw())?;
             }
-            f.sync_all()?;
-        }
-        std::fs::rename(&tmp, &path)?;
-        self.log = Some(OpenOptions::new().append(true).open(&path)?);
+            Ok(())
+        })?;
         self.dirty_ops = 0;
         Ok(())
     }
@@ -266,6 +257,7 @@ impl Collection {
         let stored = Doc::from_json(&doc);
         self.log_put(stored.raw())?;
         self.apply_put(id.clone(), stored);
+        self.maybe_compact()?;
         Ok(id)
     }
 
@@ -311,6 +303,7 @@ impl Collection {
         let stored = Doc::from_json(&doc);
         self.log_put(stored.raw())?;
         self.apply_put(id.to_string(), stored);
+        self.maybe_compact()?;
         Ok(())
     }
 
@@ -335,6 +328,7 @@ impl Collection {
         let stored = Doc::from_json(&merged);
         self.log_put(stored.raw())?;
         self.apply_put(id.to_string(), stored);
+        self.maybe_compact()?;
         Ok(())
     }
 
@@ -345,6 +339,7 @@ impl Collection {
         }
         self.log_del(id)?;
         self.apply_del(id);
+        self.maybe_compact()?;
         Ok(true)
     }
 
@@ -485,6 +480,118 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("bad.jsonl"), "this is not json\n").unwrap();
         assert!(matches!(Collection::open(&dir, "bad"), Err(StoreError::Corrupt(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_triggered_by_an_op_keeps_that_op() {
+        // regression: auto-compaction used to run from inside
+        // log_put/log_del *before* the op was applied, snapshotting the
+        // pre-op state and unlinking the segment holding the just-
+        // logged record — the delete below would resurrect on reopen
+        let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
+        let doomed;
+        let updated;
+        {
+            let mut c = Collection::open(&dir, "t").unwrap();
+            let mut ids = Vec::new();
+            for i in 0..10 {
+                ids.push(c.insert(model_doc(&format!("m{i}"), "jax", 0.5)).unwrap());
+            }
+            c.compact().unwrap(); // dirty_ops = 0
+            // 64 updates leave dirty_ops exactly at the threshold, so
+            // the next op (the delete) is the one that trips compaction
+            for _ in 0..64 {
+                c.update(&ids[0], &Json::obj().with("accuracy", 0.9)).unwrap();
+            }
+            updated = ids[0].clone();
+            doomed = ids[9].clone();
+            c.delete(&doomed).unwrap();
+            assert_eq!(c.len(), 9);
+        }
+        let c2 = Collection::open(&dir, "t").unwrap();
+        assert_eq!(c2.len(), 9, "compaction during the delete must not resurrect it");
+        assert!(c2.get(&doomed).is_none());
+        assert_eq!(c2.get(&updated).unwrap().f64_field("accuracy"), Some(0.9));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn index_churn_leaves_no_dead_entries() {
+        let mut c = Collection::in_memory("churn");
+        c.create_index("status");
+        // heavy insert/delete churn across many distinct values
+        for round in 0..10 {
+            let mut ids = Vec::new();
+            for i in 0..20 {
+                let doc = model_doc(&format!("m{round}-{i}"), "jax", 0.5)
+                    .with("status", format!("s{round}-{i}"));
+                ids.push(c.insert(doc).unwrap());
+            }
+            for id in ids {
+                c.delete(&id).unwrap();
+            }
+        }
+        assert_eq!(c.index_stats("status"), Some((0, 0)), "dead posting lists survive churn");
+        // updates that move a doc between values also clean up behind it
+        let id = c.insert(model_doc("m", "jax", 0.5).with("status", "a")).unwrap();
+        c.update(&id, &Json::obj().with("status", "b")).unwrap();
+        assert_eq!(c.index_stats("status"), Some((1, 1)));
+        assert_eq!(c.find(&Query::eq("status", "a")).len(), 0);
+        assert_eq!(c.find(&Query::eq("status", "b")).len(), 1);
+    }
+
+    #[test]
+    fn indexed_find_matches_scan_order() {
+        let mut c = Collection::in_memory("order");
+        c.create_index("family");
+        // insert out of id order so the posting list must sort itself
+        for id in ["0b", "0c", "0a", "0e", "0d"] {
+            c.insert(Json::obj().with("_id", id).with("family", "resnet")).unwrap();
+        }
+        let scan_ids: Vec<String> = {
+            let mut un = Collection::in_memory("scan");
+            for id in ["0b", "0c", "0a", "0e", "0d"] {
+                un.insert(Json::obj().with("_id", id).with("family", "resnet")).unwrap();
+            }
+            un.find(&Query::eq("family", "resnet"))
+                .iter()
+                .map(|d| str_field(d, "_id").unwrap())
+                .collect()
+        };
+        let indexed_ids: Vec<String> = c
+            .find(&Query::eq("family", "resnet"))
+            .iter()
+            .map(|d| str_field(d, "_id").unwrap())
+            .collect();
+        assert_eq!(indexed_ids, scan_ids, "indexed hits must come back in full-scan (id) order");
+        assert_eq!(indexed_ids, vec!["0a", "0b", "0c", "0d", "0e"]);
+        // find_one is therefore deterministic with or without the index
+        assert_eq!(
+            str_field(c.find_one(&Query::eq("family", "resnet")).unwrap(), "_id").as_deref(),
+            Some("0a")
+        );
+    }
+
+    #[test]
+    fn multi_segment_durable_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
+        let opts = WalOptions { segment_bytes: 256, replay_threads: 0 };
+        {
+            let mut c = Collection::open_with(&dir, "segmented", opts.clone()).unwrap();
+            for i in 0..30 {
+                c.insert(model_doc(&format!("m{i}"), "jax", 0.5 + i as f64 / 100.0)).unwrap();
+            }
+        }
+        // the tiny budget must have spread the log across segments
+        let seg_count = std::fs::read_dir(dir.join("segmented.wal")).unwrap().count();
+        assert!(seg_count > 3, "expected several segments, got {seg_count}");
+        let c2 = Collection::open_with(&dir, "segmented", opts).unwrap();
+        assert_eq!(c2.len(), 30);
+        for i in 0..30 {
+            let doc = c2.find_one(&Query::eq("name", format!("m{i}").as_str())).unwrap();
+            assert_eq!(doc.f64_field("accuracy"), Some(0.5 + i as f64 / 100.0));
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -82,11 +82,18 @@ impl GridFs {
     pub fn put(&self, filename: &str, data: &[u8]) -> Result<BlobRef> {
         let id = content_id(data);
         let dir = self.blob_dir(&id);
+        if dir.join("descriptor.json").exists() {
+            // dedup hit: the blob on disk was chunked under the
+            // *writer's* chunk size, which may differ from ours —
+            // return the stored layout, not one recomputed from
+            // `self.chunk_size` (that handle would fail `get` with a
+            // spurious missing-chunk/length error)
+            let mut blob = self.read_descriptor(&id)?;
+            blob.filename = filename.to_string();
+            return Ok(blob);
+        }
         let n_chunks = data.len().div_ceil(self.chunk_size).max(1);
         let blob = BlobRef { id: id.clone(), len: data.len(), chunks: n_chunks, filename: filename.to_string() };
-        if dir.join("descriptor.json").exists() {
-            return Ok(blob); // dedup hit
-        }
         let tmp = self.root.join(format!(".tmp-{id}"));
         fs::create_dir_all(&tmp)?;
         for (i, chunk) in data.chunks(self.chunk_size.max(1)).enumerate() {
@@ -142,12 +149,44 @@ impl GridFs {
         Ok(out)
     }
 
-    /// Stream one chunk (for range reads of large weight files).
+    /// Stream one chunk (for range reads of large weight files). Chunk
+    /// boundaries are those of the blob's *stored* layout (see
+    /// [`GridFs::stored_chunk_size`]), not this store's configured
+    /// `chunk_size`.
     pub fn get_chunk(&self, blob: &BlobRef, index: usize) -> Result<Vec<u8>> {
         if index >= blob.chunks {
             return Err(StoreError::NotFound(format!("{} chunk {index}", blob.id)));
         }
         Ok(fs::read(self.blob_dir(&blob.id).join(format!("chunk.{index:06}")))?)
+    }
+
+    /// The chunk size a stored blob was actually written with — the
+    /// offset unit for [`GridFs::get_chunk`] range reads (byte `i` of a
+    /// blob lives in chunk `i / stored_chunk_size` at offset
+    /// `i % stored_chunk_size`).
+    pub fn stored_chunk_size(&self, id: &str) -> Result<usize> {
+        let doc = self.load_descriptor(id)?;
+        doc.get("chunk_size")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| StoreError::Corrupt(format!("descriptor of {id} missing chunk_size")))
+    }
+
+    /// Read a blob's stored descriptor — the authoritative layout.
+    fn read_descriptor(&self, id: &str) -> Result<BlobRef> {
+        let doc = self.load_descriptor(id)?;
+        BlobRef::from_scan(doc.root())
+            .ok_or_else(|| StoreError::Corrupt(format!("descriptor of {id} missing fields")))
+    }
+
+    /// Load and scan a blob's `descriptor.json`.
+    fn load_descriptor(&self, id: &str) -> Result<crate::util::jscan::Doc> {
+        let path = self.blob_dir(id).join("descriptor.json");
+        if !path.exists() {
+            return Err(StoreError::NotFound(id.to_string()));
+        }
+        let text = fs::read_to_string(&path)?;
+        crate::util::jscan::Doc::from_raw(text)
+            .map_err(|e| StoreError::Corrupt(format!("descriptor of {id}: {e}")))
     }
 
     pub fn exists(&self, id: &str) -> bool {
@@ -220,6 +259,32 @@ mod tests {
         let b = fs.put("b.bin", b"same-bytes").unwrap();
         assert_eq!(a.id, b.id);
         assert_eq!(fs.total_bytes().unwrap(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dedup_across_chunk_sizes_returns_stored_layout() {
+        let dir = tmp();
+        let mut rng = Rng::new(9);
+        let data: Vec<u8> = (0..5000).map(|_| rng.range(0, 256) as u8).collect();
+        // first writer chunks at 1 KiB -> 5 chunks on disk
+        let fs_small = GridFs::with_chunk_size(&dir, 1024).unwrap();
+        let a = fs_small.put("a.bin", &data).unwrap();
+        assert_eq!(a.chunks, 5);
+        // a second store over the same root with a larger chunk size
+        // dedups — the returned handle must describe the layout that
+        // actually exists, not 5000/4096 = 2 chunks
+        let fs_big = GridFs::with_chunk_size(&dir, 4096).unwrap();
+        let b = fs_big.put("b.bin", &data).unwrap();
+        assert_eq!(b.id, a.id);
+        assert_eq!(b.chunks, a.chunks, "dedup must return the stored chunk count");
+        assert_eq!(b.len, data.len());
+        assert_eq!(b.filename, "b.bin", "logical filename is the caller's");
+        assert_eq!(fs_big.get(&b).unwrap(), data);
+        // range reads go by the stored layout's offsets
+        assert_eq!(fs_big.stored_chunk_size(&b.id).unwrap(), 1024);
+        assert_eq!(fs_big.get_chunk(&b, 0).unwrap(), &data[..1024]);
+        assert_eq!(fs_big.get_chunk(&b, 4).unwrap(), &data[4096..]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -6,11 +6,13 @@ pub mod collection;
 pub mod db;
 pub mod gridfs;
 pub mod query;
+pub mod wal;
 
 pub use collection::{Collection, Result, StoreError};
 pub use db::Database;
 pub use gridfs::{BlobRef, GridFs};
 pub use query::Query;
+pub use wal::{Wal, WalOptions};
 
 // the scanned-document types stored records are made of
 pub use crate::util::jscan::{Doc, ValueRef};

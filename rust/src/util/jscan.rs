@@ -36,6 +36,7 @@
 use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::sync::Mutex;
 
 use super::json::{Json, JsonError};
 
@@ -108,25 +109,80 @@ impl Offsets {
 /// Scan a JSON document into an offset table: one forward pass, no
 /// allocations besides the node vector.
 pub fn scan(text: &str) -> Result<Offsets, JsonError> {
+    let mut offsets = Offsets::default();
+    scan_into(text, &mut offsets)?;
+    Ok(offsets)
+}
+
+/// Scan into a caller-owned table, reusing its node buffer. This is the
+/// steady-state entry point: with a pooled [`Offsets`] (see
+/// [`with_pooled_offsets`]) a scan performs no heap allocation at all
+/// once the buffer has grown to the working-set document size.
+pub fn scan_into(text: &str, offsets: &mut Offsets) -> Result<(), JsonError> {
+    offsets.nodes.clear();
     // spans are u32; refuse inputs whose offsets could wrap (>= keeps
     // the NO_KEY sentinel unreachable as a real offset)
     if text.len() >= u32::MAX as usize {
         return Err(JsonError { pos: 0, msg: "document too large for u32 spans".to_string() });
     }
-    let mut s = Scanner { b: text.as_bytes(), pos: 0, nodes: Vec::with_capacity(8), depth: 0 };
+    let mut s = Scanner { b: text.as_bytes(), pos: 0, nodes: &mut offsets.nodes, depth: 0 };
     s.skip_ws();
     s.value(NO_KEY, 0, false)?;
     s.skip_ws();
     if s.pos != s.b.len() {
         return Err(s.err("trailing characters after document"));
     }
-    Ok(Offsets { nodes: s.nodes })
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// offsets pool
+
+/// Detach/attach pool of [`Offsets`] buffers (squirrel-json's
+/// `DetachedDocument` idea): hot paths — WAL replay workers, REST
+/// request-body scans — borrow a table, scan in place, and return it,
+/// so steady-state scanning allocates nothing per document.
+static OFFSETS_POOL: Mutex<Vec<Offsets>> = Mutex::new(Vec::new());
+
+/// Bound on pooled buffers; beyond this, returned tables are dropped.
+const OFFSETS_POOL_MAX: usize = 64;
+
+/// Per-table node-capacity bound for re-pooling. One burst of huge
+/// documents must not pin peak-sized tables for the process lifetime:
+/// ~64k nodes ≈ 2.5 MiB per table, plenty for every steady-state
+/// document shape, and anything bigger is dropped on attach.
+const OFFSETS_POOL_NODES_MAX: usize = 1 << 16;
+
+/// Take a scan table from the pool (or a fresh empty one).
+pub fn detach_offsets() -> Offsets {
+    OFFSETS_POOL.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+}
+
+/// Return a scan table to the pool for reuse.
+pub fn attach_offsets(mut offsets: Offsets) {
+    offsets.nodes.clear();
+    if offsets.nodes.capacity() > OFFSETS_POOL_NODES_MAX {
+        return; // oversized by a burst of huge documents: let it drop
+    }
+    if let Ok(mut p) = OFFSETS_POOL.lock() {
+        if p.len() < OFFSETS_POOL_MAX {
+            p.push(offsets);
+        }
+    }
+}
+
+/// Run `f` with a pooled scan table, returning it afterwards.
+pub fn with_pooled_offsets<R>(f: impl FnOnce(&mut Offsets) -> R) -> R {
+    let mut offsets = detach_offsets();
+    let out = f(&mut offsets);
+    attach_offsets(offsets);
+    out
 }
 
 struct Scanner<'a> {
     b: &'a [u8],
     pos: usize,
-    nodes: Vec<Node>,
+    nodes: &'a mut Vec<Node>,
     depth: usize,
 }
 
@@ -530,6 +586,61 @@ impl<'a> ValueRef<'a> {
         let n = self.node();
         let first = (n.kind == Kind::Obj && n.count > 0).then_some(self.idx + 1);
         Entries { text: self.text, nodes: self.nodes, next: first }
+    }
+
+    /// Exclusive end of this node's contiguous pre-order subtree range.
+    /// Nodes are pushed in source order, so `start` offsets increase
+    /// monotonically and every descendant starts before this
+    /// container's closing byte.
+    fn subtree_end(&self) -> usize {
+        let n = self.node();
+        if !matches!(n.kind, Kind::Arr | Kind::Obj) {
+            return self.idx + 1;
+        }
+        let mut j = self.idx + 1;
+        while j < self.nodes.len() && self.nodes[j].start < n.end {
+            j += 1;
+        }
+        j
+    }
+
+    /// Detach this value's subtree into an owned [`Doc`] without
+    /// re-scanning: the raw span is copied once and the pre-order node
+    /// range is rebased to the new origin. This is how WAL replay turns
+    /// the `doc` span of an already-scanned record into a stored
+    /// document with a single scan pass over the log.
+    pub fn detach_doc(&self) -> Doc {
+        let n = *self.node();
+        // byte offset where `raw()` begins in the source text (strings
+        // span inside their quotes; the opening quote precedes `start`)
+        let base = match n.kind {
+            Kind::Str => n.start - 1,
+            _ => n.start,
+        };
+        let end = self.subtree_end();
+        let mut nodes = Vec::with_capacity(end - self.idx);
+        for (off, src) in self.nodes[self.idx..end].iter().enumerate() {
+            let mut node = *src;
+            node.start -= base;
+            node.end -= base;
+            if node.key_start != NO_KEY {
+                node.key_start -= base;
+                node.key_end -= base;
+            }
+            // sibling links become subtree-local; links that escape the
+            // subtree are cut
+            let next = node.next as usize;
+            node.next = if next > self.idx && next < end { (next - self.idx) as u32 } else { 0 };
+            if off == 0 {
+                // a detached root has no key and no siblings
+                node.key_start = NO_KEY;
+                node.key_end = 0;
+                node.key_escaped = false;
+                node.next = 0;
+            }
+            nodes.push(node);
+        }
+        Doc { raw: self.raw().to_string(), offsets: Offsets { nodes } }
     }
 
     /// Materialize this subtree into a [`Json`] value (the mutation
@@ -1099,6 +1210,63 @@ mod tests {
         assert!(Json::parse(&text).is_ok());
         let stored = Doc::from_json(&doc);
         assert!(stored.get("accuracy").unwrap().is_null());
+    }
+
+    #[test]
+    fn scan_into_reuses_buffer_across_documents() {
+        let mut offsets = Offsets::default();
+        scan_into(DOC, &mut offsets).unwrap();
+        let n_first = offsets.node_count();
+        assert_eq!(offsets.root(DOC).get("name").unwrap().as_str().as_deref(), Some("resnet_mini"));
+        // a second scan into the same table fully replaces the first
+        let small = r#"{"k":1}"#;
+        scan_into(small, &mut offsets).unwrap();
+        assert!(offsets.node_count() < n_first);
+        assert_eq!(offsets.root(small).get("k").unwrap().as_i64(), Some(1));
+        // an error leaves the table safe to reuse
+        assert!(scan_into("{bad", &mut offsets).is_err());
+        scan_into(DOC, &mut offsets).unwrap();
+        assert_eq!(offsets.node_count(), n_first);
+        assert_eq!(offsets.root(DOC).to_json(), Json::parse(DOC).unwrap());
+    }
+
+    #[test]
+    fn pooled_offsets_roundtrip() {
+        let out = with_pooled_offsets(|offsets| {
+            scan_into(DOC, offsets).unwrap();
+            offsets.root(DOC).get("accuracy").unwrap().as_f64()
+        });
+        assert_eq!(out, Some(0.87));
+        // attach/detach cycle hands back a usable (cleared) buffer
+        let o = detach_offsets();
+        assert_eq!(o.node_count(), 0);
+        attach_offsets(o);
+    }
+
+    #[test]
+    fn detach_doc_matches_rescan() {
+        let record = format!("{{\"doc\":{DOC},\"op\":\"put\",\"extra\":[1,2]}}");
+        let offsets = scan(&record).unwrap();
+        let root = offsets.root(&record);
+        let doc_ref = root.get("doc").unwrap();
+        let detached = doc_ref.detach_doc();
+        let rescanned = Doc::parse(doc_ref.raw()).unwrap();
+        assert_eq!(detached.raw(), rescanned.raw());
+        assert_eq!(detached.to_json(), rescanned.to_json());
+        // field reads work through the rebased spans
+        assert_eq!(detached.str_field("name").as_deref(), Some("resnet_mini"));
+        assert_eq!(detached.f64_field("profiling.p99_ms"), Some(12.5));
+        assert_eq!(detached.get("tags").unwrap().items().count(), 2);
+        // detached root carries no key and no sibling
+        assert!(detached.root().key().is_none());
+        // non-container and escaped-string subtrees detach too
+        let esc = r#"{"s":"a\nb","n":-2.5,"arr":[true,null]}"#;
+        let off2 = scan(esc).unwrap();
+        let r2 = off2.root(esc);
+        assert_eq!(r2.get("s").unwrap().detach_doc().root().as_str().as_deref(), Some("a\nb"));
+        assert_eq!(r2.get("n").unwrap().detach_doc().root().as_f64(), Some(-2.5));
+        let arr = r2.get("arr").unwrap().detach_doc();
+        assert_eq!(arr.to_json(), Json::parse("[true,null]").unwrap());
     }
 
     #[test]

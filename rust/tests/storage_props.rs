@@ -1,10 +1,13 @@
 //! Property/model-based tests of the storage substrate: a random op
 //! sequence applied both to the real Collection and a trivial in-memory
-//! model must agree at every step; GridFS round-trips arbitrary blobs.
+//! model must agree at every step; GridFS round-trips arbitrary blobs;
+//! the segmented WAL replays byte-identically to the legacy
+//! single-file log and recovers cleanly from torn active segments.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
-use mlmodelci::storage::{Collection, GridFs, Query};
+use mlmodelci::storage::{Collection, GridFs, Query, WalOptions};
+use mlmodelci::util::jscan::{self, Doc};
 use mlmodelci::util::json::Json;
 use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop};
 use mlmodelci::util::rng::Rng;
@@ -127,6 +130,142 @@ fn durable_collection_replay_equals_live_state() {
         let doc = coll.get(id).unwrap();
         assert!((doc.f64_field("accuracy").unwrap() - acc).abs() < 1e-12);
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Reference replay of a legacy single-file JSONL log, line by line —
+/// the seed's `Collection::open` semantics, kept here as the oracle for
+/// the segmented path.
+fn legacy_replay(text: &str) -> BTreeMap<String, String> {
+    let mut docs: BTreeMap<String, String> = BTreeMap::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let offsets = jscan::scan(line).unwrap();
+        let root = offsets.root(line);
+        match root.get("op").and_then(|v| v.as_str()).as_deref().unwrap_or("put") {
+            "put" => {
+                let doc = Doc::parse(root.get("doc").unwrap().raw()).unwrap();
+                let id = doc.str_field("_id").unwrap().into_owned();
+                docs.insert(id, doc.raw().to_string());
+            }
+            "del" => {
+                if let Some(id) = root.get("id").and_then(|v| v.as_str()) {
+                    docs.remove(id.as_ref());
+                }
+            }
+            other => panic!("unknown op {other}"),
+        }
+    }
+    docs
+}
+
+/// Differential acceptance test: a legacy single-file log, replayed via
+/// migration into the segmented mmap path, must reconstruct state
+/// byte-identical to the line-by-line legacy oracle.
+#[test]
+fn segmented_replay_is_byte_identical_to_legacy_single_file() {
+    let dir = std::env::temp_dir().join(format!("mlci-diff-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // build a legacy log the way the seed writer did: puts, updates
+    // (re-puts), deletes, escaped ids, blank lines
+    let mut rng = Rng::new(4242);
+    let mut log = String::new();
+    let mut live_ids: Vec<String> = Vec::new();
+    for i in 0..400 {
+        let roll = rng.usize(0, 10);
+        if roll < 6 || live_ids.is_empty() {
+            let id = if i % 7 == 0 { format!("we\"ird\n{i}") } else { format!("{i:024}") };
+            let doc = Json::obj()
+                .with("_id", id.as_str())
+                .with("name", format!("m{i}"))
+                .with("accuracy", rng.f64())
+                .with("tags", Json::Arr(vec![Json::Str("a".into()), Json::Num(i as f64)]));
+            log.push_str(&format!("{{\"doc\":{},\"op\":\"put\"}}\n", doc.to_string()));
+            live_ids.push(id);
+        } else if roll < 8 {
+            // re-put (what update/replace append)
+            let id = live_ids[rng.usize(0, live_ids.len())].clone();
+            let doc = Json::obj().with("_id", id.as_str()).with("rev", i as i64);
+            log.push_str(&format!("{{\"doc\":{},\"op\":\"put\"}}\n", doc.to_string()));
+        } else {
+            let pos = rng.usize(0, live_ids.len());
+            let id = live_ids.swap_remove(pos);
+            let mut rec = String::from("{\"id\":");
+            jscan::write_escaped(&mut rec, &id);
+            rec.push_str(",\"op\":\"del\"}");
+            log.push_str(&rec);
+            log.push('\n');
+        }
+        if i % 90 == 0 {
+            log.push('\n'); // blank lines are tolerated by the seed reader
+        }
+    }
+    let oracle = legacy_replay(&log);
+    assert!(oracle.len() > 50, "oracle should end up with plenty of live docs");
+
+    std::fs::write(dir.join("diff.jsonl"), &log).unwrap();
+    // tiny segments force the migrated log through real multi-segment
+    // compaction/rotation behavior on subsequent writes; replay of the
+    // migrated file itself exercises the mmap scan path
+    let opts = WalOptions { segment_bytes: 4096, replay_threads: 0 };
+    let coll = Collection::open_with(&dir, "diff", opts).unwrap();
+
+    assert_eq!(coll.len(), oracle.len());
+    for doc in coll.all() {
+        let id = doc.str_field("_id").unwrap().into_owned();
+        let want = oracle.get(&id).unwrap_or_else(|| panic!("unexpected doc {id}"));
+        assert_eq!(doc.raw(), want.as_str(), "raw text differs for {id}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash recovery: a multi-segment log whose active segment is
+/// truncated mid-record must replay the sealed prefix plus every
+/// complete record of the active segment, dropping only the torn tail.
+#[test]
+fn truncated_active_wal_segment_recovers_sealed_prefix() {
+    let dir = std::env::temp_dir().join(format!("mlci-crash-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = WalOptions { segment_bytes: 512, replay_threads: 0 };
+    let n_docs = 40usize;
+    {
+        let mut coll = Collection::open_with(&dir, "crash", opts.clone()).unwrap();
+        for i in 0..n_docs {
+            coll.insert(Json::obj().with("_id", format!("{i:024}")).with("i", i as i64)).unwrap();
+        }
+    }
+    // find the active (highest-sequence) segment and tear its tail
+    let wal_dir = dir.join("crash.wal");
+    let mut segs: Vec<_> = std::fs::read_dir(&wal_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map(|x| x == "jsonl").unwrap_or(false))
+        .collect();
+    segs.sort();
+    assert!(segs.len() > 3, "want a real multi-segment log, got {}", segs.len());
+    let active = segs.last().unwrap();
+    let bytes = std::fs::read(active).unwrap();
+    assert!(bytes.len() > 10);
+    std::fs::write(active, &bytes[..bytes.len() - 7]).unwrap();
+
+    let coll = Collection::open_with(&dir, "crash", opts.clone()).unwrap();
+    assert_eq!(coll.len(), n_docs - 1, "exactly the torn final record is lost");
+    for i in 0..n_docs - 1 {
+        let id = format!("{i:024}");
+        assert_eq!(
+            coll.get(&id).expect("sealed-prefix doc missing").i64_field("i"),
+            Some(i as i64)
+        );
+    }
+    assert!(coll.get(&format!("{:024}", n_docs - 1)).is_none());
+    drop(coll);
+    // recovery is stable: a second open sees the identical state
+    let again = Collection::open_with(&dir, "crash", opts).unwrap();
+    assert_eq!(again.len(), n_docs - 1);
     std::fs::remove_dir_all(&dir).ok();
 }
 
