@@ -55,9 +55,10 @@ pub fn parse_args(argv: &[String]) -> Result<Args, String> {
 pub fn usage() -> String {
     "usage: mlmodelci <command> [flags]\n\
      commands:\n\
-     \x20 serve      start the REST API server (--addr, --artifacts, --data)\n\
+     \x20 serve      start the REST API server: /api/v1 + legacy aliases\n\
+     \x20            (--addr, --artifacts, --data)\n\
      \x20 publish    register + convert + profile a model (--yaml, --weights)\n\
-     \x20 list       list models (--status, --task, --name)\n\
+     \x20 list       list models (--status, --task, --name, --limit, --cursor)\n\
      \x20 profile    (re)profile a model (--name)\n\
      \x20 deploy     deploy a model as MLaaS (--name, --system, --device, --format)\n\
      \x20 recommend  cost-effective deployment under an SLO (--name, --p99)\n\
@@ -80,6 +81,10 @@ impl Args {
 
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
     }
 }
 
@@ -112,6 +117,10 @@ mod tests {
         let args = parse_args(&argv(&["recommend", "--p99", "50.5"])).unwrap();
         assert_eq!(args.get_f64("p99", 0.0), 50.5);
         assert_eq!(args.get_f64("missing", 7.0), 7.0);
+        let args = parse_args(&argv(&["list", "--limit", "25", "--cursor", "abc"])).unwrap();
+        assert_eq!(args.get_usize("limit"), Some(25));
+        assert_eq!(args.get_usize("cursor"), None, "non-numeric flag");
+        assert_eq!(args.get_usize("missing"), None);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Structured API errors: one machine-readable envelope for every
+//! endpoint (v1 and legacy aliases alike).
+//!
+//! Every non-2xx response body is
+//!
+//! ```json
+//! {"code": "<documented code>", "message": "<human text>", "detail": {...}?}
+//! ```
+//!
+//! `code` is the stable, machine-matchable part (documented in
+//! `docs/API.md`); `message` is free text for humans; `detail` is an
+//! optional structured payload (e.g. the `allow` list on 405). Handlers
+//! return `Result<Response, ApiError>` and the router renders the `Err`
+//! arm, so the envelope shape cannot drift per endpoint.
+
+use crate::util::json::Json;
+
+use super::http::Response;
+
+/// The documented error taxonomy. `as_str` values are frozen API
+/// surface — extend the enum, never repurpose a string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed request (unreadable body, missing required field,
+    /// bad base64, bad route arg).
+    BadRequest,
+    /// Body is not valid JSON.
+    InvalidJson,
+    /// JSON was well-formed but the content failed validation
+    /// (out-of-range limit, guarded field, wrong input arity).
+    Validation,
+    /// No resource at this id/name.
+    NotFound,
+    /// The path exists but not with this method.
+    MethodNotAllowed,
+    /// The request conflicts with current resource state
+    /// (duplicate name, illegal status transition).
+    Conflict,
+    /// The backend failed; retrying may help.
+    Internal,
+    /// The platform is shutting down or a subsystem is unavailable.
+    Unavailable,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::InvalidJson => "invalid_json",
+            ErrorCode::Validation => "validation_failed",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::Conflict => "conflict",
+            ErrorCode::Internal => "internal",
+            ErrorCode::Unavailable => "unavailable",
+        }
+    }
+
+    pub fn status(&self) -> u16 {
+        match self {
+            ErrorCode::BadRequest | ErrorCode::InvalidJson => 400,
+            ErrorCode::Validation => 422,
+            ErrorCode::NotFound => 404,
+            ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::Conflict => 409,
+            ErrorCode::Internal => 500,
+            ErrorCode::Unavailable => 503,
+        }
+    }
+
+    /// Every documented code (envelope-conformance tests iterate this).
+    pub fn all() -> &'static [ErrorCode] {
+        &[
+            ErrorCode::BadRequest,
+            ErrorCode::InvalidJson,
+            ErrorCode::Validation,
+            ErrorCode::NotFound,
+            ErrorCode::MethodNotAllowed,
+            ErrorCode::Conflict,
+            ErrorCode::Internal,
+            ErrorCode::Unavailable,
+        ]
+    }
+}
+
+/// A structured API error, renderable as the response envelope.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+    pub detail: Option<Json>,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into(), detail: None }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn invalid_json(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::InvalidJson, message)
+    }
+
+    pub fn validation(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::Validation, message)
+    }
+
+    pub fn not_found(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::NotFound, message)
+    }
+
+    pub fn conflict(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::Conflict, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::Internal, message)
+    }
+
+    pub fn unavailable(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::Unavailable, message)
+    }
+
+    /// 405 with the allowed methods in `detail.allow`.
+    pub fn method_not_allowed(allow: &[&str]) -> ApiError {
+        let list: Vec<Json> = allow.iter().map(|m| Json::Str(m.to_string())).collect();
+        ApiError::new(ErrorCode::MethodNotAllowed, "method not allowed for this path")
+            .with_detail(Json::obj().with("allow", Json::Arr(list)))
+    }
+
+    pub fn with_detail(mut self, detail: Json) -> ApiError {
+        self.detail = Some(detail);
+        self
+    }
+
+    /// Map an `anyhow` chain coming out of the platform layers onto the
+    /// taxonomy. The storage/hub layers report missing resources and
+    /// state conflicts as text (`anyhow!`-built chains without typed
+    /// variants), so classification matches on the exact phrasings the
+    /// hub/housekeeper use — deliberately narrow: only messages that
+    /// unambiguously name a client-addressable resource or request
+    /// problem get a 4xx; anything unrecognized stays `internal` (a
+    /// backend failure must not masquerade as "your request was
+    /// wrong"). Handlers with more context raise typed errors directly.
+    pub fn from_platform(err: &anyhow::Error) -> ApiError {
+        let text = format!("{err:#}");
+        let code = if text.contains("no model with id") || text.contains("no model named") {
+            ErrorCode::NotFound
+        } else if text.contains("already registered") || text.contains("illegal status transition") {
+            ErrorCode::Conflict
+        } else if text.contains("cannot be updated") || text.contains("must be an object") {
+            ErrorCode::Validation
+        } else if text.contains("registration YAML") {
+            ErrorCode::BadRequest
+        } else {
+            ErrorCode::Internal
+        };
+        ApiError::new(code, text)
+    }
+
+    /// Render the envelope (`{code, message, detail?}`) at the code's
+    /// canonical status.
+    pub fn to_response(&self) -> Response {
+        let mut body = Json::obj()
+            .with("code", self.code.as_str())
+            .with("message", self.message.as_str());
+        if let Some(detail) = &self.detail {
+            body = body.with("detail", detail.clone());
+        }
+        Response::json(self.code.status(), &body)
+    }
+}
+
+impl From<anyhow::Error> for ApiError {
+    fn from(err: anyhow::Error) -> ApiError {
+        ApiError::from_platform(&err)
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_shape_and_status() {
+        let resp = ApiError::validation("limit must be <= 500").to_response();
+        assert_eq!(resp.status, 422);
+        let body = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(body.get("code").unwrap().as_str(), Some("validation_failed"));
+        assert_eq!(body.get("message").unwrap().as_str(), Some("limit must be <= 500"));
+        assert!(body.get("detail").is_none());
+    }
+
+    #[test]
+    fn method_not_allowed_carries_allow_list() {
+        let resp = ApiError::method_not_allowed(&["GET", "POST"]).to_response();
+        assert_eq!(resp.status, 405);
+        let body = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let allow = body.get("detail").unwrap().get("allow").unwrap().as_arr().unwrap();
+        assert_eq!(allow.len(), 2);
+        assert_eq!(allow[0].as_str(), Some("GET"));
+    }
+
+    #[test]
+    fn platform_errors_classify() {
+        let nf = ApiError::from_platform(&anyhow::anyhow!("no model with id 'x'"));
+        assert_eq!(nf.code, ErrorCode::NotFound);
+        let conflict = ApiError::from_platform(&anyhow::anyhow!("model 'm' is already registered"));
+        assert_eq!(conflict.code, ErrorCode::Conflict);
+        let transition =
+            ApiError::from_platform(&anyhow::anyhow!("illegal status transition registered -> profiled for model x"));
+        assert_eq!(transition.code, ErrorCode::Conflict);
+        let guarded = ApiError::from_platform(&anyhow::anyhow!("field 'status' cannot be updated through the housekeeper"));
+        assert_eq!(guarded.code, ErrorCode::Validation);
+        let other = ApiError::from_platform(&anyhow::anyhow!("disk on fire"));
+        assert_eq!(other.code, ErrorCode::Internal);
+        // backend/config gaps must not masquerade as client errors
+        let manifest = ApiError::from_platform(&anyhow::anyhow!("unknown model 'y' in manifest"));
+        assert_eq!(manifest.code, ErrorCode::Internal);
+        let missing = ApiError::from_platform(&anyhow::anyhow!("artifact missing for family z"));
+        assert_eq!(missing.code, ErrorCode::Internal);
+    }
+
+    #[test]
+    fn all_codes_have_distinct_strings_and_statuses() {
+        let mut seen = std::collections::HashSet::new();
+        for code in ErrorCode::all() {
+            assert!(seen.insert(code.as_str()), "duplicate code string");
+            assert!((400..=599).contains(&code.status()));
+        }
+    }
+}

@@ -34,13 +34,58 @@ impl Request {
         String::from_utf8_lossy(&self.body).into_owned()
     }
 
-    /// Parse a query parameter.
-    pub fn query_param(&self, key: &str) -> Option<&str> {
+    /// Parse a query parameter, percent-decoding the value (`%2D` ->
+    /// `-`, `+` -> space) so filters like `?name=resnet%2D50` work.
+    /// Keys are decoded too before matching.
+    pub fn query_param(&self, key: &str) -> Option<String> {
         self.query.split('&').find_map(|kv| {
             let (k, v) = kv.split_once('=')?;
-            (k == key).then_some(v)
+            (percent_decode(k) == key).then(|| percent_decode(v))
         })
     }
+}
+
+/// Decode `%XX` escapes and `+`-as-space in a query component. Invalid
+/// or truncated escapes pass through verbatim (never an error — a query
+/// string is user input, not a protocol frame); decoded bytes are
+/// reassembled lossily as UTF-8.
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 2 < bytes.len() => {
+                let hex = |b: u8| -> Option<u8> {
+                    match b {
+                        b'0'..=b'9' => Some(b - b'0'),
+                        b'a'..=b'f' => Some(b - b'a' + 10),
+                        b'A'..=b'F' => Some(b - b'A' + 10),
+                        _ => None,
+                    }
+                };
+                match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                    (Some(hi), Some(lo)) => {
+                        out.push(hi * 16 + lo);
+                        i += 3;
+                    }
+                    _ => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
 }
 
 /// Response under construction.
@@ -69,25 +114,39 @@ impl Response {
         Response { status, content_type: "text/plain; charset=utf-8", body: body.as_bytes().to_vec() }
     }
 
+    /// Substrate-level errors (unreadable request, no route) use the
+    /// same `{code, message}` envelope as the typed API layer
+    /// (`api::error`) so every non-2xx body on the wire conforms.
+    fn envelope(status: u16, code: &str, msg: &str) -> Response {
+        Response::json(
+            status,
+            &crate::util::json::Json::obj().with("code", code).with("message", msg),
+        )
+    }
+
     pub fn not_found() -> Response {
-        Response::json(404, &crate::util::json::Json::obj().with("error", "not found"))
+        Response::envelope(404, "not_found", "not found")
     }
 
     pub fn bad_request(msg: &str) -> Response {
-        Response::json(400, &crate::util::json::Json::obj().with("error", msg))
+        Response::envelope(400, "bad_request", msg)
     }
 
     pub fn error(msg: &str) -> Response {
-        Response::json(500, &crate::util::json::Json::obj().with("error", msg))
+        Response::envelope(500, "internal", msg)
     }
 
     fn status_text(&self) -> &'static str {
         match self.status {
             200 => "OK",
             201 => "Created",
+            202 => "Accepted",
+            204 => "No Content",
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            409 => "Conflict",
+            422 => "Unprocessable Entity",
             503 => "Service Unavailable",
             _ => "Internal Server Error",
         }
@@ -273,9 +332,26 @@ mod tests {
             body: vec![],
         };
         assert_eq!(req.segments(), vec!["models", "abc", "profiles"]);
-        assert_eq!(req.query_param("status"), Some("serving"));
-        assert_eq!(req.query_param("limit"), Some("5"));
+        assert_eq!(req.query_param("status").as_deref(), Some("serving"));
+        assert_eq!(req.query_param("limit").as_deref(), Some("5"));
         assert_eq!(req.query_param("missing"), None);
+    }
+
+    #[test]
+    fn query_params_percent_decode() {
+        let req = Request {
+            method: "GET".into(),
+            path: "/models".into(),
+            query: "name=resnet%2D50&task=image+classification&raw%20key=x&bad=100%2G&tail=a%2D".into(),
+            headers: Default::default(),
+            body: vec![],
+        };
+        assert_eq!(req.query_param("name").as_deref(), Some("resnet-50"));
+        assert_eq!(req.query_param("task").as_deref(), Some("image classification"));
+        assert_eq!(req.query_param("raw key").as_deref(), Some("x"), "keys decode too");
+        assert_eq!(req.query_param("bad").as_deref(), Some("100%2G"), "invalid escape passes through");
+        assert_eq!(req.query_param("tail").as_deref(), Some("a-"), "escape at end of value");
+        assert_eq!(percent_decode("%e2%82%ac"), "\u{20ac}", "multi-byte UTF-8 reassembles");
     }
 
     #[test]

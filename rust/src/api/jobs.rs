@@ -1,0 +1,398 @@
+//! Asynchronous job resources for the v1 API (§3.7 alignment): the
+//! paper's controller performs *background* evaluation on idle workers,
+//! so the REST surface must not block an HTTP handler on conversion or
+//! a profiling drain. `POST /api/v1/models/{id}/convert|profile`
+//! submits work here and answers `202 Accepted` with a job id; clients
+//! poll `GET /api/v1/jobs/{id}` through `pending -> running ->
+//! succeeded|failed`, with the conversion/profiling report carried in
+//! the terminal payload.
+//!
+//! The registry owns one background worker thread that executes jobs
+//! strictly in submission order. Serial execution is deliberate: both
+//! job kinds drive shared platform state (the controller's single job
+//! queue and `flush_results` accumulator, the hub's status machine),
+//! so one worker keeps job-vs-job interleavings out entirely. Drains
+//! from *outside* the registry (the legacy synchronous profile route,
+//! `publish`, the CLI) are serialized against jobs by the controller's
+//! drain gate (`Controller::exclusive_drain`), which every
+//! `Platform::profile_sync` session holds end-to-end. Elastic
+//! parallelism lives *inside* a job — the controller fans a profiling
+//! grid out across every idle device per tick. Terminal jobs are kept
+//! for polling up to [`MAX_RETAINED_JOBS`], then evicted oldest-first.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::util::clock::SharedClock;
+use crate::util::idgen;
+use crate::util::json::Json;
+
+/// What a job does (frozen API strings, see `docs/API.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    Convert,
+    Profile,
+}
+
+impl JobKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobKind::Convert => "convert",
+            JobKind::Profile => "profile",
+        }
+    }
+}
+
+/// Lifecycle of a job (frozen API strings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Pending => "pending",
+            JobState::Running => "running",
+            JobState::Succeeded => "succeeded",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Succeeded | JobState::Failed)
+    }
+}
+
+/// One job resource. Snapshots of this render as the API body.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: String,
+    pub kind: JobKind,
+    pub model_id: String,
+    pub state: JobState,
+    pub created_ms: f64,
+    pub started_ms: Option<f64>,
+    pub finished_ms: Option<f64>,
+    /// Terminal payload of a succeeded job (e.g. `profiles_recorded`).
+    pub result: Option<Json>,
+    /// Terminal error text of a failed job.
+    pub error: Option<String>,
+}
+
+impl Job {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("id", self.id.as_str())
+            .with("kind", self.kind.as_str())
+            .with("model_id", self.model_id.as_str())
+            .with("state", self.state.as_str())
+            .with("created_ms", self.created_ms);
+        if let Some(t) = self.started_ms {
+            j = j.with("started_ms", t);
+        }
+        if let Some(t) = self.finished_ms {
+            j = j.with("finished_ms", t);
+        }
+        if let Some(result) = &self.result {
+            j = j.with("result", result.clone());
+        }
+        if let Some(error) = &self.error {
+            j = j.with("error", error.as_str());
+        }
+        j
+    }
+}
+
+/// The work a job performs; the returned `Json` becomes the terminal
+/// `result` payload.
+pub type Work = Box<dyn FnOnce() -> Result<Json> + Send + 'static>;
+
+/// Retention cap: once the registry holds more jobs than this, the
+/// oldest *terminal* jobs are evicted on submit (pending/running jobs
+/// are never evicted). Bounds a long-lived server's memory; clients
+/// polling a terminal job have this much history to read it.
+pub const MAX_RETAINED_JOBS: usize = 1024;
+
+struct WorkQueue {
+    queue: VecDeque<(String, Work)>,
+    stop: bool,
+}
+
+struct Inner {
+    jobs: Mutex<BTreeMap<String, Job>>,
+    work: Mutex<WorkQueue>,
+    signal: Condvar,
+    clock: SharedClock,
+}
+
+impl Inner {
+    fn set_running(&self, id: &str) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(id) {
+            job.state = JobState::Running;
+            job.started_ms = Some(self.clock.now_ms());
+        }
+    }
+
+    fn finish(&self, id: &str, outcome: Result<Json>) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(id) {
+            job.finished_ms = Some(self.clock.now_ms());
+            match outcome {
+                Ok(result) => {
+                    job.state = JobState::Succeeded;
+                    job.result = Some(result);
+                }
+                Err(err) => {
+                    job.state = JobState::Failed;
+                    job.error = Some(format!("{err:#}"));
+                }
+            }
+        }
+    }
+}
+
+/// Registry + single worker thread. Owned by the platform; REST
+/// handlers submit closures and read snapshots.
+pub struct JobRegistry {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl JobRegistry {
+    pub fn new(clock: SharedClock) -> JobRegistry {
+        let inner = Arc::new(Inner {
+            jobs: Mutex::new(BTreeMap::new()),
+            work: Mutex::new(WorkQueue { queue: VecDeque::new(), stop: false }),
+            signal: Condvar::new(),
+            clock,
+        });
+        let worker_inner = inner.clone();
+        let handle = std::thread::Builder::new()
+            .name("api-jobs".into())
+            .spawn(move || loop {
+                let task = {
+                    let mut guard = worker_inner.work.lock().unwrap();
+                    loop {
+                        if let Some(task) = guard.queue.pop_front() {
+                            break task;
+                        }
+                        if guard.stop {
+                            return;
+                        }
+                        guard = worker_inner.signal.wait(guard).unwrap();
+                    }
+                };
+                let (id, work) = task;
+                worker_inner.set_running(&id);
+                let outcome = work();
+                worker_inner.finish(&id, outcome);
+            })
+            .expect("spawn api-jobs worker");
+        JobRegistry { inner, worker: Mutex::new(Some(handle)) }
+    }
+
+    /// Submit a job; returns its id immediately (202 semantics).
+    pub fn submit(&self, kind: JobKind, model_id: &str, work: Work) -> Result<String> {
+        let id = idgen::object_id();
+        let job = Job {
+            id: id.clone(),
+            kind,
+            model_id: model_id.to_string(),
+            state: JobState::Pending,
+            created_ms: self.inner.clock.now_ms(),
+            started_ms: None,
+            finished_ms: None,
+            result: None,
+            error: None,
+        };
+        {
+            let mut wq = self.inner.work.lock().unwrap();
+            if wq.stop {
+                anyhow::bail!("job registry is shut down");
+            }
+            let mut jobs = self.inner.jobs.lock().unwrap();
+            jobs.insert(id.clone(), job);
+            // evict oldest terminal jobs past the retention cap
+            while jobs.len() > MAX_RETAINED_JOBS {
+                let Some(evict) = jobs
+                    .iter()
+                    .find(|(_, j)| j.state.is_terminal())
+                    .map(|(evict_id, _)| evict_id.clone())
+                else {
+                    break; // everything live — nothing evictable
+                };
+                jobs.remove(&evict);
+            }
+            wq.queue.push_back((id.clone(), work));
+        }
+        self.inner.signal.notify_all();
+        Ok(id)
+    }
+
+    /// Snapshot one job.
+    pub fn get(&self, id: &str) -> Option<Job> {
+        self.inner.jobs.lock().unwrap().get(id).cloned()
+    }
+
+    /// Snapshot jobs in creation order (ids are creation-sortable),
+    /// optionally only those strictly after `after` — the same cursor
+    /// contract as the model list.
+    pub fn list(&self, after: Option<&str>, limit: usize) -> (Vec<Job>, Option<String>) {
+        let jobs = self.inner.jobs.lock().unwrap();
+        let mut out: Vec<Job> = Vec::new();
+        let mut more = false;
+        for (id, job) in jobs.iter() {
+            if let Some(cursor) = after {
+                if id.as_str() <= cursor {
+                    continue;
+                }
+            }
+            if out.len() == limit {
+                more = true;
+                break;
+            }
+            out.push(job.clone());
+        }
+        let next = if more { out.last().map(|j| j.id.clone()) } else { None };
+        (out, next)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.jobs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Poll until the job reaches a terminal state (tests, CLI).
+    pub fn wait_terminal(&self, id: &str, timeout_ms: u64) -> Option<Job> {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(timeout_ms);
+        loop {
+            match self.get(id) {
+                Some(job) if job.state.is_terminal() => return Some(job),
+                None => return None,
+                _ => {}
+            }
+            if std::time::Instant::now() >= deadline {
+                return self.get(id);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    /// Stop the worker after draining already-queued jobs. Jobs
+    /// submitted after this fail fast.
+    pub fn shutdown(&self) {
+        {
+            let mut wq = self.inner.work.lock().unwrap();
+            wq.stop = true;
+        }
+        self.inner.signal.notify_all();
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for JobRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::wall;
+
+    #[test]
+    fn lifecycle_pending_running_succeeded_with_payload() {
+        let reg = JobRegistry::new(wall());
+        // gate the first job so the second one is observably pending
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let gated = reg
+            .submit(
+                JobKind::Profile,
+                "model-a",
+                Box::new(move || {
+                    rx.recv().ok();
+                    Ok(Json::obj().with("profiles_recorded", 3usize))
+                }),
+            )
+            .unwrap();
+        let queued = reg
+            .submit(JobKind::Convert, "model-b", Box::new(|| Ok(Json::obj().with("validated", true))))
+            .unwrap();
+
+        // the worker picks up the gated job; the second stays pending
+        let t0 = std::time::Instant::now();
+        while reg.get(&gated).unwrap().state == JobState::Pending {
+            assert!(t0.elapsed().as_secs() < 5, "worker never started the job");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(reg.get(&gated).unwrap().state, JobState::Running);
+        assert_eq!(reg.get(&queued).unwrap().state, JobState::Pending);
+
+        tx.send(()).unwrap();
+        let done = reg.wait_terminal(&gated, 5_000).unwrap();
+        assert_eq!(done.state, JobState::Succeeded);
+        assert_eq!(done.result.unwrap().get("profiles_recorded").unwrap().as_i64(), Some(3));
+        assert!(done.started_ms.is_some() && done.finished_ms.is_some());
+
+        let done2 = reg.wait_terminal(&queued, 5_000).unwrap();
+        assert_eq!(done2.state, JobState::Succeeded);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn failures_record_error_text() {
+        let reg = JobRegistry::new(wall());
+        let id = reg
+            .submit(JobKind::Convert, "m", Box::new(|| Err(anyhow::anyhow!("artifact missing"))))
+            .unwrap();
+        let job = reg.wait_terminal(&id, 5_000).unwrap();
+        assert_eq!(job.state, JobState::Failed);
+        assert!(job.error.unwrap().contains("artifact missing"));
+        let rendered = reg.get(&id).unwrap().to_json();
+        assert_eq!(rendered.get("state").unwrap().as_str(), Some("failed"));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn list_pages_by_cursor_and_shutdown_rejects_new_work() {
+        let reg = JobRegistry::new(wall());
+        let mut ids = Vec::new();
+        for i in 0..5 {
+            let id = reg
+                .submit(JobKind::Profile, &format!("m{i}"), Box::new(|| Ok(Json::obj())))
+                .unwrap();
+            ids.push(id);
+        }
+        let (page1, next) = reg.list(None, 2);
+        assert_eq!(page1.len(), 2);
+        let cursor = next.expect("more pages");
+        assert_eq!(cursor, page1[1].id);
+        let (page2, _) = reg.list(Some(&cursor), 10);
+        assert_eq!(page2.len(), 3);
+        let mut all: Vec<String> = page1.iter().chain(page2.iter()).map(|j| j.id.clone()).collect();
+        all.sort();
+        let mut expect = ids.clone();
+        expect.sort();
+        assert_eq!(all, expect, "pages partition the job set");
+
+        reg.shutdown();
+        assert!(reg.submit(JobKind::Convert, "late", Box::new(|| Ok(Json::obj()))).is_err());
+        // already-submitted jobs drained before the worker exited
+        for id in &ids {
+            assert!(reg.get(id).unwrap().state.is_terminal());
+        }
+    }
+}

@@ -1,7 +1,11 @@
-//! API layer: HTTP server substrate, REST routes, CLI, Table-1 feature
-//! matrix.
+//! API layer: HTTP server substrate, declarative router, structured
+//! errors, async job resources, versioned REST routes, CLI, Table-1
+//! feature matrix.
 
 pub mod cli;
+pub mod error;
 pub mod features;
 pub mod http;
+pub mod jobs;
 pub mod rest;
+pub mod router;

@@ -1,215 +1,341 @@
 //! RESTful API (§1: "a well-designed command line toolkit and web
-//! interface") — the routes the paper's web UI (Figure 4a) sits on.
+//! interface") — the versioned, typed surface over the platform.
 //!
-//! Routes:
-//!   GET    /health                     — liveness
-//!   GET    /models                     — list (query: name, task, status)
-//!   POST   /models                     — register {yaml, weights_b64}
-//!   GET    /models/{id}                — full document
-//!   PUT    /models/{id}                — update basic info
-//!   DELETE /models/{id}                — delete
-//!   POST   /models/{id}/convert        — run conversion now
-//!   POST   /models/{id}/profile        — enqueue profiling grid
-//!   POST   /models/{id}/deploy         — deploy {system, device?, format?, frontend?}
-//!   GET    /models/{id}/recommend?p99= — cost-effective deployment choice
-//!   POST   /services/{name}:infer      — inference {input: [...]}
-//!   GET    /services                   — running services + stats
-//!   GET    /metrics                    — prometheus-style exposition
+//! Everything lives under `/api/v1` (see `docs/API.md`); the unprefixed
+//! paths the original web UI used remain as thin legacy aliases. The
+//! route table is declarative ([`super::router`]), errors are one
+//! structured envelope ([`super::error`]), list endpoints paginate by
+//! creation-ordered cursor, and the long-running verbs are *job
+//! resources*: `POST /api/v1/models/{id}/convert|profile` answer `202
+//! Accepted` immediately and the controller drains in the background
+//! ([`super::jobs`]) — the paper's elastic offline evaluation, no
+//! longer serialized into an HTTP handler.
+//!
+//! ```text
+//! GET    /api/v1/health                      liveness
+//! GET    /api/v1/metrics                     exporter + monitor + per-route metrics
+//! GET    /api/v1/models                      paged summaries {items, next_cursor}
+//!                                            (?name= ?task= ?status= ?limit= ?cursor=)
+//! POST   /api/v1/models                      register {yaml, weights_b64} -> 201
+//! GET    /api/v1/models/{id}                 stored document, verbatim
+//! PUT    /api/v1/models/{id}                 update basic info (guarded fields 422)
+//! DELETE /api/v1/models/{id}                 delete
+//! POST   /api/v1/models/{id}/convert         -> 202 {job_id}
+//! POST   /api/v1/models/{id}/profile         -> 202 {job_id}
+//! POST   /api/v1/models/{id}/deploy          deploy -> 201
+//! GET    /api/v1/models/{id}/recommend?p99=  cost-effective placement
+//! GET    /api/v1/services                    paged service stats
+//! POST   /api/v1/services/{name}:infer       inference
+//! GET    /api/v1/jobs                        paged job listing
+//! GET    /api/v1/jobs/{id}                   job state + terminal report
+//! ```
+//!
+//! Legacy aliases (`/health`, `/metrics`, `/models...`, `/services...`)
+//! keep their original response shapes — unpaged arrays, synchronous
+//! convert/profile — so pre-v1 clients and the examples keep working.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
-use std::borrow::Cow;
-
-use crate::controller::Placement;
+use crate::controller::summarize_events;
 use crate::dispatcher::DeploymentSpec;
 use crate::profiler::example_input;
 use crate::runtime::{DType, Tensor};
-use crate::serving::{Frontend, ALL_SYSTEMS};
+use crate::serving::Frontend;
 use crate::util::base64;
 use crate::util::jscan::{self, Kind};
 use crate::util::json::Json;
 use crate::workflow::Platform;
 
+use super::error::ApiError;
 use super::http::{Request, Response};
+use super::jobs::JobKind;
+use super::router::{query_f64, query_usize, with_json_body, Params, Router};
+
+/// Default / maximum page sizes for the v1 list endpoints.
+const DEFAULT_LIMIT: usize = 50;
+const MAX_LIMIT: usize = 500;
+
+/// The process-wide route table (handlers are stateless fns over the
+/// platform, so one table serves every `Platform` instance; per-route
+/// metrics aggregate across them).
+static ROUTER: OnceLock<Router<Arc<Platform>>> = OnceLock::new();
 
 /// Route a request against the platform.
 pub fn route(platform: &Arc<Platform>, req: &Request) -> Response {
-    let segs = req.segments();
-    match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["health"]) => Response::json(200, &Json::obj().with("ok", true)),
-        ("GET", ["metrics"]) => {
-            // scrape on demand so the exposition is always fresh
-            platform.exporter.scrape();
-            platform.monitor.scrape();
-            let mut text = platform.exporter.expose();
-            text.push_str(&platform.monitor.expose());
-            Response::text(200, &text)
-        }
-        ("GET", ["models"]) => list_models(platform, req),
-        ("POST", ["models"]) => register_model(platform, req),
-        // stored raw text goes out verbatim — no tree, no re-encoding
-        ("GET", ["models", id]) => match platform.hub.get_raw(id) {
-            Ok(raw) => Response::raw_json(200, raw),
-            Err(_) => Response::not_found(),
-        },
-        ("PUT", ["models", id]) => match Json::parse(&req.body_text()) {
-            Ok(fields) => match platform.housekeeper.update(id, &fields) {
-                Ok(()) => Response::json(200, &Json::obj().with("updated", true)),
-                Err(e) => Response::bad_request(&format!("{e:#}")),
-            },
-            Err(e) => Response::bad_request(&format!("{e}")),
-        },
-        ("DELETE", ["models", id]) => match platform.housekeeper.delete(id) {
-            Ok(true) => Response::json(200, &Json::obj().with("deleted", true)),
-            Ok(false) => Response::not_found(),
-            Err(e) => Response::error(&format!("{e:#}")),
-        },
-        ("POST", ["models", id, "convert"]) => {
-            match platform.converter.convert(&platform.hub, id, platform.config.auto_batches.as_deref()) {
-                Ok(report) => Response::json(
-                    200,
-                    &Json::obj()
-                        .with("validated", report.all_validated())
-                        .with("variants", report.variants.len())
-                        .with("total_ms", report.total_ms),
-                ),
-                Err(e) => Response::bad_request(&format!("{e:#}")),
-            }
-        }
-        ("POST", ["models", id, "profile"]) => profile_model(platform, id),
-        ("POST", ["models", id, "deploy"]) => deploy_model(platform, id, req),
-        ("GET", ["models", id, "recommend"]) => {
-            let slo: f64 = req.query_param("p99").and_then(|v| v.parse().ok()).unwrap_or(1e9);
-            match platform.controller.recommend_deployment(id, slo) {
-                Ok(Some(rec)) => Response::json(200, &rec),
-                Ok(None) => Response::json(200, &Json::obj().with("recommendation", Json::Null)),
-                Err(e) => Response::bad_request(&format!("{e:#}")),
-            }
-        }
-        ("GET", ["services"]) => {
-            let stats = platform.monitor.service_stats(10_000.0);
-            let items: Vec<Json> = stats
-                .iter()
-                .map(|s| {
-                    Json::obj()
-                        .with("name", s.name.as_str())
-                        .with("device", s.device.as_str())
-                        .with("requests_total", s.requests_total)
-                        .with("throughput_rps", s.throughput_rps.unwrap_or(0.0))
-                        .with("queue_depth", s.queue_depth)
-                        .with("memory_mib", s.memory_mib)
-                })
-                .collect();
-            Response::json(200, &Json::Arr(items))
-        }
-        ("POST", ["services", rest]) if rest.ends_with(":infer") => {
-            let name = rest.trim_end_matches(":infer");
-            infer(platform, name, req)
-        }
-        _ => Response::not_found(),
-    }
+    ROUTER.get_or_init(api_router).dispatch(platform, req)
 }
 
-fn list_models(platform: &Arc<Platform>, req: &Request) -> Response {
+/// Build the declarative v1 + legacy route table.
+pub fn api_router() -> Router<Arc<Platform>> {
+    Router::new()
+        // ---- v1 surface ----
+        .get("/api/v1/health", h_health)
+        .get("/api/v1/metrics", h_metrics)
+        .get("/api/v1/models", h_list_models_v1)
+        .post("/api/v1/models", h_register)
+        .get("/api/v1/models/{id}", h_get_model)
+        .put("/api/v1/models/{id}", h_update_model)
+        .delete("/api/v1/models/{id}", h_delete_model)
+        .post("/api/v1/models/{id}/convert", h_convert_job)
+        .post("/api/v1/models/{id}/profile", h_profile_job)
+        .post("/api/v1/models/{id}/deploy", h_deploy)
+        .get("/api/v1/models/{id}/recommend", h_recommend)
+        .get("/api/v1/services", h_services_v1)
+        .post("/api/v1/services/{name}:infer", h_infer)
+        .get("/api/v1/jobs", h_jobs_list)
+        .get("/api/v1/jobs/{id}", h_job_get)
+        // ---- legacy aliases (original shapes) ----
+        .get("/health", h_health)
+        .get("/metrics", h_metrics)
+        .get("/models", h_list_models_legacy)
+        .post("/models", h_register)
+        .get("/models/{id}", h_get_model)
+        .put("/models/{id}", h_update_model)
+        .delete("/models/{id}", h_delete_model)
+        .post("/models/{id}/convert", h_convert_sync)
+        .post("/models/{id}/profile", h_profile_sync)
+        .post("/models/{id}/deploy", h_deploy_legacy)
+        .get("/models/{id}/recommend", h_recommend)
+        .get("/services", h_services_legacy)
+        .post("/services/{name}:infer", h_infer_legacy)
+}
+
+/// Pre-v1 tolerance: the original deploy/infer handlers treated an
+/// unscannable body as "no body" (all defaults / example input) rather
+/// than rejecting it. The legacy aliases keep that contract; the v1
+/// routes are strict (`invalid_json`).
+fn lenient_body(req: &Request) -> Request {
+    let mut relaxed = req.clone();
+    if !relaxed.body.is_empty() {
+        let text = relaxed.body_text();
+        let unscannable =
+            jscan::with_pooled_offsets(|offsets| jscan::scan_into(&text, offsets).is_err());
+        if unscannable {
+            relaxed.body.clear();
+        }
+    }
+    relaxed
+}
+
+fn h_deploy_legacy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<Response, ApiError> {
+    h_deploy(platform, params, &lenient_body(req))
+}
+
+fn h_infer_legacy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<Response, ApiError> {
+    h_infer(platform, params, &lenient_body(req))
+}
+
+// ---------------------------------------------------------------- core
+
+fn h_health(_: &Arc<Platform>, _: &Params, _: &Request) -> Result<Response, ApiError> {
+    Ok(Response::json(200, &Json::obj().with("ok", true).with("api_version", "v1")))
+}
+
+fn h_metrics(platform: &Arc<Platform>, _: &Params, _: &Request) -> Result<Response, ApiError> {
+    // scrape on demand so the exposition is always fresh
+    platform.exporter.scrape();
+    platform.monitor.scrape();
+    let mut text = platform.exporter.expose();
+    text.push_str(&platform.monitor.expose());
+    if let Some(router) = ROUTER.get() {
+        text.push_str(&router.expose_metrics());
+    }
+    Ok(Response::text(200, &text))
+}
+
+// -------------------------------------------------------------- models
+
+fn h_list_models_legacy(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
     // summary view (basic info only), projected span-wise out of the
     // stored documents — no per-document tree or clone
-    match platform.housekeeper.retrieve_summaries(
-        req.query_param("name"),
-        req.query_param("task"),
-        req.query_param("status"),
-    ) {
-        Ok(body) => Response::raw_json(200, body),
-        Err(e) => Response::error(&format!("{e:#}")),
-    }
+    let body = platform.housekeeper.retrieve_summaries(
+        req.query_param("name").as_deref(),
+        req.query_param("task").as_deref(),
+        req.query_param("status").as_deref(),
+    )?;
+    Ok(Response::raw_json(200, body))
 }
 
-fn register_model(platform: &Arc<Platform>, req: &Request) -> Response {
+fn h_list_models_v1(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
+    let limit = query_usize(req, "limit", DEFAULT_LIMIT, MAX_LIMIT)?;
+    let cursor = req.query_param("cursor");
+    let (items, next) = platform.housekeeper.retrieve_summaries_page(
+        req.query_param("name").as_deref(),
+        req.query_param("task").as_deref(),
+        req.query_param("status").as_deref(),
+        cursor.as_deref(),
+        limit,
+    )?;
+    Ok(Response::raw_json(200, page_envelope(items, next)))
+}
+
+/// Wrap an already-serialized items array in the standard page
+/// envelope without re-encoding it.
+fn page_envelope(items: String, next_cursor: Option<String>) -> String {
+    let mut body = String::with_capacity(items.len() + 32);
+    body.push_str("{\"items\":");
+    body.push_str(&items);
+    body.push_str(",\"next_cursor\":");
+    match next_cursor {
+        Some(cursor) => jscan::write_escaped(&mut body, &cursor),
+        None => body.push_str("null"),
+    }
+    body.push('}');
+    body
+}
+
+fn h_register(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
     // scan the body in place with a pooled offset table instead of
     // materializing it: weights_b64 can be many MiB and borrows
-    // straight out of the request text, and steady-state registration
-    // allocates no scan buffers at all
-    let body = req.body_text();
-    jscan::with_pooled_offsets(|offsets| {
-        if let Err(e) = jscan::scan_into(&body, offsets) {
-            return Response::bad_request(&format!("{e}"));
-        }
-        let root = offsets.root(&body);
+    // straight out of the request text
+    with_json_body(req, false, |root| {
         let Some(yaml_text) = root.get("yaml").and_then(|v| v.as_str()) else {
-            return Response::bad_request("missing 'yaml' field");
+            return Err(ApiError::bad_request("missing 'yaml' field"));
         };
         let weights = match root.get("weights_b64").and_then(|v| v.as_str()) {
-            Some(b64) => match base64::decode(&b64) {
-                Ok(w) => w,
-                Err(e) => return Response::bad_request(&format!("weights_b64: {e}")),
-            },
+            Some(b64) => base64::decode(&b64)
+                .map_err(|e| ApiError::bad_request(format!("weights_b64: {e}")))?,
             None => Vec::new(),
         };
         // full automation through the platform (register+convert+profile)
-        match platform.publish(&yaml_text, &weights) {
-            Ok(report) => Response::json(
-                201,
-                &Json::obj()
-                    .with("id", report.model_id.as_str())
-                    .with("register_ms", report.register_ms)
-                    .with("convert_ms", report.convert_ms)
-                    .with("profile_ms", report.profile_ms)
-                    .with("profiles_recorded", report.profiles_recorded),
-            ),
-            Err(e) => Response::bad_request(&format!("{e:#}")),
-        }
+        let report = platform.publish(&yaml_text, &weights)?;
+        Ok(Response::json(
+            201,
+            &Json::obj()
+                .with("id", report.model_id.as_str())
+                .with("register_ms", report.register_ms)
+                .with("convert_ms", report.convert_ms)
+                .with("profile_ms", report.profile_ms)
+                .with("profiles_recorded", report.profiles_recorded),
+        ))
     })
 }
 
-fn profile_model(platform: &Arc<Platform>, id: &str) -> Response {
-    // single-field read through the scan path
-    let Ok(family) = platform.hub.get_field_str(id, "family") else {
-        return Response::not_found();
-    };
-    let family = family.unwrap_or_default();
-    let Ok(manifest) = platform.store.model(&family) else {
-        return Response::bad_request(&format!("unknown family {family}"));
-    };
-    let batches = manifest.batches("reference");
-    let result = platform.controller.enqueue_profiling(
-        id,
-        &family,
-        &["reference", "optimized"],
-        &batches,
-        ALL_SYSTEMS,
-        &[Frontend::Grpc],
-        Placement::Workers,
-    );
-    match result {
-        Ok(()) => {
-            platform.controller.run_until_drained(10_000, 0.0);
-            match platform.controller.flush_results() {
-                Ok(n) => Response::json(200, &Json::obj().with("profiles_recorded", n)),
-                Err(e) => Response::error(&format!("{e:#}")),
-            }
-        }
-        Err(e) => Response::bad_request(&format!("{e:#}")),
+fn h_get_model(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    // stored raw text goes out verbatim — no tree, no re-encoding
+    let id = params.require("id")?;
+    let raw = platform.hub.get_raw(id)?;
+    Ok(Response::raw_json(200, raw))
+}
+
+fn h_update_model(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    with_json_body(req, false, |root| {
+        platform.housekeeper.update_scanned(id, root)?;
+        Ok(Response::json(200, &Json::obj().with("updated", true)))
+    })
+}
+
+fn h_delete_model(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    if platform.housekeeper.delete(id)? {
+        Ok(Response::json(200, &Json::obj().with("deleted", true)))
+    } else {
+        Err(ApiError::not_found(format!("no model with id '{id}'")))
     }
 }
 
-fn deploy_model(platform: &Arc<Platform>, id: &str, req: &Request) -> Response {
-    let body = jscan::Doc::from_raw(req.body_text()).ok();
-    let field = |k: &str| body.as_ref().and_then(|b| b.str_field(k)).map(Cow::into_owned);
-    let spec = DeploymentSpec {
-        device: field("device"),
-        system: field("system").unwrap_or_else(|| "triton-like".to_string()),
-        format: field("format"),
-        frontend: field("frontend")
-            .as_deref()
-            .and_then(Frontend::from_str)
-            .unwrap_or(Frontend::Grpc),
-        max_queue: body
-            .as_ref()
-            .and_then(|b| b.get_path("max_queue"))
-            .and_then(|v| v.as_usize())
-            .unwrap_or(256),
-    };
-    match platform.dispatcher.deploy(&platform.hub, id, &spec) {
-        Ok(svc) => Response::json(
+// ---------------------------------------------------- convert / profile
+
+/// 202 response body for an accepted job.
+fn accepted(job_id: &str, kind: JobKind, model_id: &str) -> Response {
+    Response::json(
+        202,
+        &Json::obj()
+            .with("job_id", job_id)
+            .with("kind", kind.as_str())
+            .with("model_id", model_id)
+            .with("status_url", format!("/api/v1/jobs/{job_id}")),
+    )
+}
+
+fn h_convert_job(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    platform.hub.status(id)?; // 404 before accepting work
+    let p = platform.clone();
+    let model = id.to_string();
+    let job_id = platform
+        .jobs
+        .submit(
+            JobKind::Convert,
+            id,
+            Box::new(move || {
+                let report = p.converter.convert(&p.hub, &model, p.config.auto_batches.as_deref())?;
+                Ok(Json::obj()
+                    .with("validated", report.all_validated())
+                    .with("variants", report.variants.len())
+                    .with("total_ms", report.total_ms))
+            }),
+        )
+        .map_err(|e| ApiError::unavailable(format!("{e:#}")))?;
+    Ok(accepted(&job_id, JobKind::Convert, id))
+}
+
+fn h_profile_job(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    platform.hub.status(id)?; // 404 before accepting work
+    let p = platform.clone();
+    let model = id.to_string();
+    let job_id = platform
+        .jobs
+        .submit(
+            JobKind::Profile,
+            id,
+            Box::new(move || {
+                // the explicit profile verb covers the full batch grid,
+                // exactly like the legacy sync route and the CLI; only
+                // the publish automation restricts to auto_batches
+                let (recorded, events) = p.profile_sync(&model, None, &[Frontend::Grpc])?;
+                Ok(Json::obj()
+                    .with("profiles_recorded", recorded)
+                    .with("drain", summarize_events(&events)))
+            }),
+        )
+        .map_err(|e| ApiError::unavailable(format!("{e:#}")))?;
+    Ok(accepted(&job_id, JobKind::Profile, id))
+}
+
+/// Legacy synchronous conversion (original `POST /models/{id}/convert`).
+fn h_convert_sync(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    let report = platform.converter.convert(&platform.hub, id, platform.config.auto_batches.as_deref())?;
+    Ok(Response::json(
+        200,
+        &Json::obj()
+            .with("validated", report.all_validated())
+            .with("variants", report.variants.len())
+            .with("total_ms", report.total_ms),
+    ))
+}
+
+/// Legacy synchronous profiling (original `POST /models/{id}/profile`):
+/// enqueues the grid and drains the controller inline.
+fn h_profile_sync(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    let (recorded, _) = platform.profile_sync(id, None, &[Frontend::Grpc])?;
+    Ok(Response::json(200, &Json::obj().with("profiles_recorded", recorded)))
+}
+
+// ------------------------------------------------------ deploy / infer
+
+fn h_deploy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    with_json_body(req, true, |root| {
+        let field = |k: &str| root.get(k).and_then(|v| v.as_str()).map(|s| s.into_owned());
+        let frontend = match field("frontend") {
+            Some(name) => Frontend::from_str(&name)
+                .ok_or_else(|| ApiError::validation(format!("unknown frontend '{name}'")))?,
+            None => Frontend::Grpc,
+        };
+        let spec = DeploymentSpec {
+            device: field("device"),
+            system: field("system").unwrap_or_else(|| "triton-like".to_string()),
+            format: field("format"),
+            frontend,
+            max_queue: root.get("max_queue").and_then(|v| v.as_usize()).unwrap_or(256),
+        };
+        let svc = platform.dispatcher.deploy(&platform.hub, id, &spec)?;
+        Ok(Response::json(
             201,
             &Json::obj()
                 .with("service", svc.model_name.as_str())
@@ -217,34 +343,41 @@ fn deploy_model(platform: &Arc<Platform>, id: &str, req: &Request) -> Response {
                 .with("system", svc.system_name)
                 .with("format", svc.format.as_str())
                 .with("container", svc.container.id.as_str()),
-        ),
-        Err(e) => Response::bad_request(&format!("{e:#}")),
+        ))
+    })
+}
+
+fn h_recommend(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    let slo = query_f64(req, "p99", 1e9)?;
+    match platform.controller.recommend_deployment(id, slo)? {
+        Some(rec) => Ok(Response::json(200, &rec)),
+        None => Ok(Response::json(200, &Json::obj().with("recommendation", Json::Null))),
     }
 }
 
-fn infer(platform: &Arc<Platform>, name: &str, req: &Request) -> Response {
-    let Some(svc) = platform.dispatcher.find(name) else { return Response::not_found() };
-    // find the model family to know the input shape/dtype
-    let Ok(Some(family)) = platform.hub.family_of_name(name) else { return Response::not_found() };
-    let Ok(manifest) = platform.store.model(&family) else {
-        return Response::error("family missing from manifest");
+fn h_infer(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<Response, ApiError> {
+    let name = params.require("name")?;
+    let Some(svc) = platform.dispatcher.find(name) else {
+        return Err(ApiError::not_found(format!("no running service '{name}'")));
     };
-    // scan the body with a pooled offset table: the input array is read
-    // element-wise off its spans instead of being materialized as a
-    // Vec<Json>, and the scan itself reuses a pooled buffer
-    let body = req.body_text();
-    let input = jscan::with_pooled_offsets(|offsets| {
-        let scanned = jscan::scan_into(&body, offsets).is_ok();
-        let input_arr = if scanned {
-            offsets.root(&body).get("input").filter(|v| v.kind() == Kind::Arr)
-        } else {
-            None
-        };
+    // find the model family to know the input shape/dtype
+    let Ok(Some(family)) = platform.hub.family_of_name(name) else {
+        return Err(ApiError::not_found(format!("no model registered under '{name}'")));
+    };
+    let manifest = platform
+        .store
+        .model(&family)
+        .map_err(|_| ApiError::internal("family missing from manifest"))?;
+    // the input array is read element-wise off its spans instead of
+    // being materialized as a Vec<Json>, on a pooled scan buffer
+    let input = with_json_body(req, true, |root| {
+        let input_arr = root.get("input").filter(|v| v.kind() == Kind::Arr);
         match input_arr {
             Some(values) => {
                 let n: usize = manifest.input_shape.iter().product();
                 if values.len() != n {
-                    return Err(Response::bad_request(&format!("input must have {n} values")));
+                    return Err(ApiError::validation(format!("input must have {n} values")));
                 }
                 Ok(match manifest.input_dtype {
                     DType::F32 => {
@@ -261,29 +394,98 @@ fn infer(platform: &Arc<Platform>, name: &str, req: &Request) -> Response {
             }
             None => Ok(example_input(manifest, 1)),
         }
-    });
-    let input = match input {
-        Ok(tensor) => tensor,
-        Err(resp) => return resp,
-    };
-    match svc.infer(input) {
-        Ok(reply) => {
-            let logits: Vec<Json> = reply.output.to_f32().iter().map(|&v| Json::Num(v as f64)).collect();
-            Response::json(
-                200,
-                &Json::obj()
-                    .with("output", Json::Arr(logits))
-                    .with("latency_ms", reply.timing.total_ms())
-                    .with("batch", reply.timing.batch),
-            )
+    })?;
+    let reply = svc.infer(input)?;
+    let logits: Vec<Json> = reply.output.to_f32().iter().map(|&v| Json::Num(v as f64)).collect();
+    Ok(Response::json(
+        200,
+        &Json::obj()
+            .with("output", Json::Arr(logits))
+            .with("latency_ms", reply.timing.total_ms())
+            .with("batch", reply.timing.batch),
+    ))
+}
+
+// ------------------------------------------------------------ services
+
+fn service_stats_json(platform: &Arc<Platform>) -> Vec<(String, Json)> {
+    let mut stats = platform.monitor.service_stats(10_000.0);
+    stats.sort_by(|a, b| a.name.cmp(&b.name));
+    stats
+        .into_iter()
+        .map(|s| {
+            let item = Json::obj()
+                .with("name", s.name.as_str())
+                .with("device", s.device.as_str())
+                .with("requests_total", s.requests_total)
+                .with("throughput_rps", s.throughput_rps.unwrap_or(0.0))
+                .with("queue_depth", s.queue_depth)
+                .with("memory_mib", s.memory_mib);
+            (s.name, item)
+        })
+        .collect()
+}
+
+fn h_services_legacy(platform: &Arc<Platform>, _: &Params, _: &Request) -> Result<Response, ApiError> {
+    let items: Vec<Json> = service_stats_json(platform).into_iter().map(|(_, j)| j).collect();
+    Ok(Response::json(200, &Json::Arr(items)))
+}
+
+fn h_services_v1(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
+    let limit = query_usize(req, "limit", DEFAULT_LIMIT, MAX_LIMIT)?;
+    let cursor = req.query_param("cursor");
+    let device = req.query_param("device");
+    let all = service_stats_json(platform);
+    let mut items = Vec::new();
+    let mut next: Option<String> = None;
+    for (name, item) in all {
+        if let Some(after) = cursor.as_deref() {
+            if name.as_str() <= after {
+                continue;
+            }
         }
-        Err(e) => Response::error(&format!("{e:#}")),
+        if let Some(dev) = device.as_deref() {
+            if item.get("device").and_then(Json::as_str) != Some(dev) {
+                continue;
+            }
+        }
+        if items.len() == limit {
+            next = items.last().and_then(|j: &Json| j.get("name")).and_then(Json::as_str).map(str::to_string);
+            break;
+        }
+        items.push(item);
+    }
+    let envelope = Json::obj()
+        .with("items", Json::Arr(items))
+        .with("next_cursor", next.map_or(Json::Null, Json::Str));
+    Ok(Response::json(200, &envelope))
+}
+
+// ---------------------------------------------------------------- jobs
+
+fn h_jobs_list(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
+    let limit = query_usize(req, "limit", DEFAULT_LIMIT, MAX_LIMIT)?;
+    let cursor = req.query_param("cursor");
+    let (jobs, next) = platform.jobs.list(cursor.as_deref(), limit);
+    let items: Vec<Json> = jobs.iter().map(|j| j.to_json()).collect();
+    let envelope = Json::obj()
+        .with("items", Json::Arr(items))
+        .with("next_cursor", next.map_or(Json::Null, Json::Str));
+    Ok(Response::json(200, &envelope))
+}
+
+fn h_job_get(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    match platform.jobs.get(id) {
+        Some(job) => Ok(Response::json(200, &job.to_json())),
+        None => Err(ApiError::not_found(format!("no job with id '{id}'"))),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::error::ErrorCode;
     use crate::api::http::{http_request, HttpServer};
     use crate::util::clock::wall;
     use crate::workflow::PlatformConfig;
@@ -300,6 +502,15 @@ mod tests {
         let p2 = platform.clone();
         let server = HttpServer::serve("127.0.0.1:0", move |req| route(&p2, req)).unwrap();
         Some((server, platform))
+    }
+
+    fn register_yaml(addr: &std::net::SocketAddr, yaml: &str) -> (u16, Json) {
+        let req_body = Json::obj()
+            .with("yaml", yaml.replace("\\n", "\n"))
+            .with("weights_b64", base64::encode(b"some-weights"))
+            .to_string();
+        let (status, body) = http_request(addr, "POST", "/api/v1/models", Some(&req_body)).unwrap();
+        (status, Json::parse(&body).unwrap_or(Json::Null))
     }
 
     #[test]
@@ -367,7 +578,217 @@ mod tests {
         assert_eq!(http_request(&addr, "POST", "/models", Some("not json")).unwrap().0, 400);
         assert_eq!(http_request(&addr, "POST", "/models", Some("{}")).unwrap().0, 400);
         assert_eq!(http_request(&addr, "POST", "/services/ghost:infer", Some("{}")).unwrap().0, 404);
-        assert_eq!(http_request(&addr, "PATCH", "/models", None).unwrap().0, 404);
+        // a known path under an unsupported method is now an explicit
+        // 405 with the allow list (was a bare 404 pre-v1)
+        let (status, body) = http_request(&addr, "PATCH", "/models", None).unwrap();
+        assert_eq!(status, 405, "{body}");
+        let env = Json::parse(&body).unwrap();
+        assert_eq!(env.get("code").unwrap().as_str(), Some("method_not_allowed"));
+        assert_eq!(http_request(&addr, "PATCH", "/ghost", None).unwrap().0, 404);
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn v1_async_profile_job_lifecycle() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        let (status, created) = register_yaml(&addr, YAML);
+        assert_eq!(status, 201);
+        let id = created.get("id").unwrap().as_str().unwrap().to_string();
+
+        // 202 + job id come back immediately, before any drain happens
+        let (status, body) =
+            http_request(&addr, "POST", &format!("/api/v1/models/{id}/profile"), None).unwrap();
+        assert_eq!(status, 202, "{body}");
+        let acc = Json::parse(&body).unwrap();
+        let job_id = acc.get("job_id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(acc.get("kind").unwrap().as_str(), Some("profile"));
+        assert_eq!(
+            acc.get("status_url").unwrap().as_str(),
+            Some(format!("/api/v1/jobs/{job_id}").as_str())
+        );
+
+        // poll the job resource through pending/running to succeeded
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let mut states = Vec::new();
+        let terminal = loop {
+            let (status, body) =
+                http_request(&addr, "GET", &format!("/api/v1/jobs/{job_id}"), None).unwrap();
+            assert_eq!(status, 200, "{body}");
+            let job = Json::parse(&body).unwrap();
+            let state = job.get("state").unwrap().as_str().unwrap().to_string();
+            if states.last() != Some(&state) {
+                states.push(state.clone());
+            }
+            if state == "succeeded" || state == "failed" {
+                break job;
+            }
+            assert!(std::time::Instant::now() < deadline, "job never finished; states {states:?}");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        };
+        assert_eq!(terminal.get("state").unwrap().as_str(), Some("succeeded"), "{terminal}");
+        for s in &states {
+            assert!(["pending", "running", "succeeded"].contains(&s.as_str()), "unexpected state {s}");
+        }
+        let result = terminal.get("result").unwrap();
+        assert!(result.get("profiles_recorded").unwrap().as_i64().unwrap() > 0);
+        // the model ended the drain profiled, and the job listing sees the job
+        let (_, body) = http_request(&addr, "GET", &format!("/api/v1/models/{id}"), None).unwrap();
+        assert_eq!(Json::parse(&body).unwrap().get("status").unwrap().as_str(), Some("profiled"));
+        let (status, body) = http_request(&addr, "GET", "/api/v1/jobs", None).unwrap();
+        assert_eq!(status, 200);
+        let listing = Json::parse(&body).unwrap();
+        assert!(listing
+            .get("items")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|j| j.get("id").and_then(Json::as_str) == Some(job_id.as_str())));
+        // convert jobs run through the same registry
+        let (status, body) =
+            http_request(&addr, "POST", &format!("/api/v1/models/{id}/convert"), None).unwrap();
+        assert_eq!(status, 202, "{body}");
+        let convert_job = Json::parse(&body).unwrap().get("job_id").unwrap().as_str().unwrap().to_string();
+        let job = platform.jobs.wait_terminal(&convert_job, 60_000).unwrap();
+        assert!(job.state.is_terminal());
+        // job resources for unknown models / ids are 404s
+        let (status, _) =
+            http_request(&addr, "POST", "/api/v1/models/ffffffffffffffffffffffff/profile", None).unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(http_request(&addr, "GET", "/api/v1/jobs/nope", None).unwrap().0, 404);
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn v1_list_models_paginates_and_filters() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        for i in 0..5 {
+            let yaml = YAML
+                .replace("rest-mlp", &format!("page-mlp-{i}"))
+                .replace("convert: true", "convert: false");
+            let (status, _) = register_yaml(&addr, &yaml);
+            assert_eq!(status, 201);
+        }
+        // page 1
+        let (status, body) = http_request(&addr, "GET", "/api/v1/models?limit=2", None).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let page = Json::parse(&body).unwrap();
+        assert_eq!(page.get("items").unwrap().as_arr().unwrap().len(), 2);
+        let cursor = page.get("next_cursor").unwrap().as_str().unwrap().to_string();
+        // page 2 resumes after the cursor with no overlap
+        let (_, body) =
+            http_request(&addr, "GET", &format!("/api/v1/models?limit=2&cursor={cursor}"), None).unwrap();
+        let page2 = Json::parse(&body).unwrap();
+        let first_of_2 = page2.get("items").unwrap().as_arr().unwrap()[0]
+            .get("id").unwrap().as_str().unwrap().to_string();
+        assert!(first_of_2 > cursor);
+        // last page carries a null cursor
+        let (_, body) = http_request(&addr, "GET", "/api/v1/models?limit=500", None).unwrap();
+        let all = Json::parse(&body).unwrap();
+        assert_eq!(all.get("items").unwrap().as_arr().unwrap().len(), 5);
+        assert!(all.get("next_cursor").unwrap().is_null());
+        // percent-encoded filter values decode (`%2D` is '-')
+        let (_, body) =
+            http_request(&addr, "GET", "/api/v1/models?name=page%2Dmlp%2D3", None).unwrap();
+        let filtered = Json::parse(&body).unwrap();
+        let items = filtered.get("items").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 1, "{filtered}");
+        assert_eq!(items[0].get("name").unwrap().as_str(), Some("page-mlp-3"));
+        // bad limit is a 422 validation error
+        let (status, body) = http_request(&addr, "GET", "/api/v1/models?limit=junk", None).unwrap();
+        assert_eq!(status, 422);
+        assert_eq!(Json::parse(&body).unwrap().get("code").unwrap().as_str(), Some("validation_failed"));
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn error_envelopes_conform_across_endpoints() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        let cases: Vec<(&str, String, Option<&str>)> = vec![
+            ("GET", "/api/v1/models/ffffffffffffffffffffffff".into(), None),
+            ("GET", "/models/ffffffffffffffffffffffff".into(), None),
+            ("POST", "/api/v1/models".into(), Some("not json")),
+            ("POST", "/api/v1/models".into(), Some("{}")),
+            ("PUT", "/api/v1/models/ffffffffffffffffffffffff".into(), Some(r#"{"status": "serving"}"#)),
+            ("POST", "/api/v1/services/ghost:infer".into(), Some("{}")),
+            ("GET", "/api/v1/jobs/ghost".into(), None),
+            ("GET", "/api/v1/models?limit=0".into(), None),
+            ("PATCH", "/api/v1/models".into(), None),
+            ("GET", "/totally/unknown".into(), None),
+        ];
+        let codes: Vec<&str> = ErrorCode::all().iter().map(|c| c.as_str()).collect();
+        for (method, path, body) in cases {
+            let (status, text) = http_request(&addr, method, &path, body).unwrap();
+            assert!(status >= 400, "{method} {path} should fail, got {status}");
+            let env = Json::parse(&text).unwrap_or_else(|e| panic!("{method} {path}: unparseable body {text}: {e:?}"));
+            let code = env.get("code").and_then(Json::as_str).unwrap_or_else(|| panic!("{method} {path}: no code in {text}"));
+            assert!(codes.contains(&code), "{method} {path}: undocumented code {code}");
+            assert!(env.get("message").and_then(Json::as_str).is_some(), "{method} {path}: no message");
+            let expected_status = ErrorCode::all().iter().find(|c| c.as_str() == code).unwrap().status();
+            assert_eq!(status, expected_status, "{method} {path}: status/code mismatch");
+        }
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn legacy_aliases_match_v1_responses() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        let (status, created) = register_yaml(&addr, YAML);
+        assert_eq!(status, 201);
+        let id = created.get("id").unwrap().as_str().unwrap().to_string();
+        // document reads are byte-identical across prefixes
+        let (_, legacy_doc) = http_request(&addr, "GET", &format!("/models/{id}"), None).unwrap();
+        let (_, v1_doc) = http_request(&addr, "GET", &format!("/api/v1/models/{id}"), None).unwrap();
+        assert_eq!(legacy_doc, v1_doc);
+        // the legacy list is exactly the v1 items array
+        let (_, legacy_list) = http_request(&addr, "GET", "/models", None).unwrap();
+        let (_, v1_list) = http_request(&addr, "GET", "/api/v1/models", None).unwrap();
+        let v1 = Json::parse(&v1_list).unwrap();
+        assert_eq!(Json::parse(&legacy_list).unwrap().as_arr().unwrap(), v1.get("items").unwrap().as_arr().unwrap());
+        // health and metrics answer on both prefixes
+        assert_eq!(http_request(&addr, "GET", "/api/v1/health", None).unwrap().0, 200);
+        let (_, metrics) = http_request(&addr, "GET", "/api/v1/metrics", None).unwrap();
+        assert!(metrics.contains("device_utilization"));
+        // per-route api metrics ride the same exposition
+        assert!(metrics.contains("api_requests_total"), "{metrics}");
+        // updates through either prefix hit the same guarded path
+        let (status, _) = http_request(&addr, "PUT", &format!("/api/v1/models/{id}"), Some(r#"{"accuracy": 0.9}"#)).unwrap();
+        assert_eq!(status, 200);
+        let (status, body) = http_request(&addr, "PUT", &format!("/models/{id}"), Some(r#"{"status": "x"}"#)).unwrap();
+        assert_eq!(status, 422, "{body}");
+        // pre-v1 tolerance on the legacy aliases: an unscannable
+        // deploy/infer body reads as "no body" (defaults / example
+        // input), while the v1 routes reject it as invalid_json
+        let (status, body) =
+            http_request(&addr, "POST", &format!("/models/{id}/deploy"), Some("not json")).unwrap();
+        assert_eq!(status, 201, "{body}");
+        let (status, body) =
+            http_request(&addr, "POST", "/services/rest-mlp:infer", Some("not json")).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let (status, body) =
+            http_request(&addr, "POST", "/api/v1/services/rest-mlp:infer", Some("not json")).unwrap();
+        assert_eq!(status, 400, "{body}");
+        assert_eq!(Json::parse(&body).unwrap().get("code").unwrap().as_str(), Some("invalid_json"));
         platform.shutdown();
         server.stop();
     }

@@ -1,0 +1,374 @@
+//! Declarative HTTP routing for the API layer: a method + pattern route
+//! table with typed path segments, percent-decoded query extraction,
+//! pooled-`jscan` JSON body extraction, and per-route latency/status
+//! metrics riding the same [`Registry`] machinery the node exporter and
+//! monitor expose through `/metrics`.
+//!
+//! A route pattern is a `/`-separated path where a segment is either a
+//! literal (`models`), a parameter (`{id}`), or a parameter with a
+//! literal suffix (`{name}:infer` — the verb-style RPC spelling the
+//! serving API uses). Handlers are plain functions returning
+//! `Result<Response, ApiError>`; the router renders the `Err` arm
+//! through the structured envelope, times every request, and answers
+//! 405 (with an `allow` list) when a path matches under a different
+//! method.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::monitor::Registry;
+use crate::util::jscan;
+
+use super::error::ApiError;
+use super::http::{Request, Response};
+
+/// One parsed pattern segment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Seg {
+    /// Must equal this literal.
+    Lit(String),
+    /// Captures the whole segment under a name.
+    Param(String),
+    /// Captures the segment minus a required literal suffix
+    /// (`{name}:infer` matches `mnist:infer`, capturing `mnist`).
+    ParamSuffix { name: String, suffix: String },
+}
+
+/// A parsed route pattern.
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    raw: String,
+    segs: Vec<Seg>,
+}
+
+impl Pattern {
+    /// Parse a pattern like `/api/v1/models/{id}/convert`.
+    pub fn parse(pattern: &str) -> Pattern {
+        let segs = pattern
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if let Some(rest) = s.strip_prefix('{') {
+                    if let Some(close) = rest.find('}') {
+                        let name = rest[..close].to_string();
+                        let suffix = rest[close + 1..].to_string();
+                        if suffix.is_empty() {
+                            return Seg::Param(name);
+                        }
+                        return Seg::ParamSuffix { name, suffix };
+                    }
+                }
+                Seg::Lit(s.to_string())
+            })
+            .collect();
+        Pattern { raw: pattern.to_string(), segs }
+    }
+
+    pub fn raw(&self) -> &str {
+        &self.raw
+    }
+
+    /// Match path segments, returning captured `(name, value)` pairs.
+    /// Suffix parameters must capture a non-empty value.
+    fn matches<'p, 'a>(&'p self, path: &[&'a str]) -> Option<Vec<(&'p str, &'a str)>> {
+        if path.len() != self.segs.len() {
+            return None;
+        }
+        let mut captures = Vec::new();
+        for (seg, part) in self.segs.iter().zip(path.iter()) {
+            match seg {
+                Seg::Lit(lit) => {
+                    if lit != part {
+                        return None;
+                    }
+                }
+                Seg::Param(name) => captures.push((name.as_str(), *part)),
+                Seg::ParamSuffix { name, suffix } => {
+                    let value = part.strip_suffix(suffix.as_str())?;
+                    if value.is_empty() {
+                        return None;
+                    }
+                    captures.push((name.as_str(), value));
+                }
+            }
+        }
+        Some(captures)
+    }
+}
+
+/// Captured path parameters of a matched route.
+pub struct Params<'a> {
+    captures: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Params<'a> {
+    pub fn get(&self, name: &str) -> Option<&'a str> {
+        self.captures.iter().find(|(k, _)| *k == name).map(|(_, v)| *v)
+    }
+
+    /// A parameter the pattern guarantees (programming error if absent).
+    pub fn require(&self, name: &str) -> Result<&'a str, ApiError> {
+        self.get(name)
+            .ok_or_else(|| ApiError::internal(format!("route pattern has no '{{{name}}}' segment")))
+    }
+}
+
+/// Route handlers are plain functions over shared state `S` — no
+/// captures, so the table is a plain value and handlers stay testable
+/// in isolation.
+pub type HandlerFn<S> = fn(&S, &Params, &Request) -> Result<Response, ApiError>;
+
+struct Route<S> {
+    method: &'static str,
+    pattern: Pattern,
+    handler: HandlerFn<S>,
+}
+
+/// A method + pattern route table with per-route metrics.
+pub struct Router<S> {
+    routes: Vec<Route<S>>,
+    metrics: Mutex<Registry>,
+    epoch: Instant,
+}
+
+impl<S> Router<S> {
+    pub fn new() -> Router<S> {
+        Router { routes: Vec::new(), metrics: Mutex::new(Registry::new(4096)), epoch: Instant::now() }
+    }
+
+    /// Register a route (builder style).
+    pub fn route(mut self, method: &'static str, pattern: &str, handler: HandlerFn<S>) -> Self {
+        self.routes.push(Route { method, pattern: Pattern::parse(pattern), handler });
+        self
+    }
+
+    pub fn get(self, pattern: &str, handler: HandlerFn<S>) -> Self {
+        self.route("GET", pattern, handler)
+    }
+
+    pub fn post(self, pattern: &str, handler: HandlerFn<S>) -> Self {
+        self.route("POST", pattern, handler)
+    }
+
+    pub fn put(self, pattern: &str, handler: HandlerFn<S>) -> Self {
+        self.route("PUT", pattern, handler)
+    }
+
+    pub fn delete(self, pattern: &str, handler: HandlerFn<S>) -> Self {
+        self.route("DELETE", pattern, handler)
+    }
+
+    /// Dispatch one request: first route whose pattern + method match
+    /// wins; a pattern match under the wrong method accumulates into a
+    /// 405 `allow` list; nothing matched is a 404. Every outcome is
+    /// timed and counted per route label.
+    pub fn dispatch(&self, state: &S, req: &Request) -> Response {
+        let t0 = Instant::now();
+        let path: Vec<&str> = req.segments();
+        let mut allowed: Vec<&'static str> = Vec::new();
+        for route in &self.routes {
+            let Some(captures) = route.pattern.matches(&path) else { continue };
+            if route.method != req.method {
+                if !allowed.contains(&route.method) {
+                    allowed.push(route.method);
+                }
+                continue;
+            }
+            let params = Params { captures };
+            let resp = match (route.handler)(state, &params, req) {
+                Ok(resp) => resp,
+                Err(err) => err.to_response(),
+            };
+            let label = format!("{} {}", route.method, route.pattern.raw());
+            self.observe(&label, resp.status, t0);
+            return resp;
+        }
+        let resp = if allowed.is_empty() {
+            ApiError::not_found(format!("no route for {} {}", req.method, req.path)).to_response()
+        } else {
+            ApiError::method_not_allowed(&allowed).to_response()
+        };
+        self.observe("unmatched", resp.status, t0);
+        resp
+    }
+
+    fn observe(&self, label: &str, status: u16, t0: Instant) {
+        let now_ms = self.epoch.elapsed().as_secs_f64() * 1000.0;
+        let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let mut reg = self.metrics.lock().unwrap();
+        reg.add(&format!("api_requests_total{{route=\"{label}\",status=\"{status}\"}}"), now_ms, 1.0);
+        reg.record(&format!("api_request_latency_ms{{route=\"{label}\"}}"), now_ms, latency_ms);
+    }
+
+    /// Prometheus-style exposition of the per-route request counters
+    /// and latest latencies (appended to the platform exporters on
+    /// `/metrics`).
+    pub fn expose_metrics(&self) -> String {
+        self.metrics.lock().unwrap().expose()
+    }
+}
+
+/// Typed query extraction: a `usize` parameter with a default and an
+/// inclusive upper bound. Unparseable or out-of-range values are a 422.
+pub fn query_usize(req: &Request, key: &str, default: usize, max: usize) -> Result<usize, ApiError> {
+    let Some(raw) = req.query_param(key) else { return Ok(default) };
+    let value: usize = raw
+        .parse()
+        .map_err(|_| ApiError::validation(format!("query parameter '{key}' must be a non-negative integer")))?;
+    if value == 0 || value > max {
+        return Err(ApiError::validation(format!("query parameter '{key}' must be between 1 and {max}")));
+    }
+    Ok(value)
+}
+
+/// Typed query extraction: an `f64` parameter with a default.
+pub fn query_f64(req: &Request, key: &str, default: f64) -> Result<f64, ApiError> {
+    let Some(raw) = req.query_param(key) else { return Ok(default) };
+    raw.parse()
+        .map_err(|_| ApiError::validation(format!("query parameter '{key}' must be a number")))
+}
+
+/// JSON body extraction through the pooled scan path: the body is
+/// scanned in place with a pooled offset table (no tree, no scan-buffer
+/// allocation in steady state) and the root cursor handed to `f`.
+/// With `allow_empty`, a missing body reads as `{}` (deploy-style
+/// everything-defaulted requests).
+pub fn with_json_body<R>(
+    req: &Request,
+    allow_empty: bool,
+    f: impl FnOnce(jscan::ValueRef<'_>) -> Result<R, ApiError>,
+) -> Result<R, ApiError> {
+    let body = if req.body.is_empty() && allow_empty { "{}".to_string() } else { req.body_text() };
+    jscan::with_pooled_offsets(|offsets| {
+        jscan::scan_into(&body, offsets).map_err(|e| ApiError::invalid_json(format!("{e}")))?;
+        f(offsets.root(&body))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn req(method: &str, path: &str, query: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: query.into(),
+            headers: Default::default(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn body_json(resp: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn pattern_matching_literals_params_suffix() {
+        let p = Pattern::parse("/api/v1/models/{id}/convert");
+        assert_eq!(p.matches(&["api", "v1", "models", "abc", "convert"]).unwrap(), vec![("id", "abc")]);
+        assert!(p.matches(&["api", "v1", "models", "abc"]).is_none());
+        assert!(p.matches(&["api", "v1", "models", "abc", "profile"]).is_none());
+
+        let rpc = Pattern::parse("/api/v1/services/{name}:infer");
+        assert_eq!(
+            rpc.matches(&["api", "v1", "services", "mnist:infer"]).unwrap(),
+            vec![("name", "mnist")]
+        );
+        assert!(rpc.matches(&["api", "v1", "services", "mnist"]).is_none(), "suffix required");
+        assert!(rpc.matches(&["api", "v1", "services", ":infer"]).is_none(), "empty capture rejected");
+    }
+
+    fn ok_handler(_: &(), params: &Params, _: &Request) -> Result<Response, ApiError> {
+        Ok(Response::json(200, &Json::obj().with("id", params.get("id").unwrap_or("-"))))
+    }
+
+    fn err_handler(_: &(), _: &Params, _: &Request) -> Result<Response, ApiError> {
+        Err(ApiError::not_found("nope"))
+    }
+
+    fn test_router() -> Router<()> {
+        Router::new()
+            .get("/things/{id}", ok_handler)
+            .post("/things/{id}", ok_handler)
+            .get("/broken", err_handler)
+    }
+
+    #[test]
+    fn dispatch_matches_and_renders_errors() {
+        let router = test_router();
+        let resp = router.dispatch(&(), &req("GET", "/things/42", "", ""));
+        assert_eq!(resp.status, 200);
+        assert_eq!(body_json(&resp).get("id").unwrap().as_str(), Some("42"));
+
+        let resp = router.dispatch(&(), &req("GET", "/broken", "", ""));
+        assert_eq!(resp.status, 404);
+        assert_eq!(body_json(&resp).get("code").unwrap().as_str(), Some("not_found"));
+        assert_eq!(body_json(&resp).get("message").unwrap().as_str(), Some("nope"));
+    }
+
+    #[test]
+    fn unknown_path_404_wrong_method_405() {
+        let router = test_router();
+        let resp = router.dispatch(&(), &req("GET", "/ghost", "", ""));
+        assert_eq!(resp.status, 404);
+        assert_eq!(body_json(&resp).get("code").unwrap().as_str(), Some("not_found"));
+
+        let resp = router.dispatch(&(), &req("DELETE", "/things/42", "", ""));
+        assert_eq!(resp.status, 405);
+        let body = body_json(&resp);
+        assert_eq!(body.get("code").unwrap().as_str(), Some("method_not_allowed"));
+        let allow = body.get("detail").unwrap().get("allow").unwrap().as_arr().unwrap();
+        let methods: Vec<&str> = allow.iter().filter_map(Json::as_str).collect();
+        assert_eq!(methods, vec!["GET", "POST"]);
+    }
+
+    #[test]
+    fn metrics_count_routes_and_statuses() {
+        let router = test_router();
+        for _ in 0..3 {
+            router.dispatch(&(), &req("GET", "/things/1", "", ""));
+        }
+        router.dispatch(&(), &req("GET", "/ghost", "", ""));
+        let text = router.expose_metrics();
+        assert!(
+            text.contains("api_requests_total{route=\"GET /things/{id}\",status=\"200\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("api_requests_total{route=\"unmatched\",status=\"404\"} 1"), "{text}");
+        assert!(text.contains("api_request_latency_ms{route=\"GET /things/{id}\"}"), "{text}");
+    }
+
+    #[test]
+    fn query_extractors_validate() {
+        let r = req("GET", "/x", "limit=10&p99=1.5&junk=zz", "");
+        assert_eq!(query_usize(&r, "limit", 50, 500).unwrap(), 10);
+        assert_eq!(query_usize(&r, "missing", 50, 500).unwrap(), 50);
+        assert_eq!(query_f64(&r, "p99", 0.0).unwrap(), 1.5);
+        let err = query_usize(&r, "junk", 1, 10).unwrap_err();
+        assert_eq!(err.code.status(), 422);
+        let err = query_usize(&req("GET", "/x", "limit=0", ""), "limit", 1, 10).unwrap_err();
+        assert_eq!(err.code.status(), 422);
+        assert!(query_f64(&r, "junk", 0.0).is_err());
+    }
+
+    #[test]
+    fn json_body_extractor_pooled() {
+        let r = req("POST", "/x", "", r#"{"a": 7}"#);
+        let a = with_json_body(&r, false, |root| {
+            Ok(root.get("a").and_then(|v| v.as_i64()).unwrap_or(-1))
+        })
+        .unwrap();
+        assert_eq!(a, 7);
+
+        let err = with_json_body(&req("POST", "/x", "", "not json"), false, |_| Ok(())).unwrap_err();
+        assert_eq!(err.code.status(), 400);
+        assert_eq!(err.code.as_str(), "invalid_json");
+
+        // empty body reads as {} when allowed, still an error otherwise
+        let ok = with_json_body(&req("POST", "/x", "", ""), true, |root| Ok(root.len())).unwrap();
+        assert_eq!(ok, 0);
+        assert!(with_json_body(&req("POST", "/x", "", ""), false, |_| Ok(())).is_err());
+    }
+}

@@ -41,6 +41,53 @@ pub enum Event {
     JobFailed { model: String, error: String },
 }
 
+impl Event {
+    /// Structured form for API payloads (job results, debugging).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::Completed { device, model, batch, format } => Json::obj()
+                .with("event", "completed")
+                .with("device", device.as_str())
+                .with("model", model.as_str())
+                .with("batch", *batch)
+                .with("format", format.as_str()),
+            Event::QosPaused { p99_ms } => {
+                Json::obj().with("event", "qos_paused").with("p99_ms", *p99_ms)
+            }
+            Event::DeviceBusy { device, utilization } => Json::obj()
+                .with("event", "device_busy")
+                .with("device", device.as_str())
+                .with("utilization", *utilization),
+            Event::JobFailed { model, error } => Json::obj()
+                .with("event", "job_failed")
+                .with("model", model.as_str())
+                .with("error", error.as_str()),
+        }
+    }
+}
+
+/// Aggregate a drain's event stream into the counts an async job
+/// reports back through the API.
+pub fn summarize_events(events: &[Event]) -> Json {
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut qos_paused = 0usize;
+    let mut device_busy = 0usize;
+    for event in events {
+        match event {
+            Event::Completed { .. } => completed += 1,
+            Event::JobFailed { .. } => failed += 1,
+            Event::QosPaused { .. } => qos_paused += 1,
+            Event::DeviceBusy { .. } => device_busy += 1,
+        }
+    }
+    Json::obj()
+        .with("completed", completed)
+        .with("failed", failed)
+        .with("qos_paused_ticks", qos_paused)
+        .with("device_busy_ticks", device_busy)
+}
+
 /// The controller.
 pub struct Controller {
     pub profiler: Arc<Profiler>,
@@ -53,6 +100,9 @@ pub struct Controller {
     queue: std::sync::Mutex<JobQueue>,
     /// Completed rows not yet flushed to the hub, per model id.
     results: std::sync::Mutex<Vec<(String, ProfileRow)>>,
+    /// Serializes whole enqueue→drain→flush sessions (see
+    /// [`Controller::exclusive_drain`]).
+    drain_gate: std::sync::Mutex<()>,
 }
 
 impl Controller {
@@ -75,7 +125,21 @@ impl Controller {
             slo,
             queue: std::sync::Mutex::new(JobQueue::new()),
             results: std::sync::Mutex::new(Vec::new()),
+            drain_gate: std::sync::Mutex::new(()),
         }
+    }
+
+    /// Run `f` holding the drain gate. `results` is one shared
+    /// accumulator and `flush_results` drains all of it, so two
+    /// concurrent enqueue→drain→flush sessions (an async API job vs. a
+    /// legacy synchronous profile handler, or two HTTP threads) would
+    /// steal each other's rows and misreport counts. Callers that
+    /// drain must wrap the whole session; `f` is free to call every
+    /// other controller method (the gate is not re-entrant — don't
+    /// nest `exclusive_drain`).
+    pub fn exclusive_drain<R>(&self, f: impl FnOnce() -> R) -> R {
+        let _session = self.drain_gate.lock().unwrap();
+        f()
     }
 
     /// Enqueue a model's profiling grid (called after conversion).

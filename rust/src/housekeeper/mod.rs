@@ -92,16 +92,53 @@ impl Housekeeper {
         self.hub.find_summaries(&q, crate::modelhub::SUMMARY_FIELDS)
     }
 
+    /// One page of the summary list: serialized array + resume cursor.
+    /// Same projection as [`Self::retrieve_summaries`], cursored by
+    /// `_id` (see `ModelHub::find_summaries_page`).
+    pub fn retrieve_summaries_page(
+        &self,
+        name_contains: Option<&str>,
+        task: Option<&str>,
+        status: Option<&str>,
+        after: Option<&str>,
+        limit: usize,
+    ) -> Result<(String, Option<String>)> {
+        let q = Self::retrieve_query(name_contains, task, status);
+        self.hub.find_summaries_page(&q, crate::modelhub::SUMMARY_FIELDS, after, limit)
+    }
+
+    /// Fields the guarded update refuses (they move through their own
+    /// APIs: status transitions, weight storage, profiling records).
+    pub const GUARDED_FIELDS: &'static [&'static str] =
+        &["status", "weights", "_id", "conversions", "profiles", "deployments"];
+
     /// Update: revise stored basic information (guarded fields excluded).
     pub fn update(&self, model_id: &str, fields: &Json) -> Result<()> {
         // status and weights move through their own guarded APIs
         let obj = fields.as_obj().ok_or_else(|| anyhow!("update fields must be an object"))?;
-        for forbidden in ["status", "weights", "_id", "conversions", "profiles", "deployments"] {
-            if obj.contains_key(forbidden) {
+        for forbidden in Self::GUARDED_FIELDS {
+            if obj.contains_key(*forbidden) {
                 anyhow::bail!("field '{forbidden}' cannot be updated through the housekeeper");
             }
         }
         self.hub.update_fields(model_id, fields)
+    }
+
+    /// [`Self::update`] over a scanned request body: the guarded-field
+    /// check walks the body's key spans in place, and only a passing
+    /// body is materialized for the merge — the REST `PUT` path rides
+    /// this instead of a one-shot `Doc::from_raw` parse.
+    pub fn update_scanned(&self, model_id: &str, root: crate::util::jscan::ValueRef<'_>) -> Result<()> {
+        if root.kind() != crate::util::jscan::Kind::Obj {
+            anyhow::bail!("update fields must be an object");
+        }
+        for (key, _) in root.entries() {
+            let key_str: &str = &key;
+            if Self::GUARDED_FIELDS.contains(&key_str) {
+                anyhow::bail!("field '{key}' cannot be updated through the housekeeper");
+            }
+        }
+        self.hub.update_fields(model_id, &root.to_json())
     }
 
     /// Delete a model (document + unshared weights).
@@ -189,6 +226,38 @@ profile: false
         );
         assert!(hk.update(&out.model_id, &Json::obj().with("status", "serving")).is_err());
         assert!(hk.update(&out.model_id, &Json::obj().with("weights", "tamper")).is_err());
+    }
+
+    #[test]
+    fn update_scanned_guards_and_merges() {
+        let hk = hk();
+        let out = hk.register(YAML, b"w").unwrap();
+        let apply = |body: &str| -> Result<()> {
+            crate::util::jscan::with_pooled_offsets(|offsets| {
+                crate::util::jscan::scan_into(body, offsets).unwrap();
+                hk.update_scanned(&out.model_id, offsets.root(body))
+            })
+        };
+        apply(r#"{"accuracy": 0.9, "dataset": "v2"}"#).unwrap();
+        let doc = hk.hub().get(&out.model_id).unwrap();
+        assert_eq!(doc.get("accuracy").unwrap().as_f64(), Some(0.9));
+        assert_eq!(doc.get("dataset").unwrap().as_str(), Some("v2"));
+        assert!(apply(r#"{"status": "serving"}"#).is_err());
+        assert!(apply(r#"{"weights": 1}"#).is_err());
+        assert!(apply(r#"[1,2]"#).is_err(), "non-object body rejected");
+    }
+
+    #[test]
+    fn summaries_page_through_housekeeper() {
+        let hk = hk();
+        for i in 0..5 {
+            hk.register(&YAML.replace("demo-mlp", &format!("pg-{i}")), b"w").unwrap();
+        }
+        let (body, next) = hk.retrieve_summaries_page(None, None, None, None, 2).unwrap();
+        assert_eq!(Json::parse(&body).unwrap().as_arr().unwrap().len(), 2);
+        let cursor = next.expect("more pages");
+        let (body2, _) = hk.retrieve_summaries_page(None, None, None, Some(&cursor), 10).unwrap();
+        assert_eq!(Json::parse(&body2).unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]

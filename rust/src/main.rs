@@ -55,7 +55,8 @@ fn run(args: &Args) -> Result<()> {
             let p2 = p.clone();
             let server = HttpServer::serve(addr, move |req| route(&p2, req))?;
             println!("mlmodelci REST API listening on http://{}", server.addr);
-            println!("  try: curl http://{}/health", server.addr);
+            println!("  try: curl http://{}/api/v1/health", server.addr);
+            println!("  v1 surface under /api/v1 (docs/API.md); legacy unprefixed paths remain");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
@@ -82,16 +83,42 @@ fn run(args: &Args) -> Result<()> {
         }
         "list" => {
             let p = platform(args)?;
-            let docs = p.housekeeper.retrieve(args.get("name"), args.get("task"), args.get("status"))?;
-            for d in docs {
-                println!(
-                    "{}  {:<24} {:<22} {:<10} acc={}",
-                    d.get("_id").and_then(Json::as_str).unwrap_or("?"),
-                    d.get("name").and_then(Json::as_str).unwrap_or("?"),
-                    d.get("task").and_then(Json::as_str).unwrap_or("?"),
-                    d.get("status").and_then(Json::as_str).unwrap_or("?"),
-                    d.get("accuracy").and_then(Json::as_f64).unwrap_or(f64::NAN),
-                );
+            // --limit pages through the same cursor contract as the
+            // v1 REST list; without it the full set prints
+            if let Some(limit) = args.get_usize("limit") {
+                let (body, next) = p.housekeeper.retrieve_summaries_page(
+                    args.get("name"),
+                    args.get("task"),
+                    args.get("status"),
+                    args.get("cursor"),
+                    limit,
+                )?;
+                for d in Json::parse(&body)?.as_arr().unwrap_or(&[]) {
+                    println!(
+                        "{}  {:<24} {:<22} {:<10} acc={}",
+                        d.get("id").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("name").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("task").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("status").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("accuracy").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    );
+                }
+                match next {
+                    Some(cursor) => println!("next page: --limit {limit} --cursor {cursor}"),
+                    None => println!("(last page)"),
+                }
+            } else {
+                let docs = p.housekeeper.retrieve(args.get("name"), args.get("task"), args.get("status"))?;
+                for d in docs {
+                    println!(
+                        "{}  {:<24} {:<22} {:<10} acc={}",
+                        d.get("_id").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("name").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("task").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("status").and_then(Json::as_str).unwrap_or("?"),
+                        d.get("accuracy").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    );
+                }
             }
             p.shutdown();
             Ok(())
@@ -99,22 +126,8 @@ fn run(args: &Args) -> Result<()> {
         "profile" => {
             let p = platform(args)?;
             let id = model_id_by_name(&p, args.require("name").map_err(|e| anyhow!(e))?)?;
-            let doc = p.hub.get(&id)?;
-            let family = doc.get("family").and_then(Json::as_str).unwrap_or_default().to_string();
-            let manifest = p.store.model(&family)?;
-            let batches = manifest.batches("reference");
-            p.controller.enqueue_profiling(
-                &id,
-                &family,
-                &["reference", "optimized"],
-                &batches,
-                mlmodelci::serving::ALL_SYSTEMS,
-                &[Frontend::Grpc, Frontend::Rest],
-                mlmodelci::controller::Placement::Any,
-            )?;
-            p.controller.run_until_drained(100_000, 0.0);
-            let n = p.controller.flush_results()?;
-            println!("recorded {n} profile rows for {family}");
+            let (n, _) = p.profile_sync(&id, None, &[Frontend::Grpc, Frontend::Rest])?;
+            println!("recorded {n} profile rows for model {id}");
             p.shutdown();
             Ok(())
         }

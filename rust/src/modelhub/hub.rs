@@ -139,6 +139,64 @@ impl ModelHub {
         })?)
     }
 
+    /// One page of span-projected summaries (see
+    /// [`Self::find_summaries`]): `body` is the serialized JSON array,
+    /// `next_cursor` the `_id` to resume after, `None` on the last page.
+    /// Cursoring is by `_id`, which is creation-ordered and matches the
+    /// collection's scan order — and because ids are monotonic, rows
+    /// inserted *while* a client pages only ever land at or after the
+    /// frontier, so already-served pages never shift or duplicate.
+    pub fn find_summaries_page(
+        &self,
+        query: &Query,
+        fields: &[(&str, &str)],
+        after: Option<&str>,
+        limit: usize,
+    ) -> Result<(String, Option<String>)> {
+        let paths: Vec<&str> = fields.iter().map(|(_, p)| *p).collect();
+        Ok(self.db.with_collection(MODELS, |c| {
+            let mut out = String::with_capacity(2 + 64 * fields.len());
+            out.push('[');
+            let mut taken = 0usize;
+            let mut last_id: Option<String> = None;
+            let mut more = false;
+            for doc in c.find(query) {
+                let Some(id) = doc.str_field("_id") else { continue };
+                let id_str: &str = &id;
+                if let Some(cursor) = after {
+                    if id_str <= cursor {
+                        continue;
+                    }
+                }
+                if taken == limit {
+                    more = true;
+                    break;
+                }
+                if taken > 0 {
+                    out.push(',');
+                }
+                last_id = Some(id.into_owned());
+                taken += 1;
+                out.push('{');
+                let values = jscan::extract(doc.root(), &paths);
+                for (i, (key, _)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    jscan::write_escaped(&mut out, key);
+                    out.push(':');
+                    match values[i] {
+                        Some(v) => out.push_str(v.raw()),
+                        None => out.push_str("null"),
+                    }
+                }
+                out.push('}');
+            }
+            out.push(']');
+            (out, if more { last_id } else { None })
+        })?)
+    }
+
     /// Guarded status transition (enforces the Figure-2 workflow).
     /// Check and write happen under one lock hold: with separate holds,
     /// two interleaved transitions could both read the same "current"
@@ -390,6 +448,90 @@ mod tests {
         assert_eq!(hits.len(), 2);
         assert_eq!(hub.family_of_name("bert-x").unwrap().as_deref(), Some("mlp_tabular"));
         assert_eq!(hub.family_of_name("ghost").unwrap(), None);
+    }
+
+    #[test]
+    fn summary_pages_partition_and_respect_filters() {
+        let hub = hub();
+        let mut ids = Vec::new();
+        for i in 0..7 {
+            ids.push(hub.create(&info(&format!("page-{i}")), b"w").unwrap());
+        }
+        ids.sort();
+        let fields = &[("id", "_id"), ("name", "name")];
+        // walk pages of 3 and reassemble the full set
+        let mut seen = Vec::new();
+        let mut cursor: Option<String> = None;
+        let mut pages = 0;
+        loop {
+            let (body, next) =
+                hub.find_summaries_page(&Query::All, fields, cursor.as_deref(), 3).unwrap();
+            let arr = Json::parse(&body).unwrap();
+            for item in arr.as_arr().unwrap() {
+                seen.push(item.get("id").unwrap().as_str().unwrap().to_string());
+            }
+            pages += 1;
+            match next {
+                Some(n) => cursor = Some(n),
+                None => break,
+            }
+        }
+        assert_eq!(pages, 3, "7 docs at limit 3");
+        assert_eq!(seen, ids, "pages partition the set in id order");
+        // an exact-multiple page still terminates (no phantom empty cursor)
+        let (_, next) = hub.find_summaries_page(&Query::All, fields, None, 7).unwrap();
+        assert!(next.is_none());
+        // filters compose with pagination
+        let (body, next) = hub
+            .find_summaries_page(&Query::Contains("name".into(), "page-3".into()), fields, None, 10)
+            .unwrap();
+        assert!(next.is_none());
+        assert_eq!(Json::parse(&body).unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn cursor_pages_stable_under_concurrent_inserts() {
+        // ids are creation-ordered, so writers landing mid-pagination
+        // append strictly after the cursor frontier: pages already
+        // served can neither lose nor duplicate rows.
+        let hub = Arc::new(hub());
+        let mut original = Vec::new();
+        for i in 0..30 {
+            original.push(hub.create(&info(&format!("orig-{i}")), b"w").unwrap());
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let hub = hub.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut n = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) && n < 200 {
+                    hub.create(&info(&format!("late-{n}")), b"w").unwrap();
+                    n += 1;
+                }
+            })
+        };
+        let fields = &[("id", "_id")];
+        let mut seen = std::collections::HashSet::new();
+        let mut cursor: Option<String> = None;
+        loop {
+            let (body, next) =
+                hub.find_summaries_page(&Query::All, fields, cursor.as_deref(), 5).unwrap();
+            let arr = Json::parse(&body).unwrap();
+            for item in arr.as_arr().unwrap() {
+                let id = item.get("id").unwrap().as_str().unwrap().to_string();
+                assert!(seen.insert(id), "no row may appear on two pages");
+            }
+            match next {
+                Some(n) => cursor = Some(n),
+                None => break,
+            }
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        writer.join().unwrap();
+        for id in &original {
+            assert!(seen.contains(id), "every pre-pagination row is served exactly once");
+        }
     }
 
     #[test]

@@ -99,6 +99,21 @@ impl Registry {
             .record(t_ms, value);
     }
 
+    /// Record a monotonically-increasing counter: the new point's value
+    /// is the previous latest plus `delta` (so `latest()` reads the
+    /// running total and [`Series::rate_over`] derives a per-second
+    /// rate). Returns the new total.
+    pub fn add(&mut self, name: &str, t_ms: f64, delta: f64) -> f64 {
+        let cap = self.capacity.max(1);
+        let series = self
+            .series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(name, cap));
+        let total = series.latest().map(|p| p.value).unwrap_or(0.0) + delta;
+        series.record(t_ms, total);
+        total
+    }
+
     pub fn get(&self, name: &str) -> Option<&Series> {
         self.series.get(name)
     }
@@ -122,6 +137,16 @@ impl Registry {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counter_add_accumulates() {
+        let mut reg = Registry::new(16);
+        assert_eq!(reg.add("api_requests_total", 0.0, 1.0), 1.0);
+        assert_eq!(reg.add("api_requests_total", 1.0, 1.0), 2.0);
+        assert_eq!(reg.add("api_requests_total", 2.0, 3.0), 5.0);
+        assert_eq!(reg.get("api_requests_total").unwrap().latest().unwrap().value, 5.0);
+        assert!(reg.expose().contains("api_requests_total 5"));
+    }
 
     #[test]
     fn series_bounded_and_ordered() {

@@ -7,20 +7,51 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use super::collection::{Collection, Result};
 use super::gridfs::GridFs;
+use super::wal::WalOptions;
+
+/// Database-wide storage tuning: a default [`WalOptions`] plus
+/// per-collection overrides (a write-heavy `models` collection can run
+/// bigger segments than a tiny config collection).
+#[derive(Debug, Clone, Default)]
+pub struct DatabaseOptions {
+    pub default_wal: WalOptions,
+    pub per_collection: HashMap<String, WalOptions>,
+}
+
+impl DatabaseOptions {
+    /// Builder-style per-collection override.
+    pub fn with_collection(mut self, name: &str, opts: WalOptions) -> DatabaseOptions {
+        self.per_collection.insert(name.to_string(), opts);
+        self
+    }
+
+    fn for_collection(&self, name: &str) -> WalOptions {
+        self.per_collection.get(name).cloned().unwrap_or_else(|| self.default_wal.clone())
+    }
+}
 
 /// A database rooted at a directory (or fully in memory).
 pub struct Database {
     root: Option<PathBuf>,
+    options: DatabaseOptions,
     collections: Mutex<HashMap<String, Arc<Mutex<Collection>>>>,
     gridfs: Arc<GridFs>,
 }
 
 impl Database {
-    /// Durable database at `<root>/collections` + `<root>/blobs`.
+    /// Durable database at `<root>/collections` + `<root>/blobs` with
+    /// default WAL tuning.
     pub fn open(root: &Path) -> Result<Database> {
+        Database::open_with(root, DatabaseOptions::default())
+    }
+
+    /// [`Database::open`] with explicit storage tuning, plumbed through
+    /// to each collection's WAL as it is first touched.
+    pub fn open_with(root: &Path, options: DatabaseOptions) -> Result<Database> {
         std::fs::create_dir_all(root)?;
         Ok(Database {
             root: Some(root.to_path_buf()),
+            options,
             collections: Mutex::new(HashMap::new()),
             gridfs: Arc::new(GridFs::open(&root.join("blobs"))?),
         })
@@ -32,6 +63,7 @@ impl Database {
             .join(format!("mlci-mem-{}", crate::util::idgen::object_id()));
         Database {
             root: None,
+            options: DatabaseOptions::default(),
             collections: Mutex::new(HashMap::new()),
             gridfs: Arc::new(GridFs::open(&blob_dir).expect("temp blob dir")),
         }
@@ -44,7 +76,11 @@ impl Database {
             return Ok(c.clone());
         }
         let coll = match &self.root {
-            Some(root) => Collection::open(&root.join("collections"), name)?,
+            Some(root) => Collection::open_with(
+                &root.join("collections"),
+                name,
+                self.options.for_collection(name),
+            )?,
             None => Collection::in_memory(name),
         };
         let arc = Arc::new(Mutex::new(coll));
@@ -116,6 +152,37 @@ mod tests {
             assert_eq!(db2.gridfs().get(&blob).unwrap(), b"weights");
         })
         .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn per_collection_wal_options_reach_the_wal() {
+        let dir = std::env::temp_dir().join(format!("mlci-dbopt-{}", idgen::object_id()));
+        {
+            // tiny segments for `events` only: the same write volume
+            // seals many segments there and none for `models`
+            let opts = DatabaseOptions::default()
+                .with_collection("events", WalOptions { segment_bytes: 256, replay_threads: 1 });
+            let db = Database::open_with(&dir, opts).unwrap();
+            for i in 0..32 {
+                let doc = Json::obj().with("i", i as i64).with("pad", "x".repeat(32));
+                db.with_collection("events", |c| c.insert(doc.clone()).unwrap()).unwrap();
+                db.with_collection("models", |c| c.insert(doc.clone()).unwrap()).unwrap();
+            }
+            let seg_count = |name: &str| {
+                std::fs::read_dir(dir.join("collections").join(format!("{name}.wal")))
+                    .unwrap()
+                    .count()
+            };
+            assert!(seg_count("events") > 2, "tiny segment_bytes must seal segments");
+            assert_eq!(seg_count("models"), 1, "default 8 MiB segment never seals here");
+        }
+        // both collections replay with their own options
+        let opts = DatabaseOptions::default()
+            .with_collection("events", WalOptions { segment_bytes: 256, replay_threads: 1 });
+        let db = Database::open_with(&dir, opts).unwrap();
+        db.with_collection("events", |c| assert_eq!(c.len(), 32)).unwrap();
+        db.with_collection("models", |c| assert_eq!(c.len(), 32)).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

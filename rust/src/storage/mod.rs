@@ -9,7 +9,7 @@ pub mod query;
 pub mod wal;
 
 pub use collection::{Collection, Result, StoreError};
-pub use db::Database;
+pub use db::{Database, DatabaseOptions};
 pub use gridfs::{BlobRef, GridFs};
 pub use query::Query;
 pub use wal::{Wal, WalOptions};

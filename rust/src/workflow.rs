@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::api::jobs::JobRegistry;
 use crate::cluster::Cluster;
 use crate::controller::{Controller, IdlePolicy, Placement, QosFeed, SloGuard};
 use crate::converter::{Converter, ConversionReport};
@@ -21,7 +22,7 @@ use crate::monitor::{Monitor, NodeExporter};
 use crate::profiler::Profiler;
 use crate::runtime::ArtifactStore;
 use crate::serving::{Frontend, ServiceHandle, ALL_SYSTEMS};
-use crate::storage::Database;
+use crate::storage::{Database, DatabaseOptions};
 use crate::util::clock::SharedClock;
 
 /// Per-stage wall-clock timings of one publish (experiment D2).
@@ -49,6 +50,8 @@ pub struct PlatformConfig {
     pub idle: IdlePolicy,
     pub p99_slo_ms: f64,
     pub profiler_iters: usize,
+    /// Storage tuning (per-collection WAL options) for durable data dirs.
+    pub db: DatabaseOptions,
 }
 
 impl Default for PlatformConfig {
@@ -58,6 +61,7 @@ impl Default for PlatformConfig {
             idle: IdlePolicy::default(),
             p99_slo_ms: 200.0,
             profiler_iters: 8,
+            db: DatabaseOptions::default(),
         }
     }
 }
@@ -76,6 +80,8 @@ pub struct Platform {
     pub exporter: Arc<NodeExporter>,
     pub qos: Arc<QosFeed>,
     pub controller: Arc<Controller>,
+    /// Async job registry behind the v1 API's 202-accepted resources.
+    pub jobs: Arc<JobRegistry>,
     pub config: PlatformConfig,
 }
 
@@ -85,9 +91,10 @@ impl Platform {
     pub fn init(artifact_dir: &Path, data_dir: Option<&Path>, clock: SharedClock, config: PlatformConfig) -> Result<Platform> {
         let store = Arc::new(ArtifactStore::load(artifact_dir)?);
         let db = Arc::new(match data_dir {
-            Some(dir) => Database::open(dir)?,
+            Some(dir) => Database::open_with(dir, config.db.clone())?,
             None => Database::in_memory(),
         });
+        let jobs = Arc::new(JobRegistry::new(clock.clone()));
         let hub = Arc::new(ModelHub::new(db.clone(), clock.clone())?);
         let housekeeper = Housekeeper::new(hub.clone());
         let cluster = Arc::new(Cluster::default_demo(clock));
@@ -121,6 +128,7 @@ impl Platform {
             exporter,
             qos,
             controller,
+            jobs,
             config,
         })
     }
@@ -142,25 +150,9 @@ impl Platform {
         let t2 = Instant::now();
         let mut profiles_recorded = 0;
         if outcome.trigger_profiling && conversion.as_ref().map(|c| c.all_validated()).unwrap_or(false) {
-            // single-field read through the zero-copy scan path
-            let family = self.hub.get_field_str(&outcome.model_id, "family")?.unwrap_or_default();
-            let manifest = self.store.model(&family)?;
-            let all = manifest.batches("reference");
-            let batches: Vec<usize> = match &batches {
-                Some(sel) => all.iter().copied().filter(|b| sel.contains(b)).collect(),
-                None => all,
-            };
-            self.controller.enqueue_profiling(
-                &outcome.model_id,
-                &family,
-                &["reference", "optimized"],
-                &batches,
-                ALL_SYSTEMS,
-                &[Frontend::Grpc, Frontend::Rest],
-                Placement::Workers,
-            )?;
-            self.controller.run_until_drained(10_000, 0.0);
-            profiles_recorded = self.controller.flush_results()?;
+            profiles_recorded = self
+                .profile_sync(&outcome.model_id, batches.as_deref(), &[Frontend::Grpc, Frontend::Rest])?
+                .0;
         }
         let profile_ms = t2.elapsed().as_secs_f64() * 1000.0;
 
@@ -171,6 +163,45 @@ impl Platform {
             profile_ms,
             conversion,
             profiles_recorded,
+        })
+    }
+
+    /// Enqueue a model's profiling grid on the controller and drain it
+    /// on this thread (idle workers only, QoS-guarded ticks). Returns
+    /// `(profiles_recorded, drain events)`. `batches` restricts the
+    /// grid to a subset of the family's available batch sizes; `None`
+    /// profiles them all. The synchronous spine under `publish`, the
+    /// CLI `profile` verb, and the v1 API's async profile jobs.
+    pub fn profile_sync(
+        &self,
+        model_id: &str,
+        batches: Option<&[usize]>,
+        frontends: &[Frontend],
+    ) -> Result<(usize, Vec<crate::controller::Event>)> {
+        // single-field read through the zero-copy scan path
+        let family = self.hub.get_field_str(model_id, "family")?.unwrap_or_default();
+        let manifest = self.store.model(&family)?;
+        let all = manifest.batches("reference");
+        let batches: Vec<usize> = match batches {
+            Some(sel) => all.iter().copied().filter(|b| sel.contains(b)).collect(),
+            None => all,
+        };
+        // the whole enqueue→drain→flush session holds the drain gate:
+        // a concurrent session would drain this model's rows into its
+        // own flush and misattribute the counts
+        self.controller.exclusive_drain(|| {
+            self.controller.enqueue_profiling(
+                model_id,
+                &family,
+                &["reference", "optimized"],
+                &batches,
+                ALL_SYSTEMS,
+                frontends,
+                Placement::Workers,
+            )?;
+            let events = self.controller.run_until_drained(10_000, 0.0);
+            let recorded = self.controller.flush_results()?;
+            Ok((recorded, events))
         })
     }
 
@@ -185,6 +216,9 @@ impl Platform {
     }
 
     pub fn shutdown(&self) {
+        // drain queued API jobs first: they drive the controller, which
+        // profiles on the cluster being torn down below
+        self.jobs.shutdown();
         self.dispatcher.stop_all();
         self.cluster.shutdown();
     }
