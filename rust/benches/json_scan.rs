@@ -17,15 +17,26 @@
 //!              vs mmap'd segments scanned in place with pooled
 //!              buffers and parallel sealed-segment parsing
 //!
+//!   simd_vs_scalar/* — the scalar oracle scan pass vs the vectorized
+//!              pass (AVX2/NEON/SWAR interest-point skipping) on the
+//!              shapes the block classifier targets: a long
+//!              escape-free string payload, a whitespace-heavy
+//!              pretty-printed document, the compact model document,
+//!              and a WAL record line. Acceptance bar: the vectorized
+//!              pass is never slower than scalar on any of these.
+//!
 //! Run: `cargo bench --bench json_scan` (flags: `--smoke` for tiny
 //! iteration counts, `--out PATH` for the JSON report, default
-//! `BENCH_json_scan.json`). Results land in EXPERIMENTS.md §Perf.
+//! `BENCH_json_scan.json`, `--force-scalar` to pin every dispatched
+//! scan in the run to the scalar engine). Results land in
+//! EXPERIMENTS.md §Perf and §SIMD.
 
 use std::io::BufRead;
 
 use mlmodelci::storage::{Collection, Query, WalOptions};
 use mlmodelci::util::benchkit::{bench, f2, Table};
-use mlmodelci::util::jscan::{self, Doc};
+use mlmodelci::util::jscan::{self, Doc, Offsets};
+use mlmodelci::util::jscan_simd::{self, Engine};
 use mlmodelci::util::json::Json;
 
 /// A representative model document (schema.rs shape) with `profiles`
@@ -150,6 +161,7 @@ impl Case {
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
+    let force_scalar = args.iter().any(|a| a == "--force-scalar");
     let out_path = args
         .iter()
         .position(|a| a == "--out")
@@ -157,8 +169,21 @@ fn main() {
         .unwrap_or_else(|| "BENCH_json_scan.json".to_string());
     let (warmup, iters) = if smoke { (1, 3) } else { (20, 200) };
 
+    // pins every dispatched scan in this process (scan_into, WAL
+    // replay, collection opens) to the scalar oracle. The explicit
+    // simd_vs_scalar comparison below stays meaningful regardless:
+    // scan_into_simd resolves its engine via jscan_simd::vector_engine,
+    // which falls back to the best detected engine when the dispatch is
+    // pinned scalar.
+    let _engine_guard = force_scalar.then(|| jscan_simd::force_engine(Engine::Scalar));
+
     println!("=== json_scan: zero-copy scan path vs seed tree parser ===");
-    println!("(iters={iters}, warmup={warmup}{})\n", if smoke { ", SMOKE" } else { "" });
+    println!(
+        "(iters={iters}, warmup={warmup}, engine={:?}{}{})\n",
+        jscan_simd::engine(),
+        if force_scalar { ", FORCED-SCALAR" } else { "" },
+        if smoke { ", SMOKE" } else { "" }
+    );
 
     let mut cases: Vec<Case> = Vec::new();
 
@@ -324,6 +349,43 @@ fn main() {
         });
     }
 
+    // --- scalar oracle pass vs vectorized scan pass ---------------------
+    {
+        // long-string: one escape-free 256 KiB payload — the best case
+        // for interest-point skipping (every byte is "uninteresting")
+        let mut long_string = Json::obj();
+        long_string.set("blob", "x".repeat(256 * 1024));
+        let long_string = long_string.to_string();
+        // whitespace-heavy: a pretty-printed profiled document
+        let whitespace = model_doc(5, 64).to_pretty();
+        // the compact representative model document (mixed shape)
+        let compact = model_doc(5, 24).to_string();
+        // one WAL record line (the replay inner-loop shape)
+        let wal_line = format!("{{\"doc\":{},\"op\":\"put\"}}", model_doc(6, 8));
+        for (label, text) in [
+            ("simd_vs_scalar/long-string", &long_string),
+            ("simd_vs_scalar/whitespace-heavy", &whitespace),
+            ("simd_vs_scalar/model-doc", &compact),
+            ("simd_vs_scalar/wal-record", &wal_line),
+        ] {
+            let mut offsets = Offsets::default();
+            let scalar = bench(label, warmup, iters, || {
+                jscan::scan_into_scalar(text, &mut offsets).unwrap();
+                offsets.node_count()
+            });
+            let simd = bench(label, warmup, iters, || {
+                jscan::scan_into_simd(text, &mut offsets).unwrap();
+                offsets.node_count()
+            });
+            cases.push(Case {
+                name: label.to_string(),
+                baseline_ms: scalar.mean_ms,
+                scan_ms: simd.mean_ms,
+                bytes_per_iter: text.len(),
+            });
+        }
+    }
+
     // --- report ---------------------------------------------------------
     let mut t = Table::new(&[
         "case",
@@ -345,11 +407,19 @@ fn main() {
     }
     t.print();
 
-    // machine-readable report (written with the canonical serializer)
+    // machine-readable report (written with the canonical serializer).
+    // For `simd_vs_scalar/*` rows the baseline column is the scalar
+    // oracle pass (not the seed tree parser) and `scan_ms` is the
+    // vectorized pass on `scan_engine` (= vector_engine(): under
+    // --force-scalar the dispatched cases run scalar but the explicit
+    // simd rows still measure the best detected engine — record both
+    // so the report can't mislabel either).
     let mut report = Json::obj()
         .with("bench", "json_scan")
         .with("iters", iters as i64)
         .with("smoke", smoke)
+        .with("scan_engine", format!("{:?}", jscan_simd::vector_engine()))
+        .with("dispatch_engine", format!("{:?}", jscan_simd::engine()))
         .with("doc_count", n_docs as i64);
     let results: Vec<Json> = cases
         .iter()
@@ -373,5 +443,14 @@ fn main() {
         cases.iter().find(|c| c.name == "extract/status").map(|c| c.speedup()).unwrap_or(0.0);
     println!(
         "headline: parse {parse_speedup:.2}x, single-field extract {extract_speedup:.2}x vs seed parser"
+    );
+    let simd_long = cases
+        .iter()
+        .find(|c| c.name == "simd_vs_scalar/long-string")
+        .map(|c| c.speedup())
+        .unwrap_or(0.0);
+    println!(
+        "simd: long-string scan {simd_long:.2}x vs scalar oracle on {:?}",
+        jscan_simd::vector_engine()
     );
 }

@@ -43,6 +43,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::util::jscan::{self, Doc, Offsets};
+use crate::util::jscan_simd;
 
 use super::collection::{Result, StoreError};
 
@@ -398,8 +399,10 @@ fn parse_segment(
         let mut lineno = 0usize;
         while pos < text.len() {
             lineno += 1;
-            let (line_end, terminated) = match find_byte(&bytes[pos..], b'\n') {
-                Some(off) => (pos + off, true),
+            // block-accelerated record scan: the bytes between newlines
+            // are exactly the "uninteresting run" the SIMD pass skips
+            let (line_end, terminated) = match jscan_simd::find_byte(bytes, pos, b'\n') {
+                Some(abs) => (abs, true),
                 None => (text.len(), false),
             };
             if !terminated {
@@ -455,10 +458,6 @@ fn parse_record(
         other => return Err(format!("unknown op '{other}'")),
     }
     Ok(())
-}
-
-fn find_byte(haystack: &[u8], needle: u8) -> Option<usize> {
-    haystack.iter().position(|&b| b == needle)
 }
 
 // ---------------------------------------------------------------------------

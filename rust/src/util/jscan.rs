@@ -32,12 +32,30 @@
 //! one documented divergence: the scanner bounds container nesting at
 //! [`MAX_DEPTH`] to keep the recursive pass stack-safe, while the seed
 //! parser recurses without limit.
+//!
+//! The scanner runs in two gears sharing one structural pass:
+//!
+//! * [`scan_into_scalar`] — the byte-at-a-time reference ("the oracle").
+//! * [`scan_into_simd`] — the same pass with the run-heavy inner loops
+//!   (string payloads, whitespace runs) jumping block-wise to the next
+//!   interest byte via [`super::jscan_simd`] (AVX2 / NEON / SWAR,
+//!   runtime-selected).
+//!
+//! [`scan_into`] routes to the vectorized gear unless the process is
+//! pinned scalar (`MLCI_FORCE_SCALAR=1` or
+//! [`jscan_simd::force_engine`](super::jscan_simd::force_engine)). The
+//! two gears must agree **exactly** — same [`Offsets`] (nodes, spans,
+//! escape flags; `Offsets` implements `PartialEq` for this), same
+//! accept/reject verdicts, same error positions — a contract enforced
+//! by `rust/tests/json_scan_props.rs` and
+//! `rust/tests/json_conformance.rs`.
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::Mutex;
 
+use super::jscan_simd as simd;
 use super::json::{Json, JsonError};
 
 /// Largest magnitude whose every integer is exactly representable in
@@ -63,7 +81,8 @@ pub enum Kind {
 const NO_KEY: u32 = u32::MAX;
 
 /// One scanned value: spans into the source text instead of owned data.
-#[derive(Debug, Clone, Copy)]
+/// `PartialEq` backs the scalar-vs-SIMD differential tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct Node {
     kind: Kind,
     /// Str payload contains escape sequences (unescape on access).
@@ -87,8 +106,11 @@ struct Node {
 }
 
 /// The offset table produced by [`scan`]: detached from the text so an
-/// owning type ([`Doc`]) needs no self-references.
-#[derive(Debug, Clone, Default)]
+/// owning type ([`Doc`]) needs no self-references. Two tables compare
+/// equal iff every node matches field-for-field (kind, spans, escape
+/// flags, sibling links) — the invariant the scalar and SIMD scan
+/// passes are held to.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Offsets {
     nodes: Vec<Node>,
 }
@@ -118,14 +140,48 @@ pub fn scan(text: &str) -> Result<Offsets, JsonError> {
 /// steady-state entry point: with a pooled [`Offsets`] (see
 /// [`with_pooled_offsets`]) a scan performs no heap allocation at all
 /// once the buffer has grown to the working-set document size.
+///
+/// Routes to the vectorized pass ([`scan_into_simd`]) unless the
+/// process is pinned scalar via `MLCI_FORCE_SCALAR` or
+/// [`jscan_simd::force_engine`](super::jscan_simd::force_engine); the
+/// two passes produce identical results by contract.
 pub fn scan_into(text: &str, offsets: &mut Offsets) -> Result<(), JsonError> {
+    match simd::engine() {
+        simd::Engine::Scalar => scan_impl::<false>(text, offsets, simd::Engine::Scalar),
+        engine => scan_impl::<true>(text, offsets, engine),
+    }
+}
+
+/// The byte-at-a-time reference pass — the differential oracle. Always
+/// available regardless of engine selection.
+pub fn scan_into_scalar(text: &str, offsets: &mut Offsets) -> Result<(), JsonError> {
+    scan_impl::<false>(text, offsets, simd::Engine::Scalar)
+}
+
+/// The vectorized pass: identical structural scan, but string payloads
+/// and whitespace runs jump block-wise to the next interest byte. Uses
+/// [`jscan_simd::vector_engine`](super::jscan_simd::vector_engine), so
+/// an explicit call stays genuinely vectorized (best available engine)
+/// even when the process-wide dispatch is pinned scalar — which is what
+/// keeps the scalar-vs-SIMD differential tests and benches meaningful
+/// in a `MLCI_FORCE_SCALAR=1` run.
+pub fn scan_into_simd(text: &str, offsets: &mut Offsets) -> Result<(), JsonError> {
+    scan_impl::<true>(text, offsets, simd::vector_engine())
+}
+
+fn scan_impl<const ACCEL: bool>(
+    text: &str,
+    offsets: &mut Offsets,
+    engine: simd::Engine,
+) -> Result<(), JsonError> {
     offsets.nodes.clear();
     // spans are u32; refuse inputs whose offsets could wrap (>= keeps
     // the NO_KEY sentinel unreachable as a real offset)
     if text.len() >= u32::MAX as usize {
         return Err(JsonError { pos: 0, msg: "document too large for u32 spans".to_string() });
     }
-    let mut s = Scanner { b: text.as_bytes(), pos: 0, nodes: &mut offsets.nodes, depth: 0 };
+    let mut s: Scanner<'_, ACCEL> =
+        Scanner { b: text.as_bytes(), pos: 0, nodes: &mut offsets.nodes, depth: 0, engine };
     s.skip_ws();
     s.value(NO_KEY, 0, false)?;
     s.skip_ws();
@@ -158,17 +214,28 @@ pub fn detach_offsets() -> Offsets {
     OFFSETS_POOL.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
 }
 
-/// Return a scan table to the pool for reuse.
-pub fn attach_offsets(mut offsets: Offsets) {
+/// Return a scan table to the pool for reuse. Returns `true` when the
+/// table was actually pooled, `false` when it was dropped instead —
+/// because its node buffer outgrew [`OFFSETS_POOL_NODES_MAX`] or the
+/// pool is already at [`OFFSETS_POOL_MAX`]. The boolean exists for the
+/// cap regression tests; callers are free to ignore it.
+pub fn attach_offsets(mut offsets: Offsets) -> bool {
     offsets.nodes.clear();
     if offsets.nodes.capacity() > OFFSETS_POOL_NODES_MAX {
-        return; // oversized by a burst of huge documents: let it drop
+        return false; // oversized by a burst of huge documents: let it drop
     }
     if let Ok(mut p) = OFFSETS_POOL.lock() {
         if p.len() < OFFSETS_POOL_MAX {
             p.push(offsets);
+            return true;
         }
     }
+    false
+}
+
+/// Pooled-table count right now (cap regression tests / diagnostics).
+pub fn pooled_offsets_len() -> usize {
+    OFFSETS_POOL.lock().map(|p| p.len()).unwrap_or(0)
 }
 
 /// Run `f` with a pooled scan table, returning it afterwards.
@@ -179,14 +246,26 @@ pub fn with_pooled_offsets<R>(f: impl FnOnce(&mut Offsets) -> R) -> R {
     out
 }
 
-struct Scanner<'a> {
+/// The structural scan pass. `ACCEL` selects the gear for the two
+/// run-heavy inner loops (whitespace and string payloads): `false` is
+/// the byte-wise oracle, `true` jumps block-wise via [`jscan_simd`]
+/// primitives. Everything else — token dispatch, container recursion,
+/// escape validation, numbers, error positions — is the *same* code in
+/// both gears, which is what makes byte-identical `Offsets` a
+/// structural guarantee rather than a hope.
+struct Scanner<'a, const ACCEL: bool> {
     b: &'a [u8],
     pos: usize,
     nodes: &'a mut Vec<Node>,
     depth: usize,
+    /// Block engine for the ACCEL gear (the oracle gear carries
+    /// `Engine::Scalar` and never consults it). Pinned per scan rather
+    /// than re-dispatched per primitive call, so one scan is internally
+    /// consistent even if the global selection changes mid-flight.
+    engine: simd::Engine,
 }
 
-impl<'a> Scanner<'a> {
+impl<'a, const ACCEL: bool> Scanner<'a, ACCEL> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { pos: self.pos, msg: msg.to_string() }
     }
@@ -202,6 +281,12 @@ impl<'a> Scanner<'a> {
     }
 
     fn skip_ws(&mut self) {
+        if ACCEL {
+            self.pos = simd::skip_ws_with(self.engine, self.b, self.pos);
+        }
+        // byte-wise gear; in the ACCEL gear this is a no-op mop-up that
+        // keeps behavior correct even if a block primitive ever stopped
+        // short of the first non-whitespace byte
         while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
             self.pos += 1;
         }
@@ -338,11 +423,19 @@ impl<'a> Scanner<'a> {
 
     /// Validate a string and return its inside-the-quotes span plus an
     /// "it has escapes" flag. No unescaping happens here.
+    ///
+    /// In the ACCEL gear the plain-content run up to the next `"`, `\`
+    /// or control byte is skipped block-wise; the byte that stopped the
+    /// block scan then goes through the exact same match arms as the
+    /// scalar gear, so verdicts, spans and error positions coincide.
     fn string_span(&mut self) -> Result<(u32, u32, bool), JsonError> {
         self.expect(b'"')?;
         let start = self.pos;
         let mut escaped = false;
         loop {
+            if ACCEL {
+                self.pos = simd::find_string_special_with(self.engine, self.b, self.pos);
+            }
             match self.bump() {
                 None => return Err(self.err("unterminated string")),
                 Some(b'"') => return Ok((start as u32, (self.pos - 1) as u32, escaped)),
@@ -352,7 +445,9 @@ impl<'a> Scanner<'a> {
                 }
                 Some(c) if c < 0x20 => return Err(self.err("control character in string")),
                 // bytes >= 0x80 are valid UTF-8 continuation/lead bytes
-                // because the input arrived as &str
+                // because the input arrived as &str (and in the ACCEL
+                // gear: a primitive stopping short of a special byte is
+                // just a plain byte to step over)
                 Some(_) => {}
             }
         }
@@ -1267,6 +1362,88 @@ mod tests {
         assert_eq!(r2.get("n").unwrap().detach_doc().root().as_f64(), Some(-2.5));
         let arr = r2.get("arr").unwrap().detach_doc();
         assert_eq!(arr.to_json(), Json::parse("[true,null]").unwrap());
+    }
+
+    #[test]
+    fn scalar_and_simd_passes_agree_on_corpus() {
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let long_str = format!("{{\"blob\":\"{}\",\"n\":1}}", "x".repeat(1000));
+        let corpus = [
+            DOC,
+            "null",
+            r#""a\nb""#,
+            "  [1,\t2,\n3]  ",
+            "{bad",
+            "",
+            "\"unterminated",
+            "\"ctl\u{1}\"",
+            deep.as_str(),
+            long_str.as_str(),
+        ];
+        for text in corpus {
+            let mut scalar = Offsets::default();
+            let mut vector = Offsets::default();
+            let r_scalar = scan_into_scalar(text, &mut scalar);
+            let r_simd = scan_into_simd(text, &mut vector);
+            match (r_scalar, r_simd) {
+                (Ok(()), Ok(())) => assert_eq!(scalar, vector, "offsets diverge for {text:?}"),
+                (Err(a), Err(b)) => assert_eq!(a, b, "errors diverge for {text:?}"),
+                (a, b) => panic!("verdicts diverge for {text:?}: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn scan_into_dispatch_matches_both_gears() {
+        // whatever engine is selected, the dispatched entry point must
+        // produce the same table as both explicit gears
+        let mut via_dispatch = Offsets::default();
+        let mut via_scalar = Offsets::default();
+        let mut via_simd = Offsets::default();
+        scan_into(DOC, &mut via_dispatch).unwrap();
+        scan_into_scalar(DOC, &mut via_scalar).unwrap();
+        scan_into_simd(DOC, &mut via_simd).unwrap();
+        assert_eq!(via_dispatch, via_scalar);
+        assert_eq!(via_dispatch, via_simd);
+    }
+
+    #[test]
+    fn offsets_pool_cap_holds_under_churn() {
+        // hammer the pool from several threads, overdrawing (detach
+        // several before attaching any) so attach sees both a full and
+        // a non-full pool; the pooled count must never exceed the cap
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        let mut taken: Vec<Offsets> =
+                            (0..8).map(|_| detach_offsets()).collect();
+                        for mut t in taken.drain(..) {
+                            scan_into(DOC, &mut t).unwrap();
+                            attach_offsets(t);
+                        }
+                        assert!(
+                            pooled_offsets_len() <= OFFSETS_POOL_MAX,
+                            "pool exceeded its cap mid-churn"
+                        );
+                    }
+                });
+            }
+        });
+        // overfill attempt: attach twice the cap back-to-back
+        let taken: Vec<Offsets> = (0..OFFSETS_POOL_MAX * 2).map(|_| detach_offsets()).collect();
+        for t in taken {
+            attach_offsets(t);
+        }
+        assert!(pooled_offsets_len() <= OFFSETS_POOL_MAX, "pool exceeded its cap on overfill");
+    }
+
+    #[test]
+    fn oversized_offsets_are_dropped_not_pooled() {
+        let mut big = Offsets::default();
+        big.nodes.reserve(OFFSETS_POOL_NODES_MAX + 1);
+        assert!(!attach_offsets(big), "a peak-sized table must be dropped, not pooled");
+        assert!(pooled_offsets_len() <= OFFSETS_POOL_MAX);
     }
 
     #[test]

@@ -1,0 +1,684 @@
+//! Vectorized block classification for the JSON offset scanner
+//! (squirrel-json's interest-point skipping, adapted to `util::jscan`).
+//!
+//! The scalar scanner in [`super::jscan`] walks one byte at a time. On
+//! the inputs this platform actually serves — model documents with long
+//! string payloads, pretty-printed REST bodies, newline-delimited WAL
+//! segments — almost all of those bytes are *uninteresting*: plain
+//! string content, whitespace runs, the bytes between record
+//! separators. This module classifies 8/16/32-byte blocks at once and
+//! reports the position of the next **interest byte**, letting the
+//! scanner's hot loops jump straight to it:
+//!
+//! * [`find_string_special`] — next `"`, `\` or control byte (`< 0x20`)
+//!   inside a string payload. Everything in between is plain content
+//!   the scanner never needs to look at.
+//! * [`skip_ws`] — end of a whitespace run (space, tab, CR, LF): the
+//!   gap between structural bytes (`{` `}` `[` `]` `,` `:`) and tokens.
+//! * [`find_byte`] — generic single-byte search; the WAL's record
+//!   (newline) scan in `storage/wal.rs::parse_segment` rides this.
+//!
+//! Three engines implement the block classification:
+//!
+//! * **AVX2** (x86_64, 32-byte blocks) — selected at runtime via
+//!   `is_x86_feature_detected!("avx2")`; compare-equal masks are OR-ed
+//!   and packed to a bitmask with `movemask`, so "position of the next
+//!   interest byte" is one `trailing_zeros`.
+//! * **NEON** (aarch64, 16-byte blocks) — always available on aarch64;
+//!   the 16-lane mask packs to 4 bits per lane via the `vshrn`
+//!   narrowing-shift trick.
+//! * **SWAR** (everywhere, 8-byte blocks) — portable `u64` bit tricks,
+//!   no `unsafe`, no feature detection. Uses the *exact* per-byte
+//!   zero test (`!(((v & 0x7f..) + 0x7f..) | v | 0x7f..)`) rather than
+//!   the classic `(v - 0x01..) & !v & 0x80..` haszero, because the
+//!   latter's cross-byte borrow can flag false positives above a real
+//!   match — harmless when you only take the lowest set bit, fatal for
+//!   the inverted "first byte NOT in the class" query `skip_ws` needs.
+//!
+//! Selection happens once per process ([`engine`]) and is cached in an
+//! atomic. The escape hatch contract (documented in
+//! `docs/SIMD_SCAN.md`): setting [`FORCE_SCALAR_ENV`]
+//! (`MLCI_FORCE_SCALAR=1`) before the first scan pins the process to
+//! [`Engine::Scalar`], which routes `jscan::scan_into` to the byte-wise
+//! oracle scanner and makes every primitive here take its reference
+//! byte-loop path. Tests and benches can override the selection
+//! temporarily with [`force_engine`].
+//!
+//! Every primitive is **semantics-free**: it only answers "where is the
+//! next byte of this class", so a correct answer is exactly the answer
+//! the reference byte loop gives. The differential suite
+//! (`rust/tests/json_scan_props.rs`, `rust/tests/json_conformance.rs`)
+//! additionally pins the full scanner output (`Offsets`, accept/reject,
+//! error positions) across engines.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// Environment variable that pins the process to [`Engine::Scalar`]
+/// (checked once, at the first [`engine`] call). Any non-empty value
+/// other than `0` forces scalar.
+pub const FORCE_SCALAR_ENV: &str = "MLCI_FORCE_SCALAR";
+
+/// A block-scan implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Engine {
+    /// Reference byte-at-a-time loops; also routes `jscan::scan_into`
+    /// to the scalar oracle scanner.
+    Scalar = 1,
+    /// Portable 8-byte `u64` SWAR blocks (safe code, every target).
+    Swar = 2,
+    /// 32-byte AVX2 blocks (x86_64 with runtime AVX2 support).
+    Avx2 = 3,
+    /// 16-byte NEON blocks (aarch64 baseline).
+    Neon = 4,
+}
+
+impl Engine {
+    fn from_u8(v: u8) -> Option<Engine> {
+        match v {
+            1 => Some(Engine::Scalar),
+            2 => Some(Engine::Swar),
+            3 => Some(Engine::Avx2),
+            4 => Some(Engine::Neon),
+            _ => None,
+        }
+    }
+
+    /// Block width in bytes (diagnostics; the scalar engine reports 1).
+    pub fn block_bytes(self) -> usize {
+        match self {
+            Engine::Scalar => 1,
+            Engine::Swar => 8,
+            Engine::Avx2 => 32,
+            Engine::Neon => 16,
+        }
+    }
+}
+
+/// Resolved engine, 0 = not yet detected.
+static ENGINE: AtomicU8 = AtomicU8::new(0);
+/// Temporary override installed by [`force_engine`], 0 = none.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Best engine for this host, ignoring the env escape hatch and any
+/// [`force_engine`] override: what the dispatcher would pick on an
+/// unconstrained process.
+pub fn detect_best() -> Engine {
+    // the enum variants exist on every target (only their *dispatch
+    // arms* are cfg-gated), so plain `cfg!` branches stay compilable
+    // everywhere
+    if cfg!(target_arch = "aarch64") {
+        return Engine::Neon;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return Engine::Avx2;
+    }
+    Engine::Swar
+}
+
+/// The engine an *explicit* request for the vectorized gear should use:
+/// the current selection, except that a scalar pin (env escape hatch or
+/// [`force_engine`]) falls back to [`detect_best`]. This is what keeps
+/// `jscan::scan_into_simd` — and therefore the scalar-vs-SIMD
+/// differential tests and the `simd_vs_scalar` bench rows — genuinely
+/// vectorized even in a `MLCI_FORCE_SCALAR=1` run, where comparing the
+/// gears would otherwise silently degrade to scalar-vs-scalar. Only the
+/// *dispatched* entry points (`jscan::scan_into`, the WAL record scan)
+/// honor the scalar pin.
+pub fn vector_engine() -> Engine {
+    match engine() {
+        Engine::Scalar => detect_best(),
+        e => e,
+    }
+}
+
+fn detect() -> Engine {
+    let forced = std::env::var_os(FORCE_SCALAR_ENV)
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if forced {
+        Engine::Scalar
+    } else {
+        detect_best()
+    }
+}
+
+/// The engine every dispatched primitive (and `jscan::scan_into`) uses
+/// right now. Detection runs once; [`force_engine`] overrides win while
+/// their guard is alive.
+pub fn engine() -> Engine {
+    if let Some(e) = Engine::from_u8(OVERRIDE.load(Ordering::Acquire)) {
+        return e;
+    }
+    if let Some(e) = Engine::from_u8(ENGINE.load(Ordering::Relaxed)) {
+        return e;
+    }
+    let detected = detect();
+    ENGINE.store(detected as u8, Ordering::Relaxed);
+    detected
+}
+
+/// Live [`force_engine`] overrides, newest-wins: `(guard id, engine)`.
+/// A stack (rather than swap/restore pairs) keeps the restore correct
+/// even when guards from different threads drop out of creation order —
+/// [`OVERRIDE`] always mirrors the top surviving entry, and goes back
+/// to "none" only when every guard is gone.
+static FORCE_STACK: Mutex<Vec<(u64, u8)>> = Mutex::new(Vec::new());
+static FORCE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// RAII override of the engine selection, for benches and differential
+/// tests. Every engine produces identical scan results by contract, so
+/// concurrent guards (tests run in parallel threads) can only change
+/// *which* correct implementation other threads use, never what it
+/// returns. On drop the override reverts to the most recent surviving
+/// guard's engine, or to normal detection once none remain.
+pub struct EngineGuard {
+    id: u64,
+}
+
+/// Can this host actually execute `engine`'s block loops?
+fn runnable(engine: Engine) -> bool {
+    match engine {
+        Engine::Scalar | Engine::Swar => true,
+        #[cfg(target_arch = "x86_64")]
+        Engine::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(not(target_arch = "x86_64"))]
+        Engine::Avx2 => false,
+        Engine::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// Pin the process-wide engine until the returned guard drops. A
+/// request for an engine this host cannot execute (e.g. `Avx2` on a
+/// CPU without AVX2) is clamped to [`detect_best`] — forcing must never
+/// be able to route dispatch into intrinsics the CPU lacks. (The
+/// dispatchers additionally feature-guard their SIMD arms, so even a
+/// hand-rolled `*_with` call with an unsupported engine stays sound —
+/// it degrades to the SWAR path.)
+pub fn force_engine(engine: Engine) -> EngineGuard {
+    let engine = if runnable(engine) { engine } else { detect_best() };
+    let id = FORCE_ID.fetch_add(1, Ordering::Relaxed);
+    let mut stack = FORCE_STACK.lock().unwrap_or_else(|e| e.into_inner());
+    stack.push((id, engine as u8));
+    OVERRIDE.store(engine as u8, Ordering::Release);
+    EngineGuard { id }
+}
+
+impl Drop for EngineGuard {
+    fn drop(&mut self) {
+        let mut stack = FORCE_STACK.lock().unwrap_or_else(|e| e.into_inner());
+        stack.retain(|&(id, _)| id != self.id);
+        let top = stack.last().map(|&(_, engine)| engine).unwrap_or(0);
+        OVERRIDE.store(top, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatched primitives
+
+/// Position of the first byte at or after `from` that a string scanner
+/// must look at: `"`, `\`, or a control byte (`< 0x20`). Returns
+/// `b.len()` when the rest of the input is plain string content.
+pub fn find_string_special(b: &[u8], from: usize) -> usize {
+    find_string_special_with(engine(), b, from)
+}
+
+/// [`find_string_special`] on an explicit engine (differential tests).
+/// SIMD arms are feature-guarded, so an engine this host cannot run
+/// degrades to the SWAR path instead of executing missing instructions.
+/// The guard re-reads std's *cached* detection bit (one atomic load —
+/// actual CPUID detection ran once, inside std); engines coming from
+/// [`engine`]/[`vector_engine`]/[`force_engine`] are pre-clamped to
+/// runnable, so on the dispatched hot path the branch always predicts.
+pub fn find_string_special_with(engine: Engine, b: &[u8], from: usize) -> usize {
+    match engine {
+        Engine::Scalar => find_string_special_scalar(b, from),
+        Engine::Swar => find_string_special_swar(b, from),
+        #[cfg(target_arch = "x86_64")]
+        Engine::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
+            avx2::find_string_special(b, from)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Engine::Neon => unsafe { neon::find_string_special(b, from) },
+        #[allow(unreachable_patterns)]
+        _ => find_string_special_swar(b, from),
+    }
+}
+
+/// Position of the first non-whitespace byte at or after `from`
+/// (whitespace per RFC 8259: space, tab, LF, CR). Returns `b.len()`
+/// when the rest of the input is whitespace.
+pub fn skip_ws(b: &[u8], from: usize) -> usize {
+    skip_ws_with(engine(), b, from)
+}
+
+/// [`skip_ws`] on an explicit engine (differential tests). SIMD arms
+/// are feature-guarded like [`find_string_special_with`]'s.
+pub fn skip_ws_with(engine: Engine, b: &[u8], from: usize) -> usize {
+    match engine {
+        Engine::Scalar => skip_ws_scalar(b, from),
+        Engine::Swar => skip_ws_swar(b, from),
+        #[cfg(target_arch = "x86_64")]
+        Engine::Avx2 if is_x86_feature_detected!("avx2") => unsafe { avx2::skip_ws(b, from) },
+        #[cfg(target_arch = "aarch64")]
+        Engine::Neon => unsafe { neon::skip_ws(b, from) },
+        #[allow(unreachable_patterns)]
+        _ => skip_ws_swar(b, from),
+    }
+}
+
+/// Absolute position of the first `needle` byte at or after `from`
+/// (block-accelerated memchr; the WAL record scan uses it for `\n`).
+pub fn find_byte(b: &[u8], from: usize, needle: u8) -> Option<usize> {
+    find_byte_with(engine(), b, from, needle)
+}
+
+/// [`find_byte`] on an explicit engine (differential tests). SIMD arms
+/// are feature-guarded like [`find_string_special_with`]'s.
+pub fn find_byte_with(engine: Engine, b: &[u8], from: usize, needle: u8) -> Option<usize> {
+    match engine {
+        Engine::Scalar => find_byte_scalar(b, from, needle),
+        Engine::Swar => find_byte_swar(b, from, needle),
+        #[cfg(target_arch = "x86_64")]
+        Engine::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
+            avx2::find_byte(b, from, needle)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Engine::Neon => unsafe { neon::find_byte(b, from, needle) },
+        #[allow(unreachable_patterns)]
+        _ => find_byte_swar(b, from, needle),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference implementations (also the sub-block tail path)
+
+fn find_string_special_scalar(b: &[u8], from: usize) -> usize {
+    let mut i = from;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'"' || c == b'\\' || c < 0x20 {
+            return i;
+        }
+        i += 1;
+    }
+    b.len()
+}
+
+fn skip_ws_scalar(b: &[u8], from: usize) -> usize {
+    let mut i = from;
+    while i < b.len() && matches!(b[i], b' ' | b'\t' | b'\n' | b'\r') {
+        i += 1;
+    }
+    i
+}
+
+fn find_byte_scalar(b: &[u8], from: usize, needle: u8) -> Option<usize> {
+    b.get(from..)?.iter().position(|&x| x == needle).map(|off| from + off)
+}
+
+// ---------------------------------------------------------------------------
+// SWAR: portable 8-byte blocks
+
+const LSB: u64 = 0x0101_0101_0101_0101;
+const MSB: u64 = 0x8080_8080_8080_8080;
+const LO7: u64 = 0x7f7f_7f7f_7f7f_7f7f;
+
+/// Exact per-byte zero test: high bit of each output byte is set iff
+/// that input byte is `0x00`; all other output bits are clear. Unlike
+/// the classic `(v - 0x01..) & !v & 0x80..` haszero trick, this has no
+/// cross-byte borrow and therefore no false positives — required for
+/// the inverted queries below.
+#[inline(always)]
+fn zero_bytes(v: u64) -> u64 {
+    !(((v & LO7) + LO7) | v | LO7)
+}
+
+/// High bit of each byte set iff that byte equals `needle` (exact).
+#[inline(always)]
+fn eq_bytes(x: u64, needle: u8) -> u64 {
+    zero_bytes(x ^ (LSB * needle as u64))
+}
+
+#[inline(always)]
+fn load8(b: &[u8], i: usize) -> u64 {
+    u64::from_le_bytes(b[i..i + 8].try_into().unwrap())
+}
+
+fn find_string_special_swar(b: &[u8], from: usize) -> usize {
+    // control bytes: c < 0x20  ⇔  (c & 0b1110_0000) == 0
+    const HI3: u64 = 0xe0e0_e0e0_e0e0_e0e0;
+    let mut i = from;
+    while i + 8 <= b.len() {
+        let x = load8(b, i);
+        let special = eq_bytes(x, b'"') | eq_bytes(x, b'\\') | zero_bytes(x & HI3);
+        if special != 0 {
+            return i + (special.trailing_zeros() >> 3) as usize;
+        }
+        i += 8;
+    }
+    find_string_special_scalar(b, i)
+}
+
+fn skip_ws_swar(b: &[u8], from: usize) -> usize {
+    let mut i = from;
+    while i + 8 <= b.len() {
+        let x = load8(b, i);
+        let ws = eq_bytes(x, b' ') | eq_bytes(x, b'\t') | eq_bytes(x, b'\n') | eq_bytes(x, b'\r');
+        let non_ws = !ws & MSB;
+        if non_ws != 0 {
+            return i + (non_ws.trailing_zeros() >> 3) as usize;
+        }
+        i += 8;
+    }
+    skip_ws_scalar(b, i)
+}
+
+fn find_byte_swar(b: &[u8], from: usize, needle: u8) -> Option<usize> {
+    let mut i = from;
+    while i + 8 <= b.len() {
+        let m = eq_bytes(load8(b, i), needle);
+        if m != 0 {
+            return Some(i + (m.trailing_zeros() >> 3) as usize);
+        }
+        i += 8;
+    }
+    find_byte_scalar(b, i, needle)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2: 32-byte blocks (x86_64, runtime-detected)
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (the dispatcher only
+    /// routes here after `is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn find_string_special(b: &[u8], from: usize) -> usize {
+        let quote = _mm256_set1_epi8(b'"' as i8);
+        let bslash = _mm256_set1_epi8(b'\\' as i8);
+        let ctl_max = _mm256_set1_epi8(0x1f);
+        let mut i = from;
+        while i + 32 <= b.len() {
+            let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let m_quote = _mm256_cmpeq_epi8(block, quote);
+            let m_bslash = _mm256_cmpeq_epi8(block, bslash);
+            // unsigned c < 0x20  ⇔  min(c, 0x1f) == c
+            let m_ctl = _mm256_cmpeq_epi8(_mm256_min_epu8(block, ctl_max), block);
+            let special = _mm256_or_si256(_mm256_or_si256(m_quote, m_bslash), m_ctl);
+            let mask = _mm256_movemask_epi8(special) as u32;
+            if mask != 0 {
+                return i + mask.trailing_zeros() as usize;
+            }
+            i += 32;
+        }
+        super::find_string_special_scalar(b, i)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn skip_ws(b: &[u8], from: usize) -> usize {
+        let space = _mm256_set1_epi8(b' ' as i8);
+        let tab = _mm256_set1_epi8(b'\t' as i8);
+        let lf = _mm256_set1_epi8(b'\n' as i8);
+        let cr = _mm256_set1_epi8(b'\r' as i8);
+        let mut i = from;
+        while i + 32 <= b.len() {
+            let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let ws = _mm256_or_si256(
+                _mm256_or_si256(_mm256_cmpeq_epi8(block, space), _mm256_cmpeq_epi8(block, tab)),
+                _mm256_or_si256(_mm256_cmpeq_epi8(block, lf), _mm256_cmpeq_epi8(block, cr)),
+            );
+            let non_ws = !(_mm256_movemask_epi8(ws) as u32);
+            if non_ws != 0 {
+                return i + non_ws.trailing_zeros() as usize;
+            }
+            i += 32;
+        }
+        super::skip_ws_scalar(b, i)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn find_byte(b: &[u8], from: usize, needle: u8) -> Option<usize> {
+        let n = _mm256_set1_epi8(needle as i8);
+        let mut i = from;
+        while i + 32 <= b.len() {
+            let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let mask = _mm256_movemask_epi8(_mm256_cmpeq_epi8(block, n)) as u32;
+            if mask != 0 {
+                return Some(i + mask.trailing_zeros() as usize);
+            }
+            i += 32;
+        }
+        super::find_byte_scalar(b, i, needle)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON: 16-byte blocks (aarch64 baseline)
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Pack a 16-lane 0x00/0xFF byte mask into a `u64` with 4 bits per
+    /// lane (the `vshrn` narrowing-shift movemask idiom): lane `k`
+    /// occupies bits `4k..4k+4`, so `trailing_zeros() / 4` is the lane
+    /// index of the first set lane.
+    ///
+    /// # Safety
+    /// NEON is part of the aarch64 baseline.
+    #[inline(always)]
+    unsafe fn movemask(m: uint8x16_t) -> u64 {
+        vget_lane_u64::<0>(vreinterpret_u64_u8(vshrn_n_u16::<4>(vreinterpretq_u16_u8(m))))
+    }
+
+    /// # Safety
+    /// NEON is part of the aarch64 baseline.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn find_string_special(b: &[u8], from: usize) -> usize {
+        let mut i = from;
+        while i + 16 <= b.len() {
+            let block = vld1q_u8(b.as_ptr().add(i));
+            let m_quote = vceqq_u8(block, vdupq_n_u8(b'"'));
+            let m_bslash = vceqq_u8(block, vdupq_n_u8(b'\\'));
+            let m_ctl = vcltq_u8(block, vdupq_n_u8(0x20));
+            let special = vorrq_u8(vorrq_u8(m_quote, m_bslash), m_ctl);
+            let mask = movemask(special);
+            if mask != 0 {
+                return i + (mask.trailing_zeros() >> 2) as usize;
+            }
+            i += 16;
+        }
+        super::find_string_special_scalar(b, i)
+    }
+
+    /// # Safety
+    /// NEON is part of the aarch64 baseline.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn skip_ws(b: &[u8], from: usize) -> usize {
+        let mut i = from;
+        while i + 16 <= b.len() {
+            let block = vld1q_u8(b.as_ptr().add(i));
+            let ws = vorrq_u8(
+                vorrq_u8(vceqq_u8(block, vdupq_n_u8(b' ')), vceqq_u8(block, vdupq_n_u8(b'\t'))),
+                vorrq_u8(vceqq_u8(block, vdupq_n_u8(b'\n')), vceqq_u8(block, vdupq_n_u8(b'\r'))),
+            );
+            let non_ws = !movemask(ws);
+            if non_ws != 0 {
+                return i + (non_ws.trailing_zeros() >> 2) as usize;
+            }
+            i += 16;
+        }
+        super::skip_ws_scalar(b, i)
+    }
+
+    /// # Safety
+    /// NEON is part of the aarch64 baseline.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn find_byte(b: &[u8], from: usize, needle: u8) -> Option<usize> {
+        let mut i = from;
+        while i + 16 <= b.len() {
+            let block = vld1q_u8(b.as_ptr().add(i));
+            let mask = movemask(vceqq_u8(block, vdupq_n_u8(needle)));
+            if mask != 0 {
+                return Some(i + (mask.trailing_zeros() >> 2) as usize);
+            }
+            i += 16;
+        }
+        super::find_byte_scalar(b, i, needle)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every engine this build can actually run.
+    fn runnable_engines() -> Vec<Engine> {
+        let mut engines = vec![Engine::Scalar, Engine::Swar];
+        let best = detect_best();
+        if !engines.contains(&best) {
+            engines.push(best);
+        }
+        engines
+    }
+
+    /// Differential check of one primitive call across all runnable
+    /// engines against the scalar reference.
+    fn check_all(b: &[u8], from: usize) {
+        let want_special = find_string_special_scalar(b, from);
+        let want_ws = skip_ws_scalar(b, from);
+        let want_nl = find_byte_scalar(b, from, b'\n');
+        for engine in runnable_engines() {
+            assert_eq!(
+                find_string_special_with(engine, b, from),
+                want_special,
+                "find_string_special diverges on {engine:?} (from={from}, len={})",
+                b.len()
+            );
+            assert_eq!(
+                skip_ws_with(engine, b, from),
+                want_ws,
+                "skip_ws diverges on {engine:?} (from={from}, len={})",
+                b.len()
+            );
+            assert_eq!(
+                find_byte_with(engine, b, from, b'\n'),
+                want_nl,
+                "find_byte diverges on {engine:?} (from={from}, len={})",
+                b.len()
+            );
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_block_edge_placements() {
+        // every interest byte, placed at every offset of a buffer that
+        // spans several blocks of every engine's width — covers matches
+        // at block starts, block ends, and in the scalar tail
+        let interesting = [b'"', b'\\', b'\n', b'\t', b'\r', b' ', 0x00u8, 0x1f, b'x'];
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64, 67] {
+            for &c in &interesting {
+                for at in 0..len {
+                    let mut buf = vec![b'a'; len];
+                    buf[at] = c;
+                    check_all(&buf, 0);
+                    check_all(&buf, at.min(len));
+                    check_all(&buf, (at + 1).min(len));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_dense_and_empty_inputs() {
+        check_all(b"", 0);
+        check_all(b"\"\"\"\"", 0);
+        check_all(&[b' '; 100], 0);
+        check_all(&[b'\\'; 100], 3);
+        check_all("plain ascii with no specials at all....".as_bytes(), 0);
+        // multi-byte UTF-8 content must be classified as plain bytes
+        // (all >= 0x80, none of them interest bytes)
+        let s = "héllo 世界 😀 tail with trailing specials\\\"\n";
+        for from in 0..s.len() {
+            if s.is_char_boundary(from) {
+                check_all(s.as_bytes(), from);
+            }
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_random_buffers() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x51_3d);
+        let pool: &[u8] =
+            b"\"\\{}[],: \t\n\rabcdefghijklmnopqrstuvwxyz0123456789\x00\x01\x1f\x7f\x80\xff";
+        for _ in 0..200 {
+            let len = rng.usize(0, 200);
+            let buf: Vec<u8> = (0..len).map(|_| *rng.choose(pool)).collect();
+            let from = rng.usize(0, len + 1);
+            check_all(&buf, from);
+        }
+    }
+
+    /// The only test in this binary that forces engines (keeping it a
+    /// single `#[test]` avoids cross-test override races): nested LIFO
+    /// guards restore correctly, and so do guards dropped out of
+    /// creation order.
+    #[test]
+    fn force_engine_overrides_and_restores() {
+        let before = engine();
+        {
+            let _guard = force_engine(Engine::Scalar);
+            assert_eq!(engine(), Engine::Scalar);
+            {
+                let _inner = force_engine(Engine::Swar);
+                assert_eq!(engine(), Engine::Swar);
+            }
+            assert_eq!(engine(), Engine::Scalar);
+        }
+        assert_eq!(engine(), before);
+        // out-of-creation-order drops: the newest surviving guard wins,
+        // and no stale pin survives once every guard is gone
+        let a = force_engine(Engine::Scalar);
+        let b = force_engine(Engine::Swar);
+        assert_eq!(engine(), Engine::Swar);
+        drop(a);
+        assert_eq!(engine(), Engine::Swar, "dropping an older guard must not unpin the newest");
+        drop(b);
+        assert_eq!(engine(), before, "all guards gone: back to normal detection");
+    }
+
+    #[test]
+    fn block_widths_are_declared() {
+        assert_eq!(Engine::Scalar.block_bytes(), 1);
+        assert_eq!(Engine::Swar.block_bytes(), 8);
+        assert_eq!(Engine::Avx2.block_bytes(), 32);
+        assert_eq!(Engine::Neon.block_bytes(), 16);
+    }
+
+    #[test]
+    fn swar_zero_test_is_exact() {
+        // the borrow-prone byte pattern that defeats the classic
+        // haszero trick: a zero byte below a 0x01 byte must not flag
+        // the 0x01 byte
+        let v = u64::from_le_bytes([0x00, 0x01, 0xff, 0x80, 0x7f, 0x20, 0x00, 0x01]);
+        let z = zero_bytes(v);
+        assert_eq!(z, u64::from_le_bytes([0x80, 0, 0, 0, 0, 0, 0x80, 0]));
+        // eq_bytes inherits exactness: " just above a real match
+        let x = u64::from_le_bytes([b'"', b'#', b'"', b'a', b'b', b'c', b'd', b'e']);
+        let m = eq_bytes(x, b'"');
+        assert_eq!(m, u64::from_le_bytes([0x80, 0, 0x80, 0, 0, 0, 0, 0]));
+    }
+}

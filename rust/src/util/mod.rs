@@ -6,6 +6,7 @@ pub mod clock;
 pub mod hash;
 pub mod idgen;
 pub mod jscan;
+pub mod jscan_simd;
 pub mod json;
 pub mod base64;
 pub mod logging;

@@ -1,0 +1,214 @@
+//! Mini JSONTestSuite-style conformance corpus, run against all three
+//! parse paths: the scalar oracle scanner (`jscan::scan_into_scalar`),
+//! the vectorized scanner (`jscan::scan_into_simd`) and the seed tree
+//! parser (`Json::parse`).
+//!
+//! Verdict classes follow the JSONTestSuite naming:
+//!
+//! * `y_` — must be **accepted** by all three paths; the two scanner
+//!   gears must additionally produce identical `Offsets`, and the
+//!   materialized value must equal the tree parser's.
+//! * `n_` — must be **rejected** by all three paths; the two scanner
+//!   gears must report identical errors (position and message).
+//! * `i_` — implementation-defined in general JSON land (huge numbers,
+//!   lenient number grammar, BOMs). Here the requirement is
+//!   *agreement*: whatever this implementation decides, all three
+//!   paths must decide together — the scanners byte-identically.
+//!
+//! The depth-bound divergence (scanners cap nesting at `MAX_DEPTH`,
+//! the tree parser recurses unbounded) is pinned by its own test, and
+//! torn UTF-8 is covered at the byte level: the scanners take `&str`,
+//! so invalid UTF-8 is rejected before any scan path runs — exactly
+//! how the WAL treats torn segment tails.
+
+use mlmodelci::util::jscan::{self, Offsets, MAX_DEPTH};
+use mlmodelci::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    /// `y_`: all three paths accept.
+    Accept,
+    /// `n_`: all three paths reject.
+    Reject,
+    /// `i_`: all three paths agree, either way.
+    Agree,
+}
+use Verdict::{Accept, Agree, Reject};
+
+#[rustfmt::skip]
+const CORPUS: &[(&str, &str, Verdict)] = &[
+    // --- y_: structure ------------------------------------------------
+    ("y_object_empty",            "{}",                                    Accept),
+    ("y_array_empty",             "[]",                                    Accept),
+    ("y_object_simple",           r#"{"a":1}"#,                            Accept),
+    ("y_nested",                  r#"{"a":[{"b":null},true,1.25],"c":{}}"#, Accept),
+    ("y_array_heterogeneous",     r#"[null,1,"two",[3],{"f":4},false]"#,   Accept),
+    ("y_object_duplicate_keys",   r#"{"a":1,"a":2}"#,                      Accept),
+    ("y_ws_everywhere",           " \t\r\n{ \"a\" :\n[ 1 , 2 ]\t} \r\n",   Accept),
+    // --- y_: strings --------------------------------------------------
+    ("y_string_empty",            r#""""#,                                 Accept),
+    ("y_string_simple_escapes",   r#""a\"b\\c\/d\be\ff\ng\rh\ti""#,        Accept),
+    ("y_string_unicode_escape",   r#""\u0041\u00e9\u4e16""#,            Accept),
+    ("y_string_escaped_nul",      r#""\u0000""#,                          Accept),
+    ("y_string_surrogate_pair",   r#""\ud83d\ude00""#,                   Accept),
+    ("y_string_raw_multibyte",    "\"héllo 世界 😀\"",                     Accept),
+    ("y_string_del_char",         "\"a\u{7f}b\"",                          Accept),
+    ("y_key_with_escapes",        r#"{"k\u0041\n":"v"}"#,                 Accept),
+    // --- y_: numbers --------------------------------------------------
+    ("y_number_zero",             "0",                                     Accept),
+    ("y_number_minus_zero",       "-0",                                    Accept),
+    ("y_number_int",              "42",                                    Accept),
+    ("y_number_negative_frac",    "-1.5e-3",                               Accept),
+    ("y_number_exp_upper",        "1E9",                                   Accept),
+    ("y_number_exp_plus",         "1e+9",                                  Accept),
+    ("y_number_two_pow_53",       "9007199254740992",                      Accept),
+    // --- n_: structure ------------------------------------------------
+    ("n_empty",                   "",                                      Reject),
+    ("n_ws_only",                 " \t\n ",                                Reject),
+    ("n_lone_open_brace",         "{",                                     Reject),
+    ("n_lone_close_brace",        "}",                                     Reject),
+    ("n_lone_open_bracket",       "[",                                     Reject),
+    ("n_unclosed_array",          "[1",                                    Reject),
+    ("n_array_trailing_comma",    "[1,]",                                  Reject),
+    ("n_object_trailing_comma",   r#"{"a":1,}"#,                           Reject),
+    ("n_object_missing_colon",    r#"{"a" 1}"#,                            Reject),
+    ("n_object_missing_value",    r#"{"a":}"#,                             Reject),
+    ("n_object_colon_only",       "{:1}",                                  Reject),
+    ("n_object_numeric_key",      "{1:2}",                                 Reject),
+    ("n_array_missing_comma",     "[1 2]",                                 Reject),
+    ("n_double_document",         "{}{}",                                  Reject),
+    ("n_trailing_garbage",        "{}extra",                               Reject),
+    ("n_keyword_typo",            "tru",                                   Reject),
+    ("n_keyword_excess",          "falsey",                                Reject),
+    // --- n_: strings --------------------------------------------------
+    ("n_string_unterminated",     "\"abc",                                 Reject),
+    ("n_string_raw_ctrl",         "\"a\u{1}b\"",                           Reject),
+    ("n_string_raw_newline",      "\"a\nb\"",                              Reject),
+    ("n_string_raw_tab",          "\"a\tb\"",                              Reject),
+    ("n_string_bad_escape",       r#""\x41""#,                             Reject),
+    ("n_string_bad_hex",          r#""\uZZZZ""#,                           Reject),
+    ("n_string_truncated_u",      r#""\u00""#,                             Reject),
+    ("n_string_trailing_bslash",  "\"\\",                                  Reject),
+    ("n_lone_high_surrogate",     r#""\ud800""#,                           Reject),
+    ("n_lone_low_surrogate",      r#""\udc00""#,                           Reject),
+    ("n_surrogate_bad_low",       r#""\ud800\u0041""#,                   Reject),
+    ("n_surrogate_high_high",     r#""\ud83d\ud83d""#,                     Reject),
+    ("n_surrogate_then_text",     r#""\ud800abc""#,                        Reject),
+    // --- n_: numbers --------------------------------------------------
+    ("n_number_plus",             "+1",                                    Reject),
+    ("n_number_double_minus",     "--1",                                   Reject),
+    ("n_number_empty_exp",        "1e",                                    Reject),
+    ("n_number_minus_only",       "-",                                     Reject),
+    ("n_number_leading_dot",      ".5",                                    Reject),
+    ("n_number_hex",              "0x1",                                   Reject),
+    ("n_number_then_alpha",       "01a",                                   Reject),
+    // --- i_: implementation-defined — all three must simply agree -----
+    ("i_number_1e309",            "1e309",                                 Agree),
+    ("i_number_neg_1e309",        "-1e309",                                Agree),
+    ("i_number_1e_minus_400",     "1e-400",                                Agree),
+    ("i_number_trailing_dot",     "1.",                                    Agree),
+    ("i_number_leading_zero",     "01",                                    Agree),
+    ("i_number_dot_exp",          "1.e3",                                  Agree),
+    ("i_number_huge_digits",      "123456789012345678901234567890",        Agree),
+    ("i_bom_then_object",         "\u{feff}{}",                            Agree),
+    ("i_string_noncharacter",     "\"\u{fffe}\"",                          Agree),
+];
+
+/// Scan with both gears, assert they are byte-identical, and return the
+/// shared verdict (`Ok(offsets)` / `Err(error)`).
+fn scan_both(text: &str) -> Result<Offsets, mlmodelci::util::json::JsonError> {
+    let mut scalar = Offsets::default();
+    let mut vector = Offsets::default();
+    let r_scalar = jscan::scan_into_scalar(text, &mut scalar);
+    let r_simd = jscan::scan_into_simd(text, &mut vector);
+    match (r_scalar, r_simd) {
+        (Ok(()), Ok(())) => {
+            assert_eq!(scalar, vector, "scalar/SIMD offset tables diverge for {text:?}");
+            Ok(scalar)
+        }
+        (Err(a), Err(b)) => {
+            assert_eq!(a, b, "scalar/SIMD errors diverge for {text:?}");
+            Err(a)
+        }
+        (a, b) => panic!("scalar/SIMD verdict divergence for {text:?}: {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn conformance_corpus_all_paths() {
+    for &(name, text, verdict) in CORPUS {
+        let scanned = scan_both(text);
+        let tree = Json::parse(text);
+        match verdict {
+            Accept => {
+                let offsets =
+                    scanned.unwrap_or_else(|e| panic!("{name}: scanners rejected {text:?}: {e}"));
+                let tree =
+                    tree.unwrap_or_else(|e| panic!("{name}: tree parser rejected {text:?}: {e}"));
+                assert_eq!(
+                    offsets.root(text).to_json(),
+                    tree,
+                    "{name}: scanned value != parsed value for {text:?}"
+                );
+            }
+            Reject => {
+                assert!(scanned.is_err(), "{name}: scanners accepted {text:?}");
+                assert!(tree.is_err(), "{name}: tree parser accepted {text:?}");
+            }
+            Agree => match (scanned, tree) {
+                (Ok(offsets), Ok(tree)) => {
+                    // non-finite numbers (1e309 → inf) compare unequal
+                    // through f64 NaN semantics only; everything here
+                    // must still materialize identically
+                    assert_eq!(
+                        offsets.root(text).to_json(),
+                        tree,
+                        "{name}: scanned value != parsed value for {text:?}"
+                    );
+                }
+                (Err(_), Err(_)) => {}
+                (s, t) => panic!(
+                    "{name}: scan vs parse verdict mismatch for {text:?}: scan_ok={} parse_ok={}",
+                    s.is_ok(),
+                    t.is_ok()
+                ),
+            },
+        }
+    }
+}
+
+#[test]
+fn depth_bound_divergence_is_exactly_as_documented() {
+    // at the bound: everyone accepts
+    let at = format!("{}0{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+    assert!(scan_both(&at).is_ok());
+    assert!(Json::parse(&at).is_ok());
+    // one past the bound: both scanner gears reject with the documented
+    // error, the unbounded tree parser accepts — the single permitted
+    // divergence between the scan and parse paths
+    let past = format!("{}0{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+    let err = scan_both(&past).unwrap_err();
+    assert_eq!(err.msg, "nesting too deep");
+    assert!(Json::parse(&past).is_ok());
+}
+
+#[test]
+fn torn_utf8_is_rejected_before_any_scan_path() {
+    // byte-level corpus: tails torn mid multi-byte character (the crash
+    // shape WAL recovery truncates). The &str-typed scanner interface
+    // cannot even receive these — from_utf8 is the gate, for every path
+    // equally.
+    let torn: &[&[u8]] = &[
+        b"\"\xe6\x97\"",            // 日 missing its final byte
+        b"\"\xf0\x9f\x98\"",        // 😀 missing its final byte
+        b"{\"k\":\"caf\xc3\"}",     // é missing its continuation byte
+        b"\xc3",                    // lone lead byte
+        b"\"ok\" \x80",             // lone continuation byte
+    ];
+    for bytes in torn {
+        assert!(
+            std::str::from_utf8(bytes).is_err(),
+            "corpus entry unexpectedly valid UTF-8: {bytes:?}"
+        );
+    }
+}

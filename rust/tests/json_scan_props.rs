@@ -6,9 +6,9 @@
 
 use std::borrow::Cow;
 
-use mlmodelci::util::jscan::{self, Doc};
+use mlmodelci::util::jscan::{self, Doc, Offsets, MAX_DEPTH};
 use mlmodelci::util::json::Json;
-use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop};
+use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop, Gen};
 use mlmodelci::util::rng::Rng;
 
 /// The two parsers must agree byte-for-byte on this input.
@@ -192,6 +192,218 @@ fn doc_wal_shape_roundtrips() {
     let embedded = Doc::parse(root.get("doc").unwrap().raw()).unwrap();
     assert_eq!(embedded.to_json(), model);
     assert_eq!(embedded.str_field("_id").as_deref(), Some("abc123"));
+}
+
+/// Three-way differential: the SIMD scan pass, the scalar oracle pass
+/// and the tree parser must agree on any input.
+///
+/// * scalar vs SIMD: **exact** — same accept/reject verdict, identical
+///   `Offsets` tables on accept, identical error (position and message)
+///   on reject.
+/// * scanners vs `Json::parse`: same accept/reject verdict and equal
+///   materialized value, modulo the one documented divergence — the
+///   scanners bound container nesting at `MAX_DEPTH` while the tree
+///   parser recurses without limit.
+fn tri_differential(text: &str) -> Result<(), String> {
+    let mut scalar = Offsets::default();
+    let mut vector = Offsets::default();
+    let r_scalar = jscan::scan_into_scalar(text, &mut scalar);
+    let r_simd = jscan::scan_into_simd(text, &mut vector);
+    match (&r_scalar, &r_simd) {
+        (Ok(()), Ok(())) => {
+            if scalar != vector {
+                return Err(format!("offset tables diverge for {text:?}"));
+            }
+        }
+        (Err(a), Err(b)) => {
+            if a != b {
+                return Err(format!("scan errors diverge for {text:?}: {a:?} vs {b:?}"));
+            }
+        }
+        _ => {
+            return Err(format!(
+                "scalar/SIMD verdict divergence for {text:?}: scalar={r_scalar:?} simd={r_simd:?}"
+            ));
+        }
+    }
+    match (r_scalar, Json::parse(text)) {
+        (Ok(()), Ok(tree)) => {
+            let via_scan = scalar.root(text).to_json();
+            if via_scan != tree {
+                return Err(format!("value mismatch for {text:?}: {via_scan:?} != {tree:?}"));
+            }
+            Ok(())
+        }
+        (Err(_), Err(_)) => Ok(()),
+        (Err(e), Ok(_)) if e.msg == "nesting too deep" => Ok(()), // documented divergence
+        (scan, tree) => Err(format!(
+            "scan vs parse verdict mismatch for {text:?}: {scan:?} vs accept={}",
+            tree.is_ok()
+        )),
+    }
+}
+
+/// Block widths of every scan engine (scalar tail = 1), plus one
+/// larger-than-any-block width; adversarial inputs aim tokens at
+/// multiples and off-by-ones of these.
+const BLOCKS: [usize; 4] = [8, 16, 32, 64];
+
+/// Multi-byte UTF-8 material: 2-, 3- and 4-byte encodings.
+const WIDE_CHARS: [char; 4] = ['é', '世', '😀', 'ß'];
+
+fn adversarial_input(rng: &mut Rng) -> String {
+    match rng.usize(0, 9) {
+        0 => {
+            // long string: plain runs with every escape form sprinkled
+            // in, total length aimed at a block edge ±1
+            let block = *rng.choose(&BLOCKS);
+            let target = (block * rng.usize(1, 5) + rng.usize(0, 3)).saturating_sub(1);
+            let mut s = String::from("\"");
+            while s.len() < target + 1 {
+                match rng.usize(0, 14) {
+                    0 => s.push_str("\\n"),
+                    1 => s.push_str("\\\""),
+                    2 => s.push_str("\\\\"),
+                    3 => s.push_str("\\/"),
+                    4 => s.push_str("\\b"),
+                    5 => s.push_str("\\f"),
+                    6 => s.push_str("\\r"),
+                    7 => s.push_str("\\t"),
+                    8 => s.push_str("\\u0041"),
+                    9 => s.push_str("\\ud83d\\ude00"),
+                    10 => s.push(*rng.choose(&WIDE_CHARS)),
+                    _ => s.push('x'),
+                }
+            }
+            s.push('"');
+            s
+        }
+        1 => {
+            // whitespace runs sized to straddle whole blocks
+            let pad: String =
+                (0..rng.usize(0, 70)).map(|_| *rng.choose(&[' ', '\t', '\n', '\r'])).collect();
+            format!("{pad}[{pad}1{pad},{pad}\"x\"{pad}]{pad}")
+        }
+        2 => {
+            // nesting at MAX_DEPTH - 1 / MAX_DEPTH / MAX_DEPTH + 1:
+            // the depth-bound divergence corridor
+            let depth = MAX_DEPTH - 1 + rng.usize(0, 3);
+            format!("{}0{}", "[".repeat(depth), "]".repeat(depth))
+        }
+        3 => {
+            // a multi-byte character straddling an exact block boundary
+            let block = *rng.choose(&BLOCKS);
+            let ch = *rng.choose(&WIDE_CHARS);
+            // start the char 1..len_utf8 bytes before the boundary so
+            // some of its bytes land on each side
+            let lead = rng.usize(1, ch.len_utf8() + 1);
+            let mut s = String::from("\"");
+            s.push_str(&"a".repeat(block.saturating_sub(lead + 1)));
+            s.push(ch);
+            s.push_str("tail\"");
+            s
+        }
+        4 => {
+            // closing quote / token end at an exact block edge
+            let block = *rng.choose(&BLOCKS);
+            let key = "k".repeat(block.saturating_sub(4).max(1));
+            format!("{{\"{key}\":12345678901234567890,\"b\":[true,false,null]}}")
+        }
+        5 => {
+            // escape sequence split across a block boundary: the `\` as
+            // the last byte of one block, its tail in the next
+            let block = *rng.choose(&BLOCKS);
+            let esc = *rng.choose(&["\\n", "\\\"", "\\u0041", "\\ud83d\\ude00", "\\\\"]);
+            let mut s = String::from("\"");
+            s.push_str(&"a".repeat(block.saturating_sub(2)));
+            s.push_str(esc);
+            s.push('"');
+            s
+        }
+        6 => random_json(rng, 4).to_string(),
+        7 => random_json(rng, 3).to_pretty(),
+        _ => {
+            // byte-level mutations of a valid doc: frequently invalid,
+            // and the three paths must still agree on the verdict
+            let mut bytes = random_json(rng, 3).to_string().into_bytes();
+            for _ in 0..rng.usize(1, 4) {
+                if bytes.is_empty() {
+                    break;
+                }
+                let at = rng.usize(0, bytes.len());
+                match rng.usize(0, 3) {
+                    0 => bytes[at] = b"\"\\{}[],: \t\n\rx0"[rng.usize(0, 14)],
+                    1 => bytes.insert(at, b"\"\\{}[],:"[rng.usize(0, 8)]),
+                    _ => {
+                        bytes.remove(at);
+                    }
+                }
+            }
+            // mutations can break UTF-8; all parsers only ever see &str
+            String::from_utf8(bytes)
+                .unwrap_or_else(|e| String::from_utf8_lossy(e.as_bytes()).into_owned())
+        }
+    }
+}
+
+/// Adversarial-input generator with real shrinking: failures shrink by
+/// halving and char-dropping — any substring is still a valid input to
+/// the agreement property, so shrunk counterexamples stay meaningful.
+fn gen_adversarial() -> Gen<String> {
+    Gen::new(
+        |rng| adversarial_input(rng),
+        |s: &String| {
+            let mut out = Vec::new();
+            if !s.is_empty() {
+                let mid = (s.len() / 2..s.len()).find(|&i| s.is_char_boundary(i)).unwrap_or(0);
+                out.push(s[..mid].to_string());
+                out.push(s[mid..].to_string());
+                let mut chars = s.chars();
+                chars.next_back();
+                out.push(chars.as_str().to_string());
+            }
+            out.retain(|c| c != s);
+            out
+        },
+    )
+}
+
+#[test]
+fn simd_scalar_parse_tri_differential_fuzz() {
+    run_prop("simd == scalar == parse", 500, gen_adversarial(), |s| tri_differential(s));
+}
+
+#[test]
+fn tri_differential_block_edge_catalog() {
+    // deterministic sweep: every escape form, wide char and special
+    // byte placed at every offset around each engine's block width
+    for block in BLOCKS {
+        for delta in 0..3usize {
+            let pad = "a".repeat((block + delta).saturating_sub(1));
+            for tail in [
+                "\\n\"", "\\\"\"", "\\\\\"", "\\u0041\"", "\\ud83d\\ude00\"", "é\"", "世\"",
+                "😀\"", "\"", "\u{1}\"", "\\q\"", "\\",
+            ] {
+                tri_differential(&format!("\"{pad}{tail}")).unwrap();
+            }
+            // whitespace run ending exactly at/around a block edge
+            let ws = " ".repeat(block + delta);
+            tri_differential(&format!("{ws}1")).unwrap();
+            tri_differential(&format!("[{ws}]")).unwrap();
+            tri_differential(&ws).unwrap();
+        }
+    }
+}
+
+#[test]
+fn tri_differential_depth_corridor() {
+    for depth in [MAX_DEPTH - 1, MAX_DEPTH, MAX_DEPTH + 1] {
+        let arrays = format!("{}0{}", "[".repeat(depth), "]".repeat(depth));
+        tri_differential(&arrays).unwrap();
+        let objects =
+            format!("{}1{}", "{\"k\":".repeat(depth), "}".repeat(depth));
+        tri_differential(&objects).unwrap();
+    }
 }
 
 #[test]

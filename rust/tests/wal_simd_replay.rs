@@ -1,0 +1,138 @@
+//! WAL replay must be byte-identical whichever scan engine the process
+//! selected: segmented mmap replay rides the block-accelerated newline
+//! scan (`jscan_simd::find_byte`) and the dispatched record scanner
+//! (`jscan::scan_into`), and crash recovery (torn-tail truncation) must
+//! not move by a single byte between the scalar oracle and any
+//! vectorized engine.
+//!
+//! The crafted segment places each hazard exactly on a SIMD block
+//! boundary (32 bytes — the widest engine, AVX2; 32 is also a multiple
+//! of the NEON/SWAR widths, so every engine sees an edge there):
+//!
+//! * record 1's terminating newline is the **last byte of a block**, so
+//!   record 2 starts on an exact block boundary;
+//! * record 2 carries a 3-byte UTF-8 character **straddling** a block
+//!   boundary (one byte before it, two after);
+//! * the torn tail is cut at an exact block boundary, **mid 4-byte
+//!   character**, leaving a suffix that is not valid UTF-8 on its own.
+
+use std::path::Path;
+
+use mlmodelci::storage::wal::{Wal, WalOp, WalOptions};
+use mlmodelci::util::jscan_simd::{self, Engine};
+
+/// Widest block any engine uses (AVX2); NEON (16) and SWAR (8) widths
+/// divide it, so offsets aligned to 32 are block edges for all engines.
+const BLOCK: usize = 32;
+
+/// A put record (`{"doc":{"_id":…,"p":…},"op":"put"}\n`) padded via the
+/// `p` field to exactly `len` bytes including the newline.
+fn record(i: usize, len: usize) -> String {
+    let fixed = format!("{{\"doc\":{{\"_id\":\"{i:024}\",\"p\":\"\"}},\"op\":\"put\"}}\n");
+    assert!(len >= fixed.len(), "len {len} below the record minimum {}", fixed.len());
+    let pad = "x".repeat(len - fixed.len());
+    format!("{{\"doc\":{{\"_id\":\"{i:024}\",\"p\":\"{pad}\"}},\"op\":\"put\"}}\n")
+}
+
+/// Build the hazard segment described in the module docs.
+fn craft_segment() -> (Vec<u8>, usize) {
+    let mut buf = String::new();
+
+    // record 1: newline as the last byte of a block
+    buf.push_str(&record(1, 3 * BLOCK));
+    assert_eq!(buf.len() % BLOCK, 0, "record 2 must start on a block boundary");
+
+    // record 2: 世 (3 bytes) straddling a block boundary
+    let mut rec2 = format!("{{\"doc\":{{\"_id\":\"{:024}\",\"p\":\"", 2usize);
+    let char_at = {
+        let abs = buf.len() + rec2.len();
+        (abs / BLOCK + 2) * BLOCK - 1 // one byte before a boundary
+    };
+    while buf.len() + rec2.len() < char_at {
+        rec2.push('a');
+    }
+    assert_eq!((buf.len() + rec2.len() + 1) % BLOCK, 0, "世 must straddle the boundary");
+    rec2.push('世');
+    rec2.push_str("\"},\"op\":\"put\"}\n");
+    buf.push_str(&rec2);
+
+    // record 3: plain, deliberately unaligned
+    buf.push_str(&record(3, 2 * BLOCK + 7));
+    let live_len = buf.len(); // everything past here is the torn tail
+
+    // record 4: torn — cut at an exact block boundary, mid 😀
+    let mut rec4 = format!("{{\"doc\":{{\"_id\":\"{:024}\",\"p\":\"", 4usize);
+    let cut_at = ((buf.len() + rec4.len()) / BLOCK + 2) * BLOCK;
+    while buf.len() + rec4.len() < cut_at - 2 {
+        rec4.push('a');
+    }
+    rec4.push('😀'); // 4 bytes: two before the cut, two after
+    rec4.push_str("tail\"},\"op\":\"put\"}\n");
+    buf.push_str(&rec4);
+
+    let mut bytes = buf.into_bytes();
+    assert!(bytes.len() > cut_at);
+    bytes.truncate(cut_at);
+    assert_eq!(bytes.len() % BLOCK, 0, "torn tail must end on a block boundary");
+    assert!(
+        std::str::from_utf8(&bytes).is_err(),
+        "the torn tail must be cut mid multi-byte character"
+    );
+    (bytes, live_len)
+}
+
+/// Write the crafted segment into a fresh WAL dir, open it (replaying +
+/// truncating the torn tail), and return the replay fingerprint plus
+/// the post-recovery segment length.
+fn replay(root: &Path, bytes: &[u8]) -> (Vec<String>, u64) {
+    let _ = std::fs::remove_dir_all(root);
+    let wal_dir = root.join("t.wal");
+    std::fs::create_dir_all(&wal_dir).unwrap();
+    let seg = wal_dir.join("seg-0000000000000001.jsonl");
+    std::fs::write(&seg, bytes).unwrap();
+
+    let (wal, ops) = Wal::open(root, "t", WalOptions::default()).unwrap();
+    let fingerprint = ops
+        .iter()
+        .map(|op| match op {
+            WalOp::Put { id, doc } => format!("put:{id}:{}", doc.raw()),
+            WalOp::Del { id } => format!("del:{id}"),
+        })
+        .collect();
+    let recovered_len = std::fs::metadata(&seg).unwrap().len();
+    drop(wal);
+    let _ = std::fs::remove_dir_all(root);
+    (fingerprint, recovered_len)
+}
+
+#[test]
+fn replay_identical_under_scalar_and_vectorized_scans() {
+    let (bytes, live_len) = craft_segment();
+    let root = std::env::temp_dir().join(format!("mlci-wal-simd-{}", std::process::id()));
+
+    let baseline = {
+        let _guard = jscan_simd::force_engine(Engine::Scalar);
+        replay(&root.join("scalar"), &bytes)
+    };
+    // sanity on the oracle itself: three live records survive, the torn
+    // fourth is truncated away at the end of record 3
+    assert_eq!(baseline.0.len(), 3, "oracle replay: {:?}", baseline.0);
+    assert!(baseline.0[0].starts_with(&format!("put:{:024}", 1usize)));
+    assert!(baseline.0[1].contains('世'));
+    assert_eq!(baseline.1, live_len as u64, "recovery must cut exactly at record 3's newline");
+
+    // every vectorized engine this build can run must match the oracle
+    // byte-for-byte: same ops, same doc raw bytes, same truncation point
+    let mut engines = vec![Engine::Swar];
+    let best = jscan_simd::detect_best();
+    if !engines.contains(&best) && best != Engine::Scalar {
+        engines.push(best);
+    }
+    for engine in engines {
+        let got = {
+            let _guard = jscan_simd::force_engine(engine);
+            replay(&root.join("vectorized"), &bytes)
+        };
+        assert_eq!(got, baseline, "replay diverges under {engine:?}");
+    }
+}

@@ -2,9 +2,14 @@
 # Tier-1 verification: release build + quiet test run + a smoke pass of
 # the json_scan bench (tiny iteration counts) so the bench binary can't
 # bit-rot. Run from anywhere; operates on the rust/ crate.
+#
+# Honors MLCI_FORCE_SCALAR=1 (pins the JSON scan path to the scalar
+# oracle engine); CI runs the whole script once per mode.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
+
+echo "== tier1: MLCI_FORCE_SCALAR=${MLCI_FORCE_SCALAR:-<unset>} (scan engine escape hatch) =="
 
 echo "== tier1: cargo build --release =="
 cargo build --release
