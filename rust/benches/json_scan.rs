@@ -17,6 +17,19 @@
 //!              vs mmap'd segments scanned in place with pooled
 //!              buffers and parallel sealed-segment parsing
 //!
+//!   wal_append/*— the group-commit write path: N records appended
+//!              one-at-a-time (one write syscall each, fsync per the
+//!              row's SyncPolicy) vs the same N through one
+//!              `append_batch` call (one contiguous write, one policy
+//!              sync). Rows cover OnSeal / EveryN / Always; Always is
+//!              where group commit collapses N fsyncs into one.
+//!
+//!   index_churn— secondary-index insert/delete churn: the legacy
+//!              owned-String representation (HashMap<value,
+//!              Vec<String>> with sorted String inserts, recreated
+//!              inline here) vs the interned IndexSet (u32 arena
+//!              handles, shared value pool, Vec<u32> postings).
+//!
 //!   simd_vs_scalar/* — the scalar oracle scan pass vs the vectorized
 //!              pass (AVX2/NEON/SWAR interest-point skipping) on the
 //!              shapes the block classifier targets: a long
@@ -33,7 +46,7 @@
 
 use std::io::BufRead;
 
-use mlmodelci::storage::{Collection, Query, WalOptions};
+use mlmodelci::storage::{Collection, IndexSet, Query, SyncPolicy, Wal, WalBatchOp, WalOptions};
 use mlmodelci::util::benchkit::{bench, f2, Table};
 use mlmodelci::util::jscan::{self, Doc, Offsets};
 use mlmodelci::util::jscan_simd::{self, Engine};
@@ -290,7 +303,8 @@ fn main() {
         let _ = std::fs::remove_dir_all(&root);
         // build a real multi-segment log by inserting through a
         // collection with a small segment budget
-        let opts = WalOptions { segment_bytes: 256 * 1024, replay_threads: 0 };
+        let opts =
+            WalOptions { segment_bytes: 256 * 1024, replay_threads: 0, ..WalOptions::default() };
         {
             let mut c = Collection::open_with(&root, "bench", opts.clone()).unwrap();
             for i in 0..n_docs {
@@ -333,6 +347,118 @@ fn main() {
             bytes_per_iter: wal_disk_bytes,
         });
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- group-commit WAL appends: single vs batch per SyncPolicy -------
+    {
+        let root = std::env::temp_dir().join(format!("mlci-bench-walapp-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        // Always pays a real fsync per append in the baseline arm: keep
+        // the record count small enough that a full (non-smoke) run
+        // stays in seconds on a disk-backed CI runner
+        let rows: [(&str, SyncPolicy, usize); 3] = [
+            ("wal_append/onseal", SyncPolicy::OnSeal, if smoke { 16 } else { 1000 }),
+            ("wal_append/every64", SyncPolicy::EveryN(64), if smoke { 16 } else { 1000 }),
+            ("wal_append/always", SyncPolicy::Always, if smoke { 8 } else { 128 }),
+        ];
+        let append_iters = if smoke { 2 } else { 20 };
+        for (label, sync, n) in rows {
+            let raws: Vec<String> =
+                (0..n).map(|i| model_doc(i, 2).to_string()).collect();
+            let rec_bytes: usize = raws.iter().map(|r| r.len() + 20).sum();
+            let opts =
+                || WalOptions { segment_bytes: 64 * 1024 * 1024, replay_threads: 0, sync };
+            // a fresh WAL dir per iteration so both arms pay identical
+            // open/create costs and no segment state leaks across runs
+            let mut run = 0usize;
+            let base = bench(label, if smoke { 1 } else { 2 }, append_iters, || {
+                run += 1;
+                let dir = root.join(format!("single-{run}"));
+                let (mut wal, _) = Wal::open(&dir, "b", opts()).unwrap();
+                for raw in &raws {
+                    wal.append_put(raw).unwrap();
+                }
+                wal.sync().unwrap();
+                let writes = wal.io_stats().writes;
+                drop(wal);
+                std::fs::remove_dir_all(&dir).ok();
+                writes
+            });
+            let mut run = 0usize;
+            let scan = bench(label, if smoke { 1 } else { 2 }, append_iters, || {
+                run += 1;
+                let dir = root.join(format!("batch-{run}"));
+                let (mut wal, _) = Wal::open(&dir, "b", opts()).unwrap();
+                let ops: Vec<WalBatchOp> =
+                    raws.iter().map(|r| WalBatchOp::Put { doc_raw: r }).collect();
+                wal.append_batch(&ops).unwrap();
+                wal.sync().unwrap();
+                let writes = wal.io_stats().writes;
+                drop(wal);
+                std::fs::remove_dir_all(&dir).ok();
+                writes
+            });
+            cases.push(Case {
+                name: format!("{label}-{n}recs"),
+                baseline_ms: base.mean_ms,
+                scan_ms: scan.mean_ms,
+                bytes_per_iter: rec_bytes,
+            });
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    // --- secondary-index churn: owned Strings vs interned handles -------
+    {
+        // the pre-interning representation, verbatim from the old
+        // collection.rs: value -> sorted Vec<String> of owned ids
+        let n = if smoke { 64 } else { 4000 };
+        let ids: Vec<String> = (0..n).map(|i| format!("{i:024}")).collect();
+        let values: Vec<String> = (0..n).map(|i| format!("status-{}", i % 37)).collect();
+        let churn_iters = if smoke { 2 } else { 30 };
+        let base = bench("index_churn", warmup, churn_iters, || {
+            let mut index: std::collections::HashMap<String, Vec<String>> =
+                std::collections::HashMap::new();
+            for (id, v) in ids.iter().zip(&values) {
+                let list = index.entry(v.clone()).or_default();
+                if let Err(pos) = list.binary_search_by(|x| x.as_str().cmp(id)) {
+                    list.insert(pos, id.clone());
+                }
+            }
+            for (id, v) in ids.iter().zip(&values) {
+                let now_empty = match index.get_mut(v.as_str()) {
+                    Some(list) => {
+                        if let Ok(pos) = list.binary_search_by(|x| x.as_str().cmp(id)) {
+                            list.remove(pos);
+                        }
+                        list.is_empty()
+                    }
+                    None => false,
+                };
+                if now_empty {
+                    index.remove(v.as_str());
+                }
+            }
+            index.len()
+        });
+        let scan = bench("index_churn", warmup, churn_iters, || {
+            let mut ix = IndexSet::new();
+            ix.create("status");
+            for (id, v) in ids.iter().zip(&values) {
+                ix.add("status", v, id);
+            }
+            for (id, v) in ids.iter().zip(&values) {
+                ix.remove("status", v, id);
+                ix.release_id(id);
+            }
+            ix.intern_stats().posting_entries
+        });
+        cases.push(Case {
+            name: format!("index_churn/{n}ids"),
+            baseline_ms: base.mean_ms,
+            scan_ms: scan.mean_ms,
+            bytes_per_iter: ids.iter().map(String::len).sum(),
+        });
     }
 
     // --- serialization --------------------------------------------------

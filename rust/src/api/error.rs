@@ -149,7 +149,10 @@ impl ApiError {
         let text = format!("{err:#}");
         let code = if text.contains("no model with id") || text.contains("no model named") {
             ErrorCode::NotFound
-        } else if text.contains("already registered") || text.contains("illegal status transition") {
+        } else if text.contains("already registered")
+            || text.contains("duplicate model name")
+            || text.contains("illegal status transition")
+        {
             ErrorCode::Conflict
         } else if text.contains("cannot be updated") || text.contains("must be an object") {
             ErrorCode::Validation
@@ -216,6 +219,9 @@ mod tests {
         assert_eq!(nf.code, ErrorCode::NotFound);
         let conflict = ApiError::from_platform(&anyhow::anyhow!("model 'm' is already registered"));
         assert_eq!(conflict.code, ErrorCode::Conflict);
+        let batch_dup =
+            ApiError::from_platform(&anyhow::anyhow!("duplicate model name 'm' in batch"));
+        assert_eq!(batch_dup.code, ErrorCode::Conflict);
         let transition =
             ApiError::from_platform(&anyhow::anyhow!("illegal status transition registered -> profiled for model x"));
         assert_eq!(transition.code, ErrorCode::Conflict);

@@ -17,6 +17,7 @@
 //! GET    /api/v1/models                      paged summaries {items, next_cursor}
 //!                                            (?name= ?task= ?status= ?limit= ?cursor=)
 //! POST   /api/v1/models                      register {yaml, weights_b64} -> 201
+//! POST   /api/v1/models:batch                bulk register {models: [...]} -> 201
 //! GET    /api/v1/models/{id}                 stored document, verbatim
 //! PUT    /api/v1/models/{id}                 update basic info (guarded fields 422)
 //! DELETE /api/v1/models/{id}                 delete
@@ -73,6 +74,7 @@ pub fn api_router() -> Router<Arc<Platform>> {
         .get("/api/v1/metrics", h_metrics)
         .get("/api/v1/models", h_list_models_v1)
         .post("/api/v1/models", h_register)
+        .post("/api/v1/models:batch", h_register_batch)
         .get("/api/v1/models/{id}", h_get_model)
         .put("/api/v1/models/{id}", h_update_model)
         .delete("/api/v1/models/{id}", h_delete_model)
@@ -207,6 +209,49 @@ fn h_register(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Res
                 .with("convert_ms", report.convert_ms)
                 .with("profile_ms", report.profile_ms)
                 .with("profiles_recorded", report.profiles_recorded),
+        ))
+    })
+}
+
+/// Bulk register: `{"models": [{"yaml": …, "weights_b64"?: …}, …]}`
+/// lands as one collection lock hold and one WAL group commit
+/// (`Collection::insert_many`). Registration only — conversion and
+/// profiling are not triggered; each item reports its automation
+/// flags so the caller can schedule follow-up jobs. All-or-nothing:
+/// one bad item (YAML, base64, duplicate name) rejects the batch.
+fn h_register_batch(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
+    with_json_body(req, false, |root| {
+        let Some(models) = root.get("models").filter(|v| v.kind() == Kind::Arr) else {
+            return Err(ApiError::bad_request("missing 'models' array"));
+        };
+        if models.is_empty() {
+            return Err(ApiError::validation("'models' must not be empty"));
+        }
+        let mut items: Vec<(String, Vec<u8>)> = Vec::with_capacity(models.len());
+        for (i, model) in models.items().enumerate() {
+            let Some(yaml) = model.get("yaml").and_then(|v| v.as_str()) else {
+                return Err(ApiError::bad_request(format!("item {i}: missing 'yaml' field")));
+            };
+            let weights = match model.get("weights_b64").and_then(|v| v.as_str()) {
+                Some(b64) => base64::decode(&b64)
+                    .map_err(|e| ApiError::bad_request(format!("item {i}: weights_b64: {e}")))?,
+                None => Vec::new(),
+            };
+            items.push((yaml.into_owned(), weights));
+        }
+        let outcomes = platform.housekeeper.register_batch(&items)?;
+        let registered: Vec<Json> = outcomes
+            .iter()
+            .map(|o| {
+                Json::obj()
+                    .with("id", o.model_id.as_str())
+                    .with("wants_conversion", o.trigger_conversion)
+                    .with("wants_profiling", o.trigger_profiling)
+            })
+            .collect();
+        Ok(Response::json(
+            201,
+            &Json::obj().with("count", registered.len()).with("items", Json::Arr(registered)),
         ))
     })
 }
@@ -661,6 +706,71 @@ mod tests {
             http_request(&addr, "POST", "/api/v1/models/ffffffffffffffffffffffff/profile", None).unwrap();
         assert_eq!(status, 404);
         assert_eq!(http_request(&addr, "GET", "/api/v1/jobs/nope", None).unwrap().0, 404);
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn v1_batch_register_creates_all_or_nothing() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        let item = |name: &str| {
+            Json::obj()
+                .with(
+                    "yaml",
+                    YAML.replace("rest-mlp", name)
+                        .replace("convert: true", "convert: false")
+                        .replace("\\n", "\n"),
+                )
+                .with("weights_b64", base64::encode(b"bulk-weights"))
+        };
+        let body = Json::obj()
+            .with("models", Json::Arr(vec![item("bulk-0"), item("bulk-1"), item("bulk-2")]))
+            .to_string();
+        let (status, text) =
+            http_request(&addr, "POST", "/api/v1/models:batch", Some(&body)).unwrap();
+        assert_eq!(status, 201, "{text}");
+        let created = Json::parse(&text).unwrap();
+        assert_eq!(created.get("count").unwrap().as_i64(), Some(3));
+        let items = created.get("items").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 3);
+        for it in items {
+            assert_eq!(it.get("wants_conversion").unwrap().as_bool(), Some(false));
+            // batch registration does not run automation: still registered
+            let id = it.get("id").unwrap().as_str().unwrap();
+            let (status, doc) =
+                http_request(&addr, "GET", &format!("/api/v1/models/{id}"), None).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(
+                Json::parse(&doc).unwrap().get("status").unwrap().as_str(),
+                Some("registered")
+            );
+        }
+        // a name collision anywhere rejects the whole batch (409)
+        let body = Json::obj()
+            .with("models", Json::Arr(vec![item("bulk-9"), item("bulk-0")]))
+            .to_string();
+        let (status, text) =
+            http_request(&addr, "POST", "/api/v1/models:batch", Some(&body)).unwrap();
+        assert_eq!(status, 409, "{text}");
+        assert_eq!(Json::parse(&text).unwrap().get("code").unwrap().as_str(), Some("conflict"));
+        let (_, listing) = http_request(&addr, "GET", "/api/v1/models?limit=500", None).unwrap();
+        let n = Json::parse(&listing).unwrap().get("items").unwrap().as_arr().unwrap().len();
+        assert_eq!(n, 3, "the failed batch registered nothing");
+        // malformed batches are rejected with request errors
+        assert_eq!(
+            http_request(&addr, "POST", "/api/v1/models:batch", Some("{}")).unwrap().0,
+            400
+        );
+        assert_eq!(
+            http_request(&addr, "POST", "/api/v1/models:batch", Some(r#"{"models": []}"#))
+                .unwrap()
+                .0,
+            422
+        );
         platform.shutdown();
         server.stop();
     }

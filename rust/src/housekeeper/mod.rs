@@ -48,6 +48,39 @@ impl Housekeeper {
         })
     }
 
+    /// Bulk register: parse every YAML first (one bad item rejects the
+    /// whole batch before anything is written), then create all
+    /// documents through the hub's batched write path — one collection
+    /// lock hold and one WAL append for N models. Unlike `publish`,
+    /// this is pure registration: the returned automation flags say
+    /// what each model *wants* (conversion/profiling), the caller
+    /// decides whether to schedule it.
+    pub fn register_batch(&self, items: &[(String, Vec<u8>)]) -> Result<Vec<RegistrationOutcome>> {
+        let mut infos = Vec::with_capacity(items.len());
+        for (i, (yaml_text, _)) in items.iter().enumerate() {
+            let doc = yaml::parse(yaml_text)
+                .map_err(|e| anyhow!("registration YAML (item {i}): {e}"))?;
+            infos.push(
+                ModelInfo::from_registration(&doc).map_err(|e| anyhow!("item {i}: {e}"))?,
+            );
+        }
+        let entries: Vec<(ModelInfo, &[u8])> = infos
+            .iter()
+            .zip(items.iter())
+            .map(|(info, (_, weights))| (info.clone(), weights.as_slice()))
+            .collect();
+        let ids = self.hub.create_many(&entries)?;
+        Ok(ids
+            .into_iter()
+            .zip(infos)
+            .map(|(model_id, info)| RegistrationOutcome {
+                model_id,
+                trigger_conversion: info.convert,
+                trigger_profiling: info.profile,
+            })
+            .collect())
+    }
+
     /// Register from files on disk.
     pub fn register_files(&self, yaml_path: &Path, weights_path: &Path) -> Result<RegistrationOutcome> {
         let yaml_text = std::fs::read_to_string(yaml_path)?;
@@ -177,6 +210,29 @@ profile: false
         assert!(!out.trigger_profiling);
         let doc = hk.hub().get(&out.model_id).unwrap();
         assert_eq!(doc.get("dataset").unwrap().as_str(), Some("synthetic-32d"));
+    }
+
+    #[test]
+    fn register_batch_registers_all_or_nothing() {
+        let hk = hk();
+        let items: Vec<(String, Vec<u8>)> = (0..4)
+            .map(|i| (YAML.replace("demo-mlp", &format!("batch-{i}")), b"w".to_vec()))
+            .collect();
+        let outcomes = hk.register_batch(&items).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|o| o.trigger_conversion && !o.trigger_profiling));
+        assert_eq!(hk.retrieve(None, None, None).unwrap().len(), 4);
+        // one bad YAML rejects the whole batch before anything lands
+        let bad: Vec<(String, Vec<u8>)> = vec![
+            (YAML.replace("demo-mlp", "ok-model"), b"w".to_vec()),
+            ("framework: jax\n".to_string(), b"w".to_vec()), // no name
+        ];
+        assert!(hk.register_batch(&bad).is_err());
+        assert_eq!(hk.retrieve(None, None, None).unwrap().len(), 4);
+        // so does a name collision with an already-registered model
+        let clash: Vec<(String, Vec<u8>)> =
+            vec![(YAML.replace("demo-mlp", "batch-0"), b"w".to_vec())];
+        assert!(hk.register_batch(&clash).is_err());
     }
 
     #[test]

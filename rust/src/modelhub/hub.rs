@@ -56,6 +56,52 @@ impl ModelHub {
         Ok(self.db.with_collection(MODELS, |c| c.insert(doc))??)
     }
 
+    /// Bulk register: store each model's weights, then create every
+    /// document through one collection lock hold and one WAL batch
+    /// append ([`crate::storage::Collection::insert_many`]) — the
+    /// housekeeper's high-rate ingest path. All-or-nothing on the
+    /// document side: names are validated (unique within the batch and
+    /// against the hub) before any document is written. Returns the
+    /// model ids in input order.
+    pub fn create_many(&self, entries: &[(ModelInfo, &[u8])]) -> Result<Vec<String>> {
+        let mut seen = std::collections::HashSet::new();
+        for (info, _) in entries {
+            if !seen.insert(info.name.as_str()) {
+                bail!("duplicate model name '{}' in batch", info.name);
+            }
+        }
+        let names: Vec<String> = entries.iter().map(|(i, _)| i.name.clone()).collect();
+        let taken = self.db.with_collection(MODELS, |c| {
+            names
+                .iter()
+                .find(|n| c.find_one(&Query::eq("name", n.as_str())).is_some())
+                .cloned()
+        })?;
+        if let Some(name) = taken {
+            bail!("model '{name}' is already registered");
+        }
+        let mut docs = Vec::with_capacity(entries.len());
+        for (info, weights) in entries {
+            let blob = self.db.gridfs().put(&format!("{}.weights.bin", info.name), weights)?;
+            docs.push(info.to_doc(&blob, self.clock.now_ms()));
+        }
+        // re-check under the same lock hold as the insert: the cheap
+        // early check above races concurrent registrations (as the
+        // single `create` path always has), and the gridfs writes in
+        // between widen that window for batches — this hold closes it
+        // against every writer that inserts under the collection lock
+        Ok(self.db.with_collection(MODELS, |c| {
+            for n in &names {
+                if c.find_one(&Query::eq("name", n.as_str())).is_some() {
+                    return Err(crate::storage::StoreError::BadDocument(format!(
+                        "model '{n}' is already registered"
+                    )));
+                }
+            }
+            c.insert_many(docs)
+        })??)
+    }
+
     /// Materialize a full document (callers that read many fields or
     /// mutate). Single-field readers should use [`Self::get_field_str`].
     pub fn get(&self, id: &str) -> Result<Json> {
@@ -335,6 +381,32 @@ mod tests {
         assert_eq!(hub.get_field_str(&id, "weights.filename").unwrap().as_deref(), Some("m1.weights.bin"));
         assert_eq!(hub.get_field_str(&id, "accuracy").unwrap(), None, "non-string field");
         assert!(hub.get_field_str("ffffffffffffffffffffffff", "family").is_err());
+    }
+
+    #[test]
+    fn create_many_bulk_registers_in_order() {
+        let hub = hub();
+        let entries: Vec<(ModelInfo, &[u8])> =
+            (0..5).map(|i| (info(&format!("bulk-{i}")), b"w".as_slice())).collect();
+        let ids = hub.create_many(&entries).unwrap();
+        assert_eq!(ids.len(), 5);
+        assert_eq!(hub.count().unwrap(), 5);
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(
+                hub.get_field_str(id, "name").unwrap().as_deref(),
+                Some(format!("bulk-{i}").as_str())
+            );
+            assert_eq!(hub.load_weights(id).unwrap(), b"w");
+        }
+        // in-batch duplicates and collisions with registered names both
+        // reject the whole batch before any document lands
+        let dup: Vec<(ModelInfo, &[u8])> =
+            vec![(info("x"), b"w".as_slice()), (info("x"), b"w".as_slice())];
+        assert!(hub.create_many(&dup).is_err());
+        let clash: Vec<(ModelInfo, &[u8])> =
+            vec![(info("fresh"), b"w".as_slice()), (info("bulk-0"), b"w".as_slice())];
+        assert!(hub.create_many(&clash).is_err());
+        assert_eq!(hub.count().unwrap(), 5, "failed batches registered nothing");
     }
 
     #[test]

@@ -14,24 +14,30 @@
 //!   in place.
 //! * [`Collection::find`] evaluates queries through
 //!   [`Query::matches_scan`], so a full collection scan touches only
-//!   the fields the predicate names. Secondary-index postings are kept
-//!   id-sorted, so index-accelerated finds return hits in exactly the
-//!   order a full scan would.
+//!   the fields the predicate names. Secondary indexes are interned
+//!   ([`super::index`]): posting lists are id-sorted `Vec<u32>` arena
+//!   handles, so index-accelerated finds return hits in exactly the
+//!   order a full scan would while storing each id and value string
+//!   once.
 //! * WAL appends and compaction embed `Doc::raw()` verbatim — no
-//!   `doc.clone()`, no per-record re-serialization.
+//!   `doc.clone()`, no per-record re-serialization. Bulk writes
+//!   ([`Collection::insert_many`] / [`Collection::apply_batch`]) land
+//!   as one [`Wal::append_batch`] call: one write syscall and one
+//!   group-commit sync for the whole batch.
 //!
 //! [`Json`] remains the mutation type: `insert`/`replace` take a tree,
 //! serialize it once canonically and scan that; `update` materializes
 //! the stored doc only because a merge actually mutates it.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashSet};
 
 use crate::util::idgen;
 use crate::util::jscan::Doc;
 use crate::util::json::Json;
 
+use super::index::{IndexSet, InternStats};
 use super::query::Query;
-use super::wal::{Wal, WalOp, WalOptions};
+use super::wal::{Wal, WalBatchOp, WalIoStats, WalOp, WalOptions};
 
 /// Errors from collection operations.
 #[derive(Debug)]
@@ -62,13 +68,25 @@ impl From<std::io::Error> for StoreError {
 
 pub type Result<T> = std::result::Result<T, StoreError>;
 
+/// One logical write of a [`Collection::apply_batch`] call.
+pub enum WriteOp {
+    /// Insert-or-replace; `_id` assigned when missing.
+    Put(Json),
+    /// Delete by id. Deletes of ids that would not exist at that point
+    /// of the batch are skipped (not logged), mirroring
+    /// [`Collection::delete`]'s no-op on absent ids.
+    Delete(String),
+}
+
 /// An in-memory collection with optional durability.
 pub struct Collection {
     name: String,
     docs: BTreeMap<String, Doc>,
-    /// field -> value -> ids (secondary hash indexes; posting lists are
-    /// kept sorted by id so indexed finds match full-scan order)
-    indexes: HashMap<String, HashMap<String, Vec<String>>>,
+    /// Interned secondary indexes (see [`super::index`]): doc ids are
+    /// `u32` arena handles, values intern to a shared pool, posting
+    /// lists are sorted `Vec<u32>` in id order so indexed finds match
+    /// full-scan order.
+    indexes: IndexSet,
     /// Segmented write-ahead log; `None` = memory-only (tests).
     wal: Option<Wal>,
     /// Operations since last compaction.
@@ -81,7 +99,7 @@ impl Collection {
         Collection {
             name: name.to_string(),
             docs: BTreeMap::new(),
-            indexes: HashMap::new(),
+            indexes: IndexSet::new(),
             wal: None,
             dirty_ops: 0,
         }
@@ -125,72 +143,43 @@ impl Collection {
     /// Declare a secondary index on a (top-level or dotted) string field.
     /// The build reads only the indexed field off each document's spans.
     pub fn create_index(&mut self, field: &str) {
-        if self.indexes.contains_key(field) {
+        if !self.indexes.create(field) {
             return;
         }
-        let mut index: HashMap<String, Vec<String>> = HashMap::new();
         // docs iterate in id order, so each posting list builds sorted
         for (id, doc) in &self.docs {
             if let Some(v) = doc.str_field(field) {
-                index.entry(v.into_owned()).or_default().push(id.clone());
+                self.indexes.add(field, &v, id);
             }
         }
-        self.indexes.insert(field.to_string(), index);
     }
 
     /// `(distinct values, total posting entries)` of a secondary index —
     /// diagnostics, and the churn tests' proof that dead entries don't
     /// accumulate.
     pub fn index_stats(&self, field: &str) -> Option<(usize, usize)> {
-        self.indexes.get(field).map(|ix| (ix.len(), ix.values().map(Vec::len).sum()))
+        self.indexes.stats(field)
+    }
+
+    /// Memory-shape diagnostics of the interned index representation
+    /// (arena occupancy, value pool size, posting entries).
+    pub fn intern_stats(&self) -> InternStats {
+        self.indexes.intern_stats()
     }
 
     fn apply_put(&mut self, id: String, doc: Doc) {
         // take the old doc out first: unindexing needs it by value, and
         // this is what lets put/replace run clone-free
         if let Some(old) = self.docs.remove(&id) {
-            self.unindex(&id, &old);
+            self.indexes.remove_doc(&id, &old);
         }
-        self.index_doc(&id, &doc);
+        self.indexes.add_doc(&id, &doc);
         self.docs.insert(id, doc);
     }
 
     fn apply_del(&mut self, id: &str) {
         if let Some(old) = self.docs.remove(id) {
-            self.unindex(id, &old);
-        }
-    }
-
-    fn index_doc(&mut self, id: &str, doc: &Doc) {
-        for (field, index) in self.indexes.iter_mut() {
-            if let Some(v) = doc.str_field(field) {
-                let ids = index.entry(v.into_owned()).or_default();
-                // sorted insert keeps indexed finds in full-scan order
-                if let Err(pos) = ids.binary_search_by(|x| x.as_str().cmp(id)) {
-                    ids.insert(pos, id.to_string());
-                }
-            }
-        }
-    }
-
-    fn unindex(&mut self, id: &str, doc: &Doc) {
-        for (field, index) in self.indexes.iter_mut() {
-            if let Some(v) = doc.str_field(field) {
-                let now_empty = match index.get_mut(v.as_ref()) {
-                    Some(ids) => {
-                        if let Ok(pos) = ids.binary_search_by(|x| x.as_str().cmp(id)) {
-                            ids.remove(pos);
-                        }
-                        ids.is_empty()
-                    }
-                    None => false,
-                };
-                if now_empty {
-                    // drop dead posting lists — they otherwise
-                    // accumulate forever under insert/delete churn
-                    index.remove(v.as_ref());
-                }
-            }
+            self.indexes.remove_doc(id, &old);
         }
     }
 
@@ -241,8 +230,11 @@ impl Collection {
         Ok(())
     }
 
-    /// Insert a document; assigns `_id` when missing. Returns the id.
-    pub fn insert(&mut self, mut doc: Json) -> Result<String> {
+    /// Validate a document for storage and serialize it: must be an
+    /// object; `_id` is assigned when missing. The single id-assignment
+    /// rule shared by [`Collection::insert`] and
+    /// [`Collection::apply_batch`], so the two paths cannot diverge.
+    fn prepare_put(mut doc: Json) -> Result<(String, Doc)> {
         if doc.as_obj().is_none() {
             return Err(StoreError::BadDocument("documents must be objects".into()));
         }
@@ -254,11 +246,110 @@ impl Collection {
                 id
             }
         };
-        let stored = Doc::from_json(&doc);
+        Ok((id, Doc::from_json(&doc)))
+    }
+
+    /// Insert a document; assigns `_id` when missing. Returns the id.
+    pub fn insert(&mut self, doc: Json) -> Result<String> {
+        let (id, stored) = Self::prepare_put(doc)?;
         self.log_put(stored.raw())?;
         self.apply_put(id.clone(), stored);
         self.maybe_compact()?;
         Ok(id)
+    }
+
+    /// Bulk insert: scan, WAL-append and index the whole batch through
+    /// one [`Wal::append_batch`] call (one write syscall, one policy
+    /// sync) instead of a syscall per document. Returns the assigned
+    /// ids in input order.
+    pub fn insert_many(&mut self, docs: Vec<Json>) -> Result<Vec<String>> {
+        self.apply_batch(docs.into_iter().map(WriteOp::Put).collect())
+    }
+
+    /// Apply a mixed batch of writes atomically with respect to the
+    /// log: every op is validated and serialized *before* any byte
+    /// reaches the WAL (a bad document can't leave a half-logged
+    /// batch), then the whole batch lands in one `append_batch` call
+    /// and applies to memory in op order. Returns the affected ids in
+    /// op order (deletes of absent ids are skipped and omitted).
+    pub fn apply_batch(&mut self, ops: Vec<WriteOp>) -> Result<Vec<String>> {
+        enum Prepared {
+            Put { id: String, doc: Doc },
+            Del { id: String },
+        }
+        // batch-local view of which ids exist at each point, so delete
+        // semantics match the equivalent sequence of single calls
+        let mut added: HashSet<String> = HashSet::new();
+        let mut removed: HashSet<String> = HashSet::new();
+        let mut prepared = Vec::with_capacity(ops.len());
+        for op in ops {
+            match op {
+                WriteOp::Put(doc) => {
+                    let (id, doc) = Self::prepare_put(doc)?;
+                    removed.remove(&id);
+                    added.insert(id.clone());
+                    prepared.push(Prepared::Put { id, doc });
+                }
+                WriteOp::Delete(id) => {
+                    let exists = (self.docs.contains_key(&id) || added.contains(&id))
+                        && !removed.contains(&id);
+                    if exists {
+                        added.remove(&id);
+                        removed.insert(id.clone());
+                        prepared.push(Prepared::Del { id });
+                    }
+                }
+            }
+        }
+        if let Some(wal) = &mut self.wal {
+            let frames: Vec<WalBatchOp<'_>> = prepared
+                .iter()
+                .map(|p| match p {
+                    Prepared::Put { doc, .. } => WalBatchOp::Put { doc_raw: doc.raw() },
+                    Prepared::Del { id } => WalBatchOp::Del { id },
+                })
+                .collect();
+            wal.append_batch(&frames)?;
+            self.dirty_ops += frames.len();
+        }
+        let mut ids = Vec::with_capacity(prepared.len());
+        for p in prepared {
+            match p {
+                Prepared::Put { id, doc } => {
+                    self.apply_put(id.clone(), doc);
+                    ids.push(id);
+                }
+                Prepared::Del { id } => {
+                    self.apply_del(&id);
+                    ids.push(id);
+                }
+            }
+        }
+        self.maybe_compact()?;
+        Ok(ids)
+    }
+
+    /// Force WAL durability now — the commit point for callers running
+    /// a relaxed [`super::wal::SyncPolicy`]. No-op memory-only.
+    pub fn sync(&mut self) -> Result<()> {
+        match &mut self.wal {
+            Some(wal) => wal.sync(),
+            None => Ok(()),
+        }
+    }
+
+    /// Drive the `IntervalMs` sync policy (see [`Wal::tick`]). Returns
+    /// whether a sync happened.
+    pub fn tick(&mut self) -> Result<bool> {
+        match &mut self.wal {
+            Some(wal) => wal.tick(),
+            None => Ok(false),
+        }
+    }
+
+    /// The WAL's write/fsync counters; `None` memory-only.
+    pub fn wal_io_stats(&self) -> Option<WalIoStats> {
+        self.wal.as_ref().map(Wal::io_stats)
     }
 
     pub fn get(&self, id: &str) -> Option<&Doc> {
@@ -272,12 +363,16 @@ impl Collection {
 
     /// Find documents matching the query, index-accelerated when
     /// possible. Matching walks offset spans — no trees are built.
+    /// Posting lists are id-ordered, so the indexed path returns hits
+    /// in exactly full-scan order.
     pub fn find(&self, query: &Query) -> Vec<&Doc> {
         if let Some((field, value)) = query.index_key() {
-            if let Some(index) = self.indexes.get(field) {
-                let ids = index.get(value).map(|v| v.as_slice()).unwrap_or(&[]);
-                return ids
+            if self.indexes.has(field) {
+                return self
+                    .indexes
+                    .postings(field, value)
                     .iter()
+                    .filter_map(|&h| self.indexes.resolve(h))
                     .filter_map(|id| self.docs.get(id))
                     .filter(|d| query.matches_scan(d.root()))
                     .collect();
@@ -576,7 +671,7 @@ mod tests {
     #[test]
     fn multi_segment_durable_roundtrip() {
         let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
-        let opts = WalOptions { segment_bytes: 256, replay_threads: 0 };
+        let opts = WalOptions { segment_bytes: 256, replay_threads: 0, ..WalOptions::default() };
         {
             let mut c = Collection::open_with(&dir, "segmented", opts.clone()).unwrap();
             for i in 0..30 {
@@ -593,6 +688,104 @@ mod tests {
             assert_eq!(doc.f64_field("accuracy"), Some(0.5 + i as f64 / 100.0));
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn insert_many_assigns_ids_and_persists_through_one_batch() {
+        let dir = std::env::temp_dir().join(format!("mlci-test-{}", idgen::object_id()));
+        {
+            let mut c = Collection::open(&dir, "bulk").unwrap();
+            c.create_index("framework");
+            let writes_before = c.wal_io_stats().unwrap().writes;
+            let docs: Vec<Json> = (0..40).map(|i| model_doc(&format!("m{i}"), "jax", 0.5)).collect();
+            let ids = c.insert_many(docs).unwrap();
+            assert_eq!(ids.len(), 40);
+            assert!(ids.iter().all(|id| idgen::is_valid(id)));
+            assert_eq!(
+                c.wal_io_stats().unwrap().writes - writes_before,
+                1,
+                "40 inserts, one WAL write"
+            );
+            assert_eq!(c.find(&Query::eq("framework", "jax")).len(), 40, "batch is indexed");
+        }
+        let c2 = Collection::open(&dir, "bulk").unwrap();
+        assert_eq!(c2.len(), 40, "batched records replay");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn apply_batch_matches_equivalent_single_calls() {
+        // the same logical history through apply_batch and through
+        // single insert/delete calls must leave identical state —
+        // including the delete-of-absent-id skip
+        let mut batched = Collection::in_memory("a");
+        batched.create_index("status");
+        let ops = vec![
+            WriteOp::Put(Json::obj().with("_id", "01").with("status", "registered")),
+            WriteOp::Put(Json::obj().with("_id", "02").with("status", "serving")),
+            WriteOp::Delete("ghost".into()), // absent: skipped, not logged
+            WriteOp::Delete("01".into()),
+            WriteOp::Put(Json::obj().with("_id", "01").with("status", "serving")),
+            WriteOp::Put(Json::obj().with("_id", "02").with("status", "profiled")), // re-put
+        ];
+        let ids = batched.apply_batch(ops).unwrap();
+        assert_eq!(ids, vec!["01", "02", "01", "01", "02"], "ghost delete omitted");
+
+        let mut single = Collection::in_memory("b");
+        single.create_index("status");
+        single.insert(Json::obj().with("_id", "01").with("status", "registered")).unwrap();
+        single.insert(Json::obj().with("_id", "02").with("status", "serving")).unwrap();
+        assert!(!single.delete("ghost").unwrap());
+        single.delete("01").unwrap();
+        single.insert(Json::obj().with("_id", "01").with("status", "serving")).unwrap();
+        single.insert(Json::obj().with("_id", "02").with("status", "profiled")).unwrap();
+
+        assert_eq!(batched.len(), single.len());
+        for (a, b) in batched.all().zip(single.all()) {
+            assert_eq!(a.raw(), b.raw());
+        }
+        for status in ["registered", "serving", "profiled"] {
+            assert_eq!(
+                batched.count(&Query::eq("status", status)),
+                single.count(&Query::eq("status", status))
+            );
+        }
+        // a bad document rejects the whole batch before anything applies
+        let before = batched.len();
+        assert!(batched
+            .apply_batch(vec![
+                WriteOp::Put(Json::obj().with("_id", "03").with("status", "x")),
+                WriteOp::Put(Json::Num(3.0)),
+            ])
+            .is_err());
+        assert_eq!(batched.len(), before, "failed batch applied nothing");
+    }
+
+    #[test]
+    fn interned_arena_reclaims_after_churn() {
+        let mut c = Collection::in_memory("intern");
+        c.create_index("status");
+        c.create_index("name");
+        let ids = c
+            .insert_many(
+                (0..30)
+                    .map(|i| model_doc(&format!("m{i}"), "jax", 0.5).with("status", "registered"))
+                    .collect(),
+            )
+            .unwrap();
+        let stats = c.intern_stats();
+        assert_eq!(stats.live_ids, 30);
+        assert_eq!(stats.posting_entries, 60, "30 docs x 2 indexed fields");
+        assert_eq!(stats.interned_values, 31, "one shared 'registered' + 30 names");
+        c.apply_batch(ids.into_iter().map(WriteOp::Delete).collect()).unwrap();
+        let stats = c.intern_stats();
+        assert_eq!(stats.live_ids, 0, "arena drained");
+        assert_eq!(stats.interned_values, 0, "value pool drained");
+        assert_eq!(stats.posting_entries, 0);
+        assert_eq!(stats.free_ids, stats.id_slots, "slots recycled, not leaked");
+        // recycled slots are reused by the next wave
+        c.insert(model_doc("again", "jax", 0.5)).unwrap();
+        assert!(c.intern_stats().id_slots <= 30 + 1);
     }
 
     #[test]

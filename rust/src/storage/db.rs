@@ -99,6 +99,44 @@ impl Database {
         Ok(f(&mut guard))
     }
 
+    /// Force every open collection's WAL durable — the platform-wide
+    /// commit point for deployments running a relaxed
+    /// [`super::wal::SyncPolicy`]. Every collection is attempted even
+    /// when one fails (a commit point must not leave later WALs
+    /// unsynced because an earlier one errored); the first error is
+    /// returned.
+    pub fn sync(&self) -> Result<()> {
+        let mut first_err = None;
+        for coll in self.open_collections() {
+            if let Err(e) = coll.lock().unwrap().sync() {
+                crate::log_warn!("storage", "wal sync failed: {e}");
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Drive the `IntervalMs` sync policy across every open collection
+    /// (see [`super::wal::Wal::tick`]). Returns how many WALs synced.
+    pub fn tick_wals(&self) -> Result<usize> {
+        let mut synced = 0;
+        for coll in self.open_collections() {
+            if coll.lock().unwrap().tick()? {
+                synced += 1;
+            }
+        }
+        Ok(synced)
+    }
+
+    /// Snapshot of the open collection handles (the map lock is not
+    /// held while each collection's own lock is taken).
+    fn open_collections(&self) -> Vec<Arc<Mutex<Collection>>> {
+        self.collections.lock().unwrap().values().cloned().collect()
+    }
+
     pub fn gridfs(&self) -> &GridFs {
         &self.gridfs
     }
@@ -161,8 +199,10 @@ mod tests {
         {
             // tiny segments for `events` only: the same write volume
             // seals many segments there and none for `models`
-            let opts = DatabaseOptions::default()
-                .with_collection("events", WalOptions { segment_bytes: 256, replay_threads: 1 });
+            let opts = DatabaseOptions::default().with_collection(
+                "events",
+                WalOptions { segment_bytes: 256, replay_threads: 1, ..WalOptions::default() },
+            );
             let db = Database::open_with(&dir, opts).unwrap();
             for i in 0..32 {
                 let doc = Json::obj().with("i", i as i64).with("pad", "x".repeat(32));
@@ -178,11 +218,43 @@ mod tests {
             assert_eq!(seg_count("models"), 1, "default 8 MiB segment never seals here");
         }
         // both collections replay with their own options
-        let opts = DatabaseOptions::default()
-            .with_collection("events", WalOptions { segment_bytes: 256, replay_threads: 1 });
+        let opts = DatabaseOptions::default().with_collection(
+            "events",
+            WalOptions { segment_bytes: 256, replay_threads: 1, ..WalOptions::default() },
+        );
         let db = Database::open_with(&dir, opts).unwrap();
         db.with_collection("events", |c| assert_eq!(c.len(), 32)).unwrap();
         db.with_collection("models", |c| assert_eq!(c.len(), 32)).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn database_sync_reaches_every_open_wal() {
+        use crate::storage::wal::SyncPolicy;
+        let dir = std::env::temp_dir().join(format!("mlci-dbsync-{}", idgen::object_id()));
+        {
+            // a relaxed interval policy: appends leave records unsynced
+            // until the platform commit point / tick loop fires
+            let mut opts = DatabaseOptions::default();
+            opts.default_wal =
+                WalOptions { sync: SyncPolicy::IntervalMs(0), ..WalOptions::default() };
+            let db = Database::open_with(&dir, opts).unwrap();
+            for name in ["models", "events"] {
+                db.with_collection(name, |c| c.insert(Json::obj().with("k", 1i64)).unwrap())
+                    .unwrap();
+            }
+            let syncs = |db: &Database, name: &str| {
+                db.with_collection(name, |c| c.wal_io_stats().unwrap().syncs).unwrap()
+            };
+            assert_eq!(syncs(&db, "models"), 0);
+            db.sync().unwrap();
+            assert_eq!(syncs(&db, "models"), 1);
+            assert_eq!(syncs(&db, "events"), 1);
+            // tick drives the interval policy (0 ms = always elapsed)
+            db.with_collection("models", |c| c.insert(Json::obj().with("k", 2i64)).unwrap())
+                .unwrap();
+            assert_eq!(db.tick_wals().unwrap(), 1, "only the dirty WAL syncs");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,372 @@
+//! Interned secondary indexes: the hash indexes under
+//! [`Collection`](super::Collection), rebuilt around integer handles.
+//!
+//! The previous representation was `HashMap<field, HashMap<value,
+//! Vec<String>>>` — every posting entry owned a full copy of the
+//! document id, so a hub with F indexes stored each id F+1 times and
+//! every sorted insert/remove shifted 24-byte `String`s (plus their
+//! heap blocks) around. Here:
+//!
+//! * **Doc ids intern to `u32` handles** in a per-collection
+//!   [`IdArena`]: one shared `Arc<str>` per live id (slot table +
+//!   reverse lookup share the allocation), handles recycled through a
+//!   free list when a document leaves every index.
+//! * **Index keys intern to symbols**: the distinct value strings live
+//!   once in a collection-wide `Arc<str>` pool shared across fields
+//!   (`"jax"` indexed under both `framework` and `runtime` is stored
+//!   once) and are dropped when the last posting list naming them
+//!   dies.
+//! * **Posting lists are sorted `Vec<u32>`** with binary-search
+//!   insert/remove — 4-byte shifts instead of `String` shifts —
+//!   ordered by the id each handle resolves to, so index-accelerated
+//!   `find`/`find_one`/`count` walk hits in exactly full-scan (id)
+//!   order. That invariant is what keeps indexed queries
+//!   result-identical to a scan (enforced by the storage_props
+//!   order-equivalence property test).
+//!
+//! [`IndexSet`] exposes both the document-level hooks `Collection`
+//! drives (`add_doc`/`remove_doc`) and the primitive
+//! `add`/`remove`/`release_id` ops the `index_churn` bench races
+//! against the legacy owned-`String` representation.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use crate::util::jscan::Doc;
+
+/// Interned document ids: `u32` handle ⇄ id string, one shared
+/// allocation per live id.
+#[derive(Default)]
+pub struct IdArena {
+    /// handle -> id; `None` slots are on the free list
+    slots: Vec<Option<Arc<str>>>,
+    free: Vec<u32>,
+    /// id -> handle (shares the slot's `Arc` allocation)
+    lookup: HashMap<Arc<str>, u32>,
+}
+
+impl IdArena {
+    /// Handle for `id`, allocating (or recycling a freed slot) on first
+    /// sight.
+    pub fn intern(&mut self, id: &str) -> u32 {
+        if let Some(&h) = self.lookup.get(id) {
+            return h;
+        }
+        let arc: Arc<str> = Arc::from(id);
+        let h = match self.free.pop() {
+            Some(h) => {
+                self.slots[h as usize] = Some(arc.clone());
+                h
+            }
+            None => {
+                self.slots.push(Some(arc.clone()));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.lookup.insert(arc, h);
+        h
+    }
+
+    /// Existing handle for `id`, if interned.
+    pub fn get(&self, id: &str) -> Option<u32> {
+        self.lookup.get(id).copied()
+    }
+
+    /// The id a handle denotes (`None` for freed slots).
+    pub fn resolve(&self, h: u32) -> Option<&str> {
+        self.slots.get(h as usize)?.as_deref()
+    }
+
+    /// Return `id`'s handle to the free list. Callers must have dropped
+    /// every posting entry referencing it first.
+    pub fn release(&mut self, id: &str) {
+        if let Some(h) = self.lookup.remove(id) {
+            self.slots[h as usize] = None;
+            self.free.push(h);
+        }
+    }
+
+    /// `(live ids, total slots, free slots)`.
+    pub fn stats(&self) -> (usize, usize, usize) {
+        (self.lookup.len(), self.slots.len(), self.free.len())
+    }
+}
+
+/// Memory-shape diagnostics of an [`IndexSet`] — what the interned
+/// representation actually holds (tests pin these to prove churn
+/// leaves nothing behind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InternStats {
+    /// Ids currently interned (== ids referenced by >= 1 posting list).
+    pub live_ids: usize,
+    /// Arena slots allocated over the lifetime (live + recyclable).
+    pub id_slots: usize,
+    /// Recyclable arena slots.
+    pub free_ids: usize,
+    /// Distinct value strings interned across all fields.
+    pub interned_values: usize,
+    /// Total posting entries across all fields (4 bytes each).
+    pub posting_entries: usize,
+}
+
+/// The secondary indexes of one collection, interned end to end.
+#[derive(Default)]
+pub struct IndexSet {
+    arena: IdArena,
+    /// collection-wide interned value strings, shared across fields
+    values: HashSet<Arc<str>>,
+    /// field -> value -> posting list of id handles, sorted by the id
+    /// each handle resolves to
+    fields: HashMap<String, HashMap<Arc<str>, Vec<u32>>>,
+}
+
+fn intern_value(values: &mut HashSet<Arc<str>>, value: &str) -> Arc<str> {
+    if let Some(v) = values.get(value) {
+        return v.clone();
+    }
+    let v: Arc<str> = Arc::from(value);
+    values.insert(v.clone());
+    v
+}
+
+/// Sorted-position lookup: posting lists order by resolved id string,
+/// not by handle value (handles are allocation-ordered, ids need not
+/// be).
+fn posting_search(arena: &IdArena, posting: &[u32], id: &str) -> std::result::Result<usize, usize> {
+    posting.binary_search_by(|&h| arena.resolve(h).unwrap_or("").cmp(id))
+}
+
+/// Drop one posting from a field's index, removing the posting list
+/// when it empties and garbage-collecting the interned value string
+/// once no field's key map holds it (the pool entry is unused exactly
+/// when it owns the last strong reference). Shared by
+/// [`IndexSet::remove`] and [`IndexSet::remove_doc`].
+fn remove_posting(
+    arena: &IdArena,
+    values: &mut HashSet<Arc<str>>,
+    index: &mut HashMap<Arc<str>, Vec<u32>>,
+    value: &str,
+    id: &str,
+) {
+    let now_empty = match index.get_mut(value) {
+        Some(posting) => {
+            if let Ok(pos) = posting_search(arena, posting, id) {
+                posting.remove(pos);
+            }
+            posting.is_empty()
+        }
+        None => false,
+    };
+    if now_empty {
+        // dead posting lists otherwise accumulate forever under
+        // insert/delete churn
+        index.remove(value);
+        let unused = values.get(value).map_or(false, |v| Arc::strong_count(v) == 1);
+        if unused {
+            values.remove(value);
+        }
+    }
+}
+
+impl IndexSet {
+    pub fn new() -> IndexSet {
+        IndexSet::default()
+    }
+
+    /// Register an (empty) index on `field`. Returns false when it
+    /// already exists.
+    pub fn create(&mut self, field: &str) -> bool {
+        if self.fields.contains_key(field) {
+            return false;
+        }
+        self.fields.insert(field.to_string(), HashMap::new());
+        true
+    }
+
+    pub fn has(&self, field: &str) -> bool {
+        self.fields.contains_key(field)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    /// Add one `(field, value, id)` posting (the field's index must
+    /// exist). Interns the id and value; keeps the posting list in id
+    /// order.
+    pub fn add(&mut self, field: &str, value: &str, id: &str) {
+        let IndexSet { arena, values, fields } = self;
+        let Some(index) = fields.get_mut(field) else { return };
+        let h = arena.intern(id);
+        let posting = index.entry(intern_value(values, value)).or_default();
+        if let Err(pos) = posting_search(arena, posting, id) {
+            posting.insert(pos, h);
+        }
+    }
+
+    /// Remove one `(field, value, id)` posting; drops the posting list
+    /// when it empties and garbage-collects the interned value string
+    /// once no field maps it. Does *not* release the id handle — use
+    /// [`IndexSet::release_id`] (or [`IndexSet::remove_doc`]) once the
+    /// id has left every field.
+    pub fn remove(&mut self, field: &str, value: &str, id: &str) {
+        let IndexSet { arena, values, fields } = self;
+        let Some(index) = fields.get_mut(field) else { return };
+        remove_posting(arena, values, index, value, id);
+    }
+
+    /// Return the id's handle to the arena free list (no posting list
+    /// may still reference it).
+    pub fn release_id(&mut self, id: &str) {
+        self.arena.release(id);
+    }
+
+    /// Index every string field of `doc` that has an index declared.
+    pub fn add_doc(&mut self, id: &str, doc: &Doc) {
+        if self.fields.is_empty() {
+            return;
+        }
+        let IndexSet { arena, values, fields } = self;
+        let mut handle: Option<u32> = None;
+        for (field, index) in fields.iter_mut() {
+            if let Some(v) = doc.str_field(field) {
+                let h = *handle.get_or_insert_with(|| arena.intern(id));
+                let posting = index.entry(intern_value(values, &v)).or_default();
+                if let Err(pos) = posting_search(arena, posting, id) {
+                    posting.insert(pos, h);
+                }
+            }
+        }
+    }
+
+    /// Drop every posting `doc` produced and release the id handle.
+    /// Must see the same document content `add_doc` saw. Runs on every
+    /// delete and re-put, so like `add_doc` it walks the field maps
+    /// in place — no per-call allocation.
+    pub fn remove_doc(&mut self, id: &str, doc: &Doc) {
+        if self.fields.is_empty() {
+            return;
+        }
+        let IndexSet { arena, values, fields } = self;
+        for (field, index) in fields.iter_mut() {
+            if let Some(v) = doc.str_field(field) {
+                remove_posting(arena, values, index, &v, id);
+            }
+        }
+        arena.release(id);
+    }
+
+    /// The posting list of `(field, value)` in id order — empty when
+    /// the field has no index or the value no hits.
+    pub fn postings(&self, field: &str, value: &str) -> &[u32] {
+        self.fields
+            .get(field)
+            .and_then(|ix| ix.get(value))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Resolve a posting handle back to its id.
+    pub fn resolve(&self, h: u32) -> Option<&str> {
+        self.arena.resolve(h)
+    }
+
+    /// `(distinct values, total posting entries)` of one field's index.
+    pub fn stats(&self, field: &str) -> Option<(usize, usize)> {
+        self.fields.get(field).map(|ix| (ix.len(), ix.values().map(Vec::len).sum()))
+    }
+
+    /// Memory-shape diagnostics across the whole set.
+    pub fn intern_stats(&self) -> InternStats {
+        let (live_ids, id_slots, free_ids) = self.arena.stats();
+        InternStats {
+            live_ids,
+            id_slots,
+            free_ids,
+            interned_values: self.values.len(),
+            posting_entries: self.fields.values().flat_map(|ix| ix.values()).map(Vec::len).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_interns_resolves_and_recycles() {
+        let mut a = IdArena::default();
+        let h1 = a.intern("aaa");
+        let h2 = a.intern("bbb");
+        assert_ne!(h1, h2);
+        assert_eq!(a.intern("aaa"), h1, "re-intern returns the same handle");
+        assert_eq!(a.resolve(h1), Some("aaa"));
+        assert_eq!(a.get("bbb"), Some(h2));
+        a.release("aaa");
+        assert_eq!(a.resolve(h1), None);
+        assert_eq!(a.get("aaa"), None);
+        let h3 = a.intern("ccc");
+        assert_eq!(h3, h1, "freed slot is recycled");
+        assert_eq!(a.stats(), (2, 2, 0));
+    }
+
+    #[test]
+    fn postings_stay_in_id_order_not_handle_order() {
+        let mut ix = IndexSet::new();
+        ix.create("family");
+        // insertion order deliberately disagrees with id order, so
+        // handle numbers disagree with id order too
+        for id in ["0b", "0c", "0a", "0e", "0d"] {
+            ix.add("family", "resnet", id);
+        }
+        let ids: Vec<&str> =
+            ix.postings("family", "resnet").iter().filter_map(|&h| ix.resolve(h)).collect();
+        assert_eq!(ids, vec!["0a", "0b", "0c", "0d", "0e"]);
+        // removal keeps order and drops dead lists
+        ix.remove("family", "resnet", "0c");
+        let ids: Vec<&str> =
+            ix.postings("family", "resnet").iter().filter_map(|&h| ix.resolve(h)).collect();
+        assert_eq!(ids, vec!["0a", "0b", "0d", "0e"]);
+    }
+
+    #[test]
+    fn values_are_shared_across_fields_and_gced() {
+        let mut ix = IndexSet::new();
+        ix.create("framework");
+        ix.create("runtime");
+        ix.add("framework", "jax", "0001");
+        ix.add("runtime", "jax", "0001");
+        assert_eq!(ix.intern_stats().interned_values, 1, "'jax' interned once across fields");
+        ix.remove("framework", "jax", "0001");
+        assert_eq!(ix.intern_stats().interned_values, 1, "still referenced by 'runtime'");
+        ix.remove("runtime", "jax", "0001");
+        ix.release_id("0001");
+        let stats = ix.intern_stats();
+        assert_eq!(stats.interned_values, 0, "last reference gone, pool entry dropped");
+        assert_eq!(stats.live_ids, 0);
+        assert_eq!(stats.posting_entries, 0);
+        assert_eq!(stats.free_ids, stats.id_slots, "every slot back on the free list");
+    }
+
+    #[test]
+    fn duplicate_add_is_idempotent() {
+        let mut ix = IndexSet::new();
+        ix.create("status");
+        ix.add("status", "serving", "0001");
+        ix.add("status", "serving", "0001");
+        assert_eq!(ix.stats("status"), Some((1, 1)));
+        assert_eq!(ix.postings("status", "serving").len(), 1);
+    }
+
+    #[test]
+    fn missing_field_value_and_id_are_inert() {
+        let mut ix = IndexSet::new();
+        ix.add("ghost", "v", "0001"); // no index declared
+        assert!(ix.postings("ghost", "v").is_empty());
+        assert_eq!(ix.stats("ghost"), None);
+        ix.create("status");
+        ix.remove("status", "nope", "0001"); // nothing indexed yet
+        assert_eq!(ix.stats("status"), Some((0, 0)));
+        assert!(!ix.create("status"), "second create is a no-op");
+    }
+}

@@ -5,14 +5,16 @@
 pub mod collection;
 pub mod db;
 pub mod gridfs;
+pub mod index;
 pub mod query;
 pub mod wal;
 
-pub use collection::{Collection, Result, StoreError};
+pub use collection::{Collection, Result, StoreError, WriteOp};
 pub use db::{Database, DatabaseOptions};
 pub use gridfs::{BlobRef, GridFs};
+pub use index::{IdArena, IndexSet, InternStats};
 pub use query::Query;
-pub use wal::{Wal, WalOptions};
+pub use wal::{SyncPolicy, Wal, WalBatchOp, WalIoStats, WalOptions};
 
 // the scanned-document types stored records are made of
 pub use crate::util::jscan::{Doc, ValueRef};

@@ -21,12 +21,23 @@
 //!   Sealed segments are parsed **in parallel** by a small worker pool,
 //!   each worker reusing one pooled [`Offsets`] table across all its
 //!   records, and the results merge deterministically in segment order.
-//! * **Appends** go to the active segment; when it reaches
+//! * **Appends** go to the active segment through a buffered writer:
+//!   each record is framed — newline folded in — in a reusable buffer
+//!   and flushed with **one** write syscall, and [`Wal::append_batch`]
+//!   frames N records into one contiguous buffer for a single write
+//!   per batch (per segment touched). When the segment reaches
 //!   [`WalOptions::segment_bytes`] it is fsynced, sealed, and a new
 //!   active segment starts. Records are newline-terminated JSON objects
 //!   (`{"doc":…,"op":"put"}` / `{"id":…,"op":"del"}`), identical to the
 //!   legacy format — a legacy `<name>.jsonl` file is migrated in as the
 //!   first segment on open.
+//! * **Durability** of the active segment is governed by
+//!   [`SyncPolicy`] (group commit): `OnSeal` (default — fsync only at
+//!   seal/compaction, exactly the pre-group-commit behavior and byte
+//!   layout), `Always`, `EveryN(n)`, or `IntervalMs(ms)` driven by the
+//!   caller's [`Wal::tick`] loop; [`Wal::sync`] forces durability at
+//!   any commit point. `MLCI_WAL_SYNC` overrides the *default* policy
+//!   process-wide (`onseal` / `always` / `every:N` / `interval:MS`).
 //! * **Crash recovery**: a torn tail in the *active* segment (a record
 //!   with no terminating newline) is truncated away on the next open;
 //!   any malformed newline-terminated record is still hard corruption.
@@ -40,7 +51,8 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::util::jscan::{self, Doc, Offsets};
 use crate::util::jscan_simd;
@@ -52,6 +64,69 @@ use super::collection::{Result, StoreError};
 /// parallel replay has work to spread on multi-GB logs).
 pub const DEFAULT_SEGMENT_BYTES: u64 = 8 * 1024 * 1024;
 
+/// When appended records become durable (fsynced) on the active
+/// segment. Every policy writes records through to the OS at append
+/// return — a *process* crash never loses an acknowledged append; the
+/// policy only decides how much a *power* loss may take with it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// Fsync only when the active segment seals (and around
+    /// compaction) — the pre-group-commit behavior and the default.
+    OnSeal,
+    /// Fsync at the end of every append call. A batch counts as one
+    /// call: N records, one fsync — the group-commit win.
+    Always,
+    /// Fsync at the first append boundary where at least `n` records
+    /// are unsynced (fsync-per-N-records group commit).
+    EveryN(usize),
+    /// Records accumulate unsynced; an explicit [`Wal::tick`] fsyncs
+    /// once this many milliseconds have passed since the last sync.
+    /// The owner of the maintenance loop drives the cadence;
+    /// [`Wal::sync`] still forces durability at any commit point.
+    IntervalMs(u64),
+}
+
+impl Default for SyncPolicy {
+    fn default() -> SyncPolicy {
+        SyncPolicy::OnSeal
+    }
+}
+
+impl SyncPolicy {
+    /// Parse the `MLCI_WAL_SYNC` spelling: `onseal`, `always`,
+    /// `every:N`, `interval:MS` (case-insensitive).
+    pub fn parse(s: &str) -> Option<SyncPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "onseal" | "on_seal" => return Some(SyncPolicy::OnSeal),
+            "always" => return Some(SyncPolicy::Always),
+            _ => {}
+        }
+        if let Some(n) = s.strip_prefix("every:") {
+            return n.parse::<usize>().ok().filter(|&n| n > 0).map(SyncPolicy::EveryN);
+        }
+        if let Some(ms) = s.strip_prefix("interval:") {
+            return ms.parse::<u64>().ok().map(SyncPolicy::IntervalMs);
+        }
+        None
+    }
+
+    /// The process-wide default: `MLCI_WAL_SYNC` when set and parseable
+    /// (the CI durability leg runs the whole suite under `always`),
+    /// [`SyncPolicy::OnSeal`] otherwise. Read once and cached; explicit
+    /// `WalOptions { sync: … }` always wins over the env.
+    pub fn env_default() -> SyncPolicy {
+        static CACHE: OnceLock<SyncPolicy> = OnceLock::new();
+        *CACHE.get_or_init(|| match std::env::var("MLCI_WAL_SYNC") {
+            Ok(v) if !v.trim().is_empty() => SyncPolicy::parse(&v).unwrap_or_else(|| {
+                crate::log_warn!("wal", "unrecognized MLCI_WAL_SYNC value '{v}', using OnSeal");
+                SyncPolicy::OnSeal
+            }),
+            _ => SyncPolicy::OnSeal,
+        })
+    }
+}
+
 /// Tuning knobs for a [`Wal`].
 #[derive(Debug, Clone)]
 pub struct WalOptions {
@@ -59,12 +134,39 @@ pub struct WalOptions {
     pub segment_bytes: u64,
     /// Upper bound on replay worker threads; 0 = available parallelism.
     pub replay_threads: usize,
+    /// Durability policy for the active segment (see [`SyncPolicy`]).
+    pub sync: SyncPolicy,
 }
 
 impl Default for WalOptions {
     fn default() -> WalOptions {
-        WalOptions { segment_bytes: DEFAULT_SEGMENT_BYTES, replay_threads: 0 }
+        WalOptions {
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            replay_threads: 0,
+            sync: SyncPolicy::env_default(),
+        }
     }
+}
+
+/// One operation of a [`Wal::append_batch`] call, borrowing the
+/// caller's already-serialized payloads.
+#[derive(Debug, Clone, Copy)]
+pub enum WalBatchOp<'a> {
+    /// A put record; the doc's canonical raw text is embedded verbatim.
+    Put { doc_raw: &'a str },
+    /// A delete record for this id.
+    Del { id: &'a str },
+}
+
+/// Write-syscall / fsync counters of a [`Wal`] — the write-counting
+/// shim the group-commit tests and benches assert against.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WalIoStats {
+    /// `write(2)` calls issued against the active segment.
+    pub writes: u64,
+    /// Fsyncs of the active segment (policy syncs, explicit
+    /// [`Wal::sync`], and seal/compaction syncs alike).
+    pub syncs: u64,
 }
 
 /// One logical operation recovered from the log, in commit order.
@@ -85,6 +187,21 @@ pub struct Wal {
     active: File,
     active_seq: u64,
     active_len: u64,
+    /// Reusable frame-build buffer: records (single or batched) are
+    /// framed here — newline folded in — and flushed with one
+    /// `write_all` per contiguous run, so the buffered writer never
+    /// issues more than one syscall per append call per segment.
+    frame_buf: Vec<u8>,
+    /// Records written to the OS but not yet fsynced.
+    unsynced_records: usize,
+    last_sync: Instant,
+    writes: u64,
+    syncs: u64,
+    /// Set when a failed append could not be rolled back (see
+    /// [`Wal::with_rollback`]): the log may hold records the caller
+    /// was told failed, so further appends are refused until a reopen
+    /// re-establishes a consistent replayable state.
+    poisoned: bool,
 }
 
 impl Wal {
@@ -147,49 +264,234 @@ impl Wal {
             None => new_active(&dir, 1)?,
         };
 
-        Ok((Wal { dir, label: name.to_string(), opts, active, active_seq, active_len }, ops))
+        Ok((Wal {
+            dir,
+            label: name.to_string(),
+            opts,
+            active,
+            active_seq,
+            active_len,
+            frame_buf: Vec::new(),
+            unsynced_records: 0,
+            last_sync: Instant::now(),
+            writes: 0,
+            syncs: 0,
+            poisoned: false,
+        }, ops))
     }
 
     /// Append a put record; the doc's canonical raw text is embedded
-    /// verbatim (one buffer build, no record tree, no doc clone).
+    /// verbatim (one frame build, one write syscall, no record tree,
+    /// no doc clone).
     pub fn append_put(&mut self, doc_raw: &str) -> Result<()> {
-        let mut rec = String::with_capacity(doc_raw.len() + 24);
-        rec.push_str("{\"doc\":");
-        rec.push_str(doc_raw);
-        rec.push_str(",\"op\":\"put\"}");
-        self.append(&rec)
+        let mut buf = std::mem::take(&mut self.frame_buf);
+        buf.clear();
+        frame_put(&mut buf, doc_raw);
+        let result = self.append_frame(&buf);
+        self.stash_frame_buf(buf);
+        result
     }
 
     /// Append a delete record.
     pub fn append_del(&mut self, id: &str) -> Result<()> {
-        let mut rec = String::with_capacity(id.len() + 24);
-        rec.push_str("{\"id\":");
-        jscan::write_escaped(&mut rec, id);
-        rec.push_str(",\"op\":\"del\"}");
-        self.append(&rec)
+        let mut buf = std::mem::take(&mut self.frame_buf);
+        buf.clear();
+        frame_del(&mut buf, id);
+        let result = self.append_frame(&buf);
+        self.stash_frame_buf(buf);
+        result
     }
 
-    /// Append one record (a complete JSON object, no trailing newline),
-    /// sealing the active segment first when it is full.
-    fn append(&mut self, record: &str) -> Result<()> {
+    /// Append a batch of records through one contiguous frame buffer:
+    /// one write syscall per batch (per segment touched, when the batch
+    /// crosses a seal boundary) instead of one per record, and one
+    /// policy sync for the whole batch. The seal decision sees the
+    /// bytes already queued, so a batched history seals at exactly the
+    /// record boundaries the equivalent one-at-a-time history would —
+    /// segment layout stays byte-identical.
+    pub fn append_batch(&mut self, ops: &[WalBatchOp<'_>]) -> Result<()> {
+        if ops.is_empty() {
+            return Ok(());
+        }
+        let mut buf = std::mem::take(&mut self.frame_buf);
+        buf.clear();
+        let result = self.with_rollback(|wal| {
+            let mut pending = 0usize;
+            for op in ops {
+                if wal.active_len + buf.len() as u64 >= wal.opts.segment_bytes {
+                    wal.write_run(&buf, pending)?;
+                    buf.clear();
+                    pending = 0;
+                    wal.seal_and_rotate()?;
+                }
+                match op {
+                    WalBatchOp::Put { doc_raw } => frame_put(&mut buf, doc_raw),
+                    WalBatchOp::Del { id } => frame_del(&mut buf, id),
+                }
+                pending += 1;
+            }
+            wal.write_run(&buf, pending)?;
+            wal.maybe_sync()
+        });
+        self.stash_frame_buf(buf);
+        result
+    }
+
+    /// Refuse work on a poisoned Wal (see [`Wal::with_rollback`]).
+    fn check_usable(&self) -> Result<()> {
+        if self.poisoned {
+            return Err(StoreError::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!(
+                    "{}: wal is poisoned after an unrecoverable append failure; reopen to recover",
+                    self.label
+                ),
+            )));
+        }
+        Ok(())
+    }
+
+    /// Run one append operation with the invariant that an `Err`
+    /// return means **none of the operation's records replay**: the
+    /// caller (Collection) skips its in-memory apply on error, so an
+    /// already-written record would otherwise resurrect on reopen —
+    /// e.g. `SyncPolicy::Always` writing the record and then failing
+    /// the fsync. On error the active segment is truncated back to its
+    /// pre-op length (exactly what torn-tail recovery would do to an
+    /// unsynced suffix). When that is impossible — a batch sealed a
+    /// segment mid-op with some of its records inside, or the truncate
+    /// itself fails — the Wal is poisoned: further appends are refused
+    /// and a reopen re-reads what actually survived, so acknowledged
+    /// memory state and replayable log state can never silently
+    /// diverge. Single appends seal before entering this scope, so
+    /// only multi-segment batches can reach the poison arm.
+    fn with_rollback(&mut self, op: impl FnOnce(&mut Wal) -> Result<()>) -> Result<()> {
+        self.check_usable()?;
+        let start_seq = self.active_seq;
+        let start_len = self.active_len;
+        let start_unsynced = self.unsynced_records;
+        match op(self) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if self.active_seq == start_seq && self.active.set_len(start_len).is_ok() {
+                    self.active_len = start_len;
+                    self.unsynced_records = start_unsynced;
+                } else {
+                    self.poisoned = true;
+                    crate::log_error!(
+                        "wal",
+                        "{}: append failed after a mid-op seal or unrollbackable write; refusing further appends",
+                        self.label
+                    );
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Park the reusable frame buffer, dropping oversized capacity a
+    /// large batch left behind so every open WAL doesn't pin its
+    /// high-water allocation forever.
+    fn stash_frame_buf(&mut self, buf: Vec<u8>) {
+        const KEEP_BYTES: usize = 256 * 1024;
+        self.frame_buf = buf;
+        if self.frame_buf.capacity() > KEEP_BYTES {
+            self.frame_buf.shrink_to(KEEP_BYTES);
+        }
+    }
+
+    /// Write one framed record (newline included) with a single
+    /// syscall, sealing the active segment first when it is full. The
+    /// seal runs *outside* the rollback scope: a seal failure writes
+    /// none of this record's bytes, so it is a plain (retryable)
+    /// error; only the write+sync needs the no-phantom-replay guard —
+    /// and there `active_seq` cannot change, so single appends can
+    /// always roll back and never poison.
+    fn append_frame(&mut self, frame: &[u8]) -> Result<()> {
+        self.check_usable()?;
         if self.active_len >= self.opts.segment_bytes {
             self.seal_and_rotate()?;
         }
-        self.active.write_all(record.as_bytes())?;
-        self.active.write_all(b"\n")?;
-        self.active_len += record.len() as u64 + 1;
+        self.with_rollback(|wal| {
+            wal.write_run(frame, 1)?;
+            wal.maybe_sync()
+        })
+    }
+
+    /// One `write_all` of a contiguous run of `count` framed records.
+    fn write_run(&mut self, bytes: &[u8], count: usize) -> Result<()> {
+        if bytes.is_empty() {
+            return Ok(());
+        }
+        self.active.write_all(bytes)?;
+        self.active_len += bytes.len() as u64;
+        self.unsynced_records += count;
+        self.writes += 1;
         Ok(())
+    }
+
+    /// Apply the configured [`SyncPolicy`] at an append boundary.
+    fn maybe_sync(&mut self) -> Result<()> {
+        match self.opts.sync {
+            SyncPolicy::Always => self.sync(),
+            SyncPolicy::EveryN(n) => {
+                if n > 0 && self.unsynced_records >= n {
+                    self.sync()
+                } else {
+                    Ok(())
+                }
+            }
+            SyncPolicy::OnSeal | SyncPolicy::IntervalMs(_) => Ok(()),
+        }
+    }
+
+    /// Force every appended record durable now — the commit-point hook
+    /// for callers that batch under a relaxed policy. No-op when
+    /// nothing is unsynced.
+    pub fn sync(&mut self) -> Result<()> {
+        if self.unsynced_records == 0 {
+            return Ok(());
+        }
+        self.active.sync_data()?;
+        self.note_synced();
+        Ok(())
+    }
+
+    /// The [`SyncPolicy::IntervalMs`] flush hook: fsync if the interval
+    /// has elapsed since the last sync and anything is unsynced.
+    /// Callers with a maintenance loop drive this; other policies
+    /// no-op. Returns whether a sync happened.
+    pub fn tick(&mut self) -> Result<bool> {
+        if let SyncPolicy::IntervalMs(ms) = self.opts.sync {
+            if self.unsynced_records > 0 && self.last_sync.elapsed().as_millis() as u64 >= ms {
+                self.sync()?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    fn note_synced(&mut self) {
+        self.syncs += 1;
+        self.unsynced_records = 0;
+        self.last_sync = Instant::now();
+    }
+
+    /// Write/fsync counters (tests, benches, diagnostics).
+    pub fn io_stats(&self) -> WalIoStats {
+        WalIoStats { writes: self.writes, syncs: self.syncs }
     }
 
     fn seal_and_rotate(&mut self) -> Result<()> {
         // sealed segments are immutable from here on; make them durable
         self.active.sync_all()?;
+        self.note_synced();
         let (seq, file, len) = new_active(&self.dir, self.active_seq + 1)?;
         self.active_seq = seq;
         self.active = file;
         self.active_len = len;
         // make the new segment's directory entry durable too
-        sync_dir(&self.dir);
+        sync_dir(&self.dir)?;
         Ok(())
     }
 
@@ -202,6 +504,7 @@ impl Wal {
     where
         F: FnOnce(&mut dyn Write) -> std::io::Result<()>,
     {
+        self.check_usable()?;
         let tmp = self.dir.join("compact.tmp");
         {
             let mut f = File::create(&tmp)?;
@@ -212,12 +515,35 @@ impl Wal {
             }
             f.sync_all()?;
         }
+        // up to here a failure is harmless: the old segments stay
+        // authoritative and a leftover compact.tmp is deleted on open
         let base_seq = self.active_seq + 1;
         fs::rename(&tmp, self.dir.join(segment_file_name(base_seq, true)))?;
+        // point of no return: the base is published, so replay now
+        // ignores the current active segment. A failure before this
+        // Wal rotates onto a fresh post-base segment would leave it
+        // appending records a reopen silently discards — poison
+        // instead of carrying on.
+        if let Err(e) = self.finish_compact(base_seq) {
+            self.poisoned = true;
+            crate::log_error!(
+                "wal",
+                "{}: compaction failed after publishing base-{base_seq}; refusing further appends (reopen to recover)",
+                self.label
+            );
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// The post-publication half of [`Wal::compact`]: make the base's
+    /// directory entry durable, drop superseded segments, rotate onto
+    /// a fresh active segment.
+    fn finish_compact(&mut self, base_seq: u64) -> Result<()> {
         // the rename must be durable *before* the superseded segments
         // are unlinked: on filesystems that reorder metadata ops, power
         // loss could otherwise persist the unlinks but not the base
-        sync_dir(&self.dir);
+        sync_dir(&self.dir)?;
         for seg in list_segments(&self.dir)? {
             if seg.seq < base_seq {
                 fs::remove_file(&seg.path).ok();
@@ -227,6 +553,10 @@ impl Wal {
         self.active_seq = seq;
         self.active = file;
         self.active_len = len;
+        // the base snapshot is fsynced and published; nothing the old
+        // active segment held is still pending durability
+        self.unsynced_records = 0;
+        self.last_sync = Instant::now();
         Ok(())
     }
 
@@ -255,14 +585,44 @@ impl Wal {
     }
 }
 
+/// Frame a put record — `{"doc":…,"op":"put"}\n` — into the build
+/// buffer, newline folded in so the record flushes in one write.
+fn frame_put(buf: &mut Vec<u8>, doc_raw: &str) {
+    buf.reserve(doc_raw.len() + 20);
+    buf.extend_from_slice(b"{\"doc\":");
+    buf.extend_from_slice(doc_raw.as_bytes());
+    buf.extend_from_slice(b",\"op\":\"put\"}\n");
+}
+
+/// Frame a delete record — `{"id":…,"op":"del"}\n`.
+fn frame_del(buf: &mut Vec<u8>, id: &str) {
+    let mut escaped = String::with_capacity(id.len() + 2);
+    jscan::write_escaped(&mut escaped, id);
+    buf.reserve(escaped.len() + 20);
+    buf.extend_from_slice(b"{\"id\":");
+    buf.extend_from_slice(escaped.as_bytes());
+    buf.extend_from_slice(b",\"op\":\"del\"}\n");
+}
+
 /// Fsync a directory so renames/creates/unlinks inside it are durable.
-/// Best-effort: directories cannot be opened as files everywhere (e.g.
-/// Windows), and a failed dir sync only weakens crash ordering, it
-/// never corrupts live state.
-fn sync_dir(dir: &Path) {
-    if let Ok(d) = File::open(dir) {
-        d.sync_all().ok();
+/// Directories cannot be opened as files everywhere (e.g. Windows), so
+/// an *open* failure is treated as "unsupported here" and skipped; a
+/// failed sync on an opened directory is a real durability hazard —
+/// logged, and returned so `seal_and_rotate`/`compact` callers can act
+/// on it instead of the error vanishing into a `.ok()`.
+fn sync_dir(dir: &Path) -> Result<()> {
+    let d = match File::open(dir) {
+        Ok(d) => d,
+        Err(e) => {
+            crate::log_debug!("wal", "cannot open {} for dir fsync: {e}", dir.display());
+            return Ok(());
+        }
+    };
+    if let Err(e) = d.sync_all() {
+        crate::log_warn!("wal", "directory fsync failed for {}: {e}", dir.display());
+        return Err(e.into());
     }
+    Ok(())
 }
 
 fn new_active(dir: &Path, seq: u64) -> Result<(u64, File, u64)> {
@@ -589,7 +949,7 @@ mod tests {
     }
 
     fn small_opts() -> WalOptions {
-        WalOptions { segment_bytes: 128, replay_threads: 0 }
+        WalOptions { segment_bytes: 128, replay_threads: 0, ..WalOptions::default() }
     }
 
     #[test]
@@ -728,6 +1088,170 @@ mod tests {
             Err(StoreError::Corrupt(_))
         ));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Read every segment file of a WAL dir as `(file_name, bytes)`,
+    /// sorted — the byte-level fingerprint the differential tests use.
+    fn segment_fingerprint(dir: &Path, name: &str) -> Vec<(String, Vec<u8>)> {
+        let wal_dir = dir.join(format!("{name}.wal"));
+        let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(&wal_dir)
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+            })
+            .collect();
+        files.sort();
+        files
+    }
+
+    #[test]
+    fn batched_and_single_append_histories_are_byte_identical() {
+        // tiny segment budget so the batch crosses several seal
+        // boundaries; the batched history must seal at exactly the
+        // record boundaries the one-at-a-time history does
+        let dir_a = tmp();
+        let dir_b = tmp();
+        let opts = || WalOptions { segment_bytes: 160, replay_threads: 0, sync: SyncPolicy::OnSeal };
+        let raws: Vec<String> = (0..25).map(put_raw).collect();
+        {
+            let (mut wal, _) = Wal::open(&dir_a, "t", opts()).unwrap();
+            for (i, raw) in raws.iter().enumerate() {
+                wal.append_put(raw).unwrap();
+                if i % 5 == 4 {
+                    wal.append_del(&format!("{:024}", i)).unwrap();
+                }
+            }
+        }
+        {
+            let (mut wal, _) = Wal::open(&dir_b, "t", opts()).unwrap();
+            let mut ids = Vec::new();
+            for (i, _) in raws.iter().enumerate() {
+                if i % 5 == 4 {
+                    ids.push(format!("{:024}", i));
+                }
+            }
+            let mut ops: Vec<WalBatchOp> = Vec::new();
+            let mut del_iter = ids.iter();
+            for (i, raw) in raws.iter().enumerate() {
+                ops.push(WalBatchOp::Put { doc_raw: raw });
+                if i % 5 == 4 {
+                    ops.push(WalBatchOp::Del { id: del_iter.next().unwrap() });
+                }
+            }
+            wal.append_batch(&ops).unwrap();
+        }
+        assert_eq!(segment_fingerprint(&dir_a, "t"), segment_fingerprint(&dir_b, "t"));
+        // and both replay to the same ops
+        let (_, ops_a) = Wal::open(&dir_a, "t", opts()).unwrap();
+        let (_, ops_b) = Wal::open(&dir_b, "t", opts()).unwrap();
+        assert_eq!(replay_ids(&ops_a), replay_ids(&ops_b));
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn append_batch_issues_one_write_per_batch() {
+        let dir = tmp();
+        let opts = WalOptions { segment_bytes: 1 << 20, replay_threads: 0, sync: SyncPolicy::OnSeal };
+        let (mut wal, _) = Wal::open(&dir, "t", opts).unwrap();
+        let raws: Vec<String> = (0..64).map(put_raw).collect();
+        let ops: Vec<WalBatchOp> = raws.iter().map(|r| WalBatchOp::Put { doc_raw: r }).collect();
+        let before = wal.io_stats();
+        wal.append_batch(&ops).unwrap();
+        let after = wal.io_stats();
+        assert_eq!(after.writes - before.writes, 1, "64 records, one write syscall");
+        assert_eq!(after.syncs, before.syncs, "OnSeal must not fsync mid-segment");
+        // the equivalent single-append history costs one write each
+        let before = wal.io_stats();
+        for raw in &raws {
+            wal.append_put(raw).unwrap();
+        }
+        assert_eq!(wal.io_stats().writes - before.writes, 64);
+        // empty batches are free
+        let before = wal.io_stats();
+        wal.append_batch(&[]).unwrap();
+        assert_eq!(wal.io_stats(), before);
+        drop(wal);
+        let (_, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+        assert_eq!(ops.len(), 128, "both histories replay");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sync_policies_fsync_at_documented_boundaries() {
+        let dir = tmp();
+        let big = 1u64 << 20; // never seals in this test
+        // Always: one fsync per append call, batches included
+        {
+            let opts = WalOptions { segment_bytes: big, replay_threads: 0, sync: SyncPolicy::Always };
+            let (mut wal, _) = Wal::open(&dir, "always", opts).unwrap();
+            for i in 0..3 {
+                wal.append_put(&put_raw(i)).unwrap();
+            }
+            assert_eq!(wal.io_stats().syncs, 3);
+            let raws: Vec<String> = (3..13).map(put_raw).collect();
+            let ops: Vec<WalBatchOp> = raws.iter().map(|r| WalBatchOp::Put { doc_raw: r }).collect();
+            wal.append_batch(&ops).unwrap();
+            assert_eq!(wal.io_stats().syncs, 4, "a 10-record batch is one group commit");
+        }
+        // EveryN: fsync at the first append boundary with >= n unsynced
+        {
+            let opts = WalOptions { segment_bytes: big, replay_threads: 0, sync: SyncPolicy::EveryN(4) };
+            let (mut wal, _) = Wal::open(&dir, "everyn", opts).unwrap();
+            for i in 0..10 {
+                wal.append_put(&put_raw(i)).unwrap();
+            }
+            assert_eq!(wal.io_stats().syncs, 2, "records 4 and 8 trip the budget");
+            // explicit sync flushes the 2-record remainder, then no-ops
+            wal.sync().unwrap();
+            assert_eq!(wal.io_stats().syncs, 3);
+            wal.sync().unwrap();
+            assert_eq!(wal.io_stats().syncs, 3, "sync with nothing unsynced is free");
+        }
+        // OnSeal: zero fsyncs until the segment seals
+        {
+            let opts = WalOptions { segment_bytes: 128, replay_threads: 0, sync: SyncPolicy::OnSeal };
+            let (mut wal, _) = Wal::open(&dir, "onseal", opts).unwrap();
+            wal.append_put(&put_raw(0)).unwrap();
+            assert_eq!(wal.io_stats().syncs, 0);
+            for i in 1..8 {
+                wal.append_put(&put_raw(i)).unwrap();
+            }
+            assert!(wal.io_stats().syncs > 0, "seals fsync");
+        }
+        // IntervalMs: nothing syncs until tick() past the interval
+        {
+            let opts =
+                WalOptions { segment_bytes: big, replay_threads: 0, sync: SyncPolicy::IntervalMs(0) };
+            let (mut wal, _) = Wal::open(&dir, "interval", opts).unwrap();
+            wal.append_put(&put_raw(0)).unwrap();
+            assert_eq!(wal.io_stats().syncs, 0);
+            assert!(wal.tick().unwrap(), "interval 0 is always elapsed");
+            assert_eq!(wal.io_stats().syncs, 1);
+            assert!(!wal.tick().unwrap(), "nothing unsynced, no fsync");
+            let opts = WalOptions {
+                segment_bytes: big,
+                replay_threads: 0,
+                sync: SyncPolicy::IntervalMs(3_600_000),
+            };
+            let (mut wal, _) = Wal::open(&dir, "interval2", opts).unwrap();
+            wal.append_put(&put_raw(0)).unwrap();
+            assert!(!wal.tick().unwrap(), "interval not elapsed");
+            assert_eq!(wal.io_stats().syncs, 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sync_policy_parses_env_spellings() {
+        assert_eq!(SyncPolicy::parse("onseal"), Some(SyncPolicy::OnSeal));
+        assert_eq!(SyncPolicy::parse("ALWAYS"), Some(SyncPolicy::Always));
+        assert_eq!(SyncPolicy::parse("every:8"), Some(SyncPolicy::EveryN(8)));
+        assert_eq!(SyncPolicy::parse("interval:250"), Some(SyncPolicy::IntervalMs(250)));
+        assert_eq!(SyncPolicy::parse("every:0"), None, "a zero budget never syncs");
+        assert_eq!(SyncPolicy::parse(""), None);
+        assert_eq!(SyncPolicy::parse("sometimes"), None);
     }
 
     #[test]

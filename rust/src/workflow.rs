@@ -50,7 +50,11 @@ pub struct PlatformConfig {
     pub idle: IdlePolicy,
     pub p99_slo_ms: f64,
     pub profiler_iters: usize,
-    /// Storage tuning (per-collection WAL options) for durable data dirs.
+    /// Storage tuning for durable data dirs: per-collection WAL options
+    /// including the group-commit [`crate::storage::SyncPolicy`]
+    /// (overridable process-wide via `MLCI_WAL_SYNC`; see
+    /// docs/STORAGE.md). `Database::sync()` / `tick_wals()` are the
+    /// commit-point hooks for relaxed policies.
     pub db: DatabaseOptions,
 }
 
@@ -221,6 +225,12 @@ impl Platform {
         self.jobs.shutdown();
         self.dispatcher.stop_all();
         self.cluster.shutdown();
+        // flush the group-commit tail: under a relaxed WAL SyncPolicy
+        // (EveryN / IntervalMs) acknowledged writes may still be
+        // unsynced — a clean exit is a commit point
+        if let Err(e) = self.db.sync() {
+            crate::log_warn!("platform", "wal sync on shutdown failed: {e}");
+        }
     }
 }
 

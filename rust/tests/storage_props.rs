@@ -6,7 +6,8 @@
 
 use std::collections::{BTreeMap, HashMap};
 
-use mlmodelci::storage::{Collection, GridFs, Query, WalOptions};
+use mlmodelci::storage::{Collection, GridFs, Query, WalOptions, WriteOp};
+use mlmodelci::util::idgen;
 use mlmodelci::util::jscan::{self, Doc};
 use mlmodelci::util::json::Json;
 use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop};
@@ -211,7 +212,7 @@ fn segmented_replay_is_byte_identical_to_legacy_single_file() {
     // tiny segments force the migrated log through real multi-segment
     // compaction/rotation behavior on subsequent writes; replay of the
     // migrated file itself exercises the mmap scan path
-    let opts = WalOptions { segment_bytes: 4096, replay_threads: 0 };
+    let opts = WalOptions { segment_bytes: 4096, replay_threads: 0, ..WalOptions::default() };
     let coll = Collection::open_with(&dir, "diff", opts).unwrap();
 
     assert_eq!(coll.len(), oracle.len());
@@ -230,7 +231,7 @@ fn segmented_replay_is_byte_identical_to_legacy_single_file() {
 fn truncated_active_wal_segment_recovers_sealed_prefix() {
     let dir = std::env::temp_dir().join(format!("mlci-crash-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let opts = WalOptions { segment_bytes: 512, replay_threads: 0 };
+    let opts = WalOptions { segment_bytes: 512, replay_threads: 0, ..WalOptions::default() };
     let n_docs = 40usize;
     {
         let mut coll = Collection::open_with(&dir, "crash", opts.clone()).unwrap();
@@ -267,6 +268,160 @@ fn truncated_active_wal_segment_recovers_sealed_prefix() {
     let again = Collection::open_with(&dir, "crash", opts).unwrap();
     assert_eq!(again.len(), n_docs - 1);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Order-equivalence property of the interned secondary indexes
+/// (ISSUE 5): whatever churn the index survives — inserts with ids
+/// that disagree with arena-handle order, re-puts that move documents
+/// between values, deletes, batched writes, compaction, and full
+/// replay+rebuild on reopen — indexed `find`/`find_one`/`count` must
+/// return exactly what a full scan returns, in the same order.
+#[test]
+fn indexed_queries_match_full_scan_across_interned_churn() {
+    let base = std::env::temp_dir().join(format!("mlci-ixprop-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let statuses = ["registered", "converted", "profiled", "serving"];
+
+    let ids_of = |docs: Vec<&Doc>| -> Vec<String> {
+        docs.iter().map(|d| d.str_field("_id").unwrap().into_owned()).collect()
+    };
+
+    run_prop("indexed == scan", 12, gen_vec(gen_u64(0, 9), 15, 80), |ops| {
+        let case_dir = base.join(idgen::object_id());
+        let opts = WalOptions { segment_bytes: 2048, replay_threads: 0, ..WalOptions::default() };
+        // the durable, indexed collection under test vs an unindexed
+        // in-memory twin whose every query is a full scan
+        let mut ixc = Collection::open_with(&case_dir, "ix", opts.clone())
+            .map_err(|e| e.to_string())?;
+        ixc.create_index("status");
+        let mut plain = Collection::in_memory("scan-oracle");
+        let mut rng = Rng::new(ops.iter().sum::<u64>() ^ 0x1dea);
+        // ids deliberately NOT insertion-ordered: arena handles are
+        // allocation-ordered, so these exercise the resolve-and-sort
+        // posting invariant
+        let fresh_id = |rng: &mut Rng| format!("{:024}", rng.range(0, 400));
+
+        for &op in ops {
+            match op {
+                0..=3 => {
+                    let id = fresh_id(&mut rng);
+                    let status = *rng.choose(&statuses);
+                    let doc = Json::obj().with("_id", id.as_str()).with("status", status);
+                    ixc.insert(doc.clone()).map_err(|e| e.to_string())?;
+                    plain.insert(doc).map_err(|e| e.to_string())?;
+                }
+                4 => {
+                    // re-put: move a random live doc to another value
+                    let live: Vec<String> = ids_of(ixc.find(&Query::All));
+                    if !live.is_empty() {
+                        let id = rng.choose(&live).clone();
+                        let status = *rng.choose(&statuses);
+                        let patch = Json::obj().with("status", status);
+                        ixc.update(&id, &patch).map_err(|e| e.to_string())?;
+                        plain.update(&id, &patch).map_err(|e| e.to_string())?;
+                    }
+                }
+                5 => {
+                    let live: Vec<String> = ids_of(ixc.find(&Query::All));
+                    if !live.is_empty() {
+                        let id = rng.choose(&live).clone();
+                        ixc.delete(&id).map_err(|e| e.to_string())?;
+                        plain.delete(&id).map_err(|e| e.to_string())?;
+                    }
+                }
+                6 => {
+                    // a mixed batch through apply_batch on the indexed
+                    // side, equivalent singles on the oracle
+                    let mut batch = Vec::new();
+                    for _ in 0..rng.usize(1, 6) {
+                        if rng.bool(0.7) {
+                            let id = fresh_id(&mut rng);
+                            let status = *rng.choose(&statuses);
+                            batch.push((
+                                true,
+                                Json::obj().with("_id", id.as_str()).with("status", status),
+                                id,
+                            ));
+                        } else {
+                            let id = fresh_id(&mut rng);
+                            batch.push((false, Json::Null, id));
+                        }
+                    }
+                    let ops: Vec<WriteOp> = batch
+                        .iter()
+                        .map(|(is_put, doc, id)| {
+                            if *is_put {
+                                WriteOp::Put(doc.clone())
+                            } else {
+                                WriteOp::Delete(id.clone())
+                            }
+                        })
+                        .collect();
+                    ixc.apply_batch(ops).map_err(|e| e.to_string())?;
+                    for (is_put, doc, id) in batch {
+                        if is_put {
+                            plain.insert(doc).map_err(|e| e.to_string())?;
+                        } else {
+                            plain.delete(&id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                7 => {
+                    ixc.compact().map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    // reopen: replay off disk + index rebuild
+                    ixc = Collection::open_with(&case_dir, "ix", opts.clone())
+                        .map_err(|e| e.to_string())?;
+                    ixc.create_index("status");
+                }
+            }
+            // equivalence check after every op
+            if ixc.len() != plain.len() {
+                return Err(format!("len {} != oracle {}", ixc.len(), plain.len()));
+            }
+            let status = *rng.choose(&statuses);
+            let q = Query::eq("status", status);
+            let got = ids_of(ixc.find(&q));
+            let want = ids_of(plain.find(&q));
+            if got != want {
+                return Err(format!("find(status={status}): {got:?} != scan {want:?}"));
+            }
+            let got_one = ixc.find_one(&q).map(|d| d.str_field("_id").unwrap().into_owned());
+            let want_one = plain.find_one(&q).map(|d| d.str_field("_id").unwrap().into_owned());
+            if got_one != want_one {
+                return Err(format!("find_one(status={status}): {got_one:?} != {want_one:?}"));
+            }
+            if ixc.count(&q) != plain.count(&q) {
+                return Err(format!("count(status={status}) diverged"));
+            }
+        }
+        // interned bookkeeping: every live doc has a status, so the
+        // arena holds exactly the live ids and nothing else
+        let stats = ixc.intern_stats();
+        if stats.live_ids != ixc.len() {
+            return Err(format!("arena holds {} ids for {} docs", stats.live_ids, ixc.len()));
+        }
+        if stats.posting_entries != ixc.len() {
+            return Err(format!(
+                "{} posting entries for {} docs on one index",
+                stats.posting_entries,
+                ixc.len()
+            ));
+        }
+        // drain: churn must leave no interned residue behind
+        let all: Vec<String> = ids_of(ixc.find(&Query::All));
+        ixc.apply_batch(all.into_iter().map(WriteOp::Delete).collect())
+            .map_err(|e| e.to_string())?;
+        let stats = ixc.intern_stats();
+        if stats.live_ids != 0 || stats.interned_values != 0 || stats.posting_entries != 0 {
+            return Err(format!("interned residue after drain: {stats:?}"));
+        }
+        std::fs::remove_dir_all(&case_dir).ok();
+        Ok(())
+    });
+    std::fs::remove_dir_all(&base).ok();
 }
 
 #[test]

@@ -1,0 +1,223 @@
+//! Crash consistency of the group-commit write path (ISSUE 5).
+//!
+//! * A **torn batch** at the active-segment tail — a crash mid
+//!   `append_batch`, cut at a SIMD block edge mid multi-byte character
+//!   (the `wal_simd_replay` hazard placement) — must truncate to the
+//!   last complete record on reopen, idempotently, under the scalar
+//!   oracle and every vectorized engine alike.
+//! * **Batched and one-at-a-time histories are byte-identical**: the
+//!   same logical writes through `Collection::insert_many`/
+//!   `apply_batch` and through single `insert`/`delete` calls must
+//!   produce the same segment files byte for byte, including across
+//!   seal boundaries the batch crosses mid-flight.
+//! * **Write-through**: records of an un-fsynced batch survive a clean
+//!   process exit (the sync policy only defers durability against
+//!   power loss, never against process death).
+
+use std::path::Path;
+
+use mlmodelci::storage::wal::{SyncPolicy, Wal, WalBatchOp, WalOp, WalOptions};
+use mlmodelci::storage::{Collection, WriteOp};
+use mlmodelci::util::idgen;
+use mlmodelci::util::jscan_simd::{self, Engine};
+use mlmodelci::util::json::Json;
+
+/// Widest SIMD block any engine uses (AVX2); NEON (16) and SWAR (8)
+/// widths divide it, so offsets aligned to 32 are edges for all.
+const BLOCK: usize = 32;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mlci-gc-{tag}-{}", idgen::object_id()))
+}
+
+fn replay_fingerprint(ops: &[WalOp]) -> Vec<String> {
+    ops.iter()
+        .map(|op| match op {
+            WalOp::Put { id, doc } => format!("put:{id}:{}", doc.raw()),
+            WalOp::Del { id } => format!("del:{id}"),
+        })
+        .collect()
+}
+
+/// Doc raw text for record `i`, padded via the `p` field so the framed
+/// record (`{"doc":…,"op":"put"}\n` = raw + 20 bytes) is exactly
+/// `framed_len` bytes.
+fn padded_doc(i: usize, framed_len: usize) -> String {
+    let fixed = format!("{{\"_id\":\"{i:024}\",\"p\":\"\"}}");
+    let overhead = fixed.len() + 20;
+    assert!(framed_len >= overhead, "framed_len {framed_len} below minimum {overhead}");
+    let pad = "x".repeat(framed_len - overhead);
+    format!("{{\"_id\":\"{i:024}\",\"p\":\"{pad}\"}}")
+}
+
+#[test]
+fn torn_batch_tail_truncates_to_last_complete_record() {
+    // one append_batch of four records; the file is then cut at an
+    // exact block boundary mid-😀 inside record 4 — the torn suffix is
+    // not valid UTF-8 on its own
+    let dir = tmp("torn");
+    let opts = WalOptions {
+        segment_bytes: 1 << 20, // never seals: everything in one active segment
+        replay_threads: 0,
+        sync: SyncPolicy::OnSeal,
+    };
+    let docs = [padded_doc(1, 3 * BLOCK), padded_doc(2, 3 * BLOCK + 7), padded_doc(3, 2 * BLOCK)];
+    let live_len: usize = docs.iter().map(|d| d.len() + 20).sum();
+
+    // record 4: place a 4-byte 😀 so two of its bytes sit before an
+    // exact block boundary and two after, then cut at the boundary
+    let prefix = format!("{{\"_id\":\"{:024}\",\"p\":\"", 4usize);
+    let payload_start = live_len + 7 + prefix.len(); // +7 = {"doc":
+    let cut_at = (payload_start / BLOCK + 2) * BLOCK;
+    let pad = "a".repeat(cut_at - 2 - payload_start);
+    let doc4 = format!("{prefix}{pad}😀tail\"}}");
+
+    {
+        let (mut wal, ops) = Wal::open(&dir, "t", opts.clone()).unwrap();
+        assert!(ops.is_empty());
+        let batch: Vec<WalBatchOp> = docs
+            .iter()
+            .map(|d| WalBatchOp::Put { doc_raw: d })
+            .chain(std::iter::once(WalBatchOp::Put { doc_raw: &doc4 }))
+            .collect();
+        wal.append_batch(&batch).unwrap();
+    }
+    let seg = dir.join("t.wal").join("seg-0000000000000001.jsonl");
+    let bytes = std::fs::read(&seg).unwrap();
+    assert!(bytes.len() > cut_at, "record 4 extends past the cut point");
+    std::fs::write(&seg, &bytes[..cut_at]).unwrap();
+    assert_eq!(cut_at % BLOCK, 0);
+    assert!(
+        std::str::from_utf8(&bytes[..cut_at]).is_err(),
+        "the torn tail must be cut mid multi-byte character"
+    );
+
+    // recovery must agree byte-for-byte across scan engines
+    let mut engines = vec![Engine::Scalar, Engine::Swar];
+    let best = jscan_simd::detect_best();
+    if !engines.contains(&best) {
+        engines.push(best);
+    }
+    let mut baseline: Option<(Vec<String>, u64)> = None;
+    for engine in engines {
+        // reopening truncates in place, so each engine run replays a
+        // fresh copy of the torn bytes
+        std::fs::write(&seg, &bytes[..cut_at]).unwrap();
+        let _guard = jscan_simd::force_engine(engine);
+        let (_, ops) = Wal::open(&dir, "t", opts.clone()).unwrap();
+        let got = (replay_fingerprint(&ops), std::fs::metadata(&seg).unwrap().len());
+        assert_eq!(got.0.len(), 3, "exactly the torn record 4 is dropped ({engine:?})");
+        assert_eq!(got.1, live_len as u64, "cut exactly at record 3's newline ({engine:?})");
+        match &baseline {
+            None => baseline = Some(got),
+            Some(want) => assert_eq!(&got, want, "recovery diverges under {engine:?}"),
+        }
+    }
+    // truncation is idempotent and appending after recovery works
+    let (mut wal, ops) = Wal::open(&dir, "t", opts.clone()).unwrap();
+    assert_eq!(ops.len(), 3);
+    wal.append_put(&padded_doc(9, 3 * BLOCK)).unwrap();
+    drop(wal);
+    let (_, ops) = Wal::open(&dir, "t", opts).unwrap();
+    assert_eq!(ops.len(), 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The same logical history through the batched collection write path
+/// and through single calls must produce byte-identical WAL segment
+/// files — batching may never change what lands on disk, only how many
+/// syscalls carry it.
+#[test]
+fn batched_collection_writes_match_single_writes_on_disk() {
+    let dir_single = tmp("diff-single");
+    let dir_batch = tmp("diff-batch");
+    // tiny segments so batches cross several seal boundaries
+    let opts = WalOptions { segment_bytes: 512, replay_threads: 0, sync: SyncPolicy::OnSeal };
+    let doc = |i: usize, status: &str| {
+        Json::obj()
+            .with("_id", format!("{i:024}"))
+            .with("name", format!("model-{i}"))
+            .with("status", status)
+    };
+
+    {
+        let mut c = Collection::open_with(&dir_single, "m", opts.clone()).unwrap();
+        c.create_index("status");
+        for i in 0..30 {
+            c.insert(doc(i, "registered")).unwrap();
+        }
+        for i in (0..30).step_by(3) {
+            c.delete(&format!("{i:024}")).unwrap();
+        }
+        for i in (1..30).step_by(3) {
+            c.insert(doc(i, "serving")).unwrap(); // re-put via upsert
+        }
+    }
+    {
+        let mut c = Collection::open_with(&dir_batch, "m", opts.clone()).unwrap();
+        c.create_index("status");
+        c.insert_many((0..30).map(|i| doc(i, "registered")).collect()).unwrap();
+        let mut ops: Vec<WriteOp> = Vec::new();
+        for i in (0..30).step_by(3) {
+            ops.push(WriteOp::Delete(format!("{i:024}")));
+        }
+        for i in (1..30).step_by(3) {
+            ops.push(WriteOp::Put(doc(i, "serving")));
+        }
+        c.apply_batch(ops).unwrap();
+    }
+
+    let fingerprint = |dir: &Path| -> Vec<(String, Vec<u8>)> {
+        let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir.join("m.wal"))
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+            })
+            .collect();
+        files.sort();
+        files
+    };
+    let single = fingerprint(&dir_single);
+    let batch = fingerprint(&dir_batch);
+    assert!(single.len() > 3, "want a real multi-segment history, got {}", single.len());
+    assert_eq!(
+        single.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        batch.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        "same segment files"
+    );
+    assert_eq!(single, batch, "segment contents diverge between batched and single writes");
+
+    // and both replay to identical, identically-ordered state
+    let a = Collection::open_with(&dir_single, "m", opts.clone()).unwrap();
+    let b = Collection::open_with(&dir_batch, "m", opts).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (da, db) in a.all().zip(b.all()) {
+        assert_eq!(da.raw(), db.raw());
+    }
+    std::fs::remove_dir_all(&dir_single).ok();
+    std::fs::remove_dir_all(&dir_batch).ok();
+}
+
+/// Relaxed sync policies defer fsync, not the write itself: a batch
+/// appended with no sync at all must fully survive a drop-and-reopen
+/// (process death loses nothing that append acknowledged).
+#[test]
+fn unsynced_batch_survives_process_exit() {
+    let dir = tmp("writethrough");
+    let opts =
+        WalOptions { segment_bytes: 1 << 20, replay_threads: 0, sync: SyncPolicy::IntervalMs(3_600_000) };
+    {
+        let mut c = Collection::open_with(&dir, "m", opts.clone()).unwrap();
+        let ids = c
+            .insert_many(
+                (0..50).map(|i| Json::obj().with("_id", format!("{i:024}")).with("i", i as i64)).collect(),
+            )
+            .unwrap();
+        assert_eq!(ids.len(), 50);
+        assert_eq!(c.wal_io_stats().unwrap().syncs, 0, "interval policy: nothing fsynced yet");
+    }
+    let c = Collection::open_with(&dir, "m", opts).unwrap();
+    assert_eq!(c.len(), 50, "write-through: every record survives a clean exit");
+    std::fs::remove_dir_all(&dir).ok();
+}

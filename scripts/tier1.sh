@@ -4,12 +4,16 @@
 # bit-rot. Run from anywhere; operates on the rust/ crate.
 #
 # Honors MLCI_FORCE_SCALAR=1 (pins the JSON scan path to the scalar
-# oracle engine); CI runs the whole script once per mode.
+# oracle engine) and MLCI_WAL_SYNC (onseal|always|every:N|interval:MS —
+# overrides the default WAL durability policy, so the `always` leg runs
+# the whole suite on the strictest fsync path); CI runs the whole
+# script once per mode.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
 echo "== tier1: MLCI_FORCE_SCALAR=${MLCI_FORCE_SCALAR:-<unset>} (scan engine escape hatch) =="
+echo "== tier1: MLCI_WAL_SYNC=${MLCI_WAL_SYNC:-<unset>} (WAL durability policy override) =="
 
 echo "== tier1: cargo build --release =="
 cargo build --release
