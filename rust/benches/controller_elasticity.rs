@@ -180,7 +180,7 @@ fn run_scenario(idle: IdlePolicy, slo: SloGuard, label: &str) -> anyhow::Result<
                         }
                         (pauses, skips)
                     });
-                    let lat = drive_load(&svc, &input, rate, duration_ms, &qos, clock.as_ref());
+                    let lat = drive_load(svc.primary(), &input, rate, duration_ms, &qos, clock.as_ref());
                     stop.store(true, Ordering::SeqCst);
                     let (pauses, skips) = ticker.join().unwrap();
                     (lat, pauses, skips)

@@ -3,23 +3,36 @@
 //! *live* serving instances with real queueing and batching, driven by a
 //! closed-loop gRPC/REST client.
 //!
-//! Also covers the REST-vs-gRPC frontend comparison (§3.5).
+//! Also covers the REST-vs-gRPC frontend comparison (§3.5) and the
+//! robustness sweep: open-loop Poisson load at 0.5×/1×/2×/4× measured
+//! capacity against an admission-controlled service, reporting goodput,
+//! shed rate and admitted-latency percentiles (docs/SERVING.md).
 //!
-//! Run: `cargo bench --bench serving_systems`
+//! Run: `cargo bench --bench serving_systems [-- --smoke --out PATH]`
 
 use std::sync::Arc;
 
 use mlmodelci::cluster::Cluster;
 use mlmodelci::dispatcher::{DeploymentSpec, Dispatcher};
 use mlmodelci::modelhub::{ModelHub, ModelInfo, ModelStatus};
-use mlmodelci::profiler::{closed_loop, example_input};
+use mlmodelci::profiler::{closed_loop, example_input, open_loop};
 use mlmodelci::runtime::ArtifactStore;
 use mlmodelci::serving::{Frontend, ALL_SYSTEMS};
 use mlmodelci::storage::Database;
 use mlmodelci::util::benchkit::Table;
 use mlmodelci::util::clock::wall;
+use mlmodelci::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_serving.json".to_string());
+    let window_ms = if smoke { 300.0 } else { 1_500.0 };
+
     let store = Arc::new(ArtifactStore::load(std::path::Path::new("artifacts"))?);
     let cluster = Arc::new(Cluster::default_demo(wall()));
     let dispatcher = Arc::new(Dispatcher::new(cluster.clone(), store.clone()));
@@ -52,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     for system in ALL_SYSTEMS {
         for frontend in [Frontend::Grpc, Frontend::Rest] {
             let device_id = "node1/t40";
-            let svc = dispatcher.deploy(
+            let group = dispatcher.deploy(
                 &hub,
                 &id,
                 &DeploymentSpec {
@@ -64,9 +77,11 @@ fn main() -> anyhow::Result<()> {
                     format: Some("reference".into()),
                     frontend,
                     max_queue: 512,
+                    replicas: 1,
                 },
             )?;
-            let result = closed_loop(&svc, &input, 24, 1_500.0, clock.as_ref());
+            let svc = group.primary();
+            let result = closed_loop(svc, &input, 24, window_ms, clock.as_ref());
             let mut lat = result.latencies_ms.clone();
             let u = svc.container.usage_snapshot();
             // device-busy fraction of the measurement window
@@ -88,7 +103,7 @@ fn main() -> anyhow::Result<()> {
             if frontend == Frontend::Grpc {
                 per_system.push((system.name, result.throughput_rps(), lat.p99()));
             }
-            svc.stop();
+            group.stop();
             // let the utilization window decay between scenarios
             std::thread::sleep(std::time::Duration::from_millis(150));
         }
@@ -105,6 +120,76 @@ fn main() -> anyhow::Result<()> {
         "dynamic batching should out-throughput no-batch under load ({triton_thr:.0} vs {onnx_thr:.0})"
     );
     println!("\nshape checks passed: dynamic batching wins under concurrency; REST > gRPC overhead");
+
+    // === robustness sweep: open-loop overload against admission control ===
+    //
+    // Capacity is measured closed-loop first, then Poisson arrivals are
+    // offered at fractions/multiples of it. Above 1× the admission gate
+    // must shed (rejected > 0) while goodput holds near capacity —
+    // that's the load-shedding claim BENCH_serving.json records.
+    println!("\n=== robustness: open-loop overload sweep (triton-like, queue=32) ===\n");
+    let group = dispatcher.deploy(
+        &hub,
+        &id,
+        &DeploymentSpec {
+            device: Some("node1/t40".into()),
+            system: "triton-like".to_string(),
+            format: Some("reference".into()),
+            frontend: Frontend::Grpc,
+            max_queue: 32,
+            replicas: 1,
+        },
+    )?;
+    let svc = group.primary();
+    let cap = closed_loop(svc, &input, 24, window_ms, clock.as_ref());
+    let capacity_rps = cap.throughput_rps().max(1.0);
+    println!("measured capacity: {capacity_rps:.1} r/s\n");
+    let mut sweep_table =
+        Table::new(&["offered(x)", "offered(r/s)", "goodput(r/s)", "shed rate", "p50(ms)", "p99(ms)"]);
+    let mut sweep_rows = Vec::new();
+    for mult in [0.5, 1.0, 2.0, 4.0] {
+        let rate = capacity_rps * mult;
+        let r = open_loop(svc, &input, rate, window_ms, 42, clock.as_ref());
+        let offered = r.completed + r.rejected + r.errors;
+        let shed_rate = if offered > 0 { r.rejected as f64 / offered as f64 } else { 0.0 };
+        let mut lat = r.latencies_ms.clone();
+        sweep_table.row(&[
+            format!("{mult:.1}"),
+            format!("{rate:.1}"),
+            format!("{:.1}", r.throughput_rps()),
+            format!("{shed_rate:.3}"),
+            format!("{:.2}", lat.p50()),
+            format!("{:.2}", lat.p99()),
+        ]);
+        sweep_rows.push(
+            Json::obj()
+                .with("offered_multiplier", mult)
+                .with("offered_rps", rate)
+                .with("goodput_rps", r.throughput_rps())
+                .with("shed_rate", shed_rate)
+                .with("p50_ms", lat.p50())
+                .with("p99_ms", lat.p99())
+                .with("completed", r.completed)
+                .with("rejected", r.rejected)
+                .with("errors", r.errors),
+        );
+    }
+    sweep_table.print();
+    group.stop();
+
+    // machine-readable report (schema mirrored by the committed
+    // placeholder BENCH_serving.json)
+    let mut report = Json::obj()
+        .with("bench", "serving")
+        .with("generator", "cargo bench --bench serving_systems [-- --smoke --out PATH]")
+        .with("status", "measured")
+        .with("smoke", smoke)
+        .with("window_ms", window_ms)
+        .with("capacity_rps", capacity_rps);
+    report.set("overload_sweep", Json::Arr(sweep_rows));
+    std::fs::write(&out_path, report.to_pretty()).expect("write bench report");
+    println!("\nreport written to {out_path}");
+
     dispatcher.stop_all();
     cluster.shutdown();
     Ok(())

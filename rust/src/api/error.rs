@@ -13,6 +13,7 @@
 //! return `Result<Response, ApiError>` and the router renders the `Err`
 //! arm, so the envelope shape cannot drift per endpoint.
 
+use crate::serving::ServingError;
 use crate::util::json::Json;
 
 use super::http::Response;
@@ -40,6 +41,13 @@ pub enum ErrorCode {
     Internal,
     /// The platform is shutting down or a subsystem is unavailable.
     Unavailable,
+    /// Admission control shed the request: the service queue is at
+    /// capacity. 429 with a `Retry-After` header computed from queue
+    /// depth × modeled per-batch latency.
+    Overloaded,
+    /// The request's deadline budget expired while it was queued; it
+    /// was shed before execution.
+    DeadlineExceeded,
 }
 
 impl ErrorCode {
@@ -53,6 +61,8 @@ impl ErrorCode {
             ErrorCode::Conflict => "conflict",
             ErrorCode::Internal => "internal",
             ErrorCode::Unavailable => "unavailable",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
@@ -65,6 +75,8 @@ impl ErrorCode {
             ErrorCode::Conflict => 409,
             ErrorCode::Internal => 500,
             ErrorCode::Unavailable => 503,
+            ErrorCode::Overloaded => 429,
+            ErrorCode::DeadlineExceeded => 504,
         }
     }
 
@@ -79,6 +91,8 @@ impl ErrorCode {
             ErrorCode::Conflict,
             ErrorCode::Internal,
             ErrorCode::Unavailable,
+            ErrorCode::Overloaded,
+            ErrorCode::DeadlineExceeded,
         ]
     }
 }
@@ -89,11 +103,14 @@ pub struct ApiError {
     pub code: ErrorCode,
     pub message: String,
     pub detail: Option<Json>,
+    /// Emitted as a `Retry-After` header (whole seconds, rounded up)
+    /// alongside 429 envelopes.
+    pub retry_after_s: Option<u64>,
 }
 
 impl ApiError {
     pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
-        ApiError { code, message: message.into(), detail: None }
+        ApiError { code, message: message.into(), detail: None, retry_after_s: None }
     }
 
     pub fn bad_request(message: impl Into<String>) -> ApiError {
@@ -146,6 +163,11 @@ impl ApiError {
     /// backend failure must not masquerade as "your request was
     /// wrong"). Handlers with more context raise typed errors directly.
     pub fn from_platform(err: &anyhow::Error) -> ApiError {
+        // the serving data plane raises typed errors — map them exactly
+        // instead of text-matching
+        if let Some(se) = err.downcast_ref::<ServingError>() {
+            return ApiError::from_serving(se);
+        }
         let text = format!("{err:#}");
         let code = if text.contains("no model with id") || text.contains("no model named") {
             ErrorCode::NotFound
@@ -158,10 +180,45 @@ impl ApiError {
             ErrorCode::Validation
         } else if text.contains("registration YAML") {
             ErrorCode::BadRequest
+        } else if text.contains("no healthy replica") {
+            ErrorCode::Unavailable
         } else {
             ErrorCode::Internal
         };
         ApiError::new(code, text)
+    }
+
+    /// Map a typed data-plane error onto the HTTP taxonomy: admission
+    /// sheds become 429 + `Retry-After`, deadline sheds 504, lifecycle
+    /// failures 503, execution failures 500.
+    pub fn from_serving(err: &ServingError) -> ApiError {
+        match err {
+            ServingError::Overloaded { queue_depth, max_queue, retry_after_ms, .. } => {
+                let secs = (retry_after_ms / 1000.0).ceil().max(1.0) as u64;
+                ApiError::new(ErrorCode::Overloaded, err.to_string())
+                    .with_detail(
+                        Json::obj()
+                            .with("queue_depth", *queue_depth)
+                            .with("max_queue", *max_queue)
+                            .with("retry_after_ms", *retry_after_ms),
+                    )
+                    .with_retry_after(secs)
+            }
+            ServingError::DeadlineExceeded { waited_ms, budget_ms, .. } => {
+                ApiError::new(ErrorCode::DeadlineExceeded, err.to_string()).with_detail(
+                    Json::obj().with("waited_ms", *waited_ms).with("budget_ms", *budget_ms),
+                )
+            }
+            ServingError::Stopped { .. } | ServingError::WorkerLost { .. } => {
+                ApiError::new(ErrorCode::Unavailable, err.to_string())
+            }
+            ServingError::Exec { .. } => ApiError::new(ErrorCode::Internal, err.to_string()),
+        }
+    }
+
+    pub fn with_retry_after(mut self, secs: u64) -> ApiError {
+        self.retry_after_s = Some(secs);
+        self
     }
 
     /// Render the envelope (`{code, message, detail?}`) at the code's
@@ -173,7 +230,11 @@ impl ApiError {
         if let Some(detail) = &self.detail {
             body = body.with("detail", detail.clone());
         }
-        Response::json(self.code.status(), &body)
+        let mut resp = Response::json(self.code.status(), &body);
+        if let Some(secs) = self.retry_after_s {
+            resp = resp.with_header("Retry-After", secs.to_string());
+        }
+        resp
     }
 }
 
@@ -234,6 +295,51 @@ mod tests {
         assert_eq!(manifest.code, ErrorCode::Internal);
         let missing = ApiError::from_platform(&anyhow::anyhow!("artifact missing for family z"));
         assert_eq!(missing.code, ErrorCode::Internal);
+    }
+
+    #[test]
+    fn serving_errors_map_to_http_taxonomy() {
+        let overload: anyhow::Error = ServingError::Overloaded {
+            service: "svc".into(),
+            queue_depth: 8,
+            max_queue: 8,
+            retry_after_ms: 1250.0,
+        }
+        .into();
+        let e = ApiError::from_platform(&overload);
+        assert_eq!(e.code, ErrorCode::Overloaded);
+        assert_eq!(e.retry_after_s, Some(2), "1250 ms rounds up to 2 s");
+        let resp = e.to_response();
+        assert_eq!(resp.status, 429);
+        assert!(
+            resp.headers.iter().any(|(k, v)| k == "Retry-After" && v == "2"),
+            "429 must carry Retry-After: {:?}",
+            resp.headers
+        );
+        let body = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(body.get("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(
+            body.get("detail").unwrap().get("retry_after_ms").and_then(Json::as_f64),
+            Some(1250.0)
+        );
+
+        let deadline: anyhow::Error = ServingError::DeadlineExceeded {
+            service: "svc".into(),
+            waited_ms: 12.0,
+            budget_ms: 10.0,
+        }
+        .into();
+        let e = ApiError::from_platform(&deadline);
+        assert_eq!(e.code, ErrorCode::DeadlineExceeded);
+        assert_eq!(e.to_response().status, 504);
+
+        let stopped: anyhow::Error = ServingError::Stopped { service: "svc".into() }.into();
+        assert_eq!(ApiError::from_platform(&stopped).code, ErrorCode::Unavailable);
+        let exec: anyhow::Error =
+            ServingError::Exec { service: "svc".into(), message: "boom".into() }.into();
+        assert_eq!(ApiError::from_platform(&exec).code, ErrorCode::Internal);
+        let unrouteable = ApiError::from_platform(&anyhow::anyhow!("no healthy replica for svc"));
+        assert_eq!(unrouteable.code, ErrorCode::Unavailable);
     }
 
     #[test]

@@ -94,6 +94,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After` on 429), emitted
+    /// after the fixed content-type/length pair.
+    pub headers: Vec<(String, String)>,
 }
 
 impl Response {
@@ -101,17 +104,38 @@ impl Response {
     /// shared pre-sized canonical serializer.
     pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
         let encoded = crate::util::jscan::json_to_string(body);
-        Response { status, content_type: "application/json", body: encoded.into_bytes() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: encoded.into_bytes(),
+            headers: Vec::new(),
+        }
     }
 
     /// Send an already-serialized JSON body verbatim (the zero-copy
     /// path for documents stored as raw text).
     pub fn raw_json(status: u16, body: String) -> Response {
-        Response { status, content_type: "application/json", body: body.into_bytes() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            headers: Vec::new(),
+        }
     }
 
     pub fn text(status: u16, body: &str) -> Response {
-        Response { status, content_type: "text/plain; charset=utf-8", body: body.as_bytes().to_vec() }
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.as_bytes().to_vec(),
+            headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra response header.
+    pub fn with_header(mut self, name: impl Into<String>, value: impl Into<String>) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
     }
 
     /// Substrate-level errors (unreadable request, no route) use the
@@ -147,7 +171,9 @@ impl Response {
             405 => "Method Not Allowed",
             409 => "Conflict",
             422 => "Unprocessable Entity",
+            429 => "Too Many Requests",
             503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Internal Server Error",
         }
     }
@@ -191,13 +217,20 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
 
 /// Write a response.
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
         resp.status,
         resp.status_text(),
         resp.content_type,
         resp.body.len()
     );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("connection: close\r\n\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()?;
@@ -264,6 +297,18 @@ impl Drop for HttpServer {
 
 /// Tiny blocking HTTP client for tests and the CLI.
 pub fn http_request(addr: &std::net::SocketAddr, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let (status, _, body) = http_request_full(addr, method, path, body)?;
+    Ok((status, body))
+}
+
+/// Like [`http_request`] but also returns the response headers
+/// (lowercased names) — needed to assert `Retry-After` on 429s.
+pub fn http_request_full(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, BTreeMap<String, String>, String)> {
     let mut stream = TcpStream::connect(addr)?;
     let body_bytes = body.unwrap_or("").as_bytes();
     let req = format!(
@@ -281,7 +326,7 @@ pub fn http_request(addr: &std::net::SocketAddr, method: &str, path: &str, body:
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| anyhow!("bad status line: {status_line}"))?;
-    let mut len = 0usize;
+    let mut headers = BTreeMap::new();
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
@@ -289,13 +334,15 @@ pub fn http_request(addr: &std::net::SocketAddr, method: &str, path: &str, body:
         if h.is_empty() {
             break;
         }
-        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            len = v.trim().parse().unwrap_or(0);
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
+    let len: usize =
+        headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
-    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+    Ok((status, headers, String::from_utf8_lossy(&body).into_owned()))
 }
 
 #[cfg(test)]
@@ -352,6 +399,21 @@ mod tests {
         assert_eq!(req.query_param("bad").as_deref(), Some("100%2G"), "invalid escape passes through");
         assert_eq!(req.query_param("tail").as_deref(), Some("a-"), "escape at end of value");
         assert_eq!(percent_decode("%e2%82%ac"), "\u{20ac}", "multi-byte UTF-8 reassembles");
+    }
+
+    #[test]
+    fn extra_headers_round_trip() {
+        let mut server = HttpServer::serve("127.0.0.1:0", |_| {
+            Response::json(429, &Json::obj().with("code", "overloaded"))
+                .with_header("Retry-After", "2")
+        })
+        .unwrap();
+        let (status, headers, body) =
+            http_request_full(&server.addr, "GET", "/x", None).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(headers.get("retry-after").map(String::as_str), Some("2"));
+        assert!(body.contains("overloaded"));
+        server.stop();
     }
 
     #[test]

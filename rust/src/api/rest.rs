@@ -372,12 +372,19 @@ fn h_deploy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<
                 .ok_or_else(|| ApiError::validation(format!("unknown frontend '{name}'")))?,
             None => Frontend::Grpc,
         };
+        let replicas = root.get("replicas").and_then(|v| v.as_usize()).unwrap_or(1);
+        if !(1..=8).contains(&replicas) {
+            return Err(ApiError::validation(format!(
+                "replicas must be between 1 and 8, got {replicas}"
+            )));
+        }
         let spec = DeploymentSpec {
             device: field("device"),
             system: field("system").unwrap_or_else(|| "triton-like".to_string()),
             format: field("format"),
             frontend,
             max_queue: root.get("max_queue").and_then(|v| v.as_usize()).unwrap_or(256),
+            replicas,
         };
         let svc = platform.dispatcher.deploy(&platform.hub, id, &spec)?;
         Ok(Response::json(
@@ -387,7 +394,8 @@ fn h_deploy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<
                 .with("device", svc.device_id.as_str())
                 .with("system", svc.system_name)
                 .with("format", svc.format.as_str())
-                .with("container", svc.container.id.as_str()),
+                .with("container", svc.container.id.as_str())
+                .with("replicas", svc.replica_count()),
         ))
     })
 }
@@ -416,15 +424,23 @@ fn h_infer(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<R
         .map_err(|_| ApiError::internal("family missing from manifest"))?;
     // the input array is read element-wise off its spans instead of
     // being materialized as a Vec<Json>, on a pooled scan buffer
-    let input = with_json_body(req, true, |root| {
+    let (input, deadline_ms) = with_json_body(req, true, |root| {
+        let deadline_ms = match root.get("deadline_ms").and_then(|v| v.as_f64()) {
+            Some(ms) if ms <= 0.0 => {
+                return Err(ApiError::validation(format!(
+                    "deadline_ms must be positive, got {ms}"
+                )));
+            }
+            other => other,
+        };
         let input_arr = root.get("input").filter(|v| v.kind() == Kind::Arr);
-        match input_arr {
+        let input = match input_arr {
             Some(values) => {
                 let n: usize = manifest.input_shape.iter().product();
                 if values.len() != n {
                     return Err(ApiError::validation(format!("input must have {n} values")));
                 }
-                Ok(match manifest.input_dtype {
+                match manifest.input_dtype {
                     DType::F32 => {
                         let vals: Vec<f32> =
                             values.items().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
@@ -435,12 +451,16 @@ fn h_infer(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<R
                             values.items().map(|v| v.as_i64().unwrap_or(0) as i32).collect();
                         Tensor::from_i32(&manifest.input_shape, &vals)
                     }
-                })
+                }
             }
-            None => Ok(example_input(manifest, 1)),
-        }
+            None => example_input(manifest, 1),
+        };
+        Ok((input, deadline_ms))
     })?;
-    let reply = svc.infer(input)?;
+    let reply = match deadline_ms {
+        Some(budget) => svc.infer_deadline(input, budget)?,
+        None => svc.infer(input)?,
+    };
     let logits: Vec<Json> = reply.output.to_f32().iter().map(|&v| Json::Num(v as f64)).collect();
     Ok(Response::json(
         200,
@@ -462,6 +482,7 @@ fn service_stats_json(platform: &Arc<Platform>) -> Vec<(String, Json)> {
             let item = Json::obj()
                 .with("name", s.name.as_str())
                 .with("device", s.device.as_str())
+                .with("replica", s.replica)
                 .with("requests_total", s.requests_total)
                 .with("throughput_rps", s.throughput_rps.unwrap_or(0.0))
                 .with("queue_depth", s.queue_depth)
@@ -531,7 +552,7 @@ fn h_job_get(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<R
 mod tests {
     use super::*;
     use crate::api::error::ErrorCode;
-    use crate::api::http::{http_request, HttpServer};
+    use crate::api::http::{http_request, http_request_full, HttpServer};
     use crate::util::clock::wall;
     use crate::workflow::PlatformConfig;
 
@@ -852,6 +873,108 @@ mod tests {
             let expected_status = ErrorCode::all().iter().find(|c| c.as_str() == code).unwrap().status();
             assert_eq!(status, expected_status, "{method} {path}: status/code mismatch");
         }
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn infer_flood_sheds_with_429_and_retry_after() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        // a slow NoBatch model behind a 1-slot admission gate: flooding
+        // it concurrently must shed with the documented 429 envelope
+        let yaml = YAML.replace("rest-mlp", "flood-bert").replace("mlp_tabular", "bert_tiny");
+        let (status, created) = register_yaml(&addr, &yaml);
+        assert_eq!(status, 201, "{created}");
+        let id = created.get("id").unwrap().as_str().unwrap().to_string();
+        let (status, body) = http_request(
+            &addr,
+            "POST",
+            &format!("/api/v1/models/{id}/deploy"),
+            Some(r#"{"system": "onnxrt-like", "format": "reference", "max_queue": 1}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 201, "{body}");
+        assert_eq!(
+            Json::parse(&body).unwrap().get("replicas").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let ok = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let shed = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let joins: Vec<_> = (0..48)
+            .map(|_| {
+                let (ok, shed) = (ok.clone(), shed.clone());
+                std::thread::spawn(move || {
+                    let (status, headers, body) = http_request_full(
+                        &addr,
+                        "POST",
+                        "/api/v1/services/flood-bert:infer",
+                        Some("{}"),
+                    )
+                    .unwrap();
+                    match status {
+                        200 => {
+                            ok.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        }
+                        429 => {
+                            let env = Json::parse(&body).unwrap();
+                            assert_eq!(env.get("code").unwrap().as_str(), Some("overloaded"));
+                            let retry =
+                                headers.get("retry-after").expect("429 must carry Retry-After");
+                            assert!(retry.parse::<u64>().unwrap() >= 1, "Retry-After '{retry}'");
+                            let ms = env
+                                .get("detail")
+                                .and_then(|d| d.get("retry_after_ms"))
+                                .and_then(Json::as_f64)
+                                .expect("detail.retry_after_ms");
+                            assert!(ms > 0.0);
+                            shed.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        }
+                        other => panic!("unexpected status {other}: {body}"),
+                    }
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let (ok, shed) = (
+            ok.load(std::sync::atomic::Ordering::SeqCst),
+            shed.load(std::sync::atomic::Ordering::SeqCst),
+        );
+        assert_eq!(ok + shed, 48, "every request got exactly one outcome");
+        assert!(ok >= 1, "at least one request admitted");
+        assert!(shed >= 1, "a 48-way flood on a 1-slot queue must shed");
+        // a generous deadline on a now-idle service succeeds end to end
+        let (status, body) = http_request(
+            &addr,
+            "POST",
+            "/api/v1/services/flood-bert:infer",
+            Some(r#"{"deadline_ms": 60000}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{body}");
+        // non-positive deadlines are rejected before submission
+        let (status, body) = http_request(
+            &addr,
+            "POST",
+            "/api/v1/services/flood-bert:infer",
+            Some(r#"{"deadline_ms": -5}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 422, "{body}");
+        // replica counts outside 1..=8 are rejected
+        let (status, _) = http_request(
+            &addr,
+            "POST",
+            &format!("/api/v1/models/{id}/deploy"),
+            Some(r#"{"replicas": 0}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 422);
         platform.shutdown();
         server.stop();
     }

@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::util::clock::SharedClock;
 
+use super::faults::{FaultAction, FaultPlan};
 use super::perfmodel::{preset, PerfSpec, WorkloadCost};
 
 /// What backs a device's timing.
@@ -70,6 +71,9 @@ pub struct Device {
     busy: Mutex<BusyWindow>,
     /// Bytes currently allocated on the device, in KiB to fit an atomic.
     allocated_kib: AtomicU64,
+    /// Injected-fault schedule (simulated devices only; see
+    /// [`super::faults`]). `None` = healthy.
+    faults: Mutex<Option<FaultPlan>>,
 }
 
 impl Device {
@@ -83,6 +87,9 @@ impl Device {
             clock,
             busy: Mutex::new(BusyWindow::default()),
             allocated_kib: AtomicU64::new(0),
+            // the host device runs real numerics; faults are opt-in
+            // via set_faults, never from the environment
+            faults: Mutex::new(None),
         })
     }
 
@@ -91,6 +98,9 @@ impl Device {
         let Some(spec) = preset(kind) else {
             bail!("unknown device kind '{kind}'");
         };
+        // env-gated fault injection, decorrelated per device id so two
+        // replicas never replay the same fault sequence in lockstep
+        let faults = FaultPlan::from_env().map(|p| p.with_seed(fnv1a(id.as_bytes())));
         Ok(Arc::new(Device {
             id: id.to_string(),
             kind: DeviceKind::SimGpu,
@@ -99,6 +109,7 @@ impl Device {
             clock,
             busy: Mutex::new(BusyWindow::default()),
             allocated_kib: AtomicU64::new(0),
+            faults: Mutex::new(faults),
         }))
     }
 
@@ -174,6 +185,32 @@ impl Device {
     pub fn clock(&self) -> &SharedClock {
         &self.clock
     }
+
+    /// Install (or clear, with `None`) this device's fault plan —
+    /// overrides whatever `MLCI_FAULTS` seeded at creation, so tests
+    /// can pin a device dead or healthy deterministically.
+    pub fn set_faults(&self, plan: Option<FaultPlan>) {
+        *self.faults.lock().unwrap() = plan;
+    }
+
+    /// Draw the injected fault (if any) for the next batch execution.
+    pub fn sample_fault(&self) -> Option<FaultAction> {
+        self.faults.lock().unwrap().as_mut().and_then(FaultPlan::sample)
+    }
+
+    pub fn has_fault_plan(&self) -> bool {
+        self.faults.lock().unwrap().as_ref().map(FaultPlan::is_active).unwrap_or(false)
+    }
+}
+
+/// FNV-1a over bytes — stable per-device seed derivation for fault RNGs.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 impl std::fmt::Debug for Device {
@@ -260,6 +297,18 @@ mod tests {
         dev.free_mib(10_000.0);
         dev.allocate_mib(10_000.0).unwrap();
         assert!((dev.memory_used_mib() - 10_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fault_plan_is_programmable_and_clearable() {
+        let clock = virtual_clock();
+        let dev = Device::simulated("gpu0", "t4", clock).unwrap();
+        dev.set_faults(Some(crate::cluster::FaultPlan::always_fail()));
+        assert!(dev.has_fault_plan());
+        assert_eq!(dev.sample_fault(), Some(crate::cluster::FaultAction::Fail));
+        dev.set_faults(None);
+        assert!(!dev.has_fault_plan());
+        assert_eq!(dev.sample_fault(), None);
     }
 
     #[test]

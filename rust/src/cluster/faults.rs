@@ -1,0 +1,219 @@
+//! Fault injection for the simulated data plane.
+//!
+//! A [`FaultPlan`] attached to a simulated [`super::Device`] perturbs
+//! batch execution so the stress suite can prove shedding, failover and
+//! graceful drain without real hardware failures:
+//!
+//! - `fail:p` — with probability `p` a batch execution errors out,
+//! - `slow:p[:factor]` — with probability `p` the charged batch latency
+//!   is multiplied by `factor` (default 4),
+//! - `stall:p[:ms]` — with probability `p` the worker stalls for `ms`
+//!   (default 50) before executing, as if the device hung.
+//!
+//! Plans are env-gated through `MLCI_FAULTS`
+//! (e.g. `MLCI_FAULTS=slow:0.1:4,fail:0.05,stall:0.01:50`): simulated
+//! devices pick the plan up at creation. Tests override programmatically
+//! via [`super::Device::set_faults`] — including `set_faults(None)` to
+//! pin a device healthy regardless of the environment. Draws come from
+//! a seeded [`Rng`], so a given plan replays identically.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Name of the environment variable gating fault injection.
+pub const FAULTS_ENV: &str = "MLCI_FAULTS";
+
+const DEFAULT_SLOW_FACTOR: f64 = 4.0;
+const DEFAULT_STALL_MS: f64 = 50.0;
+const DEFAULT_SEED: u64 = 0x5EED_FA17;
+
+/// One sampled fault to apply to the next batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// The batch execution fails with an injected error.
+    Fail,
+    /// Multiply the charged latency by this factor.
+    Slow(f64),
+    /// Stall the worker for this many (simulated) milliseconds first.
+    Stall(f64),
+}
+
+/// A reproducible schedule of injected faults.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub fail_p: f64,
+    pub slow_p: f64,
+    pub slow_factor: f64,
+    pub stall_p: f64,
+    pub stall_ms: f64,
+    rng: Rng,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing until probabilities are set).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            fail_p: 0.0,
+            slow_p: 0.0,
+            slow_factor: DEFAULT_SLOW_FACTOR,
+            stall_p: 0.0,
+            stall_ms: DEFAULT_STALL_MS,
+            rng: Rng::new(DEFAULT_SEED),
+        }
+    }
+
+    /// Plan that fails every batch — the "kill one replica" switch.
+    pub fn always_fail() -> FaultPlan {
+        FaultPlan { fail_p: 1.0, ..FaultPlan::none() }
+    }
+
+    /// Parse a spec like `fail:0.05,slow:0.1:4,stall:0.01:50`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let mut fields = part.split(':');
+            let kind = fields.next().unwrap_or_default();
+            let p: f64 = match fields.next() {
+                Some(v) => v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad probability '{v}' in fault spec '{part}'"))?,
+                None => bail!("fault spec '{part}' is missing a probability"),
+            };
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault probability {p} out of [0,1] in '{part}'");
+            }
+            let extra: Option<f64> = match fields.next() {
+                Some(v) => Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad parameter '{v}' in fault spec '{part}'"))?,
+                ),
+                None => None,
+            };
+            match kind {
+                "fail" => plan.fail_p = p,
+                "slow" => {
+                    plan.slow_p = p;
+                    if let Some(f) = extra {
+                        if f <= 0.0 {
+                            bail!("slow factor must be positive, got {f}");
+                        }
+                        plan.slow_factor = f;
+                    }
+                }
+                "stall" => {
+                    plan.stall_p = p;
+                    if let Some(ms) = extra {
+                        if ms < 0.0 {
+                            bail!("stall duration must be non-negative, got {ms}");
+                        }
+                        plan.stall_ms = ms;
+                    }
+                }
+                other => bail!("unknown fault kind '{other}' (expected fail/slow/stall)"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The env-gated plan, if `MLCI_FAULTS` is set and parses. A
+    /// malformed spec is a loud no (panic) rather than silently running
+    /// fault-free while CI believes faults are on.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var(FAULTS_ENV).ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        Some(FaultPlan::parse(&spec).unwrap_or_else(|e| panic!("invalid {FAULTS_ENV}: {e:#}")))
+    }
+
+    /// Reseed the plan's RNG stream (per-device decorrelation).
+    pub fn with_seed(mut self, seed: u64) -> FaultPlan {
+        self.rng = Rng::new(seed);
+        self
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.fail_p > 0.0 || self.slow_p > 0.0 || self.stall_p > 0.0
+    }
+
+    /// Draw the fault (if any) for the next batch. Severity order when
+    /// several fire: fail > stall > slow.
+    pub fn sample(&mut self) -> Option<FaultAction> {
+        let fail = self.rng.bool(self.fail_p);
+        let stall = self.rng.bool(self.stall_p);
+        let slow = self.rng.bool(self.slow_p);
+        if fail {
+            Some(FaultAction::Fail)
+        } else if stall {
+            Some(FaultAction::Stall(self.stall_ms))
+        } else if slow {
+            Some(FaultAction::Slow(self.slow_factor))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse("fail:0.05, slow:0.1:3.5, stall:0.01:80").unwrap();
+        assert_eq!(p.fail_p, 0.05);
+        assert_eq!(p.slow_p, 0.1);
+        assert_eq!(p.slow_factor, 3.5);
+        assert_eq!(p.stall_p, 0.01);
+        assert_eq!(p.stall_ms, 80.0);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn defaults_fill_missing_parameters() {
+        let p = FaultPlan::parse("slow:0.2,stall:0.1").unwrap();
+        assert_eq!(p.slow_factor, DEFAULT_SLOW_FACTOR);
+        assert_eq!(p.stall_ms, DEFAULT_STALL_MS);
+        assert_eq!(p.fail_p, 0.0);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("fail").is_err(), "missing probability");
+        assert!(FaultPlan::parse("fail:2.0").is_err(), "probability out of range");
+        assert!(FaultPlan::parse("explode:0.1").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("slow:0.1:-1").is_err(), "negative factor");
+        assert!(FaultPlan::parse("fail:x").is_err(), "non-numeric probability");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let mut a = FaultPlan::parse("fail:0.3,slow:0.3").unwrap().with_seed(11);
+        let mut b = FaultPlan::parse("fail:0.3,slow:0.3").unwrap().with_seed(11);
+        let sa: Vec<_> = (0..200).map(|_| a.sample()).collect();
+        let sb: Vec<_> = (0..200).map(|_| b.sample()).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.iter().any(|s| s.is_some()), "faults do fire at p=0.3");
+        assert!(sa.iter().any(|s| s.is_none()), "and not on every draw");
+    }
+
+    #[test]
+    fn always_fail_fails_every_draw() {
+        let mut p = FaultPlan::always_fail();
+        for _ in 0..50 {
+            assert_eq!(p.sample(), Some(FaultAction::Fail));
+        }
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let mut p = FaultPlan::none();
+        assert!(!p.is_active());
+        for _ in 0..50 {
+            assert_eq!(p.sample(), None);
+        }
+    }
+}

@@ -3,8 +3,10 @@
 #[allow(clippy::module_inception)]
 pub mod cluster;
 pub mod device;
+pub mod faults;
 pub mod perfmodel;
 
 pub use cluster::{Cluster, Node};
 pub use device::{Device, DeviceKind};
+pub use faults::{FaultAction, FaultPlan, FAULTS_ENV};
 pub use perfmodel::{preset, PerfSpec, WorkloadCost};

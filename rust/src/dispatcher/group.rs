@@ -1,0 +1,301 @@
+//! A deployed service as the client sees it: N replica instances behind
+//! one name, with routing, failover and per-replica circuit breakers.
+//!
+//! Routing is least-loaded with round-robin tie-breaking among replicas
+//! whose breaker admits traffic. Failed idempotent inference is retried
+//! with jittered exponential backoff on a (hopefully) healthier replica;
+//! backpressure ([`ServingError::Overloaded`]) rotates replicas without
+//! backoff and surfaces as a 429 only when every replica is saturated.
+//! A replica whose breaker is Open is skipped until its cooldown
+//! elapses, then receives a single half-open probe.
+//!
+//! [`ServiceGroup`] derefs to its primary [`ServiceHandle`], so code
+//! written against a single instance (field access, monitors, load
+//! generators) keeps working unchanged.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Tensor;
+use crate::serving::admission::{BreakerState, CircuitBreaker, RetryPolicy};
+use crate::serving::instance::{InferenceReply, ServiceHandle, ServingError};
+use crate::util::clock::SharedClock;
+use crate::util::rng::Rng;
+
+/// Failover tuning for one deployment group.
+#[derive(Debug, Clone)]
+pub struct GroupConfig {
+    /// Consecutive breaker-class failures that trip a replica's breaker.
+    pub breaker_threshold: u32,
+    /// Cooldown before an Open breaker admits its half-open probe.
+    pub breaker_cooldown_ms: f64,
+    pub retry: RetryPolicy,
+    /// Seed for the jittered-backoff RNG (deterministic failover tests).
+    pub seed: u64,
+}
+
+impl Default for GroupConfig {
+    fn default() -> Self {
+        GroupConfig {
+            breaker_threshold: 3,
+            breaker_cooldown_ms: 250.0,
+            retry: RetryPolicy::default(),
+            seed: 0xD15_FA7C,
+        }
+    }
+}
+
+/// Monitor-facing counters (scraped into `service_*` series).
+#[derive(Debug, Default)]
+pub struct GroupStats {
+    /// Requests routed through the group (sync and async paths).
+    pub requests: AtomicU64,
+    /// Breaker-class failures that triggered a backoff + retry.
+    pub retries: AtomicU64,
+    /// Requests that succeeded only after at least one failed attempt.
+    pub failovers: AtomicU64,
+    /// Breaker trip events (threshold crossed or failed probe).
+    pub breaker_opened: AtomicU64,
+    /// Breaker recovery events (success while open/half-open).
+    pub breaker_closed: AtomicU64,
+}
+
+struct Replica {
+    handle: ServiceHandle,
+    breaker: CircuitBreaker,
+}
+
+/// N replicas behind one service name.
+pub struct ServiceGroup {
+    pub name: String,
+    replicas: Vec<Replica>,
+    rr: AtomicUsize,
+    config: GroupConfig,
+    rng: Mutex<Rng>,
+    clock: SharedClock,
+    pub stats: GroupStats,
+}
+
+impl ServiceGroup {
+    /// Wrap launched replicas. `handles` must be non-empty.
+    pub fn new(
+        name: impl Into<String>,
+        handles: Vec<ServiceHandle>,
+        clock: SharedClock,
+        config: GroupConfig,
+    ) -> ServiceGroup {
+        assert!(!handles.is_empty(), "a service group needs at least one replica");
+        let replicas = handles
+            .into_iter()
+            .map(|handle| Replica {
+                handle,
+                breaker: CircuitBreaker::new(config.breaker_threshold, config.breaker_cooldown_ms),
+            })
+            .collect();
+        ServiceGroup {
+            name: name.into(),
+            replicas,
+            rr: AtomicUsize::new(0),
+            rng: Mutex::new(Rng::new(config.seed)),
+            config,
+            clock,
+            stats: GroupStats::default(),
+        }
+    }
+
+    /// The first replica — the deref target legacy single-instance code
+    /// reads fields from.
+    pub fn primary(&self) -> &ServiceHandle {
+        &self.replicas[0].handle
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Clones of every replica handle (the monitor scrapes each
+    /// replica's container independently).
+    pub fn replica_handles(&self) -> Vec<ServiceHandle> {
+        self.replicas.iter().map(|r| r.handle.clone()).collect()
+    }
+
+    pub fn breaker_states(&self) -> Vec<BreakerState> {
+        self.replicas.iter().map(|r| r.breaker.state()).collect()
+    }
+
+    /// All replicas stopped → the group is dead (registry prunes it).
+    pub fn is_stopped(&self) -> bool {
+        self.replicas.iter().all(|r| r.handle.is_stopped())
+    }
+
+    pub fn stop(&self) {
+        for r in &self.replicas {
+            r.handle.stop();
+        }
+    }
+
+    /// Total queued requests across replicas.
+    pub fn queue_depth(&self) -> usize {
+        self.replicas.iter().map(|r| r.handle.queue_depth()).sum()
+    }
+
+    /// Pick a replica: a cooled-down Open breaker gets its half-open
+    /// probe first (so recovered replicas rejoin even while healthy
+    /// ones could absorb the load); otherwise least-loaded among Closed
+    /// breakers with round-robin tie-breaking.
+    fn route(&self) -> Option<usize> {
+        let now = self.clock.now_ms();
+        for (i, r) in self.replicas.iter().enumerate() {
+            if !r.handle.is_stopped()
+                && r.breaker.state() == BreakerState::Open
+                && r.breaker.allow(now)
+            {
+                return Some(i);
+            }
+        }
+        let candidates: Vec<usize> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.handle.is_stopped() && r.breaker.state() == BreakerState::Closed)
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let min_depth =
+            candidates.iter().map(|&i| self.replicas[i].handle.queue_depth()).min().unwrap();
+        let tied: Vec<usize> = candidates
+            .into_iter()
+            .filter(|&i| self.replicas[i].handle.queue_depth() == min_depth)
+            .collect();
+        Some(tied[self.rr.fetch_add(1, Ordering::Relaxed) % tied.len()])
+    }
+
+    /// Synchronous inference with failover (idempotent, safe to retry).
+    pub fn infer(&self, input: Tensor) -> Result<InferenceReply> {
+        self.infer_with(input, None)
+    }
+
+    /// Synchronous inference with a deadline budget; a deadline shed is
+    /// terminal (the budget is burnt — retrying cannot meet it).
+    pub fn infer_deadline(&self, input: Tensor, budget_ms: f64) -> Result<InferenceReply> {
+        self.infer_with(input, Some(budget_ms))
+    }
+
+    pub fn infer_with(
+        &self,
+        input: Tensor,
+        deadline_budget_ms: Option<f64>,
+    ) -> Result<InferenceReply> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let attempts = self.config.retry.max_attempts.max(1);
+        let mut last_err: Option<anyhow::Error> = None;
+        let mut overloaded: Option<anyhow::Error> = None;
+        let mut failed_attempts = 0usize;
+        let mut backoffs = 0usize;
+        for _ in 0..attempts {
+            let Some(idx) = self.route() else { break };
+            let replica = &self.replicas[idx];
+            let outcome: Result<InferenceReply> =
+                match replica.handle.infer_async_with(input.clone(), deadline_budget_ms) {
+                    Ok(rx) => match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => Err(ServingError::WorkerLost {
+                            service: replica.handle.model_name.clone(),
+                        }
+                        .into()),
+                    },
+                    Err(e) => Err(e),
+                };
+            match outcome {
+                Ok(reply) => {
+                    if replica.breaker.record_success() {
+                        self.stats.breaker_closed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if failed_attempts > 0 {
+                        self.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(reply);
+                }
+                Err(e) => {
+                    failed_attempts += 1;
+                    match e.downcast_ref::<ServingError>() {
+                        Some(ServingError::Overloaded { .. }) => {
+                            // backpressure, not a replica fault: rotate
+                            // to the next replica without punishing the
+                            // breaker or burning a backoff
+                            overloaded = Some(e);
+                        }
+                        Some(ServingError::DeadlineExceeded { .. }) => return Err(e),
+                        _ => {
+                            if replica.breaker.record_failure(self.clock.now_ms()) {
+                                self.stats.breaker_opened.fetch_add(1, Ordering::Relaxed);
+                            }
+                            self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                            let backoff = {
+                                let mut rng = self.rng.lock().unwrap();
+                                self.config.retry.backoff_for(backoffs, &mut rng)
+                            };
+                            backoffs += 1;
+                            self.clock.sleep_ms(backoff);
+                            last_err = Some(e);
+                        }
+                    }
+                }
+            }
+        }
+        // prefer the typed backpressure signal (client should back off
+        // and retry) over an opaque execution failure
+        if let Some(e) = overloaded {
+            return Err(e);
+        }
+        if let Some(e) = last_err {
+            return Err(e);
+        }
+        Err(anyhow!("no healthy replica for {}", self.name))
+    }
+
+    /// Asynchronous submit: routes once, no failover (the caller owns
+    /// the reply channel, so breaker accounting stays with sync paths).
+    pub fn infer_async(&self, input: Tensor) -> Result<mpsc::Receiver<Result<InferenceReply>>> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match self.route() {
+            Some(idx) => self.replicas[idx].handle.infer_async(input),
+            None => Err(anyhow!("no healthy replica for {}", self.name)),
+        }
+    }
+
+    /// Async submit with a deadline budget (routes once, no failover).
+    pub fn infer_async_with(
+        &self,
+        input: Tensor,
+        deadline_budget_ms: Option<f64>,
+    ) -> Result<mpsc::Receiver<Result<InferenceReply>>> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match self.route() {
+            Some(idx) => self.replicas[idx].handle.infer_async_with(input, deadline_budget_ms),
+            None => Err(anyhow!("no healthy replica for {}", self.name)),
+        }
+    }
+}
+
+impl std::ops::Deref for ServiceGroup {
+    type Target = ServiceHandle;
+
+    fn deref(&self) -> &ServiceHandle {
+        self.primary()
+    }
+}
+
+impl std::fmt::Debug for ServiceGroup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServiceGroup")
+            .field("name", &self.name)
+            .field("replicas", &self.replicas.len())
+            .field("breakers", &self.breaker_states())
+            .finish()
+    }
+}

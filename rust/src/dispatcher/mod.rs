@@ -1,20 +1,29 @@
 //! Dispatcher (§3.5): launches a serving system to load a model in a
 //! containerized manner and dispatches the MLaaS to a device.
 //!
-//! Keeps the registry of running services (the service mesh the monitor
-//! walks) and implements device selection for the deploy API.
+//! A deployment is a [`ServiceGroup`] of one or more replica instances
+//! placed on (preferably distinct) devices; the group does least-loaded
+//! routing, circuit breaking and failover. Deploy bookkeeping is
+//! transactional: replica launch, the hub status transition and the
+//! deployment record either all land or are all rolled back, so a failed
+//! deploy never leaks device memory or leaves the hub claiming a service
+//! that does not exist.
+
+pub mod group;
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Device};
 use crate::modelhub::{ModelHub, ModelStatus};
 use crate::runtime::ArtifactStore;
 use crate::serving::instance::{launch, InstanceConfig, ServiceHandle};
 use crate::serving::systems::{by_name, ServingSystem};
 use crate::serving::Frontend;
 use crate::util::json::Json;
+
+pub use group::{GroupConfig, GroupStats, ServiceGroup};
 
 /// User-facing deployment request.
 #[derive(Debug, Clone)]
@@ -26,7 +35,11 @@ pub struct DeploymentSpec {
     /// None = the system's preferred (fastest supported) format.
     pub format: Option<String>,
     pub frontend: Frontend,
+    /// Admission-gate capacity *per replica*.
     pub max_queue: usize,
+    /// Replica instances behind the service name. Automatic placement
+    /// spreads them over distinct devices when the cluster has room.
+    pub replicas: usize,
 }
 
 impl Default for DeploymentSpec {
@@ -37,6 +50,7 @@ impl Default for DeploymentSpec {
             format: None,
             frontend: Frontend::Grpc,
             max_queue: 256,
+            replicas: 1,
         }
     }
 }
@@ -45,12 +59,12 @@ impl Default for DeploymentSpec {
 pub struct Dispatcher {
     cluster: Arc<Cluster>,
     store: Arc<ArtifactStore>,
-    services: Mutex<Vec<ServiceHandle>>,
+    groups: Mutex<Vec<Arc<ServiceGroup>>>,
 }
 
 impl Dispatcher {
     pub fn new(cluster: Arc<Cluster>, store: Arc<ArtifactStore>) -> Dispatcher {
-        Dispatcher { cluster, store, services: Mutex::new(Vec::new()) }
+        Dispatcher { cluster, store, groups: Mutex::new(Vec::new()) }
     }
 
     pub fn cluster(&self) -> &Arc<Cluster> {
@@ -61,8 +75,39 @@ impl Dispatcher {
         &self.store
     }
 
+    /// Pick a device for the next replica: least-utilized worker that
+    /// fits, preferring devices no earlier replica of this deployment
+    /// already occupies (falls back to co-location when the cluster is
+    /// smaller than the replica count).
+    fn place(&self, system: &'static ServingSystem, workload: &crate::cluster::WorkloadCost, used: &[String], name: &str) -> Result<Arc<Device>> {
+        let max_batch = system.policy.max_batch();
+        let needed = |d: &Arc<Device>| d.spec.memory_footprint_mib(workload, max_batch);
+        let fits =
+            |d: &&Arc<Device>| d.memory_used_mib() + needed(d) <= d.memory_total_mib();
+        let pick = |sim_only: bool, spread: bool| {
+            self.cluster
+                .devices()
+                .filter(|d| !sim_only || d.is_simulated())
+                .filter(|d| !spread || !used.iter().any(|u| u == &d.id))
+                .filter(fits)
+                .min_by(|a, b| a.utilization().partial_cmp(&b.utilization()).unwrap())
+                .cloned()
+        };
+        // the leader cpu-host only serves when explicitly named
+        pick(true, true)
+            .or_else(|| pick(false, true))
+            .or_else(|| pick(true, false))
+            .or_else(|| pick(false, false))
+            .ok_or_else(|| anyhow!("no device has room for {name}"))
+    }
+
     /// Deploy a registered (and ideally converted) model as a service.
-    pub fn deploy(&self, hub: &ModelHub, model_id: &str, spec: &DeploymentSpec) -> Result<ServiceHandle> {
+    pub fn deploy(
+        &self,
+        hub: &ModelHub,
+        model_id: &str,
+        spec: &DeploymentSpec,
+    ) -> Result<Arc<ServiceGroup>> {
         let doc = hub.get(model_id)?;
         let name = doc.get("name").and_then(Json::as_str).unwrap_or(model_id).to_string();
         let family = doc
@@ -81,78 +126,129 @@ impl Dispatcher {
             }
             None => system.preferred_format().to_string(),
         };
+        let replicas = spec.replicas.max(1);
+        if replicas > 8 {
+            bail!("replica count {replicas} exceeds the per-service limit of 8");
+        }
 
         let workload = manifest.sim.workload(&format);
-        let device = match &spec.device {
-            Some(id) => self.cluster.device(id)?.clone(),
-            None => {
-                // automatic placement: least-utilized *worker* that fits
-                // (the leader cpu-host only serves when explicitly named)
-                let max_batch = system.policy.max_batch();
-                let needed =
-                    |d: &Arc<crate::cluster::Device>| d.spec.memory_footprint_mib(&workload, max_batch);
-                let fits = |d: &&Arc<crate::cluster::Device>| {
-                    d.memory_used_mib() + needed(d) <= d.memory_total_mib()
-                };
-                let pick = |sim_only: bool| {
-                    self.cluster
-                        .devices()
-                        .filter(|d| !sim_only || d.is_simulated())
-                        .filter(fits)
-                        .min_by(|a, b| a.utilization().partial_cmp(&b.utilization()).unwrap())
-                        .cloned()
-                };
-                pick(true)
-                    .or_else(|| pick(false))
-                    .ok_or_else(|| anyhow!("no device has room for {name}"))?
-            }
-        };
-        let engine = self.cluster.engine_for(&device.id)?;
         let weights = self.store.load_weights(&manifest)?;
-        let handle = launch(
-            InstanceConfig {
-                name: name.clone(),
-                manifest,
-                format: format.clone(),
-                system,
-                frontend: spec.frontend,
-                max_queue: spec.max_queue,
-            },
-            device.clone(),
-            engine,
-            &weights,
-            &self.store.dir,
+
+        // launch all replicas or none: a partial deployment is stopped
+        // (and its device memory freed via the launch rollback path)
+        // before the error is surfaced
+        let mut handles: Vec<ServiceHandle> = Vec::new();
+        let mut used: Vec<String> = Vec::new();
+        for i in 0..replicas {
+            let result = (|| -> Result<ServiceHandle> {
+                let device = match &spec.device {
+                    Some(id) => self.cluster.device(id)?.clone(),
+                    None => self.place(system, &workload, &used, &name)?,
+                };
+                let engine = self.cluster.engine_for(&device.id)?;
+                launch(
+                    InstanceConfig {
+                        name: name.clone(),
+                        manifest: manifest.clone(),
+                        format: format.clone(),
+                        system,
+                        frontend: spec.frontend,
+                        max_queue: spec.max_queue,
+                    },
+                    device.clone(),
+                    engine,
+                    &weights,
+                    &self.store.dir,
+                    self.cluster.clock().clone(),
+                )
+            })();
+            match result {
+                Ok(mut handle) => {
+                    handle.replica = i;
+                    used.push(handle.device_id.clone());
+                    handles.push(handle);
+                }
+                Err(e) => {
+                    for h in &handles {
+                        h.stop();
+                    }
+                    return Err(e.context(format!("launching replica {i} of {name}")));
+                }
+            }
+        }
+
+        // transactional bookkeeping: remember the pre-deploy status so a
+        // failed deployment-record write can compensate the transition
+        let prev_status = hub.status(model_id)?;
+        if let Err(e) = hub.set_status(model_id, ModelStatus::Serving) {
+            for h in &handles {
+                h.stop();
+            }
+            return Err(e);
+        }
+        let mut containers = Vec::new();
+        for h in &handles {
+            containers.push(Json::from(h.container.id.as_str()));
+        }
+        let record = Json::obj()
+            .with("device", handles[0].device_id.as_str())
+            .with("system", system.name)
+            .with("format", format.as_str())
+            .with("frontend", spec.frontend.as_str())
+            .with("container", handles[0].container.id.as_str())
+            .with("replicas", replicas)
+            .with("containers", Json::Arr(containers));
+        if let Err(e) = hub.push_to_array(model_id, "deployments", record) {
+            for h in &handles {
+                h.stop();
+            }
+            if let Err(re) = hub.restore_status(model_id, prev_status) {
+                crate::log_warn!(
+                    "dispatcher",
+                    "status rollback failed for {}: {:#}",
+                    model_id,
+                    re
+                );
+            }
+            return Err(e);
+        }
+
+        let group = Arc::new(ServiceGroup::new(
+            name,
+            handles,
             self.cluster.clock().clone(),
-        )?;
-        hub.set_status(model_id, ModelStatus::Serving)?;
-        hub.push_to_array(
-            model_id,
-            "deployments",
-            Json::obj()
-                .with("device", device.id.as_str())
-                .with("system", system.name)
-                .with("format", format.as_str())
-                .with("frontend", spec.frontend.as_str())
-                .with("container", handle.container.id.as_str()),
-        )?;
-        self.services.lock().unwrap().push(handle.clone());
-        Ok(handle)
+            GroupConfig::default(),
+        ));
+        self.groups.lock().unwrap().push(group.clone());
+        Ok(group)
     }
 
-    /// Running services (stopped handles are pruned on access).
+    /// Running replica handles across all groups (fully-stopped groups
+    /// are pruned on access). The monitor scrapes each replica.
     pub fn services(&self) -> Vec<ServiceHandle> {
-        let mut guard = self.services.lock().unwrap();
-        guard.retain(|s| !s.is_stopped());
+        let mut guard = self.groups.lock().unwrap();
+        guard.retain(|g| !g.is_stopped());
+        guard
+            .iter()
+            .flat_map(|g| g.replica_handles())
+            .filter(|h| !h.is_stopped())
+            .collect()
+    }
+
+    /// Running deployment groups (stopped groups are pruned on access).
+    pub fn groups(&self) -> Vec<Arc<ServiceGroup>> {
+        let mut guard = self.groups.lock().unwrap();
+        guard.retain(|g| !g.is_stopped());
         guard.clone()
     }
 
-    pub fn find(&self, model_name: &str) -> Option<ServiceHandle> {
-        self.services().into_iter().find(|s| s.model_name == model_name)
+    pub fn find(&self, model_name: &str) -> Option<Arc<ServiceGroup>> {
+        self.groups().into_iter().find(|g| g.name == model_name)
     }
 
     pub fn stop_all(&self) {
-        for s in self.services.lock().unwrap().drain(..) {
-            s.stop();
+        for g in self.groups.lock().unwrap().drain(..) {
+            g.stop();
         }
     }
 }
@@ -206,6 +302,7 @@ mod tests {
             .unwrap();
         assert_eq!(svc.device_id, "node1/t40");
         assert_eq!(svc.format, "optimized", "triton-like prefers the optimized engine");
+        assert_eq!(svc.replica_count(), 1);
         assert_eq!(hub.status(&id).unwrap(), ModelStatus::Serving);
         let doc = hub.get(&id).unwrap();
         assert_eq!(doc.get("deployments").unwrap().as_arr().unwrap().len(), 1);
@@ -223,6 +320,33 @@ mod tests {
         assert!(!svc.device_id.is_empty());
         dispatcher.stop_all();
         assert!(dispatcher.services().is_empty());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn replicated_deploy_spreads_across_devices() {
+        let Some((cluster, dispatcher, hub, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let svc = dispatcher
+            .deploy(&hub, &id, &DeploymentSpec { replicas: 2, ..Default::default() })
+            .unwrap();
+        assert_eq!(svc.replica_count(), 2);
+        let handles = svc.replica_handles();
+        assert_eq!(handles[0].replica, 0);
+        assert_eq!(handles[1].replica, 1);
+        assert_ne!(
+            handles[0].device_id, handles[1].device_id,
+            "replicas spread over distinct devices when the cluster has room"
+        );
+        // the registry exposes every replica; the hub records them all
+        assert_eq!(dispatcher.services().len(), 2);
+        let doc = hub.get(&id).unwrap();
+        let dep = &doc.get("deployments").unwrap().as_arr().unwrap()[0];
+        assert_eq!(dep.get("replicas").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(dep.get("containers").and_then(Json::as_arr).unwrap().len(), 2);
+        dispatcher.stop_all();
         cluster.shutdown();
     }
 
@@ -246,6 +370,53 @@ mod tests {
                 }
             )
             .is_err());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn failed_bookkeeping_rolls_back_launch_and_memory() {
+        let Some((cluster, dispatcher, hub, _)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // a freshly Registered model cannot legally transition to
+        // Serving, so the launch succeeds but the status write fails —
+        // the deploy must compensate: stop the replicas, free the device
+        // memory, register nothing
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "rollback-mlp".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "tabular".into(),
+                    dataset: "synthetic".into(),
+                    accuracy: 0.5,
+                    convert: false,
+                    profile: false,
+                },
+                b"weights-bytes",
+            )
+            .unwrap();
+        assert_eq!(hub.status(&id).unwrap(), ModelStatus::Registered);
+        let before: f64 = cluster.devices().map(|d| d.memory_used_mib()).sum();
+        let err = dispatcher.deploy(&hub, &id, &DeploymentSpec::default()).unwrap_err();
+        assert!(
+            err.to_string().contains("illegal status transition"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(hub.status(&id).unwrap(), ModelStatus::Registered, "status untouched");
+        assert!(dispatcher.services().is_empty(), "no service registered");
+        let after: f64 = cluster.devices().map(|d| d.memory_used_mib()).sum();
+        assert!(
+            (after - before).abs() < 1e-6,
+            "device memory leaked by failed deploy: {before} -> {after}"
+        );
+        let doc = hub.get(&id).unwrap();
+        assert!(
+            doc.get("deployments").map(|d| d.as_arr().map(|a| a.is_empty()).unwrap_or(true)).unwrap_or(true),
+            "no deployment recorded"
+        );
         cluster.shutdown();
     }
 

@@ -140,11 +140,13 @@ fn run(args: &Args) -> Result<()> {
                 format: args.get("format").map(str::to_string),
                 frontend: args.get("frontend").and_then(Frontend::from_str).unwrap_or(Frontend::Grpc),
                 max_queue: 256,
+                replicas: args.get_usize("replicas").unwrap_or(1),
             };
             let svc = p.deploy_by_name(name, &spec)?;
             println!(
-                "deployed {} on {} via {} ({}, {} frontend); container {}",
+                "deployed {} x{} on {} via {} ({}, {} frontend); container {}",
                 svc.model_name,
+                svc.replica_count(),
                 svc.device_id,
                 svc.system_name,
                 svc.format,

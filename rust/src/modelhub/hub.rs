@@ -266,6 +266,21 @@ impl ModelHub {
         Ok(())
     }
 
+    /// Unguarded status write — the compensation hook for rolling back a
+    /// just-made transition when a later step of the same operation fails
+    /// (e.g. deploy bookkeeping: `set_status(Serving)` landed but the
+    /// deployment record write did not). Not part of the public workflow:
+    /// it skips the transition guard, so callers must only pass a status
+    /// they previously read from this very model.
+    pub fn restore_status(&self, id: &str, status: ModelStatus) -> Result<()> {
+        self.db.with_collection(MODELS, |c| -> Result<()> {
+            c.get(id).ok_or_else(|| anyhow!("no model with id '{id}'"))?;
+            c.update(id, &Json::obj().with("status", status.as_str()))?;
+            Ok(())
+        })??;
+        Ok(())
+    }
+
     pub fn status(&self, id: &str) -> Result<ModelStatus> {
         self.db
             .with_collection(MODELS, |c| c.get(id).map(ModelStatus::of_doc))?

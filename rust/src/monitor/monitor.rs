@@ -2,13 +2,17 @@
 //! performance — the cAdvisor substitute.
 //!
 //! Periodically snapshots every running service's container counters
-//! (busy time, requests, queue depth, network bytes) into time series
-//! and derives rates the controller and web UI consume.
+//! (busy time, requests, queue depth, network bytes, sheds, failures)
+//! into time series and derives rates the controller and web UI
+//! consume. Replicated deployments scrape per replica (labelled
+//! `svc`/`device`/`replica`) plus group-level routing counters
+//! (`service_retries_total`, breaker state, ...).
 
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::dispatcher::Dispatcher;
-
+use crate::serving::BreakerState;
 
 use super::metrics::Registry;
 
@@ -18,11 +22,12 @@ pub struct Monitor {
     registry: Mutex<Registry>,
 }
 
-/// Summary of one service at scrape time.
+/// Summary of one service replica at scrape time.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceStats {
     pub name: String,
     pub device: String,
+    pub replica: usize,
     pub requests_total: u64,
     pub throughput_rps: Option<f64>,
     pub queue_depth: usize,
@@ -34,23 +39,50 @@ impl Monitor {
         Monitor { dispatcher, registry: Mutex::new(Registry::new(4096)) }
     }
 
-    /// Take one scrape of every running container.
+    fn replica_labels(svc: &crate::serving::ServiceHandle) -> String {
+        format!(
+            "{{svc=\"{}\",device=\"{}\",replica=\"{}\"}}",
+            svc.model_name, svc.device_id, svc.replica
+        )
+    }
+
+    /// Take one scrape of every running container and service group.
     pub fn scrape(&self) {
         let now = self.dispatcher.cluster().clock().now_ms();
         let mut reg = self.registry.lock().unwrap();
         for svc in self.dispatcher.services() {
             let u = svc.container.usage_snapshot();
-            let labels = format!("{{svc=\"{}\",device=\"{}\"}}", svc.model_name, svc.device_id);
+            let labels = Self::replica_labels(&svc);
             reg.record(&format!("container_requests_total{labels}"), now, u.requests as f64);
             reg.record(&format!("container_busy_ms_total{labels}"), now, u.busy_ms);
             reg.record(&format!("container_queue_depth{labels}"), now, u.queue_depth as f64);
             reg.record(&format!("container_network_bytes_total{labels}"), now, u.network_bytes as f64);
             reg.record(&format!("container_memory_mib{labels}"), now, u.memory_mib);
+            reg.record(&format!("container_shed_deadline_total{labels}"), now, u.shed_deadline as f64);
+            reg.record(&format!("container_rejected_overload_total{labels}"), now, u.rejected_overload as f64);
+            reg.record(&format!("container_exec_failures_total{labels}"), now, u.exec_failures as f64);
+        }
+        // group-level routing/failover counters (the data-plane health
+        // the paper's dashboard would alert on)
+        for group in self.dispatcher.groups() {
+            let labels = format!("{{svc=\"{}\"}}", group.name);
+            let s = &group.stats;
+            reg.record(&format!("service_requests_total{labels}"), now, s.requests.load(Ordering::Relaxed) as f64);
+            reg.record(&format!("service_retries_total{labels}"), now, s.retries.load(Ordering::Relaxed) as f64);
+            reg.record(&format!("service_failovers_total{labels}"), now, s.failovers.load(Ordering::Relaxed) as f64);
+            reg.record(&format!("service_breaker_opened_total{labels}"), now, s.breaker_opened.load(Ordering::Relaxed) as f64);
+            reg.record(&format!("service_breaker_closed_total{labels}"), now, s.breaker_closed.load(Ordering::Relaxed) as f64);
+            let open = group
+                .breaker_states()
+                .iter()
+                .filter(|b| **b != BreakerState::Closed)
+                .count();
+            reg.record(&format!("service_breakers_open{labels}"), now, open as f64);
         }
     }
 
-    /// Current stats for every running service (throughput derived from
-    /// the requests counter over a trailing window).
+    /// Current stats for every running service replica (throughput
+    /// derived from the requests counter over a trailing window).
     pub fn service_stats(&self, window_ms: f64) -> Vec<ServiceStats> {
         let now = self.dispatcher.cluster().clock().now_ms();
         let reg = self.registry.lock().unwrap();
@@ -59,13 +91,14 @@ impl Monitor {
             .into_iter()
             .map(|svc| {
                 let u = svc.container.usage_snapshot();
-                let labels = format!("{{svc=\"{}\",device=\"{}\"}}", svc.model_name, svc.device_id);
+                let labels = Self::replica_labels(&svc);
                 let throughput = reg
                     .get(&format!("container_requests_total{labels}"))
                     .and_then(|s| s.rate_over(now, window_ms));
                 ServiceStats {
                     name: svc.model_name.clone(),
                     device: svc.device_id.clone(),
+                    replica: svc.replica,
                     requests_total: u.requests,
                     throughput_rps: throughput,
                     queue_depth: u.queue_depth,
@@ -135,6 +168,10 @@ mod tests {
         assert!(stats[0].throughput_rps.unwrap_or(0.0) > 0.0);
         let text = monitor.expose();
         assert!(text.contains("container_requests_total{svc=\"mon-mlp\""));
+        assert!(text.contains("replica=\"0\""), "per-replica label present: {text}");
+        assert!(text.contains("container_rejected_overload_total{svc=\"mon-mlp\""));
+        assert!(text.contains("service_retries_total{svc=\"mon-mlp\"}"));
+        assert!(text.contains("service_breakers_open{svc=\"mon-mlp\"}"));
         dispatcher.stop_all();
         cluster.shutdown();
     }

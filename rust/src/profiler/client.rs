@@ -189,7 +189,9 @@ mod tests {
                 &id,
                 &DeploymentSpec { device: Some("node2/a1001".into()), ..Default::default() },
             )
-            .unwrap();
+            .unwrap()
+            .primary()
+            .clone();
         let input = example_input(store.model("mlp_tabular").unwrap(), 7);
         Some((cluster, dispatcher, svc, input))
     }

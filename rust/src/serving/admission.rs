@@ -1,0 +1,328 @@
+//! Admission control primitives for the serving data plane.
+//!
+//! Three small, lock-light building blocks with explicit contracts:
+//!
+//! - [`AdmissionGate`]: an atomic token gate over the bounded request
+//!   queue. Admission is a single CAS loop, so concurrent callers can
+//!   never overshoot the capacity the way a check-then-increment would
+//!   (the seed's `infer_async` raced exactly like that).
+//! - [`CircuitBreaker`]: per-replica consecutive-failure breaker with
+//!   the classic Closed → Open → HalfOpen → Closed lifecycle; time comes
+//!   from the caller so the simulated clock drives cooldowns in tests.
+//! - [`RetryPolicy`]: bounded retry with exponential jittered backoff
+//!   for idempotent inference failover across replicas.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+
+/// Atomic token-style admission gate over a bounded queue.
+///
+/// `try_admit` either takes a token (queue slot) or reports the observed
+/// depth; `release` returns one. The depth can never exceed `capacity`,
+/// even under arbitrary concurrency.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    depth: AtomicUsize,
+    capacity: usize,
+}
+
+impl AdmissionGate {
+    pub fn new(capacity: usize) -> AdmissionGate {
+        AdmissionGate { depth: AtomicUsize::new(0), capacity: capacity.max(1) }
+    }
+
+    /// Take one admission token. `Ok(depth_after)` on success,
+    /// `Err(observed_depth)` when the queue is full.
+    pub fn try_admit(&self) -> std::result::Result<usize, usize> {
+        let mut current = self.depth.load(Ordering::SeqCst);
+        loop {
+            if current >= self.capacity {
+                return Err(current);
+            }
+            match self.depth.compare_exchange_weak(
+                current,
+                current + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return Ok(current + 1),
+                Err(actual) => current = actual,
+            }
+        }
+    }
+
+    /// Return one token (request left the queue: executed, shed, or
+    /// errored). Returns the depth after release.
+    pub fn release(&self) -> usize {
+        self.release_n(1)
+    }
+
+    /// Return `n` tokens at once (a whole batch was drained).
+    pub fn release_n(&self, n: usize) -> usize {
+        let before = self.depth.fetch_sub(n, Ordering::SeqCst);
+        debug_assert!(before >= n, "admission gate released more tokens than admitted");
+        before.saturating_sub(n)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Observable breaker states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests flow.
+    Closed,
+    /// Tripped: requests are routed away until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: exactly one probe request is in flight.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at_ms: f64,
+}
+
+/// Consecutive-failure circuit breaker.
+///
+/// All timing is caller-supplied (`now_ms`), so breakers driven by a
+/// [`crate::util::clock::VirtualClock`] open and re-close
+/// deterministically in tests.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    inner: Mutex<BreakerInner>,
+    threshold: u32,
+    cooldown_ms: f64,
+}
+
+impl CircuitBreaker {
+    /// `threshold` consecutive failures trip the breaker; after
+    /// `cooldown_ms` one probe is allowed through.
+    pub fn new(threshold: u32, cooldown_ms: f64) -> CircuitBreaker {
+        CircuitBreaker {
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at_ms: 0.0,
+            }),
+            threshold: threshold.max(1),
+            cooldown_ms: cooldown_ms.max(0.0),
+        }
+    }
+
+    /// May a request be routed here now? An Open breaker whose cooldown
+    /// has elapsed transitions to HalfOpen and admits the caller as the
+    /// single probe; further callers are refused until the probe
+    /// reports back.
+    pub fn allow(&self, now_ms: f64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if now_ms - g.opened_at_ms >= self.cooldown_ms {
+                    g.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    /// Report a success. Returns `true` when this closed a previously
+    /// open/half-open breaker (recovery event).
+    pub fn record_success(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let recovered = g.state != BreakerState::Closed;
+        g.state = BreakerState::Closed;
+        g.consecutive_failures = 0;
+        recovered
+    }
+
+    /// Report a failure. Returns `true` when this call tripped the
+    /// breaker open (either the threshold was crossed or a half-open
+    /// probe failed).
+    pub fn record_failure(&self, now_ms: f64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::HalfOpen => {
+                // failed probe: back to Open, restart the cooldown
+                g.state = BreakerState::Open;
+                g.opened_at_ms = now_ms;
+                true
+            }
+            BreakerState::Closed => {
+                g.consecutive_failures += 1;
+                if g.consecutive_failures >= self.threshold {
+                    g.state = BreakerState::Open;
+                    g.opened_at_ms = now_ms;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+}
+
+/// Bounded retry with exponential, jittered backoff.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retry).
+    pub max_attempts: usize,
+    /// Base backoff before the first retry.
+    pub backoff_ms: f64,
+    /// Uniform jitter fraction in `[0, 1]`: each backoff is scaled by
+    /// `1 ± jitter` to decorrelate retry storms.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff_ms: 1.0, jitter: 0.5 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to sleep before retry number `retry` (0-based), jittered.
+    pub fn backoff_for(&self, retry: usize, rng: &mut Rng) -> f64 {
+        let base = self.backoff_ms * (1u64 << retry.min(16)) as f64;
+        let jitter = self.jitter.clamp(0.0, 1.0);
+        base * (1.0 + jitter * (rng.f64() * 2.0 - 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn gate_admits_up_to_capacity() {
+        let gate = AdmissionGate::new(3);
+        assert_eq!(gate.try_admit(), Ok(1));
+        assert_eq!(gate.try_admit(), Ok(2));
+        assert_eq!(gate.try_admit(), Ok(3));
+        assert_eq!(gate.try_admit(), Err(3));
+        assert_eq!(gate.release(), 2);
+        assert_eq!(gate.try_admit(), Ok(3));
+        assert_eq!(gate.depth(), 3);
+        gate.release_n(3);
+        assert_eq!(gate.depth(), 0);
+    }
+
+    /// Regression for the seed's TOCTOU overshoot: many threads hammer
+    /// admit/release; the observed depth must never exceed capacity.
+    #[test]
+    fn gate_never_overshoots_under_contention() {
+        let cap = 8;
+        let gate = Arc::new(AdmissionGate::new(cap));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let admitted = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let gate = gate.clone();
+            let peak = peak.clone();
+            let admitted = admitted.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..2_000 {
+                    if let Ok(depth) = gate.try_admit() {
+                        assert!(depth <= cap, "admission overshot: {depth} > {cap}");
+                        peak.fetch_max(depth, Ordering::SeqCst);
+                        admitted.fetch_add(1, Ordering::SeqCst);
+                        // hold the token briefly to force interleaving
+                        std::hint::spin_loop();
+                        gate.release();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(gate.depth(), 0, "tokens balance");
+        assert!(peak.load(Ordering::SeqCst) <= cap);
+        assert!(admitted.load(Ordering::SeqCst) > 0);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_probes_after_cooldown() {
+        let b = CircuitBreaker::new(3, 100.0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(!b.record_failure(0.0));
+        assert!(!b.record_failure(1.0));
+        assert!(b.record_failure(2.0), "third consecutive failure trips");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(50.0), "still cooling down");
+        assert!(b.allow(102.0), "cooldown elapsed: probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(103.0), "only one probe at a time");
+        assert!(b.record_success(), "probe success closes the breaker");
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(104.0));
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens() {
+        let b = CircuitBreaker::new(1, 100.0);
+        b.record_failure(0.0);
+        assert!(b.allow(150.0));
+        assert!(b.record_failure(150.0), "failed probe re-trips");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(200.0), "cooldown restarted at the failed probe");
+        assert!(b.allow(251.0));
+    }
+
+    #[test]
+    fn breaker_success_resets_failure_streak() {
+        let b = CircuitBreaker::new(3, 10.0);
+        b.record_failure(0.0);
+        b.record_failure(0.0);
+        b.record_success();
+        assert!(!b.record_failure(1.0));
+        assert!(!b.record_failure(2.0));
+        assert_eq!(b.state(), BreakerState::Closed, "streak was reset by the success");
+    }
+
+    #[test]
+    fn retry_backoff_grows_and_jitters_within_bounds() {
+        let policy = RetryPolicy { max_attempts: 4, backoff_ms: 2.0, jitter: 0.5 };
+        let mut rng = Rng::new(7);
+        for retry in 0..4 {
+            let base = 2.0 * (1 << retry) as f64;
+            for _ in 0..100 {
+                let b = policy.backoff_for(retry, &mut rng);
+                assert!(b >= base * 0.5 - 1e-9 && b <= base * 1.5 + 1e-9, "retry {retry}: {b}");
+            }
+        }
+        let zero = RetryPolicy { max_attempts: 1, backoff_ms: 4.0, jitter: 0.0 };
+        assert_eq!(zero.backoff_for(0, &mut rng), 4.0);
+    }
+}

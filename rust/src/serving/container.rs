@@ -36,6 +36,13 @@ pub struct ResourceUsage {
     pub queue_depth: AtomicUsize,
     /// Device memory held (MiB, fixed at start).
     pub memory_mib: AtomicU64,
+    /// Requests shed in-queue because their deadline expired.
+    pub shed_deadline: AtomicU64,
+    /// Requests rejected at admission (queue full → 429).
+    pub rejected_overload: AtomicU64,
+    /// Batch executions that failed (engine errors, injected faults,
+    /// worker panics).
+    pub exec_failures: AtomicU64,
 }
 
 /// A "container": image + state + usage counters.
@@ -108,6 +115,9 @@ impl Container {
             network_bytes: self.usage.network_bytes.load(Ordering::Relaxed),
             queue_depth: self.usage.queue_depth.load(Ordering::Relaxed),
             memory_mib: self.usage.memory_mib.load(Ordering::Relaxed) as f64,
+            shed_deadline: self.usage.shed_deadline.load(Ordering::Relaxed),
+            rejected_overload: self.usage.rejected_overload.load(Ordering::Relaxed),
+            exec_failures: self.usage.exec_failures.load(Ordering::Relaxed),
         }
     }
 }
@@ -122,6 +132,9 @@ pub struct ContainerUsage {
     pub network_bytes: u64,
     pub queue_depth: usize,
     pub memory_mib: f64,
+    pub shed_deadline: u64,
+    pub rejected_overload: u64,
+    pub exec_failures: u64,
 }
 
 #[cfg(test)]

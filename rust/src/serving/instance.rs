@@ -6,19 +6,36 @@
 //! device time through the perf model (simulated devices *sleep out* the
 //! difference so queueing and utilization emerge in real time), and
 //! answers each request with its output slice plus a latency breakdown.
+//!
+//! Robustness contracts (see docs/SERVING.md):
+//!
+//! - **Admission** is an atomic token gate ([`AdmissionGate`]): the
+//!   bounded queue can never overshoot, and a rejected request carries a
+//!   computed retry-after derived from queue depth × the perf model's
+//!   per-batch latency.
+//! - **Deadlines**: a request may carry a deadline budget; if it expires
+//!   while queued the request is *shed before execution* with a typed
+//!   [`ServingError::DeadlineExceeded`] — never silently dropped.
+//! - **Exactly one reply**: every admitted request gets exactly one
+//!   `Ok`/`Err` reply, including across worker panics (a drop guard
+//!   answers the in-flight batch) and injected faults.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cluster::faults::FaultAction;
+use crate::cluster::perfmodel::WorkloadCost;
 use crate::cluster::Device;
 use crate::runtime::engine::{EngineHandle, ExeHandle};
 use crate::runtime::{ModelManifest, Tensor};
 use crate::util::clock::SharedClock;
 
+use super::admission::AdmissionGate;
 use super::batching::{round_up_batch, usable_batches, QueueView};
 use super::container::Container;
 use super::frontend::Frontend;
@@ -49,9 +66,65 @@ pub struct InferenceReply {
     pub timing: RequestTiming,
 }
 
+/// Typed data-plane errors. Wrapped in `anyhow::Error` on the way out;
+/// the API layer downcasts to map onto the HTTP taxonomy (429/504/503)
+/// and the dispatcher downcasts to decide failover.
+#[derive(Debug, Clone)]
+pub enum ServingError {
+    /// Admission rejected: the bounded queue is at capacity. Carries the
+    /// computed backoff hint (queue depth × per-batch modeled latency).
+    Overloaded { service: String, queue_depth: usize, max_queue: usize, retry_after_ms: f64 },
+    /// The deadline expired while the request was queued; it was shed
+    /// without executing.
+    DeadlineExceeded { service: String, waited_ms: f64, budget_ms: f64 },
+    /// The service was stopped (before submission or while queued).
+    Stopped { service: String },
+    /// The worker thread is gone.
+    WorkerLost { service: String },
+    /// Batch execution failed (engine error, injected fault, or panic).
+    Exec { service: String, message: String },
+}
+
+impl std::fmt::Display for ServingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // the "queue full" prefix is load-bearing: the profiler's
+            // load generators and existing tests classify rejections by
+            // matching ERR_QUEUE_FULL as a substring
+            ServingError::Overloaded { service, queue_depth, max_queue, retry_after_ms } => write!(
+                f,
+                "{ERR_QUEUE_FULL}: {queue_depth}/{max_queue} on {service}; retry after {retry_after_ms:.1} ms"
+            ),
+            ServingError::DeadlineExceeded { service, waited_ms, budget_ms } => write!(
+                f,
+                "deadline exceeded on {service}: waited {waited_ms:.1} ms of a {budget_ms:.1} ms budget"
+            ),
+            ServingError::Stopped { service } => write!(f, "service {service} is stopped"),
+            ServingError::WorkerLost { service } => write!(f, "service worker is gone on {service}"),
+            ServingError::Exec { message, .. } => write!(f, "batch execution failed: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ServingError {}
+
+impl ServingError {
+    pub fn service(&self) -> &str {
+        match self {
+            ServingError::Overloaded { service, .. }
+            | ServingError::DeadlineExceeded { service, .. }
+            | ServingError::Stopped { service }
+            | ServingError::WorkerLost { service }
+            | ServingError::Exec { service, .. } => service,
+        }
+    }
+}
+
 struct PendingRequest {
     input: Tensor,
     enqueue_ms: f64,
+    /// Absolute clock time after which this request must not execute.
+    deadline_ms: Option<f64>,
     payload_bytes: usize,
     reply: mpsc::Sender<Result<InferenceReply>>,
 }
@@ -76,8 +149,7 @@ pub struct InstanceConfig {
 #[derive(Clone)]
 pub struct ServiceHandle {
     tx: mpsc::Sender<Msg>,
-    queue_depth: Arc<AtomicUsize>,
-    max_queue: usize,
+    gate: Arc<AdmissionGate>,
     stopped: Arc<AtomicBool>,
     pub container: Arc<Container>,
     pub device_id: String,
@@ -86,8 +158,12 @@ pub struct ServiceHandle {
     pub system_name: &'static str,
     pub frontend: Frontend,
     pub batches: Vec<usize>,
+    /// Replica index within a deployment group (0 for standalone).
+    pub replica: usize,
     memory_mib: f64,
     device: Arc<Device>,
+    system: &'static ServingSystem,
+    workload: WorkloadCost,
 }
 
 /// Error returned when the bounded queue is full (backpressure signal).
@@ -96,32 +172,64 @@ pub const ERR_QUEUE_FULL: &str = "queue full";
 impl ServiceHandle {
     /// Submit one example asynchronously; returns the reply channel.
     pub fn infer_async(&self, input: Tensor) -> Result<mpsc::Receiver<Result<InferenceReply>>> {
+        self.infer_async_with(input, None)
+    }
+
+    /// Submit one example with an optional deadline budget (ms from
+    /// now). If the budget expires while the request is still queued,
+    /// the worker sheds it before execution and the reply channel
+    /// yields [`ServingError::DeadlineExceeded`].
+    pub fn infer_async_with(
+        &self,
+        input: Tensor,
+        deadline_budget_ms: Option<f64>,
+    ) -> Result<mpsc::Receiver<Result<InferenceReply>>> {
         if self.stopped.load(Ordering::SeqCst) {
-            bail!("service {} is stopped", self.model_name);
+            return Err(ServingError::Stopped { service: self.model_name.clone() }.into());
         }
-        // backpressure: reject instead of queueing unboundedly
-        let depth = self.queue_depth.load(Ordering::SeqCst);
-        if depth >= self.max_queue {
-            bail!("{ERR_QUEUE_FULL}: {depth}/{} on {}", self.max_queue, self.model_name);
-        }
+        // backpressure: an atomic token per queue slot, so concurrent
+        // callers can never overshoot max_queue (no check-then-add race)
+        let depth = match self.gate.try_admit() {
+            Ok(depth) => depth,
+            Err(observed) => {
+                self.container.usage.rejected_overload.fetch_add(1, Ordering::Relaxed);
+                return Err(ServingError::Overloaded {
+                    service: self.model_name.clone(),
+                    queue_depth: observed,
+                    max_queue: self.gate.capacity(),
+                    retry_after_ms: self.retry_after_ms(observed),
+                }
+                .into());
+            }
+        };
+        self.container.usage.queue_depth.store(depth, Ordering::Relaxed);
         let payload_bytes = input.nbytes();
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.queue_depth.fetch_add(1, Ordering::SeqCst);
-        self.container.usage.queue_depth.store(self.queue_depth.load(Ordering::SeqCst), Ordering::Relaxed);
+        let now = self.device.clock().now_ms();
         let req = PendingRequest {
             input,
-            enqueue_ms: self.device.clock().now_ms(),
+            enqueue_ms: now,
+            deadline_ms: deadline_budget_ms.map(|b| now + b.max(0.0)),
             payload_bytes,
             reply: reply_tx,
         };
-        self.tx.send(Msg::Req(req)).map_err(|_| anyhow!("service worker is gone"))?;
+        if self.tx.send(Msg::Req(req)).is_err() {
+            self.gate.release();
+            return Err(ServingError::WorkerLost { service: self.model_name.clone() }.into());
+        }
         Ok(reply_rx)
     }
 
     /// Submit one example and wait for its reply.
     pub fn infer(&self, input: Tensor) -> Result<InferenceReply> {
         let rx = self.infer_async(input)?;
-        rx.recv().map_err(|_| anyhow!("service worker dropped request"))?
+        rx.recv().map_err(|_| ServingError::WorkerLost { service: self.model_name.clone() })?
+    }
+
+    /// Submit with a deadline budget and wait for the outcome.
+    pub fn infer_deadline(&self, input: Tensor, budget_ms: f64) -> Result<InferenceReply> {
+        let rx = self.infer_async_with(input, Some(budget_ms))?;
+        rx.recv().map_err(|_| ServingError::WorkerLost { service: self.model_name.clone() })?
     }
 
     /// Stop the worker and free device memory.
@@ -138,17 +246,67 @@ impl ServiceHandle {
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.queue_depth.load(Ordering::SeqCst)
+        self.gate.depth()
+    }
+
+    pub fn max_queue(&self) -> usize {
+        self.gate.capacity()
     }
 
     pub fn memory_mib(&self) -> f64 {
         self.memory_mib
     }
+
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
+    }
+
+    /// Modeled service time of one full batch on this device, including
+    /// the system's per-request overhead.
+    pub fn batch_latency_ms(&self) -> f64 {
+        let max_b = *self.batches.last().unwrap();
+        self.device.spec.latency_ms(&self.workload, max_b) + self.system.request_overhead_ms
+    }
+
+    /// Backoff hint for a rejected request: how long until a queue this
+    /// deep should have drained, given full batches at modeled latency.
+    pub fn retry_after_ms(&self, queue_depth: usize) -> f64 {
+        let max_b = *self.batches.last().unwrap() as f64;
+        let batches_ahead = (queue_depth as f64 / max_b).ceil().max(1.0);
+        batches_ahead * self.batch_latency_ms()
+    }
+
+    /// Upper bound on the queueing delay of any *admitted* request: a
+    /// full queue draining in max-size batches, each preceded by the
+    /// batching policy's worst-case forming wait. The overload stress
+    /// test holds admitted p99 queueing under this bound.
+    pub fn worst_case_wait_ms(&self) -> f64 {
+        let max_b = *self.batches.last().unwrap() as f64;
+        let full_queue_batches = (self.gate.capacity() as f64 / max_b).ceil().max(1.0);
+        full_queue_batches * (self.batch_latency_ms() + self.system.policy.worst_case_wait_ms())
+    }
+}
+
+/// Frees a device allocation unless disarmed — a `launch` that fails
+/// after `allocate_mib` must not leak the reservation.
+struct AllocGuard {
+    device: Arc<Device>,
+    mib: f64,
+    armed: bool,
+}
+
+impl Drop for AllocGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.device.free_mib(self.mib);
+        }
+    }
 }
 
 /// Launch a serving instance on a device. Compiles (or reuses) the
 /// model's executables for every usable batch size, allocates device
-/// memory, starts the container and worker thread.
+/// memory, starts the container and worker thread. All-or-nothing: any
+/// failure after the memory reservation releases it again.
 pub fn launch(
     config: InstanceConfig,
     device: Arc<Device>,
@@ -179,20 +337,20 @@ pub fn launch(
     let workload = config.manifest.sim.workload(&config.format);
     let memory_mib = device.spec.memory_footprint_mib(&workload, *batches.last().unwrap());
     device.allocate_mib(memory_mib)?;
+    let mut alloc_guard = AllocGuard { device: device.clone(), mib: memory_mib, armed: true };
 
     let container_name = format!("{}@{}@{}", config.name, config.system.name, device.id);
     let container = Arc::new(Container::create(&container_name, config.system.image, clock.now_ms()));
     container.usage.memory_mib.store(memory_mib as u64, Ordering::Relaxed);
-    container.start().expect("fresh container starts");
+    container.start()?;
 
     let (tx, rx) = mpsc::channel::<Msg>();
-    let queue_depth = Arc::new(AtomicUsize::new(0));
+    let gate = Arc::new(AdmissionGate::new(config.max_queue));
     let stopped = Arc::new(AtomicBool::new(false));
 
     let handle = ServiceHandle {
         tx,
-        queue_depth: queue_depth.clone(),
-        max_queue: config.max_queue,
+        gate: gate.clone(),
         stopped: stopped.clone(),
         container: container.clone(),
         device_id: device.id.clone(),
@@ -201,14 +359,17 @@ pub fn launch(
         system_name: config.system.name,
         frontend: config.frontend,
         batches: batches.clone(),
+        replica: 0,
         memory_mib,
         device: device.clone(),
+        system: config.system,
+        workload,
     };
 
     let worker = Worker {
         rx,
         pending: VecDeque::new(),
-        queue_depth,
+        gate,
         container,
         device,
         clock,
@@ -217,73 +378,140 @@ pub fn launch(
         workload,
         system: config.system,
         frontend: config.frontend,
+        service: config.name.clone(),
     };
     std::thread::Builder::new()
         .name(format!("serve-{}", config.name))
         .spawn(move || worker.run())
-        .expect("spawn serving worker");
+        .map_err(|e| anyhow!("failed to spawn serving worker for {}: {e}", config.name))?;
+    alloc_guard.armed = false;
     Ok(handle)
+}
+
+/// Answers an in-flight batch if the worker panics mid-execution — the
+/// exactly-one-reply invariant must hold across unwinds.
+struct ReplyOnDrop {
+    reqs: Vec<PendingRequest>,
+    service: String,
+}
+
+impl Drop for ReplyOnDrop {
+    fn drop(&mut self) {
+        for r in self.reqs.drain(..) {
+            let _ = r.reply.send(Err(ServingError::Exec {
+                service: self.service.clone(),
+                message: "worker panicked while executing batch".into(),
+            }
+            .into()));
+        }
+    }
+}
+
+enum Step {
+    Continue,
+    Shutdown,
 }
 
 struct Worker {
     rx: mpsc::Receiver<Msg>,
     pending: VecDeque<PendingRequest>,
-    queue_depth: Arc<AtomicUsize>,
+    gate: Arc<AdmissionGate>,
     container: Arc<Container>,
     device: Arc<Device>,
     clock: SharedClock,
     exes: Vec<(usize, ExeHandle)>,
     batches: Vec<usize>,
-    workload: crate::cluster::perfmodel::WorkloadCost,
+    workload: WorkloadCost,
     system: &'static ServingSystem,
     frontend: Frontend,
+    service: String,
 }
 
 impl Worker {
     fn run(mut self) {
-        // poll tick bounds how late a timeout flush can be
-        let tick = Duration::from_micros(200);
         loop {
-            // drain the channel without blocking, then decide
-            loop {
-                match self.rx.try_recv() {
-                    Ok(Msg::Req(r)) => self.pending.push_back(r),
-                    Ok(Msg::Stop) => {
-                        self.drain_with_error();
-                        return;
-                    }
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        self.drain_with_error();
-                        return;
-                    }
-                }
-            }
-            let now = self.clock.now_ms();
-            let oldest_wait = self.pending.front().map(|r| now - r.enqueue_ms).unwrap_or(0.0);
-            let view = QueueView { queued: self.pending.len(), oldest_wait_ms: oldest_wait };
-            match self.system.policy.decide(view) {
-                Some(n) => self.execute_batch(n),
-                None => {
-                    // wait for work or timeout progress
-                    match self.rx.recv_timeout(tick) {
-                        Ok(Msg::Req(r)) => self.pending.push_back(r),
-                        Ok(Msg::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                            self.drain_with_error();
-                            return;
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    }
+            // panic isolation: a poisoned batch answers through its
+            // drop guard and the loop resumes; only Stop/disconnect
+            // ends the worker
+            match catch_unwind(AssertUnwindSafe(|| self.step())) {
+                Ok(Step::Continue) => {}
+                Ok(Step::Shutdown) => return,
+                Err(_) => {
+                    crate::log_warn!("serving", "worker for {} caught a panic; resuming", self.service);
                 }
             }
         }
     }
 
+    /// One scheduling iteration: ingest, shed expired, decide, execute
+    /// or wait.
+    fn step(&mut self) -> Step {
+        // poll tick bounds how late a timeout flush can be
+        let tick = Duration::from_micros(200);
+        // drain the channel without blocking, then decide
+        loop {
+            match self.rx.try_recv() {
+                Ok(Msg::Req(r)) => self.pending.push_back(r),
+                Ok(Msg::Stop) | Err(mpsc::TryRecvError::Disconnected) => {
+                    self.drain_with_error();
+                    return Step::Shutdown;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        // deadline-driven shedding happens *before* batch formation, so
+        // an expired request can never ride into an execution
+        self.shed_expired();
+        let now = self.clock.now_ms();
+        let oldest_wait = self.pending.front().map(|r| now - r.enqueue_ms).unwrap_or(0.0);
+        let view = QueueView { queued: self.pending.len(), oldest_wait_ms: oldest_wait };
+        match self.system.policy.decide(view) {
+            Some(n) => self.execute_batch(n),
+            None => {
+                // wait for work or timeout progress
+                match self.rx.recv_timeout(tick) {
+                    Ok(Msg::Req(r)) => self.pending.push_back(r),
+                    Ok(Msg::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        self.drain_with_error();
+                        return Step::Shutdown;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                }
+            }
+        }
+        Step::Continue
+    }
+
+    /// Graceful drain: every queued request gets a typed reply.
     fn drain_with_error(&mut self) {
         while let Some(r) = self.pending.pop_front() {
-            self.queue_depth.fetch_sub(1, Ordering::SeqCst);
-            let _ = r.reply.send(Err(anyhow!("service stopped")));
+            let depth = self.gate.release();
+            self.container.usage.queue_depth.store(depth, Ordering::Relaxed);
+            let _ = r.reply.send(Err(ServingError::Stopped { service: self.service.clone() }.into()));
         }
+    }
+
+    /// Reply-and-drop every queued request whose deadline has passed.
+    fn shed_expired(&mut self) {
+        let now = self.clock.now_ms();
+        let mut kept = VecDeque::with_capacity(self.pending.len());
+        while let Some(r) = self.pending.pop_front() {
+            match r.deadline_ms {
+                Some(d) if now >= d => {
+                    let depth = self.gate.release();
+                    self.container.usage.queue_depth.store(depth, Ordering::Relaxed);
+                    self.container.usage.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(Err(ServingError::DeadlineExceeded {
+                        service: self.service.clone(),
+                        waited_ms: now - r.enqueue_ms,
+                        budget_ms: d - r.enqueue_ms,
+                    }
+                    .into()));
+                }
+                _ => kept.push_back(r),
+            }
+        }
+        self.pending = kept;
     }
 
     fn execute_batch(&mut self, n: usize) {
@@ -292,21 +520,35 @@ impl Worker {
         let max_b = *self.batches.last().unwrap();
         let n = n.min(max_b);
         let exec_batch = round_up_batch(n, &self.batches).unwrap_or(max_b);
-        let reqs: Vec<PendingRequest> = self.pending.drain(..n).collect();
-        self.queue_depth.fetch_sub(n, Ordering::SeqCst);
-        self.container.usage.queue_depth.store(self.queue_depth.load(Ordering::SeqCst), Ordering::Relaxed);
+        let mut guard =
+            ReplyOnDrop { reqs: self.pending.drain(..n).collect(), service: self.service.clone() };
+        let depth = self.gate.release_n(n);
+        self.container.usage.queue_depth.store(depth, Ordering::Relaxed);
 
         let dequeue_ms = self.clock.now_ms();
-        let inputs: Vec<Tensor> = reqs.iter().map(|r| r.input.clone()).collect();
+        // injected faults (simulated devices, env- or test-installed):
+        // a stall holds the worker before execution, a fail replaces the
+        // engine result, a slow inflates the charged latency
+        let fault = self.device.sample_fault();
+        if let Some(FaultAction::Stall(ms)) = fault {
+            self.clock.sleep_ms(ms);
+        }
+        let inputs: Vec<Tensor> = guard.reqs.iter().map(|r| r.input.clone()).collect();
         let stacked = Tensor::stack(&inputs);
         let padded = if exec_batch > n { stacked.pad_batch(exec_batch) } else { stacked };
 
         let exe = &self.exes.iter().find(|(b, _)| *b == exec_batch).expect("exe for batch").1;
-        let result = exe.run(&padded);
+        let result = match fault {
+            Some(FaultAction::Fail) => Err(anyhow!("injected fault on {}", self.device.id)),
+            _ => exe.run(&padded),
+        };
 
         match result {
             Ok((output, real_ms)) => {
-                let charged_ms = self.device.charge_ms(&self.workload, exec_batch, real_ms);
+                let mut charged_ms = self.device.charge_ms(&self.workload, exec_batch, real_ms);
+                if let Some(FaultAction::Slow(factor)) = fault {
+                    charged_ms *= factor;
+                }
                 // simulated devices: sleep out the modeled remainder so
                 // wall-clock behaviour (queueing, utilization) matches
                 if charged_ms > real_ms {
@@ -314,6 +556,8 @@ impl Worker {
                 }
                 self.device.record_busy(charged_ms);
                 let outputs = output.truncate_batch(n).unstack();
+                // the batch is answered on this path: disarm the guard
+                let reqs = std::mem::take(&mut guard.reqs);
                 // account *before* replying so monitor counters never lag
                 // behind what clients have observed
                 let total_net: usize =
@@ -332,9 +576,14 @@ impl Worker {
                 }
             }
             Err(e) => {
-                let msg = format!("batch execution failed: {e:#}");
-                for req in reqs {
-                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                self.container.usage.exec_failures.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("{e:#}");
+                for req in std::mem::take(&mut guard.reqs) {
+                    let _ = req.reply.send(Err(ServingError::Exec {
+                        service: self.service.clone(),
+                        message: msg.clone(),
+                    }
+                    .into()));
                 }
             }
         }
@@ -359,6 +608,9 @@ mod tests {
         } else {
             Device::simulated("test/gpu0", device_kind, clock.clone()).unwrap()
         };
+        // pin healthy regardless of MLCI_FAULTS: these tests assert
+        // exact latencies and counts
+        device.set_faults(None);
         let m = store.model("mlp_tabular").unwrap().clone();
         let weights = store.load_weights(&m).unwrap();
         let handle = launch(
@@ -466,6 +718,7 @@ mod tests {
         let clock = wall();
         let engine = EngineHandle::spawn("bp-test");
         let device = Device::simulated("test/gpu0", "t4", clock.clone()).unwrap();
+        device.set_faults(None);
         let m = store.model("bert_tiny").unwrap().clone(); // slow model
         let weights = store.load_weights(&m).unwrap();
         let svc = launch(
@@ -498,6 +751,14 @@ mod tests {
                 Ok(rx) => rxs.push(rx),
                 Err(e) => {
                     assert!(e.to_string().contains(ERR_QUEUE_FULL));
+                    let se = e.downcast_ref::<ServingError>().expect("typed overload error");
+                    match se {
+                        ServingError::Overloaded { retry_after_ms, max_queue, .. } => {
+                            assert!(*retry_after_ms > 0.0, "retry-after must be positive");
+                            assert_eq!(*max_queue, 4);
+                        }
+                        other => panic!("expected Overloaded, got {other}"),
+                    }
                     rejected += 1;
                 }
             }
@@ -552,6 +813,41 @@ mod tests {
             clock,
         );
         assert!(err.is_err());
+        engine.shutdown();
+    }
+
+    /// A launch that fails *before* allocating device memory must leave
+    /// the ledger untouched; the missing-artifact path exercises the
+    /// early-failure branch of the rollback guard.
+    #[test]
+    fn failed_launch_leaves_no_memory_behind() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(store) = ArtifactStore::load(&dir) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let clock = wall();
+        let engine = EngineHandle::spawn("rollback-test");
+        let device = Device::simulated("test/gpu0", "t4", clock.clone()).unwrap();
+        let m = store.model("mlp_tabular").unwrap().clone();
+        let weights = store.load_weights(&m).unwrap();
+        let err = launch(
+            InstanceConfig {
+                name: "svc".into(),
+                manifest: m,
+                format: "no-such-format".into(),
+                system: &ONNXRT_LIKE,
+                frontend: Frontend::Rest,
+                max_queue: 8,
+            },
+            device.clone(),
+            &engine,
+            &weights,
+            &store.dir,
+            clock,
+        );
+        assert!(err.is_err());
+        assert_eq!(device.memory_used_mib(), 0.0, "failed launch must not hold memory");
         engine.shutdown();
     }
 }

@@ -2,14 +2,16 @@
 //! batching policies, frontends and instances (the TF-Serving / Triton /
 //! ONNX-Runtime + Docker substitute).
 
+pub mod admission;
 pub mod batching;
 pub mod container;
 pub mod frontend;
 pub mod instance;
 pub mod systems;
 
+pub use admission::{AdmissionGate, BreakerState, CircuitBreaker, RetryPolicy};
 pub use batching::BatchPolicy;
 pub use container::{Container, ContainerState, ContainerUsage};
 pub use frontend::Frontend;
-pub use instance::{launch, InferenceReply, InstanceConfig, RequestTiming, ServiceHandle};
+pub use instance::{launch, InferenceReply, InstanceConfig, RequestTiming, ServiceHandle, ServingError};
 pub use systems::{by_name, ServingSystem, ALL_SYSTEMS, ONNXRT_LIKE, TFS_LIKE, TRITON_LIKE};

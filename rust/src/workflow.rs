@@ -6,8 +6,10 @@
 //! "weeks to minutes" claim, measured per stage in [`PublishReport`]).
 
 use std::path::Path;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -15,13 +17,13 @@ use crate::api::jobs::JobRegistry;
 use crate::cluster::Cluster;
 use crate::controller::{Controller, IdlePolicy, Placement, QosFeed, SloGuard};
 use crate::converter::{Converter, ConversionReport};
-use crate::dispatcher::{DeploymentSpec, Dispatcher};
+use crate::dispatcher::{DeploymentSpec, Dispatcher, ServiceGroup};
 use crate::housekeeper::Housekeeper;
 use crate::modelhub::ModelHub;
 use crate::monitor::{Monitor, NodeExporter};
 use crate::profiler::Profiler;
 use crate::runtime::ArtifactStore;
-use crate::serving::{Frontend, ServiceHandle, ALL_SYSTEMS};
+use crate::serving::{Frontend, ALL_SYSTEMS};
 use crate::storage::{Database, DatabaseOptions};
 use crate::util::clock::SharedClock;
 
@@ -56,6 +58,10 @@ pub struct PlatformConfig {
     /// docs/STORAGE.md). `Database::sync()` / `tick_wals()` are the
     /// commit-point hooks for relaxed policies.
     pub db: DatabaseOptions,
+    /// Period of the in-process WAL ticker thread that drives
+    /// [`Database::tick_wals`] for `SyncPolicy::IntervalMs` collections.
+    /// Only spawned for durable (data-dir) databases; `0` disables it.
+    pub wal_tick_ms: u64,
 }
 
 impl Default for PlatformConfig {
@@ -66,6 +72,7 @@ impl Default for PlatformConfig {
             p99_slo_ms: 200.0,
             profiler_iters: 8,
             db: DatabaseOptions::default(),
+            wal_tick_ms: 25,
         }
     }
 }
@@ -87,6 +94,9 @@ pub struct Platform {
     /// Async job registry behind the v1 API's 202-accepted resources.
     pub jobs: Arc<JobRegistry>,
     pub config: PlatformConfig,
+    /// Background thread driving `IntervalMs` WAL syncs (durable dbs
+    /// only); stop flag + handle, joined on shutdown.
+    wal_ticker: Mutex<Option<(Arc<AtomicBool>, JoinHandle<()>)>>,
 }
 
 impl Platform {
@@ -119,6 +129,30 @@ impl Platform {
             config.idle.clone(),
             SloGuard::new(config.p99_slo_ms, 5_000.0),
         ));
+        // the group-commit tail of IntervalMs collections must not wait
+        // for the next foreground write to become durable — a ticker
+        // thread bounds the sync lag to ~wal_tick_ms
+        let wal_ticker = Mutex::new(if data_dir.is_some() && config.wal_tick_ms > 0 {
+            let stop = Arc::new(AtomicBool::new(false));
+            let (flag, db2, tick_ms) = (stop.clone(), db.clone(), config.wal_tick_ms);
+            let handle = std::thread::Builder::new()
+                .name("mlci-wal-tick".into())
+                .spawn(move || {
+                    while !flag.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(tick_ms));
+                        if flag.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        if let Err(e) = db2.tick_wals() {
+                            crate::log_warn!("platform", "wal tick failed: {e}");
+                        }
+                    }
+                })
+                .expect("spawn wal ticker thread");
+            Some((stop, handle))
+        } else {
+            None
+        });
         Ok(Platform {
             db,
             hub,
@@ -134,6 +168,7 @@ impl Platform {
             controller,
             jobs,
             config,
+            wal_ticker,
         })
     }
 
@@ -209,8 +244,9 @@ impl Platform {
         })
     }
 
-    /// Deploy a published model by name.
-    pub fn deploy_by_name(&self, name: &str, spec: &DeploymentSpec) -> Result<ServiceHandle> {
+    /// Deploy a published model by name. Returns the replica group
+    /// (derefs to its primary [`crate::serving::ServiceHandle`]).
+    pub fn deploy_by_name(&self, name: &str, spec: &DeploymentSpec) -> Result<Arc<ServiceGroup>> {
         let doc = self
             .hub
             .find_by_name(name)?
@@ -225,6 +261,12 @@ impl Platform {
         self.jobs.shutdown();
         self.dispatcher.stop_all();
         self.cluster.shutdown();
+        // stop the WAL ticker before the final sync so its last tick
+        // cannot race the commit point below
+        if let Some((stop, handle)) = self.wal_ticker.lock().unwrap().take() {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
         // flush the group-commit tail: under a relaxed WAL SyncPolicy
         // (EveryN / IntervalMs) acknowledged writes may still be
         // unsynced — a clean exit is a commit point
@@ -296,6 +338,50 @@ profile: true
         let rec = p.controller.recommend_deployment(&report.model_id, 1e9).unwrap();
         assert!(rec.is_some());
         p.shutdown();
+    }
+
+    #[test]
+    fn wal_ticker_drives_interval_sync_policy() {
+        use crate::storage::{SyncPolicy, WalOptions};
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let data = std::env::temp_dir()
+            .join(format!("mlci-wal-tick-{}", crate::util::idgen::object_id()));
+        // IntervalMs(0) never syncs on the write path: every observed
+        // fsync below must have come from the ticker thread
+        let config = PlatformConfig {
+            auto_batches: Some(vec![1]),
+            profiler_iters: 1,
+            wal_tick_ms: 5,
+            db: DatabaseOptions::default().with_collection(
+                "models",
+                WalOptions { sync: SyncPolicy::IntervalMs(0), ..WalOptions::default() },
+            ),
+            ..Default::default()
+        };
+        let p = Platform::init(&dir, Some(&data), wall(), config).unwrap();
+        let yaml = YAML
+            .replace("wf-mlp", "wf-ticker")
+            .replace("convert: true", "convert: false")
+            .replace("profile: true", "profile: false");
+        p.publish(&yaml, b"weights").unwrap();
+        let mut syncs = 0;
+        for _ in 0..200 {
+            syncs = p
+                .db
+                .with_collection("models", |c| c.wal_io_stats().map(|s| s.syncs).unwrap_or(0))
+                .unwrap();
+            if syncs > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(syncs > 0, "ticker thread never synced the models WAL");
+        p.shutdown();
+        let _ = std::fs::remove_dir_all(&data);
     }
 
     #[test]

@@ -4,16 +4,29 @@
 # bit-rot. Run from anywhere; operates on the rust/ crate.
 #
 # Honors MLCI_FORCE_SCALAR=1 (pins the JSON scan path to the scalar
-# oracle engine) and MLCI_WAL_SYNC (onseal|always|every:N|interval:MS —
+# oracle engine), MLCI_WAL_SYNC (onseal|always|every:N|interval:MS —
 # overrides the default WAL durability policy, so the `always` leg runs
-# the whole suite on the strictest fsync path); CI runs the whole
-# script once per mode.
+# the whole suite on the strictest fsync path), and MLCI_FAULTS
+# (slow/fail/stall plans on simulated devices — the fault leg builds,
+# then runs only the serving stress suite, whose robustness scenarios
+# must hold under injected faults while exact-correctness tests
+# self-skip); CI runs the whole script once per mode.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
 echo "== tier1: MLCI_FORCE_SCALAR=${MLCI_FORCE_SCALAR:-<unset>} (scan engine escape hatch) =="
 echo "== tier1: MLCI_WAL_SYNC=${MLCI_WAL_SYNC:-<unset>} (WAL durability policy override) =="
+echo "== tier1: MLCI_FAULTS=${MLCI_FAULTS:-<unset>} (fault-injection plans) =="
+
+if [[ -n "${MLCI_FAULTS:-}" ]]; then
+  echo "== tier1 (faults leg): cargo build --release =="
+  cargo build --release
+  echo "== tier1 (faults leg): cargo test -q --test serving_stress =="
+  cargo test -q --test serving_stress
+  echo "== tier1 (faults leg): OK =="
+  exit 0
+fi
 
 echo "== tier1: cargo build --release =="
 cargo build --release
