@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use mlmodelci::cluster::Cluster;
-use mlmodelci::dispatcher::{DeploymentSpec, Dispatcher};
+use mlmodelci::dispatcher::{BatchingMode, DeploymentSpec, Dispatcher};
 use mlmodelci::modelhub::{ModelHub, ModelInfo, ModelStatus};
 use mlmodelci::profiler::{closed_loop, example_input, open_loop};
 use mlmodelci::runtime::ArtifactStore;
@@ -78,6 +78,7 @@ fn main() -> anyhow::Result<()> {
                     frontend,
                     max_queue: 512,
                     replicas: 1,
+                    ..DeploymentSpec::default()
                 },
             )?;
             let svc = group.primary();
@@ -138,6 +139,7 @@ fn main() -> anyhow::Result<()> {
             frontend: Frontend::Grpc,
             max_queue: 32,
             replicas: 1,
+            ..DeploymentSpec::default()
         },
     )?;
     let svc = group.primary();
@@ -177,6 +179,69 @@ fn main() -> anyhow::Result<()> {
     sweep_table.print();
     group.stop();
 
+    // === static vs continuous batching under the same open-loop load ===
+    //
+    // Same model, device and queue bound; the only variable is batch
+    // formation: the system's static policy vs the curve-driven
+    // continuous batcher (curve falls back to the analytic perf model
+    // when the model was never profiled on this combination).
+    println!("\n=== static vs continuous batching (triton-like, queue=32) ===\n");
+    let mut svc_table = Table::new(&[
+        "mode", "offered(x)", "offered(r/s)", "goodput(r/s)", "shed rate", "p50(ms)", "p99(ms)",
+    ]);
+    let mut svc_rows = Vec::new();
+    for (mode, policy) in
+        [("static", BatchingMode::System), ("continuous", BatchingMode::Continuous)]
+    {
+        let group = dispatcher.deploy(
+            &hub,
+            &id,
+            &DeploymentSpec {
+                device: Some("node1/t40".into()),
+                system: "triton-like".to_string(),
+                format: Some("reference".into()),
+                frontend: Frontend::Grpc,
+                max_queue: 32,
+                replicas: 1,
+                policy,
+                ..DeploymentSpec::default()
+            },
+        )?;
+        let svc = group.primary();
+        for mult in [0.5, 1.0, 2.0, 4.0] {
+            let rate = capacity_rps * mult;
+            let r = open_loop(svc, &input, rate, window_ms, 42, clock.as_ref());
+            let offered = r.completed + r.rejected + r.errors;
+            let shed_rate = if offered > 0 { r.rejected as f64 / offered as f64 } else { 0.0 };
+            let mut lat = r.latencies_ms.clone();
+            svc_table.row(&[
+                mode.to_string(),
+                format!("{mult:.1}"),
+                format!("{rate:.1}"),
+                format!("{:.1}", r.throughput_rps()),
+                format!("{shed_rate:.3}"),
+                format!("{:.2}", lat.p50()),
+                format!("{:.2}", lat.p99()),
+            ]);
+            svc_rows.push(
+                Json::obj()
+                    .with("mode", mode)
+                    .with("offered_multiplier", mult)
+                    .with("offered_rps", rate)
+                    .with("goodput_rps", r.throughput_rps())
+                    .with("shed_rate", shed_rate)
+                    .with("p50_ms", lat.p50())
+                    .with("p99_ms", lat.p99())
+                    .with("completed", r.completed)
+                    .with("rejected", r.rejected)
+                    .with("errors", r.errors),
+            );
+        }
+        group.stop();
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    }
+    svc_table.print();
+
     // machine-readable report (schema mirrored by the committed
     // placeholder BENCH_serving.json)
     let mut report = Json::obj()
@@ -187,6 +252,7 @@ fn main() -> anyhow::Result<()> {
         .with("window_ms", window_ms)
         .with("capacity_rps", capacity_rps);
     report.set("overload_sweep", Json::Arr(sweep_rows));
+    report.set("static_vs_continuous", Json::Arr(svc_rows));
     std::fs::write(&out_path, report.to_pretty()).expect("write bench report");
     println!("\nreport written to {out_path}");
 

@@ -9,6 +9,7 @@
 //! mlmodelci list     [--status profiled]
 //! mlmodelci profile  --name NAME
 //! mlmodelci deploy   --name NAME [--system triton-like] [--device ID] [--replicas N]
+//!                    [--policy system|continuous|nobatch] [--max-batch N] [--target-p99 MS]
 //! mlmodelci recommend --name NAME [--p99 50]
 //! mlmodelci delete   --name NAME
 //! ```
@@ -60,7 +61,8 @@ pub fn usage() -> String {
      \x20 publish    register + convert + profile a model (--yaml, --weights)\n\
      \x20 list       list models (--status, --task, --name, --limit, --cursor)\n\
      \x20 profile    (re)profile a model (--name)\n\
-     \x20 deploy     deploy a model as MLaaS (--name, --system, --device, --format, --replicas)\n\
+     \x20 deploy     deploy a model as MLaaS (--name, --system, --device, --format, --replicas,\n\
+     \x20            --policy system|continuous|nobatch, --max-batch, --target-p99, --max-queue)\n\
      \x20 recommend  cost-effective deployment under an SLO (--name, --p99)\n\
      \x20 delete     remove a model (--name)\n\
      \x20 demo       run the end-to-end demo pipeline\n\

@@ -38,7 +38,7 @@
 use std::sync::{Arc, OnceLock};
 
 use crate::controller::summarize_events;
-use crate::dispatcher::DeploymentSpec;
+use crate::dispatcher::{BatchingMode, DeploymentSpec};
 use crate::profiler::example_input;
 use crate::runtime::{DType, Tensor};
 use crate::serving::Frontend;
@@ -378,6 +378,28 @@ fn h_deploy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<
                 "replicas must be between 1 and 8, got {replicas}"
             )));
         }
+        let policy = match field("policy") {
+            Some(name) => BatchingMode::from_str(&name).ok_or_else(|| {
+                ApiError::validation(format!(
+                    "unknown batching policy '{name}' (system|continuous|nobatch)"
+                ))
+            })?,
+            None => BatchingMode::System,
+        };
+        let max_batch = match root.get("max_batch") {
+            Some(v) => match v.as_usize() {
+                Some(n) if n >= 1 => Some(n),
+                _ => return Err(ApiError::validation("max_batch must be an integer >= 1")),
+            },
+            None => None,
+        };
+        let target_p99_ms = match root.get("target_p99_ms") {
+            Some(v) => match v.as_f64() {
+                Some(t) if t > 0.0 => Some(t),
+                _ => return Err(ApiError::validation("target_p99_ms must be a positive number")),
+            },
+            None => None,
+        };
         let spec = DeploymentSpec {
             device: field("device"),
             system: field("system").unwrap_or_else(|| "triton-like".to_string()),
@@ -385,6 +407,9 @@ fn h_deploy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<
             frontend,
             max_queue: root.get("max_queue").and_then(|v| v.as_usize()).unwrap_or(256),
             replicas,
+            max_batch,
+            target_p99_ms,
+            policy: policy.clone(),
         };
         let svc = platform.dispatcher.deploy(&platform.hub, id, &spec)?;
         Ok(Response::json(
@@ -395,7 +420,8 @@ fn h_deploy(platform: &Arc<Platform>, params: &Params, req: &Request) -> Result<
                 .with("system", svc.system_name)
                 .with("format", svc.format.as_str())
                 .with("container", svc.container.id.as_str())
-                .with("replicas", svc.replica_count()),
+                .with("replicas", svc.replica_count())
+                .with("policy", policy.as_str()),
         ))
     })
 }

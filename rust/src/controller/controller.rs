@@ -233,12 +233,21 @@ impl Controller {
     pub fn flush_results(&self) -> Result<usize> {
         let rows: Vec<(String, ProfileRow)> = self.results.lock().unwrap().drain(..).collect();
         let n = rows.len();
+        // group per model: one record_to_hub call folds the model's
+        // whole batch sweep into its stored latency curves at once
         let mut touched: Vec<String> = Vec::new();
+        let mut grouped: Vec<(String, Vec<ProfileRow>)> = Vec::new();
         for (model_id, row) in rows {
-            record_to_hub(&self.hub, &model_id, &[row])?;
+            match grouped.iter_mut().find(|(id, _)| *id == model_id) {
+                Some((_, v)) => v.push(row),
+                None => grouped.push((model_id.clone(), vec![row])),
+            }
             if !touched.contains(&model_id) {
                 touched.push(model_id);
             }
+        }
+        for (model_id, model_rows) in grouped {
+            record_to_hub(&self.hub, &model_id, &model_rows)?;
         }
         if self.pending_jobs() == 0 {
             for model_id in touched {

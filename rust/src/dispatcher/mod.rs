@@ -20,10 +20,45 @@ use crate::modelhub::{ModelHub, ModelStatus};
 use crate::runtime::ArtifactStore;
 use crate::serving::instance::{launch, InstanceConfig, ServiceHandle};
 use crate::serving::systems::{by_name, ServingSystem};
-use crate::serving::Frontend;
+use crate::serving::{BatchPolicy, BatcherConfig, Frontend, LatencyCurve};
 use crate::util::json::Json;
 
 pub use group::{GroupConfig, GroupStats, ServiceGroup};
+
+/// How a deployment forms batches.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchingMode {
+    /// The serving system's native static `BatchPolicy` (the default —
+    /// preserves every pre-curve deployment's behavior).
+    System,
+    /// Continuous batching over the profiled latency curve (analytic
+    /// fallback when the model was never profiled on the target
+    /// combination): launch sizes by marginal-cost analysis, deadline-
+    /// and target-aware holds.
+    Continuous,
+    /// An explicit static policy overriding the system's native one.
+    Static(BatchPolicy),
+}
+
+impl BatchingMode {
+    /// Parse the user-facing policy name (deploy route / CLI).
+    pub fn from_str(s: &str) -> Option<BatchingMode> {
+        Some(match s {
+            "system" => BatchingMode::System,
+            "continuous" => BatchingMode::Continuous,
+            "nobatch" | "no-batch" => BatchingMode::Static(BatchPolicy::NoBatch),
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BatchingMode::System => "system",
+            BatchingMode::Continuous => "continuous",
+            BatchingMode::Static(_) => "static",
+        }
+    }
+}
 
 /// User-facing deployment request.
 #[derive(Debug, Clone)]
@@ -40,6 +75,15 @@ pub struct DeploymentSpec {
     /// Replica instances behind the service name. Automatic placement
     /// spreads them over distinct devices when the cluster has room.
     pub replicas: usize,
+    /// Largest batch to launch. None derives it from the policy — for
+    /// `Continuous`, the stored latency curve's peak-throughput batch.
+    pub max_batch: Option<usize>,
+    /// Soft p99 target (ms): the continuous batcher never holds a
+    /// request past the point where hold + modeled execution would
+    /// exceed it.
+    pub target_p99_ms: Option<f64>,
+    /// Batch-formation mode.
+    pub policy: BatchingMode,
 }
 
 impl Default for DeploymentSpec {
@@ -51,6 +95,9 @@ impl Default for DeploymentSpec {
             frontend: Frontend::Grpc,
             max_queue: 256,
             replicas: 1,
+            max_batch: None,
+            target_p99_ms: None,
+            policy: BatchingMode::System,
         }
     }
 }
@@ -79,8 +126,7 @@ impl Dispatcher {
     /// fits, preferring devices no earlier replica of this deployment
     /// already occupies (falls back to co-location when the cluster is
     /// smaller than the replica count).
-    fn place(&self, system: &'static ServingSystem, workload: &crate::cluster::WorkloadCost, used: &[String], name: &str) -> Result<Arc<Device>> {
-        let max_batch = system.policy.max_batch();
+    fn place(&self, max_batch: usize, workload: &crate::cluster::WorkloadCost, used: &[String], name: &str) -> Result<Arc<Device>> {
         let needed = |d: &Arc<Device>| d.spec.memory_footprint_mib(workload, max_batch);
         let fits =
             |d: &&Arc<Device>| d.memory_used_mib() + needed(d) <= d.memory_total_mib();
@@ -99,6 +145,64 @@ impl Dispatcher {
             .or_else(|| pick(true, false))
             .or_else(|| pick(false, false))
             .ok_or_else(|| anyhow!("no device has room for {name}"))
+    }
+
+    /// Resolve the batch-formation configuration for one replica.
+    /// `None` = the instance derives the degenerate static config from
+    /// the system policy itself (byte-compatible with pre-curve
+    /// deployments). `Continuous` reads the profiled latency curve for
+    /// the (device, format, system) combination from the hub — the
+    /// profiler→deployment loop the paper describes — and falls back to
+    /// the analytic perf-model curve for never-profiled combinations.
+    #[allow(clippy::too_many_arguments)]
+    fn batcher_config(
+        &self,
+        hub: &ModelHub,
+        model_id: &str,
+        spec: &DeploymentSpec,
+        system: &'static ServingSystem,
+        device: &Arc<Device>,
+        format: &str,
+        available: &[usize],
+        workload: &crate::cluster::WorkloadCost,
+    ) -> Result<Option<BatcherConfig>> {
+        match &spec.policy {
+            BatchingMode::System => {
+                if spec.max_batch.is_none() && spec.target_p99_ms.is_none() {
+                    return Ok(None);
+                }
+                let mut cfg = BatcherConfig::from_policy(&system.policy);
+                if let Some(mb) = spec.max_batch {
+                    cfg.max_batch = mb;
+                }
+                cfg.target_p99_ms = spec.target_p99_ms;
+                Ok(Some(cfg))
+            }
+            BatchingMode::Static(p) => {
+                let mut cfg = BatcherConfig::from_policy(p);
+                if let Some(mb) = spec.max_batch {
+                    cfg.max_batch = mb;
+                }
+                cfg.target_p99_ms = spec.target_p99_ms;
+                Ok(Some(cfg))
+            }
+            BatchingMode::Continuous => {
+                let curve = match hub.latency_curve(model_id, &device.id, format, system.name)? {
+                    Some(c) => c,
+                    None => LatencyCurve::from_perf_model(&device.spec, workload, available)?,
+                };
+                let max_batch = spec.max_batch.unwrap_or_else(|| curve.peak_throughput_batch());
+                // hold at most as long as the system's static former
+                // would have — continuous only ever launches earlier
+                let launch_timeout_ms = system.policy.worst_case_wait_ms();
+                Ok(Some(BatcherConfig::continuous(
+                    curve,
+                    max_batch,
+                    launch_timeout_ms,
+                    spec.target_p99_ms,
+                )))
+            }
+        }
     }
 
     /// Deploy a registered (and ideally converted) model as a service.
@@ -130,9 +234,25 @@ impl Dispatcher {
         if replicas > 8 {
             bail!("replica count {replicas} exceeds the per-service limit of 8");
         }
+        if spec.max_batch == Some(0) {
+            bail!("max_batch must be at least 1");
+        }
+        if let Some(t) = spec.target_p99_ms {
+            if !(t > 0.0 && t.is_finite()) {
+                bail!("target_p99_ms must be a positive number, got {t}");
+            }
+        }
 
         let workload = manifest.sim.workload(&format);
         let weights = self.store.load_weights(&manifest)?;
+        let available = manifest.batches(&format);
+        // placement sizes memory by the largest batch the deployment
+        // may launch (spec override, else policy- or artifact-derived)
+        let place_batch = spec.max_batch.unwrap_or_else(|| match &spec.policy {
+            BatchingMode::System => system.policy.max_batch(),
+            BatchingMode::Static(p) => p.max_batch(),
+            BatchingMode::Continuous => available.iter().copied().max().unwrap_or(1),
+        });
 
         // launch all replicas or none: a partial deployment is stopped
         // (and its device memory freed via the launch rollback path)
@@ -143,8 +263,12 @@ impl Dispatcher {
             let result = (|| -> Result<ServiceHandle> {
                 let device = match &spec.device {
                     Some(id) => self.cluster.device(id)?.clone(),
-                    None => self.place(system, &workload, &used, &name)?,
+                    None => self.place(place_batch, &workload, &used, &name)?,
                 };
+                // the batcher config is per-replica: a profiled curve is
+                // keyed by the device the replica actually landed on
+                let batcher =
+                    self.batcher_config(hub, model_id, spec, system, &device, &format, &available, &workload)?;
                 let engine = self.cluster.engine_for(&device.id)?;
                 launch(
                     InstanceConfig {
@@ -154,6 +278,7 @@ impl Dispatcher {
                         system,
                         frontend: spec.frontend,
                         max_queue: spec.max_queue,
+                        batcher,
                     },
                     device.clone(),
                     engine,
@@ -197,6 +322,7 @@ impl Dispatcher {
             .with("frontend", spec.frontend.as_str())
             .with("container", handles[0].container.id.as_str())
             .with("replicas", replicas)
+            .with("policy", spec.policy.as_str())
             .with("containers", Json::Arr(containers));
         if let Err(e) = hub.push_to_array(model_id, "deployments", record) {
             for h in &handles {
@@ -370,6 +496,42 @@ mod tests {
                 }
             )
             .is_err());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn continuous_deploy_and_knob_validation() {
+        let Some((cluster, dispatcher, hub, id)) = setup() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // bad knobs are rejected before anything launches
+        assert!(dispatcher
+            .deploy(&hub, &id, &DeploymentSpec { max_batch: Some(0), ..Default::default() })
+            .is_err());
+        assert!(dispatcher
+            .deploy(&hub, &id, &DeploymentSpec { target_p99_ms: Some(-1.0), ..Default::default() })
+            .is_err());
+        assert!(dispatcher.services().is_empty());
+        // continuous deploy without a profiled curve rides the analytic
+        // fallback; the handle exposes the curve behind its estimates
+        let svc = dispatcher
+            .deploy(
+                &hub,
+                &id,
+                &DeploymentSpec {
+                    policy: BatchingMode::Continuous,
+                    target_p99_ms: Some(500.0),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert!(svc.batch_latency_ms() > 0.0);
+        assert!(svc.latency_curve().max_batch() >= 1);
+        let doc = hub.get(&id).unwrap();
+        let dep = &doc.get("deployments").unwrap().as_arr().unwrap()[0];
+        assert_eq!(dep.get("policy").and_then(Json::as_str), Some("continuous"));
+        dispatcher.stop_all();
         cluster.shutdown();
     }
 

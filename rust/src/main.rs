@@ -9,7 +9,7 @@ use mlmodelci::api::cli::{parse_args, usage, Args};
 use mlmodelci::api::features::feature_matrix;
 use mlmodelci::api::http::HttpServer;
 use mlmodelci::api::rest::route;
-use mlmodelci::dispatcher::DeploymentSpec;
+use mlmodelci::dispatcher::{BatchingMode, DeploymentSpec};
 use mlmodelci::profiler::render_table;
 use mlmodelci::serving::Frontend;
 use mlmodelci::util::clock::wall;
@@ -134,13 +134,29 @@ fn run(args: &Args) -> Result<()> {
         "deploy" => {
             let p = platform(args)?;
             let name = args.require("name").map_err(|e| anyhow!(e))?;
+            let policy = match args.get("policy") {
+                Some(name) => BatchingMode::from_str(name).ok_or_else(|| {
+                    anyhow!("unknown batching policy '{name}' (system|continuous|nobatch)")
+                })?,
+                None => BatchingMode::System,
+            };
+            let target_p99_ms = match args.get("target-p99") {
+                Some(raw) => Some(
+                    raw.parse::<f64>()
+                        .map_err(|_| anyhow!("--target-p99 must be a number, got '{raw}'"))?,
+                ),
+                None => None,
+            };
             let spec = DeploymentSpec {
                 device: args.get("device").map(str::to_string),
                 system: args.get("system").unwrap_or("triton-like").to_string(),
                 format: args.get("format").map(str::to_string),
                 frontend: args.get("frontend").and_then(Frontend::from_str).unwrap_or(Frontend::Grpc),
-                max_queue: 256,
+                max_queue: args.get_usize("max-queue").unwrap_or(256),
                 replicas: args.get_usize("replicas").unwrap_or(1),
+                max_batch: args.get_usize("max-batch"),
+                target_p99_ms,
+                policy,
             };
             let svc = p.deploy_by_name(name, &spec)?;
             println!(

@@ -313,6 +313,33 @@ impl ModelHub {
         Ok(())
     }
 
+    /// Retrieve the stored latency curve for one (device, format,
+    /// serving system) combination, if the profiler has recorded one —
+    /// what the dispatcher reads at deploy time to configure continuous
+    /// batching. `Ok(None)` = model exists but no curve was profiled
+    /// for this combination (callers fall back to the analytic curve).
+    pub fn latency_curve(
+        &self,
+        id: &str,
+        device: &str,
+        format: &str,
+        system: &str,
+    ) -> Result<Option<crate::serving::LatencyCurve>> {
+        let doc = self.get(id)?;
+        let Some(entries) = doc.get("latency_curves").and_then(Json::as_arr) else {
+            return Ok(None);
+        };
+        for e in entries {
+            if e.get("device").and_then(Json::as_str) == Some(device)
+                && e.get("format").and_then(Json::as_str) == Some(format)
+                && e.get("serving_system").and_then(Json::as_str) == Some(system)
+            {
+                return Ok(Some(crate::serving::LatencyCurve::from_json(e)?));
+            }
+        }
+        Ok(None)
+    }
+
     /// Load the stored weight bytes of a model.
     pub fn load_weights(&self, id: &str) -> Result<Vec<u8>> {
         let blob = self

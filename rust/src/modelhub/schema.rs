@@ -164,6 +164,15 @@ pub fn profile_record(
         .with("utilization", si.utilization)
 }
 
+/// One latency curve stored on the document (`latency_curves` array):
+/// the columnar curve tagged with the combination it was measured on.
+pub fn latency_curve_record(device: &str, format: &str, serving_system: &str, curve: Json) -> Json {
+    curve
+        .with("device", device)
+        .with("format", format)
+        .with("serving_system", serving_system)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

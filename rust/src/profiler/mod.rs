@@ -8,4 +8,7 @@ pub mod report;
 
 pub use client::{closed_loop, example_input, open_loop, LoadResult};
 pub use profiler::{Combination, ProfileRow, Profiler};
-pub use report::{recommend, record_to_hub, render_table, RecommendedDeployment};
+pub use report::{
+    latency_curves, recommend, record_curves_to_hub, record_to_hub, render_table,
+    RecommendedDeployment,
+};

@@ -1,8 +1,9 @@
 //! Profile reports: aggregation + rendering of profiling sweeps, and
 //! persistence onto model documents (the "comparison report" of §4.2).
 
-use crate::modelhub::schema::profile_record;
+use crate::modelhub::schema::{latency_curve_record, profile_record};
 use crate::modelhub::ModelHub;
+use crate::serving::{CurvePoint, LatencyCurve};
 use crate::util::benchkit::Table;
 use crate::util::json::Json;
 
@@ -34,7 +35,8 @@ pub fn render_table(rows: &[ProfileRow]) -> String {
     t.render()
 }
 
-/// Persist rows onto the model document (`profiles` array).
+/// Persist rows onto the model document (`profiles` array) and fold
+/// their batch sweep into the stored `latency_curves`.
 pub fn record_to_hub(hub: &ModelHub, model_id: &str, rows: &[ProfileRow]) -> anyhow::Result<()> {
     for r in rows {
         hub.push_to_array(
@@ -50,7 +52,84 @@ pub fn record_to_hub(hub: &ModelHub, model_id: &str, rows: &[ProfileRow]) -> any
             ),
         )?;
     }
-    Ok(())
+    record_curves_to_hub(hub, model_id, rows)
+}
+
+/// Distill a sweep's rows into one latency curve per (device, format,
+/// serving system) combination — the artifact deployment consumes.
+/// Frontends are folded conservatively: where the same batch size was
+/// measured through several frontends, the slowest latency and the
+/// lowest throughput win, so drain estimates built on the curve never
+/// promise more than the worst measured path delivers.
+pub fn latency_curves(rows: &[ProfileRow]) -> Vec<(String, String, String, LatencyCurve)> {
+    let mut grouped: Vec<(String, String, String, Vec<CurvePoint>)> = Vec::new();
+    for r in rows {
+        let point = CurvePoint {
+            batch: r.combo.batch,
+            p50_ms: r.indicators.p50_latency_ms,
+            p99_ms: r.indicators.p99_latency_ms,
+            throughput_rps: r.indicators.peak_throughput_rps,
+        };
+        let group = match grouped.iter_mut().find(|(d, f, s, _)| {
+            d == &r.combo.device && f == &r.combo.format && s == r.combo.system.name
+        }) {
+            Some((_, _, _, points)) => points,
+            None => {
+                grouped.push((
+                    r.combo.device.clone(),
+                    r.combo.format.clone(),
+                    r.combo.system.name.to_string(),
+                    Vec::new(),
+                ));
+                &mut grouped.last_mut().unwrap().3
+            }
+        };
+        match group.iter_mut().find(|p| p.batch == point.batch) {
+            Some(p) => {
+                p.p50_ms = p.p50_ms.max(point.p50_ms);
+                p.p99_ms = p.p99_ms.max(point.p99_ms);
+                p.throughput_rps = p.throughput_rps.min(point.throughput_rps);
+            }
+            None => group.push(point),
+        }
+    }
+    grouped
+        .into_iter()
+        .filter_map(|(d, f, s, points)| LatencyCurve::new(points).ok().map(|c| (d, f, s, c)))
+        .collect()
+}
+
+/// Merge the sweep's curves into the document's `latency_curves` array.
+/// Entries are keyed by (device, format, serving_system); within an
+/// entry, points merge by batch size with the new sweep winning — so
+/// repeated and partial sweeps *refine* the stored curve instead of
+/// overwriting it point-set-for-point-set.
+pub fn record_curves_to_hub(hub: &ModelHub, model_id: &str, rows: &[ProfileRow]) -> anyhow::Result<()> {
+    let fresh = latency_curves(rows);
+    if fresh.is_empty() {
+        return Ok(());
+    }
+    let doc = hub.get(model_id)?;
+    let mut entries: Vec<Json> =
+        doc.get("latency_curves").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default();
+    for (device, format, system, curve) in fresh {
+        let slot = entries.iter_mut().find(|e| {
+            e.get("device").and_then(Json::as_str) == Some(device.as_str())
+                && e.get("format").and_then(Json::as_str) == Some(format.as_str())
+                && e.get("serving_system").and_then(Json::as_str) == Some(system.as_str())
+        });
+        match slot {
+            Some(e) => {
+                let merged = match LatencyCurve::from_json(e) {
+                    Ok(stored) => stored.merge(&curve),
+                    Err(_) => curve, // unreadable stored entry: replace
+                };
+                *e = latency_curve_record(&device, &format, &system, merged.to_json());
+            }
+            None => entries.push(latency_curve_record(&device, &format, &system, curve.to_json())),
+        }
+    }
+    hub.update_fields(model_id, &Json::obj().with("latency_curves", Json::Arr(entries)))
 }
 
 /// The cost-effectiveness recommendation (§4.2: "help build a more
@@ -190,6 +269,87 @@ mod tests {
         let profiles = doc.get("profiles").unwrap().as_arr().unwrap();
         assert_eq!(profiles.len(), rows.len());
         assert!(profiles[0].get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        // the batch sweep also lands as one curve per (device, format,
+        // system): two devices were swept here
+        let curves = doc.get("latency_curves").unwrap().as_arr().unwrap();
+        assert_eq!(curves.len(), 2);
+        let stored = hub
+            .latency_curve(&id, "node1/t40", "optimized", "triton-like")
+            .unwrap()
+            .expect("curve stored for the swept combination");
+        assert_eq!(stored.points().len(), 2, "batches 1 and 8");
         cluster.shutdown();
+    }
+
+    fn synth_row(device: &str, batch: usize, p99: f64, thr: f64, frontend: Frontend) -> ProfileRow {
+        ProfileRow {
+            combo: Combination {
+                model: "m".into(),
+                format: "reference".into(),
+                batch,
+                device: device.into(),
+                system: &TRITON_LIKE,
+                frontend,
+            },
+            indicators: crate::util::stats::SixIndicators {
+                peak_throughput_rps: thr,
+                p50_latency_ms: p99 * 0.8,
+                p95_latency_ms: p99 * 0.95,
+                p99_latency_ms: p99,
+                memory_mib: 100.0,
+                utilization: 0.5,
+            },
+        }
+    }
+
+    /// Grouping, the conservative frontend fold, and hub persistence
+    /// need no compiled artifacts — this one always runs.
+    #[test]
+    fn curves_fold_frontends_and_merge_partial_sweeps() {
+        use crate::modelhub::{ModelHub, ModelInfo};
+        use crate::storage::Database;
+        let rows = vec![
+            synth_row("node1/t40", 1, 2.0, 400.0, Frontend::Grpc),
+            synth_row("node1/t40", 8, 6.0, 900.0, Frontend::Grpc),
+            synth_row("node1/t40", 8, 7.5, 850.0, Frontend::Rest),
+            synth_row("node2/a1001", 1, 1.0, 800.0, Frontend::Grpc),
+        ];
+        let curves = latency_curves(&rows);
+        assert_eq!(curves.len(), 2, "one curve per device here");
+        let (_, _, _, t40) = curves.iter().find(|(d, _, _, _)| d == "node1/t40").unwrap();
+        assert_eq!(t40.p99_ms(8), 7.5, "slowest frontend wins the fold");
+        assert_eq!(t40.throughput_rps(8), 850.0, "and the lowest throughput");
+
+        let hub = ModelHub::new(Arc::new(Database::in_memory()), wall()).unwrap();
+        let id = hub
+            .create(
+                &ModelInfo {
+                    name: "m".into(),
+                    family: "mlp_tabular".into(),
+                    framework: "jax".into(),
+                    task: "t".into(),
+                    dataset: "d".into(),
+                    accuracy: 0.5,
+                    convert: true,
+                    profile: true,
+                },
+                b"w",
+            )
+            .unwrap();
+        record_curves_to_hub(&hub, &id, &rows).unwrap();
+        let stored =
+            hub.latency_curve(&id, "node1/t40", "reference", "triton-like").unwrap().unwrap();
+        assert_eq!(stored.p99_ms(8), 7.5);
+        assert!(
+            hub.latency_curve(&id, "ghost", "reference", "triton-like").unwrap().is_none(),
+            "unknown combination has no curve"
+        );
+        // a later partial sweep refines the stored curve in place
+        let more = vec![synth_row("node1/t40", 16, 12.0, 1000.0, Frontend::Grpc)];
+        record_curves_to_hub(&hub, &id, &more).unwrap();
+        let stored =
+            hub.latency_curve(&id, "node1/t40", "reference", "triton-like").unwrap().unwrap();
+        assert_eq!(stored.max_batch(), 16, "new point joined the curve");
+        assert_eq!(stored.p99_ms(1), 2.0, "earlier points survive the merge");
     }
 }

@@ -11,11 +11,59 @@
 //!   from the caller so the simulated clock drives cooldowns in tests.
 //! - [`RetryPolicy`]: bounded retry with exponential jittered backoff
 //!   for idempotent inference failover across replicas.
+//! - [`DrainModel`]: the single copy of the "queue depth → batches ahead
+//!   → modeled drain time" arithmetic, now reading the latency curve.
+//!   Both the `Retry-After` hint on 429s and the admitted worst-case
+//!   wait bound are derived from it, so they can never drift apart.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use super::batcher::LatencyCurve;
 use crate::util::rng::Rng;
+
+/// Curve-aware drain-time model for one serving instance.
+///
+/// Every "how long until a queue this deep has drained" estimate in the
+/// serving plane goes through here: `Retry-After` on queue overflow,
+/// the `worst_case_wait_ms` admission bound, and the modeled batch
+/// latency the monitor exports.
+#[derive(Debug, Clone)]
+pub struct DrainModel {
+    curve: LatencyCurve,
+    max_batch: usize,
+    overhead_ms: f64,
+}
+
+impl DrainModel {
+    pub fn new(curve: LatencyCurve, max_batch: usize, overhead_ms: f64) -> DrainModel {
+        DrainModel { curve, max_batch: max_batch.max(1), overhead_ms }
+    }
+
+    pub fn curve(&self) -> &LatencyCurve {
+        &self.curve
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Modeled wall time of one full-size batch, including per-request
+    /// system overhead — the curve's tail latency at the largest batch
+    /// the instance launches.
+    pub fn batch_latency_ms(&self) -> f64 {
+        self.curve.latency_ms(self.max_batch) + self.overhead_ms
+    }
+
+    /// Queue depth → batches ahead → modeled drain time.
+    /// `extra_per_batch_ms` charges an additional per-batch cost (the
+    /// batcher's worst-case forming hold) when bounding admitted wait;
+    /// the `Retry-After` hint passes 0.
+    pub fn drain_ms(&self, queue_depth: usize, extra_per_batch_ms: f64) -> f64 {
+        let batches_ahead = (queue_depth as f64 / self.max_batch as f64).ceil().max(1.0);
+        batches_ahead * (self.batch_latency_ms() + extra_per_batch_ms)
+    }
+}
 
 /// Atomic token-style admission gate over a bounded queue.
 ///
@@ -223,6 +271,22 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
     use std::sync::Arc;
+
+    #[test]
+    fn drain_model_counts_batches_ahead_on_the_curve() {
+        use crate::serving::batcher::CurvePoint;
+        let curve = LatencyCurve::new(vec![
+            CurvePoint { batch: 1, p50_ms: 2.0, p99_ms: 2.0, throughput_rps: 500.0 },
+            CurvePoint { batch: 8, p50_ms: 10.0, p99_ms: 10.0, throughput_rps: 800.0 },
+        ])
+        .unwrap();
+        let m = DrainModel::new(curve, 8, 0.5);
+        assert!((m.batch_latency_ms() - 10.5).abs() < 1e-9);
+        assert!((m.drain_ms(0, 0.0) - 10.5).abs() < 1e-9, "at least one batch ahead");
+        assert!((m.drain_ms(8, 0.0) - 10.5).abs() < 1e-9);
+        assert!((m.drain_ms(9, 0.0) - 21.0).abs() < 1e-9, "ceil(9/8) = 2 batches");
+        assert!((m.drain_ms(16, 2.0) - 25.0).abs() < 1e-9, "forming hold charged per batch");
+    }
 
     #[test]
     fn gate_admits_up_to_capacity() {

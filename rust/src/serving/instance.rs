@@ -1,8 +1,9 @@
 //! A serving instance: one deployed MLaaS = container + worker thread +
 //! request queue + batcher + compiled executables on a device.
 //!
-//! The worker loop implements the serving system's batching policy over a
-//! bounded queue, executes batches on the node's XLA engine, charges
+//! The worker loop drives a [`ContinuousBatcher`] over a bounded queue
+//! (static `BatchPolicy` personalities are degenerate configurations of
+//! the same engine), executes batches on the node's XLA engine, charges
 //! device time through the perf model (simulated devices *sleep out* the
 //! difference so queueing and utilization emerge in real time), and
 //! answers each request with its output slice plus a latency breakdown.
@@ -11,8 +12,8 @@
 //!
 //! - **Admission** is an atomic token gate ([`AdmissionGate`]): the
 //!   bounded queue can never overshoot, and a rejected request carries a
-//!   computed retry-after derived from queue depth × the perf model's
-//!   per-batch latency.
+//!   computed retry-after derived from queue depth × the latency curve's
+//!   per-batch cost ([`super::admission::DrainModel`]).
 //! - **Deadlines**: a request may carry a deadline budget; if it expires
 //!   while queued the request is *shed before execution* with a typed
 //!   [`ServingError::DeadlineExceeded`] — never silently dropped.
@@ -35,8 +36,9 @@ use crate::runtime::engine::{EngineHandle, ExeHandle};
 use crate::runtime::{ModelManifest, Tensor};
 use crate::util::clock::SharedClock;
 
-use super::admission::AdmissionGate;
-use super::batching::{round_up_batch, usable_batches, QueueView};
+use super::admission::{AdmissionGate, DrainModel};
+use super::batcher::{BatchView, BatcherConfig, ContinuousBatcher, LatencyCurve};
+use super::batching::{round_up_batch, usable_batches};
 use super::container::Container;
 use super::frontend::Frontend;
 use super::systems::ServingSystem;
@@ -83,6 +85,10 @@ pub enum ServingError {
     WorkerLost { service: String },
     /// Batch execution failed (engine error, injected fault, or panic).
     Exec { service: String, message: String },
+    /// Deploy-time validation: the model has no usable batch artifact
+    /// for the requested format (would previously surface as an
+    /// `unwrap` panic on the first latency estimate).
+    NoUsableBatch { service: String, format: String },
 }
 
 impl std::fmt::Display for ServingError {
@@ -102,6 +108,9 @@ impl std::fmt::Display for ServingError {
             ServingError::Stopped { service } => write!(f, "service {service} is stopped"),
             ServingError::WorkerLost { service } => write!(f, "service worker is gone on {service}"),
             ServingError::Exec { message, .. } => write!(f, "batch execution failed: {message}"),
+            ServingError::NoUsableBatch { service, format } => {
+                write!(f, "no usable batch artifacts for {service} in format '{format}'")
+            }
         }
     }
 }
@@ -115,7 +124,8 @@ impl ServingError {
             | ServingError::DeadlineExceeded { service, .. }
             | ServingError::Stopped { service }
             | ServingError::WorkerLost { service }
-            | ServingError::Exec { service, .. } => service,
+            | ServingError::Exec { service, .. }
+            | ServingError::NoUsableBatch { service, .. } => service,
         }
     }
 }
@@ -143,6 +153,11 @@ pub struct InstanceConfig {
     pub system: &'static ServingSystem,
     pub frontend: Frontend,
     pub max_queue: usize,
+    /// Batch-formation configuration. `None` derives the degenerate
+    /// static configuration from the system's `BatchPolicy` (the
+    /// pre-curve behavior); the dispatcher passes a curve-backed config
+    /// for continuous batching.
+    pub batcher: Option<BatcherConfig>,
 }
 
 /// Client-facing handle to a running instance. Clone freely.
@@ -162,8 +177,10 @@ pub struct ServiceHandle {
     pub replica: usize,
     memory_mib: f64,
     device: Arc<Device>,
-    system: &'static ServingSystem,
-    workload: WorkloadCost,
+    /// Curve-aware drain model shared by every delay estimate.
+    drain: DrainModel,
+    /// Worst-case batch-forming hold the batcher will apply (ms).
+    hold_ms: f64,
 }
 
 /// Error returned when the bounded queue is full (backpressure signal).
@@ -261,29 +278,30 @@ impl ServiceHandle {
         &self.device
     }
 
-    /// Modeled service time of one full batch on this device, including
-    /// the system's per-request overhead.
+    /// Modeled service time of one full batch on this device — the
+    /// latency curve's tail cost at the largest batch the instance
+    /// launches, including the system's per-request overhead.
     pub fn batch_latency_ms(&self) -> f64 {
-        let max_b = *self.batches.last().unwrap();
-        self.device.spec.latency_ms(&self.workload, max_b) + self.system.request_overhead_ms
+        self.drain.batch_latency_ms()
     }
 
     /// Backoff hint for a rejected request: how long until a queue this
-    /// deep should have drained, given full batches at modeled latency.
+    /// deep should have drained, given full batches at curve latency.
     pub fn retry_after_ms(&self, queue_depth: usize) -> f64 {
-        let max_b = *self.batches.last().unwrap() as f64;
-        let batches_ahead = (queue_depth as f64 / max_b).ceil().max(1.0);
-        batches_ahead * self.batch_latency_ms()
+        self.drain.drain_ms(queue_depth, 0.0)
     }
 
     /// Upper bound on the queueing delay of any *admitted* request: a
     /// full queue draining in max-size batches, each preceded by the
-    /// batching policy's worst-case forming wait. The overload stress
-    /// test holds admitted p99 queueing under this bound.
+    /// batcher's worst-case forming hold. The overload stress test
+    /// holds admitted p99 queueing under this bound.
     pub fn worst_case_wait_ms(&self) -> f64 {
-        let max_b = *self.batches.last().unwrap() as f64;
-        let full_queue_batches = (self.gate.capacity() as f64 / max_b).ceil().max(1.0);
-        full_queue_batches * (self.batch_latency_ms() + self.system.policy.worst_case_wait_ms())
+        self.drain.drain_ms(self.gate.capacity(), self.hold_ms)
+    }
+
+    /// The latency curve behind this instance's delay estimates.
+    pub fn latency_curve(&self) -> &LatencyCurve {
+        self.drain.curve()
     }
 }
 
@@ -318,11 +336,29 @@ pub fn launch(
     if !config.system.supports_format(&config.format) {
         bail!("serving system {} cannot load format '{}'", config.system.name, config.format);
     }
+    // effective batcher configuration: explicit (dispatcher-provided,
+    // possibly curve-backed) or the degenerate static config derived
+    // from the system's BatchPolicy
+    let mut batcher_cfg = match &config.batcher {
+        Some(cfg) => cfg.clone(),
+        None => BatcherConfig::from_policy(&config.system.policy),
+    };
+    batcher_cfg.max_batch = batcher_cfg.max_batch.max(1);
     let available = config.manifest.batches(&config.format);
-    if available.is_empty() {
-        bail!("no artifacts for {} in format {}", config.manifest.name, config.format);
-    }
-    let batches = usable_batches(&available, config.system.policy.max_batch());
+    let batches = usable_batches(&available, batcher_cfg.max_batch);
+    // validate here, not on the hot path: an empty usable-batch list
+    // used to survive launch and panic in batch_latency_ms()
+    let Some(&max_exec) = batches.last() else {
+        return Err(ServingError::NoUsableBatch {
+            service: config.name.clone(),
+            format: config.format.clone(),
+        }
+        .into());
+    };
+    // the engine never launches more than the largest compiled batch,
+    // so clamp (downward only — the usable-batch fallback can leave
+    // max_exec above a small policy max, where padding covers the gap)
+    batcher_cfg.max_batch = batcher_cfg.max_batch.min(max_exec);
     // compile one executable per usable batch size
     let mut exes: Vec<(usize, ExeHandle)> = Vec::new();
     for &b in &batches {
@@ -335,8 +371,17 @@ pub fn launch(
     }
     // device memory: weights + activations at the largest batch
     let workload = config.manifest.sim.workload(&config.format);
-    let memory_mib = device.spec.memory_footprint_mib(&workload, *batches.last().unwrap());
+    let memory_mib = device.spec.memory_footprint_mib(&workload, max_exec);
     device.allocate_mib(memory_mib)?;
+    // the drain model reads the profiled curve when one was supplied;
+    // otherwise the analytic curve off the device perf model, which
+    // reproduces the old flat latency numbers exactly
+    let curve = match &batcher_cfg.curve {
+        Some(c) => c.clone(),
+        None => LatencyCurve::from_perf_model(&device.spec, &workload, &batches)?,
+    };
+    let drain = DrainModel::new(curve, max_exec, config.system.request_overhead_ms);
+    let batcher = ContinuousBatcher::new(batcher_cfg);
     let mut alloc_guard = AllocGuard { device: device.clone(), mib: memory_mib, armed: true };
 
     let container_name = format!("{}@{}@{}", config.name, config.system.name, device.id);
@@ -362,8 +407,8 @@ pub fn launch(
         replica: 0,
         memory_mib,
         device: device.clone(),
-        system: config.system,
-        workload,
+        drain,
+        hold_ms: batcher.worst_case_hold_ms(),
     };
 
     let worker = Worker {
@@ -375,6 +420,8 @@ pub fn launch(
         clock,
         exes,
         batches,
+        max_exec,
+        batcher,
         workload,
         system: config.system,
         frontend: config.frontend,
@@ -421,6 +468,9 @@ struct Worker {
     clock: SharedClock,
     exes: Vec<(usize, ExeHandle)>,
     batches: Vec<usize>,
+    /// Largest compiled batch (validated non-empty at launch).
+    max_exec: usize,
+    batcher: ContinuousBatcher,
     workload: WorkloadCost,
     system: &'static ServingSystem,
     frontend: Frontend,
@@ -448,10 +498,15 @@ impl Worker {
     fn step(&mut self) -> Step {
         // poll tick bounds how late a timeout flush can be
         let tick = Duration::from_micros(200);
-        // drain the channel without blocking, then decide
+        // drain the channel without blocking, then decide; arrivals feed
+        // the batcher's rate estimate (this is the "continuous" half:
+        // everything ingested here joins the still-forming batch)
         loop {
             match self.rx.try_recv() {
-                Ok(Msg::Req(r)) => self.pending.push_back(r),
+                Ok(Msg::Req(r)) => {
+                    self.batcher.note_arrival(r.enqueue_ms);
+                    self.pending.push_back(r);
+                }
                 Ok(Msg::Stop) | Err(mpsc::TryRecvError::Disconnected) => {
                     self.drain_with_error();
                     return Step::Shutdown;
@@ -464,13 +519,27 @@ impl Worker {
         self.shed_expired();
         let now = self.clock.now_ms();
         let oldest_wait = self.pending.front().map(|r| now - r.enqueue_ms).unwrap_or(0.0);
-        let view = QueueView { queued: self.pending.len(), oldest_wait_ms: oldest_wait };
-        match self.system.policy.decide(view) {
+        // tightest deadline headroom among survivors caps how long the
+        // batcher may keep the batch open
+        let min_slack = self
+            .pending
+            .iter()
+            .filter_map(|r| r.deadline_ms.map(|d| d - now))
+            .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.min(s))));
+        let view = BatchView {
+            queued: self.pending.len(),
+            oldest_wait_ms: oldest_wait,
+            min_slack_ms: min_slack,
+        };
+        match self.batcher.decide(view) {
             Some(n) => self.execute_batch(n),
             None => {
                 // wait for work or timeout progress
                 match self.rx.recv_timeout(tick) {
-                    Ok(Msg::Req(r)) => self.pending.push_back(r),
+                    Ok(Msg::Req(r)) => {
+                        self.batcher.note_arrival(r.enqueue_ms);
+                        self.pending.push_back(r);
+                    }
                     Ok(Msg::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => {
                         self.drain_with_error();
                         return Step::Shutdown;
@@ -517,9 +586,8 @@ impl Worker {
     fn execute_batch(&mut self, n: usize) {
         let n = n.min(self.pending.len()).max(1);
         // cap at the largest compiled batch
-        let max_b = *self.batches.last().unwrap();
-        let n = n.min(max_b);
-        let exec_batch = round_up_batch(n, &self.batches).unwrap_or(max_b);
+        let n = n.min(self.max_exec);
+        let exec_batch = round_up_batch(n, &self.batches).unwrap_or(self.max_exec);
         let mut guard =
             ReplyOnDrop { reqs: self.pending.drain(..n).collect(), service: self.service.clone() };
         let depth = self.gate.release_n(n);
@@ -621,6 +689,7 @@ mod tests {
                 system,
                 frontend: Frontend::Grpc,
                 max_queue: 64,
+                batcher: None,
             },
             device,
             &engine,
@@ -729,6 +798,7 @@ mod tests {
                 system: &ONNXRT_LIKE,
                 frontend: Frontend::Rest,
                 max_queue: 4,
+                batcher: None,
             },
             device,
             &engine,
@@ -805,6 +875,7 @@ mod tests {
                 system: &TFS_LIKE, // TFS can't load optimized engines
                 frontend: Frontend::Rest,
                 max_queue: 8,
+                batcher: None,
             },
             device,
             &engine,
@@ -839,6 +910,7 @@ mod tests {
                 system: &ONNXRT_LIKE,
                 frontend: Frontend::Rest,
                 max_queue: 8,
+                batcher: None,
             },
             device.clone(),
             &engine,

@@ -3,13 +3,15 @@
 //! ONNX-Runtime + Docker substitute).
 
 pub mod admission;
+pub mod batcher;
 pub mod batching;
 pub mod container;
 pub mod frontend;
 pub mod instance;
 pub mod systems;
 
-pub use admission::{AdmissionGate, BreakerState, CircuitBreaker, RetryPolicy};
+pub use admission::{AdmissionGate, BreakerState, CircuitBreaker, DrainModel, RetryPolicy};
+pub use batcher::{BatchView, BatcherConfig, ContinuousBatcher, CurvePoint, LatencyCurve};
 pub use batching::BatchPolicy;
 pub use container::{Container, ContainerState, ContainerUsage};
 pub use frontend::Frontend;

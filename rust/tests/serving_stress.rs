@@ -13,7 +13,10 @@ use mlmodelci::profiler::example_input;
 use mlmodelci::runtime::engine::EngineHandle;
 use mlmodelci::runtime::{ArtifactStore, Tensor};
 use mlmodelci::serving::instance::{launch, InstanceConfig};
-use mlmodelci::serving::{BreakerState, Frontend, ServingError, ONNXRT_LIKE, TFS_LIKE, TRITON_LIKE};
+use mlmodelci::serving::{
+    BatcherConfig, BreakerState, Frontend, LatencyCurve, ServingError, ONNXRT_LIKE, TFS_LIKE,
+    TRITON_LIKE,
+};
 use mlmodelci::util::clock::{virtual_clock, wall, SharedClock};
 
 fn store() -> Option<Arc<ArtifactStore>> {
@@ -74,6 +77,7 @@ fn batched_replies_match_reference_under_concurrency() {
             system: &TRITON_LIKE,
             frontend: Frontend::Grpc,
             max_queue: 1024,
+            batcher: None,
         },
         device,
         &engine,
@@ -140,6 +144,7 @@ fn every_system_preserves_correctness() {
                 system,
                 frontend: Frontend::Rest,
                 max_queue: 256,
+                batcher: None,
             },
             device,
             &engine,
@@ -186,6 +191,7 @@ fn queue_depth_accounting_is_exact() {
             system: &TRITON_LIKE,
             frontend: Frontend::Grpc,
             max_queue: 512,
+            batcher: None,
         },
         device,
         &engine,
@@ -237,6 +243,7 @@ fn memory_is_freed_on_stop_and_refused_when_full() {
         system: &TRITON_LIKE,
         frontend: Frontend::Grpc,
         max_queue: 8,
+        batcher: None,
     };
     let mut services = Vec::new();
     let mut launched = 0;
@@ -294,6 +301,7 @@ fn overload_sheds_deterministically_with_exactly_one_outcome() {
             system: &ONNXRT_LIKE, // no batching: one request = one batch
             frontend: Frontend::Grpc,
             max_queue: 8,
+            batcher: None,
         },
         device,
         &engine,
@@ -373,6 +381,144 @@ fn overload_sheds_deterministically_with_exactly_one_outcome() {
     engine.shutdown();
 }
 
+/// Continuous-batching overload: same deterministic scenario as above
+/// but with an explicit curve-backed continuous batcher, whose holds
+/// and marginal-cost growth must stay inside the curve-aware
+/// `worst_case_wait_ms` bound. Virtual time only moves through device
+/// charges, so once the flood stops a clock pump drives the batcher's
+/// hold timeouts forward; every pump step is counted and added to the
+/// bound as measurement slop (the pump inflates *measured* waits, not
+/// the batcher's behavior).
+#[test]
+fn continuous_batcher_holds_curve_aware_wait_bound_under_overload() {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let vclock = virtual_clock();
+    let clock: SharedClock = vclock.clone();
+    let engine = EngineHandle::spawn("cont-ov");
+    let device = Device::simulated("cov/t4", "t4", clock.clone()).unwrap();
+    device.set_faults(None); // pin healthy regardless of MLCI_FAULTS
+    let m = store.model("mlp_tabular").unwrap().clone();
+    let weights = store.load_weights(&m).unwrap();
+    // stand-in for a profiled curve: the analytic curve over the
+    // format's artifact batches (simulated devices charge the same perf
+    // model, so profiling would store these exact numbers)
+    let workload = m.sim.workload("reference");
+    let curve =
+        LatencyCurve::from_perf_model(&device.spec, &workload, &m.batches("reference")).unwrap();
+    let max_b = curve.max_batch();
+    let svc = launch(
+        InstanceConfig {
+            name: "cont-ov".into(),
+            manifest: m.clone(),
+            format: "reference".into(),
+            system: &TRITON_LIKE,
+            frontend: Frontend::Grpc,
+            max_queue: 8,
+            batcher: Some(BatcherConfig::continuous(curve, max_b, 2.0, Some(50.0))),
+        },
+        device,
+        &engine,
+        &weights,
+        &store.dir,
+        clock,
+    )
+    .unwrap();
+    let input = example_input(&m, 5);
+    let bound_ms = svc.worst_case_wait_ms();
+    assert!(bound_ms > 0.0);
+    assert!(svc.latency_curve().max_batch() >= 1);
+
+    // 4x queue capacity as fast as possible; every 4th request carries
+    // an already-burnt budget and must shed, never execute
+    let offered = 4 * svc.max_queue() * 2;
+    let mut pending = Vec::new();
+    let (mut ok, mut shed, mut rejected) = (0usize, 0usize, 0usize);
+    for i in 0..offered {
+        let budget = if i % 4 == 0 { Some(0.0) } else { None };
+        match svc.infer_async_with(input.clone(), budget) {
+            Ok(rx) => pending.push((i, rx)),
+            Err(e) => {
+                let se = e.downcast_ref::<ServingError>().expect("typed admission error");
+                match se {
+                    ServingError::Overloaded { queue_depth, retry_after_ms, .. } => {
+                        assert!(*retry_after_ms > 0.0, "retry-after must be positive");
+                        assert!(
+                            *retry_after_ms <= bound_ms + svc.batch_latency_ms(),
+                            "retry-after {retry_after_ms} out of bound (depth {queue_depth})"
+                        );
+                        rejected += 1;
+                    }
+                    other => panic!("unexpected admission error: {other}"),
+                }
+            }
+        }
+    }
+    // pump virtual time so hold timeouts can expire now that no more
+    // arrivals will ever come; count every step for the bound's slop
+    const STEP_MS: f64 = 0.25;
+    let stop = Arc::new(AtomicBool::new(false));
+    let steps = Arc::new(AtomicUsize::new(0));
+    let pump = {
+        let (stop, steps, vclock) = (stop.clone(), steps.clone(), vclock.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                vclock.advance_ms(STEP_MS);
+                steps.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        })
+    };
+    let mut admitted_waits: Vec<(usize, f64, usize)> = Vec::new();
+    for (i, rx) in pending {
+        match rx.recv_timeout(std::time::Duration::from_secs(30)) {
+            Ok(Ok(reply)) => {
+                assert!(i % 4 != 0, "request {i} had an expired budget yet executed");
+                admitted_waits.push((i, reply.timing.queue_ms, reply.timing.batch));
+                ok += 1;
+            }
+            Ok(Err(e)) => match e.downcast_ref::<ServingError>() {
+                Some(ServingError::DeadlineExceeded { budget_ms, .. }) => {
+                    assert!(i % 4 == 0, "request {i} had no deadline yet was shed");
+                    assert_eq!(*budget_ms, 0.0);
+                    shed += 1;
+                }
+                other => panic!("unexpected reply error for {i}: {other:?}"),
+            },
+            Err(_) => panic!("request {i} never got a reply (exactly-one-outcome violated)"),
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    pump.join().unwrap();
+    let pump_ms = steps.load(Ordering::Relaxed) as f64 * STEP_MS;
+    for (i, queue_ms, batch) in &admitted_waits {
+        assert!(
+            *queue_ms <= bound_ms + pump_ms + 1e-6,
+            "admitted request {i} (batch {batch}) waited {queue_ms:.3} ms > \
+             curve bound {bound_ms:.3} ms + pump slop {pump_ms:.3} ms"
+        );
+    }
+    assert_eq!(ok + shed + rejected, offered, "every submission has exactly one outcome");
+    assert!(ok > 0, "unbudgeted admitted requests must complete");
+    assert!(shed > 0, "expired-budget requests must shed (req 0 is always admitted)");
+    let u = svc.container.usage_snapshot();
+    assert_eq!(u.examples as usize, ok);
+    assert_eq!(u.shed_deadline as usize, shed);
+    assert_eq!(u.rejected_overload as usize, rejected);
+    for _ in 0..100 {
+        if svc.queue_depth() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(svc.queue_depth(), 0, "all admission tokens returned");
+    svc.stop();
+    engine.shutdown();
+}
+
 /// Kill-one-replica failover: replica 0 is pinned always-fail, so its
 /// breaker trips after `breaker_threshold` failures and traffic fails
 /// over to replica 1 with zero client-visible errors. Healing the
@@ -400,6 +546,7 @@ fn replica_failure_trips_breaker_and_fails_over() {
         system: &TRITON_LIKE,
         frontend: Frontend::Grpc,
         max_queue: 64,
+        batcher: None,
     };
     let h0 = launch(mk("fo-mlp"), d0.clone(), &engine, &weights, &store.dir, clock.clone()).unwrap();
     let mut h1 =
@@ -468,6 +615,7 @@ fn exactly_one_outcome_per_request_under_env_fault_plans() {
         system: &TRITON_LIKE,
         frontend: Frontend::Grpc,
         max_queue: 64,
+        batcher: None,
     };
     let h0 = launch(mk("env-mlp"), d0, &engine, &weights, &store.dir, clock.clone()).unwrap();
     let mut h1 = launch(mk("env-mlp"), d1, &engine, &weights, &store.dir, clock.clone()).unwrap();
@@ -501,6 +649,92 @@ fn exactly_one_outcome_per_request_under_env_fault_plans() {
         std::thread::sleep(std::time::Duration::from_millis(5));
     }
     assert_eq!(group.queue_depth(), 0, "admission tokens all returned");
+    group.stop();
+    engine.shutdown();
+}
+
+/// Same liveness contract with continuous batchers on every replica: a
+/// serial caller never advances virtual time on its own, so without the
+/// clock pump a batcher holding for a batch that will never fill would
+/// freeze the group. With the pump, every request terminates with
+/// exactly one outcome under whatever fault mix `MLCI_FAULTS` injects,
+/// and the queues drain to zero.
+#[test]
+fn continuous_group_exactly_one_outcome_under_env_faults() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let vclock = virtual_clock();
+    let clock: SharedClock = vclock.clone();
+    let engine = EngineHandle::spawn("cont-env");
+    // no set_faults override: these devices keep whatever plan
+    // MLCI_FAULTS seeded (decorrelated per device id)
+    let d0 = Device::simulated("cenv/t4a", "t4", clock.clone()).unwrap();
+    let d1 = Device::simulated("cenv/t4b", "t4", clock.clone()).unwrap();
+    let m = store.model("mlp_tabular").unwrap().clone();
+    let weights = store.load_weights(&m).unwrap();
+    let workload = m.sim.workload("reference");
+    let mk = |name: &str, d: &Arc<Device>| {
+        let curve =
+            LatencyCurve::from_perf_model(&d.spec, &workload, &m.batches("reference")).unwrap();
+        let max_b = curve.max_batch();
+        InstanceConfig {
+            name: name.into(),
+            manifest: m.clone(),
+            format: "reference".into(),
+            system: &TRITON_LIKE,
+            frontend: Frontend::Grpc,
+            max_queue: 64,
+            batcher: Some(BatcherConfig::continuous(curve, max_b, 1.0, None)),
+        }
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let pump = {
+        let (stop, vclock) = (stop.clone(), vclock.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                vclock.advance_ms(0.25);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        })
+    };
+    let h0 = launch(mk("cenv-mlp", &d0), d0, &engine, &weights, &store.dir, clock.clone()).unwrap();
+    let mut h1 =
+        launch(mk("cenv-mlp", &d1), d1, &engine, &weights, &store.dir, clock.clone()).unwrap();
+    h1.replica = 1;
+    let group = ServiceGroup::new("cenv-mlp", vec![h0, h1], clock.clone(), GroupConfig::default());
+    let input = example_input(&m, 41);
+
+    let (mut ok, mut err) = (0usize, 0usize);
+    for i in 0..24 {
+        // generous virtual-time budget on every third request: deadline
+        // plumbing must survive the batcher's holds and the faults
+        let outcome = if i % 3 == 0 {
+            group.infer_deadline(input.clone(), 3_600_000.0)
+        } else {
+            group.infer(input.clone())
+        };
+        match outcome {
+            Ok(_) => ok += 1,
+            Err(_) => err += 1,
+        }
+    }
+    assert_eq!(ok + err, 24, "every request terminated with exactly one outcome");
+    if !faults_env_active() {
+        assert_eq!(err, 0, "a healthy group serves every request");
+    }
+    assert!(ok > 0 || faults_env_active(), "healthy runs must succeed");
+    for _ in 0..100 {
+        if group.queue_depth() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(group.queue_depth(), 0, "admission tokens all returned");
+    stop.store(true, Ordering::Relaxed);
+    pump.join().unwrap();
     group.stop();
     engine.shutdown();
 }

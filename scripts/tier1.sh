@@ -38,4 +38,15 @@ echo "== tier1: json_scan bench smoke =="
 # --smoke keeps iteration counts tiny; report goes to a scratch file so
 # the committed BENCH_json_scan.json is only refreshed deliberately
 cargo bench --bench json_scan -- --smoke --out /tmp/BENCH_json_scan.smoke.json
+
+echo "== tier1: serving bench smoke =="
+# the serving bench needs compiled model artifacts; without them, still
+# compile the bench binary so the static_vs_continuous sweep can't
+# bit-rot
+if [[ -d artifacts ]]; then
+  cargo bench --bench serving_systems -- --smoke --out /tmp/BENCH_serving.smoke.json
+else
+  cargo build --release --benches
+  echo "   (skipped run: rust/artifacts not built in this container)"
+fi
 echo "== tier1: OK =="
