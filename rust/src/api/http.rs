@@ -54,6 +54,7 @@ pub fn percent_decode(s: &str) -> String {
     let mut out = Vec::with_capacity(bytes.len());
     let mut i = 0;
     while i < bytes.len() {
+        // LINT-ALLOW(panic): `i < bytes.len()` is the loop condition.
         match bytes[i] {
             b'+' => {
                 out.push(b' ');
@@ -68,6 +69,8 @@ pub fn percent_decode(s: &str) -> String {
                         _ => None,
                     }
                 };
+                // LINT-ALLOW(panic): the `%` arm is guarded by
+                // `i + 2 < bytes.len()`, so both lookaheads are in range.
                 match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
                     (Some(hi), Some(lo)) => {
                         out.push(hi * 16 + lo);

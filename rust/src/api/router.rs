@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use crate::monitor::Registry;
 use crate::util::jscan;
+use crate::util::sync::lock_unpoisoned;
 
 use super::error::ApiError;
 use super::http::{Request, Response};
@@ -49,13 +50,14 @@ impl Pattern {
             .filter(|s| !s.is_empty())
             .map(|s| {
                 if let Some(rest) = s.strip_prefix('{') {
-                    if let Some(close) = rest.find('}') {
-                        let name = rest[..close].to_string();
-                        let suffix = rest[close + 1..].to_string();
+                    if let Some((name, suffix)) = rest.split_once('}') {
                         if suffix.is_empty() {
-                            return Seg::Param(name);
+                            return Seg::Param(name.to_string());
                         }
-                        return Seg::ParamSuffix { name, suffix };
+                        return Seg::ParamSuffix {
+                            name: name.to_string(),
+                            suffix: suffix.to_string(),
+                        };
                     }
                 }
                 Seg::Lit(s.to_string())
@@ -195,7 +197,7 @@ impl<S> Router<S> {
     fn observe(&self, label: &str, status: u16, t0: Instant) {
         let now_ms = self.epoch.elapsed().as_secs_f64() * 1000.0;
         let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
-        let mut reg = self.metrics.lock().unwrap();
+        let mut reg = lock_unpoisoned(&self.metrics);
         reg.add(&format!("api_requests_total{{route=\"{label}\",status=\"{status}\"}}"), now_ms, 1.0);
         reg.record(&format!("api_request_latency_ms{{route=\"{label}\"}}"), now_ms, latency_ms);
     }
@@ -204,7 +206,7 @@ impl<S> Router<S> {
     /// and latest latencies (appended to the platform exporters on
     /// `/metrics`).
     pub fn expose_metrics(&self) -> String {
-        self.metrics.lock().unwrap().expose()
+        lock_unpoisoned(&self.metrics).expose()
     }
 }
 

@@ -23,6 +23,7 @@ use crate::serving::admission::{BreakerState, CircuitBreaker, RetryPolicy};
 use crate::serving::instance::{InferenceReply, ServiceHandle, ServingError};
 use crate::util::clock::SharedClock;
 use crate::util::rng::Rng;
+use crate::util::sync::lock_unpoisoned;
 
 /// Failover tuning for one deployment group.
 #[derive(Debug, Clone)]
@@ -108,6 +109,8 @@ impl ServiceGroup {
     /// The first replica — the deref target legacy single-instance code
     /// reads fields from.
     pub fn primary(&self) -> &ServiceHandle {
+        // LINT-ALLOW(panic): `new` asserts `handles` is non-empty, so
+        // replica 0 exists for the lifetime of the group.
         &self.replicas[0].handle
     }
 
@@ -145,33 +148,25 @@ impl ServiceGroup {
     /// probe first (so recovered replicas rejoin even while healthy
     /// ones could absorb the load); otherwise least-loaded among Closed
     /// breakers with round-robin tie-breaking.
-    fn route(&self) -> Option<usize> {
+    fn route(&self) -> Option<&Replica> {
         let now = self.clock.now_ms();
-        for (i, r) in self.replicas.iter().enumerate() {
+        for r in &self.replicas {
             if !r.handle.is_stopped()
                 && r.breaker.state() == BreakerState::Open
                 && r.breaker.allow(now)
             {
-                return Some(i);
+                return Some(r);
             }
         }
-        let candidates: Vec<usize> = self
+        let candidates: Vec<&Replica> = self
             .replicas
             .iter()
-            .enumerate()
-            .filter(|(_, r)| !r.handle.is_stopped() && r.breaker.state() == BreakerState::Closed)
-            .map(|(i, _)| i)
+            .filter(|r| !r.handle.is_stopped() && r.breaker.state() == BreakerState::Closed)
             .collect();
-        if candidates.is_empty() {
-            return None;
-        }
-        let min_depth =
-            candidates.iter().map(|&i| self.replicas[i].handle.queue_depth()).min().unwrap();
-        let tied: Vec<usize> = candidates
-            .into_iter()
-            .filter(|&i| self.replicas[i].handle.queue_depth() == min_depth)
-            .collect();
-        Some(tied[self.rr.fetch_add(1, Ordering::Relaxed) % tied.len()])
+        let min_depth = candidates.iter().map(|r| r.handle.queue_depth()).min()?;
+        let tied: Vec<&Replica> =
+            candidates.into_iter().filter(|r| r.handle.queue_depth() == min_depth).collect();
+        tied.get(self.rr.fetch_add(1, Ordering::Relaxed) % tied.len()).copied()
     }
 
     /// Synchronous inference with failover (idempotent, safe to retry).
@@ -197,8 +192,7 @@ impl ServiceGroup {
         let mut failed_attempts = 0usize;
         let mut backoffs = 0usize;
         for _ in 0..attempts {
-            let Some(idx) = self.route() else { break };
-            let replica = &self.replicas[idx];
+            let Some(replica) = self.route() else { break };
             let outcome: Result<InferenceReply> =
                 match replica.handle.infer_async_with(input.clone(), deadline_budget_ms) {
                     Ok(rx) => match rx.recv() {
@@ -236,7 +230,7 @@ impl ServiceGroup {
                             }
                             self.stats.retries.fetch_add(1, Ordering::Relaxed);
                             let backoff = {
-                                let mut rng = self.rng.lock().unwrap();
+                                let mut rng = lock_unpoisoned(&self.rng);
                                 self.config.retry.backoff_for(backoffs, &mut rng)
                             };
                             backoffs += 1;
@@ -263,7 +257,7 @@ impl ServiceGroup {
     pub fn infer_async(&self, input: Tensor) -> Result<mpsc::Receiver<Result<InferenceReply>>> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         match self.route() {
-            Some(idx) => self.replicas[idx].handle.infer_async(input),
+            Some(replica) => replica.handle.infer_async(input),
             None => Err(anyhow!("no healthy replica for {}", self.name)),
         }
     }
@@ -276,7 +270,7 @@ impl ServiceGroup {
     ) -> Result<mpsc::Receiver<Result<InferenceReply>>> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         match self.route() {
-            Some(idx) => self.replicas[idx].handle.infer_async_with(input, deadline_budget_ms),
+            Some(replica) => replica.handle.infer_async_with(input, deadline_budget_ms),
             None => Err(anyhow!("no healthy replica for {}", self.name)),
         }
     }

@@ -22,6 +22,7 @@ use crate::serving::instance::{launch, InstanceConfig, ServiceHandle};
 use crate::serving::systems::{by_name, ServingSystem};
 use crate::serving::{BatchPolicy, BatcherConfig, Frontend, LatencyCurve};
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 
 pub use group::{GroupConfig, GroupStats, ServiceGroup};
 
@@ -136,7 +137,7 @@ impl Dispatcher {
                 .filter(|d| !sim_only || d.is_simulated())
                 .filter(|d| !spread || !used.iter().any(|u| u == &d.id))
                 .filter(fits)
-                .min_by(|a, b| a.utilization().partial_cmp(&b.utilization()).unwrap())
+                .min_by(|a, b| a.utilization().total_cmp(&b.utilization()))
                 .cloned()
         };
         // the leader cpu-host only serves when explicitly named
@@ -315,12 +316,17 @@ impl Dispatcher {
         for h in &handles {
             containers.push(Json::from(h.container.id.as_str()));
         }
+        // `replicas >= 1` so the launch loop either produced a first
+        // handle or already returned the error
+        let Some(primary) = handles.first() else {
+            return Err(anyhow!("deploy of {name} produced no replicas"));
+        };
         let record = Json::obj()
-            .with("device", handles[0].device_id.as_str())
+            .with("device", primary.device_id.as_str())
             .with("system", system.name)
             .with("format", format.as_str())
             .with("frontend", spec.frontend.as_str())
-            .with("container", handles[0].container.id.as_str())
+            .with("container", primary.container.id.as_str())
             .with("replicas", replicas)
             .with("policy", spec.policy.as_str())
             .with("containers", Json::Arr(containers));
@@ -345,14 +351,14 @@ impl Dispatcher {
             self.cluster.clock().clone(),
             GroupConfig::default(),
         ));
-        self.groups.lock().unwrap().push(group.clone());
+        lock_unpoisoned(&self.groups).push(group.clone());
         Ok(group)
     }
 
     /// Running replica handles across all groups (fully-stopped groups
     /// are pruned on access). The monitor scrapes each replica.
     pub fn services(&self) -> Vec<ServiceHandle> {
-        let mut guard = self.groups.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.groups);
         guard.retain(|g| !g.is_stopped());
         guard
             .iter()
@@ -363,7 +369,7 @@ impl Dispatcher {
 
     /// Running deployment groups (stopped groups are pruned on access).
     pub fn groups(&self) -> Vec<Arc<ServiceGroup>> {
-        let mut guard = self.groups.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.groups);
         guard.retain(|g| !g.is_stopped());
         guard.clone()
     }
@@ -373,7 +379,7 @@ impl Dispatcher {
     }
 
     pub fn stop_all(&self) {
-        for g in self.groups.lock().unwrap().drain(..) {
+        for g in lock_unpoisoned(&self.groups).drain(..) {
             g.stop();
         }
     }

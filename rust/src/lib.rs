@@ -1,5 +1,9 @@
 //! MLModelCI — an automatic platform for efficient MLaaS (reproduction).
 #![allow(clippy::new_without_default)]
+// `unsafe fn` bodies get no implicit unsafe scope: every unsafe
+// operation needs its own `unsafe {}` block with a `SAFETY:` comment
+// (mechanically enforced by `mlci-lint`, see docs/STATIC_ANALYSIS.md)
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod api;
 pub mod cluster;

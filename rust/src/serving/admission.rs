@@ -21,6 +21,7 @@ use std::sync::Mutex;
 
 use super::batcher::LatencyCurve;
 use crate::util::rng::Rng;
+use crate::util::sync::lock_unpoisoned;
 
 /// Curve-aware drain-time model for one serving instance.
 ///
@@ -183,7 +184,7 @@ impl CircuitBreaker {
     /// single probe; further callers are refused until the probe
     /// reports back.
     pub fn allow(&self, now_ms: f64) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         match g.state {
             BreakerState::Closed => true,
             BreakerState::Open => {
@@ -201,7 +202,7 @@ impl CircuitBreaker {
     /// Report a success. Returns `true` when this closed a previously
     /// open/half-open breaker (recovery event).
     pub fn record_success(&self) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         let recovered = g.state != BreakerState::Closed;
         g.state = BreakerState::Closed;
         g.consecutive_failures = 0;
@@ -212,7 +213,7 @@ impl CircuitBreaker {
     /// breaker open (either the threshold was crossed or a half-open
     /// probe failed).
     pub fn record_failure(&self, now_ms: f64) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         match g.state {
             BreakerState::HalfOpen => {
                 // failed probe: back to Open, restart the cooldown
@@ -235,7 +236,7 @@ impl CircuitBreaker {
     }
 
     pub fn state(&self) -> BreakerState {
-        self.inner.lock().unwrap().state
+        lock_unpoisoned(&self.inner).state
     }
 }
 

@@ -94,11 +94,11 @@ impl LatencyCurve {
     }
 
     pub fn min_batch(&self) -> usize {
-        self.points[0].batch
+        self.points.first().map_or(1, |p| p.batch)
     }
 
     pub fn max_batch(&self) -> usize {
-        self.points[self.points.len() - 1].batch
+        self.points.last().map_or(1, |p| p.batch)
     }
 
     /// Smallest curve batch >= n, or the largest batch if none fits.
@@ -117,8 +117,10 @@ impl LatencyCurve {
 
     fn interp(&self, batch: usize, f: impl Fn(&CurvePoint) -> f64) -> f64 {
         let b = batch as f64;
-        let first = &self.points[0];
-        let last = &self.points[self.points.len() - 1];
+        let (Some(first), Some(last)) = (self.points.first(), self.points.last()) else {
+            // new() rejects empty point sets; unreachable in practice
+            return 0.0;
+        };
         if batch <= first.batch {
             return f(first);
         }
@@ -126,10 +128,11 @@ impl LatencyCurve {
             return f(last);
         }
         for w in self.points.windows(2) {
-            let (lo, hi) = (&w[0], &w[1]);
-            if batch <= hi.batch {
-                let t = (b - lo.batch as f64) / (hi.batch - lo.batch) as f64;
-                return f(lo) + t * (f(hi) - f(lo));
+            if let [lo, hi] = w {
+                if batch <= hi.batch {
+                    let t = (b - lo.batch as f64) / (hi.batch - lo.batch) as f64;
+                    return f(lo) + t * (f(hi) - f(lo));
+                }
             }
         }
         f(last)
@@ -163,21 +166,27 @@ impl LatencyCurve {
     /// Batch with the highest measured throughput (ties break toward the
     /// smaller batch) — the deploy-time default for `max_batch`.
     pub fn peak_throughput_batch(&self) -> usize {
-        let mut best = &self.points[0];
-        for p in &self.points[1..] {
-            if p.throughput_rps > best.throughput_rps {
-                best = p;
+        let mut best: Option<&CurvePoint> = None;
+        for p in &self.points {
+            let better = match best {
+                Some(b) => p.throughput_rps > b.throughput_rps,
+                None => true,
+            };
+            if better {
+                best = Some(p);
             }
         }
-        best.batch
+        best.map_or(1, |p| p.batch)
     }
 
     /// Union of two curves over batch sizes; `other` wins on conflicts.
     pub fn merge(&self, other: &LatencyCurve) -> LatencyCurve {
         let mut points = self.points.clone();
         points.extend(other.points.iter().copied());
-        // new() dedups keeping the last occurrence per batch
-        LatencyCurve::new(points).expect("merging two valid curves")
+        // new() dedups keeping the last occurrence per batch; two valid
+        // curves always merge, but a panic here would take the serving
+        // worker down, so degrade to keeping the existing curve instead
+        LatencyCurve::new(points).unwrap_or_else(|_| self.clone())
     }
 
     /// Columnar persistence shape: `{batches, p50_ms, p99_ms,
@@ -201,12 +210,12 @@ impl LatencyCurve {
             bail!("latency curve columns disagree on length");
         }
         let mut points = Vec::with_capacity(batches.len());
-        for i in 0..batches.len() {
+        for (((b, p50), p99), thr) in batches.iter().zip(p50).zip(p99).zip(thr) {
             points.push(CurvePoint {
-                batch: batches[i].as_usize().ok_or_else(|| anyhow!("bad curve batch"))?,
-                p50_ms: p50[i].as_f64().ok_or_else(|| anyhow!("bad curve p50"))?,
-                p99_ms: p99[i].as_f64().ok_or_else(|| anyhow!("bad curve p99"))?,
-                throughput_rps: thr[i].as_f64().unwrap_or(0.0),
+                batch: b.as_usize().ok_or_else(|| anyhow!("bad curve batch"))?,
+                p50_ms: p50.as_f64().ok_or_else(|| anyhow!("bad curve p50"))?,
+                p99_ms: p99.as_f64().ok_or_else(|| anyhow!("bad curve p99"))?,
+                throughput_rps: thr.as_f64().unwrap_or(0.0),
             });
         }
         LatencyCurve::new(points)

@@ -10,6 +10,8 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
+use crate::util::sync::lock_unpoisoned;
+
 /// Docker-ish lifecycle states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ContainerState {
@@ -69,11 +71,11 @@ impl Container {
     }
 
     pub fn state(&self) -> ContainerState {
-        *self.state.lock().unwrap()
+        *lock_unpoisoned(&self.state)
     }
 
     pub fn start(&self) -> Result<()> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         match *s {
             ContainerState::Created => {
                 *s = ContainerState::Running;
@@ -85,7 +87,7 @@ impl Container {
     }
 
     pub fn stop(&self) {
-        *self.state.lock().unwrap() = ContainerState::Stopped;
+        *lock_unpoisoned(&self.state) = ContainerState::Stopped;
     }
 
     pub fn is_running(&self) -> bool {

@@ -605,7 +605,23 @@ impl Worker {
         let stacked = Tensor::stack(&inputs);
         let padded = if exec_batch > n { stacked.pad_batch(exec_batch) } else { stacked };
 
-        let exe = &self.exes.iter().find(|(b, _)| *b == exec_batch).expect("exe for batch").1;
+        // `exec_batch` comes from round_up_batch over the same batch list
+        // the executables were compiled for, so the lookup succeeds unless
+        // the artifact manifest and compiled set drifted apart — answer
+        // the whole batch with a typed failure rather than panic the
+        // worker (which would poison the exactly-one-reply guarantee)
+        let Some(exe) = self.exes.iter().find(|(b, _)| *b == exec_batch).map(|(_, e)| e) else {
+            self.container.usage.exec_failures.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("no compiled executable for batch {exec_batch}");
+            for req in std::mem::take(&mut guard.reqs) {
+                let _ = req.reply.send(Err(ServingError::Exec {
+                    service: self.service.clone(),
+                    message: msg.clone(),
+                }
+                .into()));
+            }
+            return;
+        };
         let result = match fault {
             Some(FaultAction::Fail) => Err(anyhow!("injected fault on {}", self.device.id)),
             _ => exe.run(&padded),

@@ -887,8 +887,12 @@ mod mmap {
         len: usize,
     }
 
-    // the mapping is read-only and exclusively owned by this handle
+    // SAFETY: the mapping is read-only (PROT_READ | MAP_PRIVATE) and
+    // exclusively owned by this handle, so moving it across threads
+    // cannot race any writer.
     unsafe impl Send for Map {}
+    // SAFETY: same reasoning — an immutable private mapping is safe to
+    // read from any number of threads concurrently.
     unsafe impl Sync for Map {}
 
     impl Map {
@@ -900,6 +904,8 @@ mod mmap {
                 return None;
             }
             let len = len as usize;
+            // SAFETY: plain FFI call with a valid owned fd; a null/−1
+            // result (MAP_FAILED) is checked before the pointer is kept.
             let ptr = unsafe {
                 mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
             };
@@ -912,6 +918,9 @@ mod mmap {
 
     impl Drop for Map {
         fn drop(&mut self) {
+            // SAFETY: `ptr`/`len` are exactly what mmap returned and the
+            // mapping is unmapped once, here; Deref borrows cannot
+            // outlive the owning Map.
             unsafe {
                 munmap(self.ptr, self.len);
             }
@@ -921,6 +930,8 @@ mod mmap {
     impl std::ops::Deref for Map {
         type Target = [u8];
         fn deref(&self) -> &[u8] {
+            // SAFETY: the mapping covers exactly `len` readable bytes
+            // for the lifetime of `self`, and it is never written to.
             unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
         }
     }

@@ -237,10 +237,14 @@ pub fn find_string_special_with(engine: Engine, b: &[u8], from: usize) -> usize 
         Engine::Scalar => find_string_special_scalar(b, from),
         Engine::Swar => find_string_special_swar(b, from),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is guarded by `is_x86_feature_detected!("avx2")`,
+        // the callee's stated precondition.
         Engine::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
             avx2::find_string_special(b, from)
         },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline, which this arm
+        // is cfg-gated to.
         Engine::Neon => unsafe { neon::find_string_special(b, from) },
         #[allow(unreachable_patterns)]
         _ => find_string_special_swar(b, from),
@@ -261,8 +265,12 @@ pub fn skip_ws_with(engine: Engine, b: &[u8], from: usize) -> usize {
         Engine::Scalar => skip_ws_scalar(b, from),
         Engine::Swar => skip_ws_swar(b, from),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is guarded by `is_x86_feature_detected!("avx2")`,
+        // the callee's stated precondition.
         Engine::Avx2 if is_x86_feature_detected!("avx2") => unsafe { avx2::skip_ws(b, from) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline, which this arm
+        // is cfg-gated to.
         Engine::Neon => unsafe { neon::skip_ws(b, from) },
         #[allow(unreachable_patterns)]
         _ => skip_ws_swar(b, from),
@@ -282,10 +290,14 @@ pub fn find_byte_with(engine: Engine, b: &[u8], from: usize, needle: u8) -> Opti
         Engine::Scalar => find_byte_scalar(b, from, needle),
         Engine::Swar => find_byte_swar(b, from, needle),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is guarded by `is_x86_feature_detected!("avx2")`,
+        // the callee's stated precondition.
         Engine::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
             avx2::find_byte(b, from, needle)
         },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is part of the aarch64 baseline, which this arm
+        // is cfg-gated to.
         Engine::Neon => unsafe { neon::find_byte(b, from, needle) },
         #[allow(unreachable_patterns)]
         _ => find_byte_swar(b, from, needle),
@@ -393,6 +405,14 @@ fn find_byte_swar(b: &[u8], from: usize, needle: u8) -> Option<usize> {
 
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
+    // Whether a `#[target_feature]` intrinsic call counts as an unsafe
+    // operation changed across stable toolchains; the whole-body
+    // `unsafe {}` blocks below satisfy `deny(unsafe_op_in_unsafe_fn)`
+    // on toolchains where it does, and this allow silences the
+    // `unused_unsafe` those same blocks trigger on toolchains where it
+    // no longer does.
+    #![allow(unused_unsafe)]
+
     use std::arch::x86_64::*;
 
     /// # Safety
@@ -400,65 +420,80 @@ mod avx2 {
     /// routes here after `is_x86_feature_detected!("avx2")`).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn find_string_special(b: &[u8], from: usize) -> usize {
-        let quote = _mm256_set1_epi8(b'"' as i8);
-        let bslash = _mm256_set1_epi8(b'\\' as i8);
-        let ctl_max = _mm256_set1_epi8(0x1f);
-        let mut i = from;
-        while i + 32 <= b.len() {
-            let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
-            let m_quote = _mm256_cmpeq_epi8(block, quote);
-            let m_bslash = _mm256_cmpeq_epi8(block, bslash);
-            // unsigned c < 0x20  ⇔  min(c, 0x1f) == c
-            let m_ctl = _mm256_cmpeq_epi8(_mm256_min_epu8(block, ctl_max), block);
-            let special = _mm256_or_si256(_mm256_or_si256(m_quote, m_bslash), m_ctl);
-            let mask = _mm256_movemask_epi8(special) as u32;
-            if mask != 0 {
-                return i + mask.trailing_zeros() as usize;
+        // SAFETY: the fn's contract guarantees AVX2; the unaligned
+        // loads stay in bounds because `i + 32 <= b.len()`.
+        unsafe {
+            let quote = _mm256_set1_epi8(b'"' as i8);
+            let bslash = _mm256_set1_epi8(b'\\' as i8);
+            let ctl_max = _mm256_set1_epi8(0x1f);
+            let mut i = from;
+            while i + 32 <= b.len() {
+                let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+                let m_quote = _mm256_cmpeq_epi8(block, quote);
+                let m_bslash = _mm256_cmpeq_epi8(block, bslash);
+                // unsigned c < 0x20  ⇔  min(c, 0x1f) == c
+                let m_ctl = _mm256_cmpeq_epi8(_mm256_min_epu8(block, ctl_max), block);
+                let special = _mm256_or_si256(_mm256_or_si256(m_quote, m_bslash), m_ctl);
+                let mask = _mm256_movemask_epi8(special) as u32;
+                if mask != 0 {
+                    return i + mask.trailing_zeros() as usize;
+                }
+                i += 32;
             }
-            i += 32;
+            super::find_string_special_scalar(b, i)
         }
-        super::find_string_special_scalar(b, i)
     }
 
     /// # Safety
     /// Caller must have verified AVX2 support.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn skip_ws(b: &[u8], from: usize) -> usize {
-        let space = _mm256_set1_epi8(b' ' as i8);
-        let tab = _mm256_set1_epi8(b'\t' as i8);
-        let lf = _mm256_set1_epi8(b'\n' as i8);
-        let cr = _mm256_set1_epi8(b'\r' as i8);
-        let mut i = from;
-        while i + 32 <= b.len() {
-            let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
-            let ws = _mm256_or_si256(
-                _mm256_or_si256(_mm256_cmpeq_epi8(block, space), _mm256_cmpeq_epi8(block, tab)),
-                _mm256_or_si256(_mm256_cmpeq_epi8(block, lf), _mm256_cmpeq_epi8(block, cr)),
-            );
-            let non_ws = !(_mm256_movemask_epi8(ws) as u32);
-            if non_ws != 0 {
-                return i + non_ws.trailing_zeros() as usize;
+        // SAFETY: the fn's contract guarantees AVX2; the unaligned
+        // loads stay in bounds because `i + 32 <= b.len()`.
+        unsafe {
+            let space = _mm256_set1_epi8(b' ' as i8);
+            let tab = _mm256_set1_epi8(b'\t' as i8);
+            let lf = _mm256_set1_epi8(b'\n' as i8);
+            let cr = _mm256_set1_epi8(b'\r' as i8);
+            let mut i = from;
+            while i + 32 <= b.len() {
+                let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+                let ws = _mm256_or_si256(
+                    _mm256_or_si256(
+                        _mm256_cmpeq_epi8(block, space),
+                        _mm256_cmpeq_epi8(block, tab),
+                    ),
+                    _mm256_or_si256(_mm256_cmpeq_epi8(block, lf), _mm256_cmpeq_epi8(block, cr)),
+                );
+                let non_ws = !(_mm256_movemask_epi8(ws) as u32);
+                if non_ws != 0 {
+                    return i + non_ws.trailing_zeros() as usize;
+                }
+                i += 32;
             }
-            i += 32;
+            super::skip_ws_scalar(b, i)
         }
-        super::skip_ws_scalar(b, i)
     }
 
     /// # Safety
     /// Caller must have verified AVX2 support.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn find_byte(b: &[u8], from: usize, needle: u8) -> Option<usize> {
-        let n = _mm256_set1_epi8(needle as i8);
-        let mut i = from;
-        while i + 32 <= b.len() {
-            let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
-            let mask = _mm256_movemask_epi8(_mm256_cmpeq_epi8(block, n)) as u32;
-            if mask != 0 {
-                return Some(i + mask.trailing_zeros() as usize);
+        // SAFETY: the fn's contract guarantees AVX2; the unaligned
+        // loads stay in bounds because `i + 32 <= b.len()`.
+        unsafe {
+            let n = _mm256_set1_epi8(needle as i8);
+            let mut i = from;
+            while i + 32 <= b.len() {
+                let block = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+                let mask = _mm256_movemask_epi8(_mm256_cmpeq_epi8(block, n)) as u32;
+                if mask != 0 {
+                    return Some(i + mask.trailing_zeros() as usize);
+                }
+                i += 32;
             }
-            i += 32;
+            super::find_byte_scalar(b, i, needle)
         }
-        super::find_byte_scalar(b, i, needle)
     }
 }
 
@@ -467,6 +502,12 @@ mod avx2 {
 
 #[cfg(target_arch = "aarch64")]
 mod neon {
+    // Same toolchain straddle as `mod avx2`: whole-body `unsafe {}`
+    // blocks for `deny(unsafe_op_in_unsafe_fn)` on toolchains where
+    // intrinsic calls are unsafe operations, `allow(unused_unsafe)`
+    // for toolchains where they no longer are.
+    #![allow(unused_unsafe)]
+
     use std::arch::aarch64::*;
 
     /// Pack a 16-lane 0x00/0xFF byte mask into a `u64` with 4 bits per
@@ -478,63 +519,85 @@ mod neon {
     /// NEON is part of the aarch64 baseline.
     #[inline(always)]
     unsafe fn movemask(m: uint8x16_t) -> u64 {
-        vget_lane_u64::<0>(vreinterpret_u64_u8(vshrn_n_u16::<4>(vreinterpretq_u16_u8(m))))
+        // SAFETY: pure-register lane shuffles; NEON is baseline on
+        // aarch64, which this module is cfg-gated to.
+        unsafe {
+            vget_lane_u64::<0>(vreinterpret_u64_u8(vshrn_n_u16::<4>(vreinterpretq_u16_u8(m))))
+        }
     }
 
     /// # Safety
     /// NEON is part of the aarch64 baseline.
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn find_string_special(b: &[u8], from: usize) -> usize {
-        let mut i = from;
-        while i + 16 <= b.len() {
-            let block = vld1q_u8(b.as_ptr().add(i));
-            let m_quote = vceqq_u8(block, vdupq_n_u8(b'"'));
-            let m_bslash = vceqq_u8(block, vdupq_n_u8(b'\\'));
-            let m_ctl = vcltq_u8(block, vdupq_n_u8(0x20));
-            let special = vorrq_u8(vorrq_u8(m_quote, m_bslash), m_ctl);
-            let mask = movemask(special);
-            if mask != 0 {
-                return i + (mask.trailing_zeros() >> 2) as usize;
+        // SAFETY: NEON is baseline on aarch64; the loads stay in
+        // bounds because `i + 16 <= b.len()`.
+        unsafe {
+            let mut i = from;
+            while i + 16 <= b.len() {
+                let block = vld1q_u8(b.as_ptr().add(i));
+                let m_quote = vceqq_u8(block, vdupq_n_u8(b'"'));
+                let m_bslash = vceqq_u8(block, vdupq_n_u8(b'\\'));
+                let m_ctl = vcltq_u8(block, vdupq_n_u8(0x20));
+                let special = vorrq_u8(vorrq_u8(m_quote, m_bslash), m_ctl);
+                let mask = movemask(special);
+                if mask != 0 {
+                    return i + (mask.trailing_zeros() >> 2) as usize;
+                }
+                i += 16;
             }
-            i += 16;
+            super::find_string_special_scalar(b, i)
         }
-        super::find_string_special_scalar(b, i)
     }
 
     /// # Safety
     /// NEON is part of the aarch64 baseline.
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn skip_ws(b: &[u8], from: usize) -> usize {
-        let mut i = from;
-        while i + 16 <= b.len() {
-            let block = vld1q_u8(b.as_ptr().add(i));
-            let ws = vorrq_u8(
-                vorrq_u8(vceqq_u8(block, vdupq_n_u8(b' ')), vceqq_u8(block, vdupq_n_u8(b'\t'))),
-                vorrq_u8(vceqq_u8(block, vdupq_n_u8(b'\n')), vceqq_u8(block, vdupq_n_u8(b'\r'))),
-            );
-            let non_ws = !movemask(ws);
-            if non_ws != 0 {
-                return i + (non_ws.trailing_zeros() >> 2) as usize;
+        // SAFETY: NEON is baseline on aarch64; the loads stay in
+        // bounds because `i + 16 <= b.len()`.
+        unsafe {
+            let mut i = from;
+            while i + 16 <= b.len() {
+                let block = vld1q_u8(b.as_ptr().add(i));
+                let ws = vorrq_u8(
+                    vorrq_u8(
+                        vceqq_u8(block, vdupq_n_u8(b' ')),
+                        vceqq_u8(block, vdupq_n_u8(b'\t')),
+                    ),
+                    vorrq_u8(
+                        vceqq_u8(block, vdupq_n_u8(b'\n')),
+                        vceqq_u8(block, vdupq_n_u8(b'\r')),
+                    ),
+                );
+                let non_ws = !movemask(ws);
+                if non_ws != 0 {
+                    return i + (non_ws.trailing_zeros() >> 2) as usize;
+                }
+                i += 16;
             }
-            i += 16;
+            super::skip_ws_scalar(b, i)
         }
-        super::skip_ws_scalar(b, i)
     }
 
     /// # Safety
     /// NEON is part of the aarch64 baseline.
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn find_byte(b: &[u8], from: usize, needle: u8) -> Option<usize> {
-        let mut i = from;
-        while i + 16 <= b.len() {
-            let block = vld1q_u8(b.as_ptr().add(i));
-            let mask = movemask(vceqq_u8(block, vdupq_n_u8(needle)));
-            if mask != 0 {
-                return Some(i + (mask.trailing_zeros() >> 2) as usize);
+        // SAFETY: NEON is baseline on aarch64; the loads stay in
+        // bounds because `i + 16 <= b.len()`.
+        unsafe {
+            let mut i = from;
+            while i + 16 <= b.len() {
+                let block = vld1q_u8(b.as_ptr().add(i));
+                let mask = movemask(vceqq_u8(block, vdupq_n_u8(needle)));
+                if mask != 0 {
+                    return Some(i + (mask.trailing_zeros() >> 2) as usize);
+                }
+                i += 16;
             }
-            i += 16;
+            super::find_byte_scalar(b, i, needle)
         }
-        super::find_byte_scalar(b, i, needle)
     }
 }
 

@@ -13,4 +13,5 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod yaml;

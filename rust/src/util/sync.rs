@@ -1,0 +1,62 @@
+//! Poison-tolerant lock acquisition.
+//!
+//! The serving data plane bans `.lock().unwrap()` (mlci-lint's
+//! panic-freedom rule): a worker that panicked while holding a lock
+//! poisons it, and unwrapping the poison turns one contained panic into
+//! a cascade that forfeits the exactly-one-reply guarantee. None of the
+//! structures guarded by these locks can be left logically torn by an
+//! unwind mid-critical-section (they are counters, registries, state
+//! enums and RNG state — every write is a single assignment or push),
+//! so recovering the guard from a poisoned lock is strictly better than
+//! propagating the panic.
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock an `RwLock`, recovering the guard from poisoning.
+pub fn read_unpoisoned<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock an `RwLock`, recovering the guard from poisoning.
+pub fn write_unpoisoned<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex is poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7, "the guard still works");
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovery() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = l2.write().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        *write_unpoisoned(&l) = 2;
+        assert_eq!(*read_unpoisoned(&l), 2);
+    }
+}

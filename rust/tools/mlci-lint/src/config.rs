@@ -1,0 +1,169 @@
+//! The declared lock hierarchy (`lock_order.toml`), parsed by a
+//! deliberately tiny TOML subset reader: `[[class]]` tables with
+//! string, integer and single-line string-array values. The file is
+//! project-owned, so the subset is a contract, not a limitation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One declared lock class.
+#[derive(Debug, Clone)]
+pub struct LockClass {
+    pub name: String,
+    /// Lower rank = acquired first (outermost). Unranked classes are
+    /// constrained only by the cycle rule.
+    pub rank: Option<i64>,
+    /// Site patterns `"path-substring:receiver-ident"`: a lock
+    /// acquisition belongs to this class when its file path contains
+    /// the substring and its receiver's last identifier matches.
+    pub sites: Vec<(String, String)>,
+}
+
+/// The parsed hierarchy.
+#[derive(Debug, Clone, Default)]
+pub struct LockOrder {
+    pub classes: Vec<LockClass>,
+}
+
+impl LockOrder {
+    /// Class index for an acquisition at `path` (slash-separated,
+    /// relative to the source root) with receiver ident `recv`.
+    pub fn classify(&self, path: &str, recv: &str) -> Option<usize> {
+        self.classes.iter().position(|c| {
+            c.sites.iter().any(|(sub, r)| path.contains(sub.as_str()) && r == recv)
+        })
+    }
+
+    pub fn rank_of(&self, idx: usize) -> Option<i64> {
+        self.classes.get(idx).and_then(|c| c.rank)
+    }
+
+    pub fn name_of(&self, idx: usize) -> &str {
+        match self.classes.get(idx) {
+            Some(c) => c.name.as_str(),
+            None => "?",
+        }
+    }
+}
+
+fn parse_string(v: &str, lno: usize) -> Result<String> {
+    let v = v.trim();
+    match v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        Some(inner) => Ok(inner.to_string()),
+        None => Err(anyhow!("lock_order.toml:{lno}: expected a quoted string, got `{v}`")),
+    }
+}
+
+fn parse_site(s: &str, lno: usize) -> Result<(String, String)> {
+    match s.split_once(':') {
+        Some((a, b)) => Ok((a.to_string(), b.to_string())),
+        None => Err(anyhow!("lock_order.toml:{lno}: site `{s}` is not `path:receiver`")),
+    }
+}
+
+/// Parse the subset. Duplicate class names are an error (they would
+/// silently split one class's sites across two ranks).
+pub fn parse_lock_order(text: &str) -> Result<LockOrder> {
+    let mut classes: Vec<LockClass> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lno = i + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[class]]" {
+            classes.push(LockClass {
+                name: String::new(),
+                rank: None,
+                sites: Vec::new(),
+            });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("lock_order.toml:{lno}: expected `key = value`, got `{line}`");
+        };
+        let Some(cur) = classes.last_mut() else {
+            bail!("lock_order.toml:{lno}: key before any [[class]]");
+        };
+        let (key, value) = (key.trim(), value.trim());
+        match key {
+            "name" => cur.name = parse_string(value, lno)?,
+            "rank" => {
+                cur.rank = Some(value.parse().map_err(|_| {
+                    anyhow!("lock_order.toml:{lno}: rank must be an integer, got `{value}`")
+                })?)
+            }
+            "sites" => {
+                let Some(inner) = value.strip_prefix('[').and_then(|s| s.strip_suffix(']')) else {
+                    bail!("lock_order.toml:{lno}: sites must be a one-line [\"..\"] array");
+                };
+                for item in inner.split(',') {
+                    let item = item.trim();
+                    if item.is_empty() {
+                        continue;
+                    }
+                    cur.sites.push(parse_site(&parse_string(item, lno)?, lno)?);
+                }
+            }
+            other => bail!("lock_order.toml:{lno}: unknown key `{other}`"),
+        }
+    }
+    let mut seen: BTreeMap<&str, usize> = BTreeMap::new();
+    for c in &classes {
+        if c.name.is_empty() {
+            bail!("lock_order.toml: a [[class]] is missing its name");
+        }
+        if c.sites.is_empty() {
+            bail!("lock_order.toml: class `{}` declares no sites", c.name);
+        }
+        *seen.entry(c.name.as_str()).or_default() += 1;
+    }
+    if let Some((name, _)) = seen.iter().find(|(_, &n)| n > 1) {
+        bail!("lock_order.toml: class `{name}` is declared twice");
+    }
+    Ok(LockOrder { classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_classes_and_classifies() {
+        let text = r#"
+# hierarchy
+[[class]]
+name = "outer"
+rank = 10
+sites = ["api/jobs.rs:work"]
+
+[[class]]
+name = "leaf"
+sites = ["db.rs:coll", "db.rs:collection"]
+"#;
+        let order = parse_lock_order(text).unwrap();
+        assert_eq!(order.classes.len(), 2);
+        assert_eq!(order.classify("api/jobs.rs", "work"), Some(0));
+        assert_eq!(order.classify("storage/db.rs", "coll"), Some(1));
+        assert_eq!(order.classify("storage/db.rs", "nope"), None);
+        assert_eq!(order.rank_of(0), Some(10));
+        assert_eq!(order.rank_of(1), None);
+    }
+
+    #[test]
+    fn rejects_malformed_hierarchies() {
+        assert!(parse_lock_order("name = \"x\"").is_err(), "key before class");
+        assert!(
+            parse_lock_order("[[class]]\nrank = 1\nsites = [\"a:b\"]").is_err(),
+            "no name"
+        );
+        assert!(
+            parse_lock_order("[[class]]\nname = \"x\"\nsites = [\"nocolon\"]").is_err(),
+            "bad site"
+        );
+        let dup = "[[class]]\nname = \"x\"\nsites = [\"a:b\"]\n\
+                   [[class]]\nname = \"x\"\nsites = [\"c:d\"]";
+        assert!(parse_lock_order(dup).is_err(), "duplicate class");
+    }
+}

@@ -1,0 +1,426 @@
+//! A minimal Rust lexer — just enough token structure for the lint
+//! rules: identifiers, punctuation, string/char/number literals, and
+//! per-line comment capture (the `SAFETY:` / `LINT-ALLOW` annotations
+//! the rules look up live in comments, which a full parser would have
+//! thrown away).
+//!
+//! Deliberately *not* `syn`: the sandbox this project builds in has no
+//! network access, so the toolchain's own parser ecosystem is off the
+//! table. Token-level analysis is enough for every rule here because
+//! the rules are about call shapes (`.unwrap(`), keyword sites
+//! (`unsafe {`), and literal inventories — none need types or name
+//! resolution.
+
+use std::collections::BTreeMap;
+
+/// Token kind. Literal *values* are kept only where a rule reads them
+/// (identifiers for call shapes, strings for the drift inventories).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    /// String literal contents (escapes left verbatim — the drift rule
+    /// only matches plain route/knob/code literals, which contain none).
+    Str(String),
+    Punct(char),
+    Num,
+    Lifetime,
+    CharLit,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// One file, lexed: the token stream plus every `//` comment keyed by
+/// line (multiple comments on one line are concatenated).
+#[derive(Debug)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: BTreeMap<usize, String>,
+}
+
+impl Lexed {
+    /// True if any comment on `line-span ..= line` satisfies `pred`.
+    pub fn comment_above(&self, line: usize, span: usize, pred: impl Fn(&str) -> bool) -> bool {
+        self.find_comment_above(line, span, pred).is_some()
+    }
+
+    /// The nearest comment on `line-span ..= line` satisfying `pred`,
+    /// searching upward from `line`.
+    pub fn find_comment_above(
+        &self,
+        line: usize,
+        span: usize,
+        pred: impl Fn(&str) -> bool,
+    ) -> Option<(usize, &str)> {
+        let lo = line.saturating_sub(span);
+        for l in (lo..=line).rev() {
+            if let Some(text) = self.comments.get(&l) {
+                if pred(text) {
+                    return Some((l, text.as_str()));
+                }
+            }
+        }
+        None
+    }
+
+    /// Comment text on a specific line, if any.
+    pub fn comment_at(&self, line: usize) -> Option<&str> {
+        self.comments.get(&line).map(String::as_str)
+    }
+
+    pub fn ident_at(&self, i: usize) -> Option<&str> {
+        match self.tokens.get(i)?.tok {
+            Tok::Ident(ref s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn punct_at(&self, i: usize) -> Option<char> {
+        match self.tokens.get(i)?.tok {
+            Tok::Punct(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex one source file. Never fails: unterminated constructs run to end
+/// of input (the tree this runs on must already compile, so malformed
+/// input only ever comes from fixtures, where best-effort is fine).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut push = |tok: Tok, line: usize| tokens.push(Token { tok, line });
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (includes /// and //! doc comments)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            let text: String = b[start..j].iter().collect();
+            let slot = comments.entry(line).or_default();
+            if !slot.is_empty() {
+                slot.push(' ');
+            }
+            slot.push_str(text.trim());
+            i = j;
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // raw string r"..." / r#"..."# (and br variants)
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let (r_at, prefix_ok) = if c == 'r' {
+                (i, true)
+            } else {
+                (i + 1, i + 1 < n && b[i + 1] == 'r')
+            };
+            if prefix_ok && r_at + 1 < n && (b[r_at + 1] == '#' || b[r_at + 1] == '"') {
+                let mut hashes = 0usize;
+                let mut j = r_at + 1;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    let content_start = j + 1;
+                    let mut k = content_start;
+                    'scan: while k < n {
+                        if b[k] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && k + 1 + h < n && b[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                break 'scan;
+                            }
+                        }
+                        if b[k] == '\n' {
+                            line += 1;
+                        }
+                        k += 1;
+                    }
+                    let value: String = b[content_start..k.min(n)].iter().collect();
+                    push(Tok::Str(value), line);
+                    i = (k + 1 + hashes).min(n);
+                    continue;
+                }
+                // not a raw string after all (e.g. the raw ident `r#try`)
+            }
+        }
+        // byte string b"..."
+        if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+            i += 1; // fall through to the string case below
+        }
+        if b[i] == '"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '"' {
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            let value: String = b[start..j.min(n)].iter().collect();
+            push(Tok::Str(value), line);
+            i = j + 1;
+            continue;
+        }
+        // lifetime vs char literal
+        if c == '\'' {
+            if i + 2 < n && is_ident_start(b[i + 1]) && b[i + 2] != '\'' {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                push(Tok::Lifetime, line);
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\'' {
+                    break;
+                }
+                j += 1;
+            }
+            push(Tok::CharLit, line);
+            i = j + 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            push(Tok::Ident(b[i..j].iter().collect()), line);
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            // float continuation — but only when the dot is followed by
+            // a digit, so `1.min(x)` and `0..n` lex as Num Punct Ident
+            if j + 1 < n && b[j] == '.' && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+            }
+            push(Tok::Num, line);
+            i = j;
+            continue;
+        }
+        push(Tok::Punct(c), line);
+        i += 1;
+    }
+    Lexed { tokens, comments }
+}
+
+/// Line ranges (inclusive) of `#[cfg(test)]`-gated items, found by
+/// brace-matching the first block after the attribute. The panic and
+/// lock rules skip violations inside them — tests panic on purpose.
+pub fn test_regions(lexed: &Lexed) -> Vec<(usize, usize)> {
+    let toks = &lexed.tokens;
+    let mut regions = Vec::new();
+    let mut k = 0usize;
+    while k + 4 < toks.len() {
+        let is_cfg_test = lexed.punct_at(k) == Some('#')
+            && lexed.punct_at(k + 1) == Some('[')
+            && lexed.ident_at(k + 2) == Some("cfg")
+            && lexed.punct_at(k + 3) == Some('(')
+            && lexed.ident_at(k + 4) == Some("test");
+        if !is_cfg_test {
+            k += 1;
+            continue;
+        }
+        let start = toks[k].line;
+        let mut j = k + 5;
+        while j < toks.len() && lexed.punct_at(j) != Some('{') {
+            j += 1;
+        }
+        let mut depth = 0i64;
+        while j < toks.len() {
+            match lexed.punct_at(j) {
+                Some('{') => depth += 1,
+                Some('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let end = toks.get(j).map(|t| t.line).unwrap_or(usize::MAX);
+        regions.push((start, end));
+        k = j.max(k + 1);
+    }
+    regions
+}
+
+pub fn in_regions(line: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+/// Named function bodies as token ranges `(name, start, end)` where
+/// `start`/`end` index the body's braces. Nested functions yield nested
+/// (overlapping) entries; the lock rule treats each independently,
+/// which can only over-approximate edges, never hide one.
+pub fn fn_bodies(lexed: &Lexed) -> Vec<(String, usize, usize)> {
+    let toks = &lexed.tokens;
+    let mut out = Vec::new();
+    for k in 0..toks.len() {
+        if lexed.ident_at(k) != Some("fn") {
+            continue;
+        }
+        let Some(name) = lexed.ident_at(k + 1) else { continue };
+        let name = name.to_string();
+        // find the body's opening brace; a `;` first means a signature
+        // (trait method / extern decl) with no body
+        let mut j = k + 2;
+        let mut open = None;
+        while j < toks.len() {
+            match lexed.punct_at(j) {
+                Some('{') => {
+                    open = Some(j);
+                    break;
+                }
+                Some(';') => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else { continue };
+        let mut depth = 0i64;
+        let mut j = open;
+        while j < toks.len() {
+            match lexed.punct_at(j) {
+                Some('{') => depth += 1,
+                Some('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push((name, open, j.min(toks.len().saturating_sub(1))));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_call_shapes_and_comments() {
+        let src = r##"
+// LINT-ALLOW(panic): fine here
+let x = v[i].unwrap(); // trailing
+let y = 1.min(2);
+let s = "lit\"eral";
+let r = r#"raw "str""#;
+"##;
+        let lx = lex(src);
+        assert!(lx.comment_at(2).unwrap().contains("LINT-ALLOW(panic)"));
+        assert!(lx.comment_at(3).unwrap().contains("trailing"));
+        let mut idents: Vec<&str> = Vec::new();
+        let mut strs: Vec<&str> = Vec::new();
+        for t in &lx.tokens {
+            match &t.tok {
+                Tok::Ident(s) => idents.push(s.as_str()),
+                Tok::Str(s) => strs.push(s.as_str()),
+                _ => {}
+            }
+        }
+        assert!(idents.contains(&"unwrap"));
+        assert!(idents.contains(&"min"), "1.min must not lex as a float");
+        assert_eq!(strs, ["lit\\\"eral", "raw \"str\""]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let count = |tok: Tok| lx.tokens.iter().filter(|t| t.tok == tok).count();
+        let lifetimes = count(Tok::Lifetime);
+        let chars = count(Tok::CharLit);
+        assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn finds_test_regions_and_fn_bodies() {
+        let src = "fn live() { w(); }\n#[cfg(test)]\nmod tests {\n  fn i() { panic!(); }\n}\n";
+        let lx = lex(src);
+        let regions = test_regions(&lx);
+        assert_eq!(regions, vec![(2, 5)]);
+        assert!(in_regions(4, &regions));
+        assert!(!in_regions(1, &regions));
+        let fns = fn_bodies(&lx);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].0, "live");
+    }
+}

@@ -1,0 +1,220 @@
+//! mlci-lint: project-invariant static analysis for the MLModelCI
+//! tree. Four rule families, all token-level (see `lexer`):
+//!
+//! - **panic-freedom** — no `unwrap`/`expect`/panicking macros/slice
+//!   indexing in the serving data plane, unless annotated
+//!   `// LINT-ALLOW(panic): reason` (every annotation is inventoried).
+//! - **unsafe-audit** — every `unsafe` site carries a `SAFETY:` (or
+//!   `# Safety` doc) comment; the full inventory renders to
+//!   `docs/UNSAFE_INVENTORY.md`, which CI diffs against the tree.
+//! - **lock-order** — every lock acquisition classifies into the
+//!   hierarchy declared in `lock_order.toml`; ranked classes must be
+//!   acquired low-rank-first and the union edge graph must be acyclic.
+//! - **drift** — every frozen wire error code, registered route, and
+//!   `MLCI_*` env knob must appear somewhere under `docs/`.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use config::{parse_lock_order, LockOrder};
+pub use rules::{AllowSite, DriftInventory, Finding, UnsafeSite};
+
+/// Path prefixes/files (relative to the source root, '/'-separated)
+/// that form the serving data plane — the request path where a panic
+/// tears down a worker mid-reply instead of returning a typed error.
+pub const DATA_PLANE: [&str; 5] = [
+    "serving/",
+    "dispatcher/",
+    "api/http.rs",
+    "api/rest.rs",
+    "api/router.rs",
+];
+
+pub fn is_data_plane(rel: &str) -> bool {
+    DATA_PLANE.iter().any(|p| {
+        if p.ends_with('/') {
+            rel.starts_with(p)
+        } else {
+            rel == *p
+        }
+    })
+}
+
+/// What to check and against what.
+pub struct CheckOptions {
+    /// Root of the Rust sources (the directory scanned for `*.rs`).
+    pub src_root: PathBuf,
+    /// Declared lock hierarchy. `None` skips the lock rule entirely
+    /// (fixtures that exercise other rules pass `None`).
+    pub lock_order: Option<LockOrder>,
+    /// Docs corpus directory for the drift rule. `None` skips it.
+    pub docs_dir: Option<PathBuf>,
+}
+
+/// Everything a check produces: violations plus the two inventories
+/// that exist whether or not anything failed.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowSite>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// All `*.rs` files under `root`, as `(rel, abs)` pairs sorted by the
+/// '/'-normalized relative path so every inventory is deterministic.
+fn walk_rs(root: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = fs::read_dir(&dir).with_context(|| format!("reading {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let stripped = path.strip_prefix(root).unwrap_or(&path);
+                let mut rel = String::new();
+                for c in stripped.components() {
+                    if !rel.is_empty() {
+                        rel.push('/');
+                    }
+                    rel.push_str(&c.as_os_str().to_string_lossy());
+                }
+                out.push((rel, path));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run every rule over the tree.
+pub fn run_check(opts: &CheckOptions) -> Result<Report> {
+    let mut report = Report::default();
+    let mut locks = rules::LockAnalysis::new();
+    let mut drift = DriftInventory::default();
+
+    for (rel, abs) in walk_rs(&opts.src_root)? {
+        let src = fs::read_to_string(&abs).with_context(|| format!("reading {}", abs.display()))?;
+        let lexed = lexer::lex(&src);
+        let regions = lexer::test_regions(&lexed);
+
+        if is_data_plane(&rel) {
+            rules::rule_panic(
+                &rel,
+                &lexed,
+                &regions,
+                &mut report.findings,
+                &mut report.allows,
+            );
+        }
+        report.unsafe_sites.extend(rules::rule_unsafe(&rel, &lexed, &mut report.findings));
+        if let Some(order) = &opts.lock_order {
+            locks.scan_file(&rel, &lexed, &regions, order, &mut report.findings);
+        }
+        rules::collect_drift(&rel, &lexed, &regions, &mut drift);
+    }
+
+    if let Some(order) = &opts.lock_order {
+        locks.check_cycles(order, &mut report.findings);
+    }
+
+    if let Some(docs) = &opts.docs_dir {
+        let mut corpus = String::new();
+        let mut files: Vec<PathBuf> = fs::read_dir(docs)
+            .with_context(|| format!("reading {}", docs.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|e| e == "md"))
+            .collect();
+        files.sort();
+        for f in files {
+            let text = fs::read_to_string(&f).with_context(|| format!("reading {}", f.display()))?;
+            corpus.push_str(&text);
+            corpus.push('\n');
+        }
+        rules::rule_drift(&drift, &corpus, &mut report.findings);
+    }
+
+    report.findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    report.allows.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    report.unsafe_sites.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(report)
+}
+
+/// Render the committed unsafe inventory. Byte-deterministic: sorted by
+/// (path, line), pipes escaped, one trailing newline.
+pub fn render_unsafe_inventory(sites: &[UnsafeSite]) -> String {
+    let mut sorted: Vec<&UnsafeSite> = sites.iter().collect();
+    sorted.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    let mut out = String::new();
+    out.push_str("# Unsafe Inventory\n\n");
+    out.push_str(
+        "Every `unsafe` site in `rust/src`, with the first line of its covering\n\
+         `SAFETY:` justification. Generated by\n\
+         `cargo run -p mlci-lint -- unsafe-inventory rust/src`; CI regenerates and\n\
+         diffs this file, so edit the code comments, not this table.\n\n",
+    );
+    out.push_str("| Site | Kind | Justification |\n");
+    out.push_str("| --- | --- | --- |\n");
+    for s in &sorted {
+        let just = match &s.justification {
+            Some(j) => j.replace('|', "\\|"),
+            None => "**MISSING — lint violation**".to_string(),
+        };
+        let row = format!("| `{}:{}` | {} | {} |\n", s.path, s.line, s.kind, just);
+        out.push_str(&row);
+    }
+    out.push_str(&format!("\nTotal: {} sites.\n", sorted.len()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_plane_prefixes() {
+        assert!(is_data_plane("serving/batcher.rs"));
+        assert!(is_data_plane("dispatcher/group.rs"));
+        assert!(is_data_plane("api/http.rs"));
+        assert!(!is_data_plane("api/jobs.rs"));
+        assert!(!is_data_plane("storage/wal.rs"));
+    }
+
+    #[test]
+    fn inventory_is_deterministic_and_escaped() {
+        let sites = vec![
+            UnsafeSite {
+                path: "b.rs".into(),
+                line: 2,
+                kind: "unsafe block",
+                justification: Some("x | y".into()),
+            },
+            UnsafeSite {
+                path: "a.rs".into(),
+                line: 9,
+                kind: "unsafe fn",
+                justification: None,
+            },
+        ];
+        let md = render_unsafe_inventory(&sites);
+        let a = md.find("a.rs:9").unwrap();
+        let b = md.find("b.rs:2").unwrap();
+        assert!(a < b, "sorted by path");
+        assert!(md.contains("x \\| y"));
+        assert!(md.contains("MISSING"));
+        assert!(md.ends_with("Total: 2 sites.\n"));
+    }
+}

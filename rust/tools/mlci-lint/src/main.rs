@@ -1,0 +1,129 @@
+//! CLI driver.
+//!
+//! ```text
+//! mlci-lint check <src-dir>             # run all rules, exit 1 on findings
+//! mlci-lint unsafe-inventory <src-dir>  # print docs/UNSAFE_INVENTORY.md to stdout
+//! ```
+//!
+//! `check` resolves the repository root by walking up from `<src-dir>`
+//! to the first directory containing `ROADMAP.md`, then loads the lock
+//! hierarchy from `rust/tools/mlci-lint/lock_order.toml` and the docs
+//! corpus from `docs/`. It also regenerates the unsafe inventory and
+//! fails if the committed `docs/UNSAFE_INVENTORY.md` is stale.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use mlci_lint::{parse_lock_order, render_unsafe_inventory, run_check, CheckOptions};
+
+fn repo_root(start: &Path) -> Result<PathBuf> {
+    let mut dir = start.canonicalize().with_context(|| format!("resolving {}", start.display()))?;
+    loop {
+        if dir.join("ROADMAP.md").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!(
+                "no ROADMAP.md found above {} — run from inside the repository",
+                start.display()
+            );
+        }
+    }
+}
+
+fn cmd_check(src: &Path) -> Result<bool> {
+    let root = repo_root(src)?;
+    let lock_path = root.join("rust/tools/mlci-lint/lock_order.toml");
+    let lock_order = if lock_path.is_file() {
+        Some(parse_lock_order(&fs::read_to_string(&lock_path)?)?)
+    } else {
+        eprintln!(
+            "warning: {} not found — skipping the lock-order rule",
+            lock_path.display()
+        );
+        None
+    };
+    let docs_dir = root.join("docs");
+    let opts = CheckOptions {
+        src_root: src.to_path_buf(),
+        lock_order,
+        docs_dir: docs_dir.is_dir().then(|| docs_dir.clone()),
+    };
+    let report = run_check(&opts)?;
+
+    let mut ok = report.ok();
+    for f in &report.findings {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message);
+    }
+
+    // the committed inventory must match the tree byte-for-byte
+    let rendered = render_unsafe_inventory(&report.unsafe_sites);
+    let committed_path = docs_dir.join("UNSAFE_INVENTORY.md");
+    match fs::read_to_string(&committed_path) {
+        Ok(committed) if committed == rendered => {}
+        Ok(_) => {
+            ok = false;
+            println!(
+                "docs/UNSAFE_INVENTORY.md: [unsafe-audit] stale — regenerate with \
+                 `cargo run -p mlci-lint -- unsafe-inventory rust/src > docs/UNSAFE_INVENTORY.md`"
+            );
+        }
+        Err(_) => {
+            ok = false;
+            println!(
+                "docs/UNSAFE_INVENTORY.md: [unsafe-audit] missing — generate with \
+                 `cargo run -p mlci-lint -- unsafe-inventory rust/src > docs/UNSAFE_INVENTORY.md`"
+            );
+        }
+    }
+
+    println!(
+        "mlci-lint: {} findings, {} LINT-ALLOW(panic) sites, {} unsafe sites",
+        report.findings.len(),
+        report.allows.len(),
+        report.unsafe_sites.len()
+    );
+    for a in &report.allows {
+        println!("  allow {}:{}: {}", a.path, a.line, a.reason);
+    }
+    Ok(ok)
+}
+
+fn cmd_inventory(src: &Path) -> Result<()> {
+    let opts = CheckOptions {
+        src_root: src.to_path_buf(),
+        lock_order: None,
+        docs_dir: None,
+    };
+    let report = run_check(&opts)?;
+    print!("{}", render_unsafe_inventory(&report.unsafe_sites));
+    Ok(())
+}
+
+fn run() -> Result<bool> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.as_slice() {
+        [cmd, src] if cmd == "check" => cmd_check(Path::new(src)),
+        [cmd, src] if cmd == "unsafe-inventory" => {
+            cmd_inventory(Path::new(src))?;
+            Ok(true)
+        }
+        _ => Err(anyhow!(
+            "usage: mlci-lint check <src-dir> | mlci-lint unsafe-inventory <src-dir>"
+        )),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("mlci-lint: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

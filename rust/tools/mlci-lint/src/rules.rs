@@ -1,0 +1,723 @@
+//! The four rule families: panic-freedom, unsafe audit, lock order,
+//! API drift. Each rule is a pure function over lexed files so the
+//! fixture tests can drive them without a real repository layout.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::LockOrder;
+use crate::lexer::{fn_bodies, in_regions, Lexed, Tok};
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// One `LINT-ALLOW(panic)` escape hatch (inventoried, never silent).
+#[derive(Debug, Clone)]
+pub struct AllowSite {
+    pub path: String,
+    pub line: usize,
+    pub reason: String,
+}
+
+/// One `unsafe` occurrence and its justification.
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub path: String,
+    pub line: usize,
+    /// "unsafe block" | "unsafe fn" | "unsafe impl" | "unsafe trait"
+    pub kind: &'static str,
+    /// First line of the covering `SAFETY:` / `# Safety` comment.
+    pub justification: Option<String>,
+}
+
+const ALLOW_MARKER: &str = "LINT-ALLOW(panic)";
+/// How many lines above a site an annotation may sit (comment block +
+/// an attribute line or two).
+const ALLOW_SPAN: usize = 3;
+const SAFETY_SPAN: usize = 6;
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+/// Identifiers that look like a receiver but are actually syntax when
+/// they precede `[` (`&mut [u8]`) or terminate a backward walk.
+const NON_RECEIVER_KEYWORDS: [&str; 18] = [
+    "mut", "ref", "dyn", "in", "as", "return", "else", "match", "if", "while", "for", "move",
+    "impl", "where", "let", "fn", "pub", "use",
+];
+
+fn is_kw(s: &str) -> bool {
+    NON_RECEIVER_KEYWORDS.contains(&s)
+}
+
+/// Wire error codes are frozen snake_case literals.
+fn is_wire_code(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// The `LINT-ALLOW(panic)` annotation covering `line`, if any: the
+/// marker with a non-empty reason after the colon. `Some(Err(l))`
+/// means a marker at line `l` exists but has no reason.
+fn allow_covering(lexed: &Lexed, line: usize) -> Option<Result<(usize, String), usize>> {
+    let (l, text) = lexed.find_comment_above(line, ALLOW_SPAN, |t| t.contains(ALLOW_MARKER))?;
+    let after = text.split(ALLOW_MARKER).nth(1).unwrap_or("");
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        Some(Err(l))
+    } else {
+        Some(Ok((l, reason.to_string())))
+    }
+}
+
+/// Panic-freedom: no `unwrap`/`expect`/panicking macro/slice index in
+/// the serving data plane outside tests, unless a justified
+/// `LINT-ALLOW(panic): reason` covers the site.
+pub fn rule_panic(
+    path: &str,
+    lexed: &Lexed,
+    regions: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+    allows: &mut Vec<AllowSite>,
+) {
+    // inventory every annotation in the file (used or not — an allow
+    // that no longer covers anything still shows up for review)
+    for (&line, text) in &lexed.comments {
+        if !text.contains(ALLOW_MARKER) || in_regions(line, regions) {
+            continue;
+        }
+        let after = text.split(ALLOW_MARKER).nth(1).unwrap_or("");
+        match after.strip_prefix(':').map(str::trim) {
+            Some(reason) if !reason.is_empty() => allows.push(AllowSite {
+                path: path.to_string(),
+                line,
+                reason: reason.to_string(),
+            }),
+            _ => findings.push(Finding {
+                path: path.to_string(),
+                line,
+                rule: "panic-freedom",
+                message: format!("{ALLOW_MARKER} without a `: reason` — justify the hatch"),
+            }),
+        }
+    }
+
+    let mut flag = |line: usize, what: &str, findings: &mut Vec<Finding>| {
+        if in_regions(line, regions) {
+            return;
+        }
+        match allow_covering(lexed, line) {
+            Some(Ok(_)) => {}
+            // the missing-reason finding was already emitted above
+            Some(Err(_)) => {}
+            None => findings.push(Finding {
+                path: path.to_string(),
+                line,
+                rule: "panic-freedom",
+                message: format!(
+                    "{what} in the serving data plane — return a typed error or annotate \
+                     `{ALLOW_MARKER}: reason`"
+                ),
+            }),
+        }
+    };
+
+    let toks = &lexed.tokens;
+    for k in 0..toks.len() {
+        let line = toks[k].line;
+        match &toks[k].tok {
+            Tok::Ident(name) if name == "unwrap" || name == "expect" => {
+                if k > 0
+                    && lexed.punct_at(k - 1) == Some('.')
+                    && lexed.punct_at(k + 1) == Some('(')
+                {
+                    flag(line, &format!(".{name}()"), findings);
+                }
+            }
+            Tok::Ident(name) if PANIC_MACROS.contains(&name.as_str()) => {
+                if lexed.punct_at(k + 1) == Some('!') {
+                    flag(line, &format!("{name}! macro"), findings);
+                }
+            }
+            Tok::Punct('[') if k > 0 => {
+                let indexes = match &toks[k - 1].tok {
+                    Tok::Ident(prev) => !is_kw(prev),
+                    Tok::Punct(')') | Tok::Punct(']') => true,
+                    _ => false,
+                };
+                if indexes {
+                    flag(line, "slice/array index (may panic)", findings);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Unsafe audit: every `unsafe` site must carry a covering `SAFETY:`
+/// (or `# Safety` doc) comment within [`SAFETY_SPAN`] lines above.
+/// Returns every site for the inventory; uncovered ones also become
+/// findings.
+pub fn rule_unsafe(path: &str, lexed: &Lexed, findings: &mut Vec<Finding>) -> Vec<UnsafeSite> {
+    let mut sites = Vec::new();
+    let toks = &lexed.tokens;
+    for k in 0..toks.len() {
+        if lexed.ident_at(k) != Some("unsafe") {
+            continue;
+        }
+        let line = toks[k].line;
+        let kind = match toks.get(k + 1).map(|t| &t.tok) {
+            Some(Tok::Ident(n)) if n == "fn" => "unsafe fn",
+            Some(Tok::Ident(n)) if n == "impl" => "unsafe impl",
+            Some(Tok::Ident(n)) if n == "trait" => "unsafe trait",
+            Some(Tok::Punct('{')) => "unsafe block",
+            // `pub unsafe fn` lexes pub-unsafe-fn so `unsafe` still
+            // precedes `fn`; anything else (unsafe extern, …) is audited
+            // under the generic kind
+            _ => "unsafe",
+        };
+        let found = lexed.find_comment_above(line, SAFETY_SPAN, |t| {
+            t.contains("SAFETY") || t.contains("# Safety")
+        });
+        let justification = found.map(|(l, text)| summarize_safety(lexed, l, text));
+        if justification.is_none() {
+            findings.push(Finding {
+                path: path.to_string(),
+                line,
+                rule: "unsafe-audit",
+                message: format!(
+                    "{kind} without a covering `// SAFETY:` comment (within {SAFETY_SPAN} lines)"
+                ),
+            });
+        }
+        sites.push(UnsafeSite {
+            path: path.to_string(),
+            line,
+            kind,
+            justification,
+        });
+    }
+    sites
+}
+
+/// First meaningful line of a safety comment: the text after `SAFETY:`,
+/// or — for `/// # Safety` doc headers — the doc line below the header.
+fn summarize_safety(lexed: &Lexed, line: usize, text: &str) -> String {
+    if let Some(after) = text.split("SAFETY:").nth(1) {
+        let after = after.trim();
+        if !after.is_empty() {
+            return after.to_string();
+        }
+    }
+    if text.contains("# Safety") {
+        if let Some(next) = lexed.comment_at(line + 1) {
+            let doc = next.trim_start_matches('/').trim();
+            if !doc.is_empty() {
+                return doc.to_string();
+            }
+        }
+    }
+    text.trim_start_matches('/').trim().to_string()
+}
+
+/// One lock acquisition: `(token index, line, receiver ident)`.
+fn lock_sites(lexed: &Lexed, regions: &[(usize, usize)]) -> Vec<(usize, usize, Option<String>)> {
+    let toks = &lexed.tokens;
+    let mut out = Vec::new();
+    for k in 0..toks.len() {
+        let line = toks[k].line;
+        if in_regions(line, regions) {
+            continue;
+        }
+        match lexed.ident_at(k) {
+            // `recv.lock()` / `.read()` / `.write()` — zero-arg only,
+            // which separates lock guards from io::Read/Write calls
+            Some("lock" | "read" | "write") => {
+                if k > 0
+                    && lexed.punct_at(k - 1) == Some('.')
+                    && lexed.punct_at(k + 1) == Some('(')
+                    && lexed.punct_at(k + 2) == Some(')')
+                {
+                    out.push((k, line, receiver_back(lexed, k - 1)));
+                }
+            }
+            // the poison-tolerant helpers take the lock as an argument:
+            // `lock_unpoisoned(&self.state)` — receiver is the last
+            // identifier inside the call's parentheses
+            Some("lock_unpoisoned" | "read_unpoisoned" | "write_unpoisoned") => {
+                if lexed.punct_at(k + 1) == Some('(') {
+                    out.push((k, line, receiver_in_args(lexed, k + 1)));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Walk back from the `.` of a method call to the receiver's last
+/// identifier, skipping balanced `(..)`/`[..]` groups (so
+/// `slots[i].lock()` resolves to `slots` and `cell().lock()` to
+/// `cell`). Keywords terminate the walk unresolved.
+fn receiver_back(lexed: &Lexed, dot_idx: usize) -> Option<String> {
+    let toks = &lexed.tokens;
+    let mut j = dot_idx.checked_sub(1)?;
+    loop {
+        match &toks.get(j)?.tok {
+            Tok::Punct(c @ (')' | ']')) => {
+                let (open, close) = if *c == ')' { ('(', ')') } else { ('[', ']') };
+                let mut depth = 1i64;
+                while depth > 0 {
+                    j = j.checked_sub(1)?;
+                    match lexed.punct_at(j) {
+                        Some(p) if p == close => depth += 1,
+                        Some(p) if p == open => depth -= 1,
+                        _ => {}
+                    }
+                }
+                j = j.checked_sub(1)?;
+            }
+            Tok::Ident(name) => {
+                if is_kw(name) {
+                    return None;
+                }
+                return Some(name.clone());
+            }
+            _ => return None,
+        }
+    }
+}
+
+/// Last identifier inside a call's argument list (for the helper-call
+/// acquisition shape).
+fn receiver_in_args(lexed: &Lexed, open_idx: usize) -> Option<String> {
+    let toks = &lexed.tokens;
+    let mut depth = 0i64;
+    let mut last = None;
+    for k in open_idx..toks.len() {
+        match &toks[k].tok {
+            Tok::Punct('(') => depth += 1,
+            Tok::Punct(')') => {
+                depth -= 1;
+                if depth == 0 {
+                    return last;
+                }
+            }
+            Tok::Ident(name) if !is_kw(name) => last = Some(name.clone()),
+            _ => {}
+        }
+    }
+    last
+}
+
+/// Intra-function acquisition edges, checked against the declared
+/// hierarchy: every site must classify, ranked pairs must be acquired
+/// low-rank-first, and the union edge graph must be acyclic.
+///
+/// "Acquired together" is approximated by source order within one
+/// function body — guards usually live to the end of their scope in
+/// this codebase, and the approximation can only over-report edges
+/// (a false edge is a reviewable warning; a missed real edge would be
+/// a silent deadlock).
+pub struct LockAnalysis {
+    /// Directed class-pair edges with one witness site each:
+    /// `(from, to, path, line)`.
+    pub edges: Vec<(usize, usize, String, usize)>,
+}
+
+impl LockAnalysis {
+    pub fn new() -> LockAnalysis {
+        LockAnalysis { edges: Vec::new() }
+    }
+
+    /// Collect classified acquisitions and intra-fn edges for one file.
+    pub fn scan_file(
+        &mut self,
+        path: &str,
+        lexed: &Lexed,
+        regions: &[(usize, usize)],
+        order: &LockOrder,
+        findings: &mut Vec<Finding>,
+    ) {
+        let sites = lock_sites(lexed, regions);
+        if sites.is_empty() {
+            return;
+        }
+        let mut classified: Vec<(usize, usize, usize)> = Vec::new(); // (tok, line, class)
+        for (tok, line, recv) in sites {
+            let Some(recv) = recv else {
+                findings.push(Finding {
+                    path: path.to_string(),
+                    line,
+                    rule: "lock-order",
+                    message: "unresolvable lock receiver — name the lock binding".to_string(),
+                });
+                continue;
+            };
+            match order.classify(path, &recv) {
+                Some(class) => classified.push((tok, line, class)),
+                None => findings.push(Finding {
+                    path: path.to_string(),
+                    line,
+                    rule: "lock-order",
+                    message: format!(
+                        "lock acquisition on `{recv}` has no class in lock_order.toml — declare \
+                         it in the hierarchy"
+                    ),
+                }),
+            }
+        }
+        for (_, start, end) in fn_bodies(lexed) {
+            let mut in_fn: Vec<(usize, usize, usize)> = Vec::new();
+            for c in &classified {
+                if c.0 > start && c.0 < end {
+                    in_fn.push(*c);
+                }
+            }
+            for (i, a) in in_fn.iter().enumerate() {
+                for b in in_fn.iter().skip(i + 1) {
+                    if a.2 == b.2 {
+                        continue;
+                    }
+                    if let (Some(ra), Some(rb)) = (order.rank_of(a.2), order.rank_of(b.2)) {
+                        if ra > rb {
+                            findings.push(Finding {
+                                path: path.to_string(),
+                                line: b.1,
+                                rule: "lock-order",
+                                message: format!(
+                                    "`{}` (rank {}) acquired while `{}` (rank {}) is held — \
+                                     declared order is low rank first",
+                                    order.name_of(b.2),
+                                    rb,
+                                    order.name_of(a.2),
+                                    ra
+                                ),
+                            });
+                        }
+                    }
+                    self.edges.push((a.2, b.2, path.to_string(), b.1));
+                }
+            }
+        }
+    }
+
+    /// Cycle check over the union graph of every scanned file.
+    pub fn check_cycles(&self, order: &LockOrder, findings: &mut Vec<Finding>) {
+        let mut adj: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+        for (a, b, _, _) in &self.edges {
+            adj.entry(*a).or_default().insert(*b);
+        }
+        let succs_of = |n: usize| -> Vec<usize> {
+            match adj.get(&n) {
+                Some(s) => s.iter().copied().collect(),
+                None => Vec::new(),
+            }
+        };
+        // iterative DFS with colors; report the first cycle found
+        let mut color: BTreeMap<usize, u8> = BTreeMap::new(); // 1 = open, 2 = done
+        let nodes: Vec<usize> = adj.keys().copied().collect();
+        for &root in &nodes {
+            if color.get(&root).copied().unwrap_or(0) != 0 {
+                continue;
+            }
+            let mut stack: Vec<(usize, Vec<usize>)> = vec![(root, succs_of(root))];
+            color.insert(root, 1);
+            let mut trail = vec![root];
+            while let Some((node, succs)) = stack.last_mut() {
+                let node = *node;
+                if let Some(next) = succs.pop() {
+                    match color.get(&next).copied().unwrap_or(0) {
+                        0 => {
+                            color.insert(next, 1);
+                            trail.push(next);
+                            stack.push((next, succs_of(next)));
+                        }
+                        1 => {
+                            self.report_cycle(order, &trail, node, next, findings);
+                            return; // one cycle report is actionable; more is noise
+                        }
+                        _ => {}
+                    }
+                } else {
+                    color.insert(node, 2);
+                    stack.pop();
+                    trail.pop();
+                }
+            }
+        }
+    }
+
+    /// One finding for the cycle closed by the back edge `node -> next`:
+    /// the trail sliced from `next`, witnessed by the first recorded
+    /// edge site.
+    fn report_cycle(
+        &self,
+        order: &LockOrder,
+        trail: &[usize],
+        node: usize,
+        next: usize,
+        findings: &mut Vec<Finding>,
+    ) {
+        let start = trail.iter().position(|&n| n == next).unwrap_or(0);
+        let mut names: Vec<&str> = trail[start..].iter().map(|&n| order.name_of(n)).collect();
+        names.push(order.name_of(next));
+        let witness = self.edges.iter().find(|e| e.0 == node && e.1 == next);
+        let (path, line) = match witness {
+            Some(e) => (e.2.clone(), e.3),
+            None => (String::from("?"), 0),
+        };
+        findings.push(Finding {
+            path,
+            line,
+            rule: "lock-order",
+            message: format!("acquisition cycle across functions: {}", names.join(" -> ")),
+        });
+    }
+}
+
+impl Default for LockAnalysis {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Inventories the drift rule checks against the docs.
+#[derive(Debug, Default)]
+pub struct DriftInventory {
+    /// Frozen wire codes from `ErrorCode::as_str` (api/error.rs).
+    pub error_codes: BTreeSet<String>,
+    /// Route patterns registered on the router table (api/*).
+    pub routes: BTreeSet<String>,
+    /// `MLCI_*` environment knobs referenced anywhere in src.
+    pub env_knobs: BTreeSet<String>,
+}
+
+/// Collect drift-checked artifacts from one file.
+pub fn collect_drift(
+    path: &str,
+    lexed: &Lexed,
+    regions: &[(usize, usize)],
+    inv: &mut DriftInventory,
+) {
+    let toks = &lexed.tokens;
+    // error codes: string literals inside any `fn as_str` body of the
+    // error module that look like snake_case wire codes
+    if path.ends_with("api/error.rs") || path == "api/error.rs" {
+        for (name, start, end) in fn_bodies(lexed) {
+            if name != "as_str" {
+                continue;
+            }
+            for t in &toks[start..=end.min(toks.len() - 1)] {
+                if let Tok::Str(s) = &t.tok {
+                    if is_wire_code(s) {
+                        inv.error_codes.insert(s.clone());
+                    }
+                }
+            }
+        }
+    }
+    // routes: `.get("/..")`-style registrations in the api layer
+    if path.starts_with("api/") || path.contains("/api/") {
+        for k in 0..toks.len() {
+            if in_regions(toks[k].line, regions) {
+                continue;
+            }
+            let Some(m) = lexed.ident_at(k) else { continue };
+            let is_verb = matches!(m, "get" | "post" | "put" | "delete" | "route");
+            if !is_verb || k == 0 || lexed.punct_at(k - 1) != Some('.') {
+                continue;
+            }
+            if lexed.punct_at(k + 1) != Some('(') {
+                continue;
+            }
+            // first string argument starting with '/' within the call
+            let mut depth = 0i64;
+            for t in &toks[k + 1..] {
+                match &t.tok {
+                    Tok::Punct('(') => depth += 1,
+                    Tok::Punct(')') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    Tok::Str(s) if s.starts_with('/') => {
+                        inv.routes.insert(s.clone());
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    // env knobs: any MLCI_* string literal
+    for t in &toks[..] {
+        if let Tok::Str(s) = &t.tok {
+            let is_knob = s.starts_with("MLCI_")
+                && s.len() > 5
+                && s.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_');
+            if is_knob {
+                inv.env_knobs.insert(s.clone());
+            }
+        }
+    }
+}
+
+/// Check the collected inventory against the docs corpus.
+pub fn rule_drift(inv: &DriftInventory, docs_text: &str, findings: &mut Vec<Finding>) {
+    for code in &inv.error_codes {
+        if !docs_text.contains(code.as_str()) {
+            findings.push(Finding {
+                path: "docs/".to_string(),
+                line: 0,
+                rule: "drift",
+                message: format!("ApiErrorCode `{code}` is not documented anywhere under docs/"),
+            });
+        }
+    }
+    for route in &inv.routes {
+        if !docs_text.contains(route.as_str()) {
+            findings.push(Finding {
+                path: "docs/".to_string(),
+                line: 0,
+                rule: "drift",
+                message: format!("route `{route}` is not documented anywhere under docs/"),
+            });
+        }
+    }
+    for knob in &inv.env_knobs {
+        if !docs_text.contains(knob.as_str()) {
+            findings.push(Finding {
+                path: "docs/".to_string(),
+                line: 0,
+                rule: "drift",
+                message: format!("env knob `{knob}` is not documented anywhere under docs/"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, test_regions};
+
+    fn run_panic(src: &str) -> (Vec<Finding>, Vec<AllowSite>) {
+        let lx = lex(src);
+        let regions = test_regions(&lx);
+        let (mut f, mut a) = (Vec::new(), Vec::new());
+        rule_panic("serving/x.rs", &lx, &regions, &mut f, &mut a);
+        (f, a)
+    }
+
+    #[test]
+    fn panic_rule_flags_and_allows() {
+        let (f, _) = run_panic("fn f(v: Vec<u32>) { v.last().unwrap(); }");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains(".unwrap()"));
+
+        let src = "fn f(v: &[u32]) -> u32 {\n    // LINT-ALLOW(panic): len checked\n    v[0]\n}";
+        let (f, a) = run_panic(src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].reason, "len checked");
+
+        let (f, _) = run_panic("// LINT-ALLOW(panic)\nfn f(v: &[u32]) -> u32 { v[0] }");
+        assert_eq!(f.len(), 1, "reasonless allow is itself a violation");
+
+        let (f, _) = run_panic("#[cfg(test)]\nmod tests {\n fn f() { panic!(); }\n}");
+        assert!(f.is_empty(), "tests may panic");
+
+        let (f, _) = run_panic("fn f(x: &mut [u8]) -> usize { x.len() }");
+        assert!(f.is_empty(), "`&mut [u8]` is a type, not an index");
+    }
+
+    #[test]
+    fn unsafe_rule_requires_safety() {
+        let lx = lex("fn f() { unsafe { core::ptr::null::<u8>().read() } }");
+        let mut f = Vec::new();
+        let sites = rule_unsafe("util/x.rs", &lx, &mut f);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(f.len(), 1);
+
+        let lx = lex("fn f() {\n    // SAFETY: null never read\n    unsafe { op() }\n}");
+        let mut f = Vec::new();
+        let sites = rule_unsafe("util/x.rs", &lx, &mut f);
+        assert!(f.is_empty());
+        assert_eq!(sites[0].justification.as_deref(), Some("null never read"));
+    }
+
+    #[test]
+    fn lock_rule_ranks_and_cycles() {
+        let order = crate::config::parse_lock_order(
+            "[[class]]\nname = \"outer\"\nrank = 1\nsites = [\"x.rs:a\"]\n\
+             [[class]]\nname = \"inner\"\nrank = 2\nsites = [\"x.rs:b\"]",
+        )
+        .unwrap();
+        // correct order: no findings
+        let lx = lex("fn f() { let g = a.lock(); let h = b.lock(); }");
+        let mut an = LockAnalysis::new();
+        let mut f = Vec::new();
+        an.scan_file("x.rs", &lx, &[], &order, &mut f);
+        an.check_cycles(&order, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+        // inverted order: rank finding
+        let lx = lex("fn f() { let g = b.lock(); let h = a.lock(); }");
+        let mut an = LockAnalysis::new();
+        let mut f = Vec::new();
+        an.scan_file("x.rs", &lx, &[], &order, &mut f);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("rank"));
+        // unclassified receiver
+        let lx = lex("fn f() { mystery.lock(); }");
+        let mut an = LockAnalysis::new();
+        let mut f = Vec::new();
+        an.scan_file("x.rs", &lx, &[], &order, &mut f);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("no class"));
+        // unranked cycle across two functions
+        let order2 = crate::config::parse_lock_order(
+            "[[class]]\nname = \"p\"\nsites = [\"x.rs:p\"]\n\
+             [[class]]\nname = \"q\"\nsites = [\"x.rs:q\"]",
+        )
+        .unwrap();
+        let lx = lex("fn f() { p.lock(); q.lock(); }\nfn g() { q.lock(); p.lock(); }");
+        let mut an = LockAnalysis::new();
+        let mut f = Vec::new();
+        an.scan_file("x.rs", &lx, &[], &order2, &mut f);
+        assert!(f.is_empty(), "unranked classes have no pairwise order: {f:?}");
+        an.check_cycles(&order2, &mut f);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("cycle"), "{f:?}");
+        // helper-call shape classifies through the argument
+        let toml3 = "[[class]]\nname = \"s\"\nsites = [\"x.rs:state\"]";
+        let order3 = crate::config::parse_lock_order(toml3).unwrap();
+        let lx = lex("fn f(&self) { let g = lock_unpoisoned(&self.state); }");
+        let mut an = LockAnalysis::new();
+        let mut f = Vec::new();
+        an.scan_file("x.rs", &lx, &[], &order3, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn drift_inventories_and_checks() {
+        let mut inv = DriftInventory::default();
+        let lx = lex("impl E { fn as_str(&self) -> &str { match self { A => \"bad_request\" } } }");
+        collect_drift("api/error.rs", &lx, &[], &mut inv);
+        let lx = lex("fn routes() -> Router<S> { Router::new().get(\"/api/v1/models\", h) }");
+        let regions = test_regions(&lx);
+        collect_drift("api/rest.rs", &lx, &regions, &mut inv);
+        let lx = lex("fn k() { std::env::var(\"MLCI_FAULTS\"); }");
+        collect_drift("cluster/device.rs", &lx, &[], &mut inv);
+        assert!(inv.error_codes.contains("bad_request"));
+        assert!(inv.routes.contains("/api/v1/models"));
+        assert!(inv.env_knobs.contains("MLCI_FAULTS"));
+
+        let mut f = Vec::new();
+        rule_drift(&inv, "docs: bad_request /api/v1/models", &mut f);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("MLCI_FAULTS"));
+    }
+}

@@ -1,0 +1,19 @@
+//! Frozen wire taxonomy for the clean fixture.
+
+pub enum Code {
+    BadRequest,
+    NotFound,
+}
+
+impl Code {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::BadRequest => "bad_request",
+            Code::NotFound => "not_found",
+        }
+    }
+}
+
+pub fn knob() -> Option<String> {
+    std::env::var("MLCI_FIXTURE_KNOB").ok()
+}

@@ -1,0 +1,16 @@
+//! Route registrations for the clean fixture.
+
+pub struct Router;
+
+impl Router {
+    pub fn new() -> Router {
+        Router
+    }
+    pub fn get(self, _path: &str) -> Router {
+        self
+    }
+}
+
+pub fn routes() -> Router {
+    Router::new().get("/api/v1/ping")
+}

@@ -1,0 +1,50 @@
+//! Clean data-plane fixture: typed errors, justified escape hatch,
+//! documented unsafe, locks acquired in declared order.
+
+use std::sync::Mutex;
+
+pub struct Handler {
+    pub outer: Mutex<Vec<u32>>,
+    pub inner: Mutex<u32>,
+}
+
+pub enum HandlerError {
+    Empty,
+}
+
+impl Handler {
+    pub fn first(&self, v: &[u32]) -> Result<u32, HandlerError> {
+        v.first().copied().ok_or(HandlerError::Empty)
+    }
+
+    pub fn head(&self, v: &[u32]) -> u32 {
+        if v.is_empty() {
+            return 0;
+        }
+        // LINT-ALLOW(panic): emptiness is checked two lines above
+        v[0]
+    }
+
+    pub fn ordered(&self) -> u32 {
+        let g = self.outer.lock().unwrap_or_else(|e| e.into_inner());
+        let h = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.len() as u32 + *h
+    }
+
+    pub fn raw_len(&self, v: &[u32]) -> usize {
+        // SAFETY: the pointer and length come from the same live slice
+        unsafe { core::slice::from_raw_parts(v.as_ptr(), v.len()).len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_panic_freely() {
+        let h = Handler { outer: Mutex::new(vec![1]), inner: Mutex::new(2) };
+        assert_eq!(h.head(&[7]), 7);
+        assert_eq!(h.outer.lock().unwrap().len(), 1);
+    }
+}

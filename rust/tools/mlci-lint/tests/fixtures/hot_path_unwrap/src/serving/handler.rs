@@ -1,0 +1,5 @@
+//! Seeded violation: an unannotated `.unwrap()` on the request path.
+
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}

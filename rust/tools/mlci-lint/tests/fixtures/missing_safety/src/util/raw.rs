@@ -1,0 +1,5 @@
+//! Seeded violation: an `unsafe` block with no covering justification.
+
+pub fn peek(v: &[u8]) -> usize {
+    unsafe { core::slice::from_raw_parts(v.as_ptr(), v.len()).len() }
+}

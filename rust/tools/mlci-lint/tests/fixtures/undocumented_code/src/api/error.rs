@@ -1,0 +1,15 @@
+//! Seeded violation: `ghost_code` never appears in the fixture docs.
+
+pub enum Code {
+    Known,
+    Ghost,
+}
+
+impl Code {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::Known => "known_code",
+            Code::Ghost => "ghost_code",
+        }
+    }
+}

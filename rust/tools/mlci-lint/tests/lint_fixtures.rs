@@ -1,0 +1,85 @@
+//! Fixture-driven acceptance tests: the lint must pass the clean tree
+//! and fail each seeded violation for the right rule. Fixtures are
+//! scanned textually — they are never compiled.
+
+use std::path::PathBuf;
+
+use mlci_lint::{parse_lock_order, run_check, CheckOptions, Report};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn check(name: &str) -> Report {
+    let root = fixture(name);
+    let lock_path = root.join("lock_order.toml");
+    let lock_order = if lock_path.is_file() {
+        let text = std::fs::read_to_string(&lock_path).unwrap();
+        Some(parse_lock_order(&text).unwrap())
+    } else {
+        None
+    };
+    let docs = root.join("docs");
+    let opts = CheckOptions {
+        src_root: root.join("src"),
+        lock_order,
+        docs_dir: docs.is_dir().then_some(docs),
+    };
+    run_check(&opts).unwrap()
+}
+
+/// True if any finding of `rule` mentions `needle` in its path or
+/// message.
+fn has(report: &Report, rule: &str, needle: &str) -> bool {
+    for f in &report.findings {
+        if f.rule == rule && (f.path.contains(needle) || f.message.contains(needle)) {
+            return true;
+        }
+    }
+    false
+}
+
+#[test]
+fn clean_fixture_passes_every_rule() {
+    let report = check("clean");
+    assert!(report.ok(), "clean must pass: {:?}", report.findings);
+    assert_eq!(report.allows.len(), 1, "justified allow inventoried");
+    assert_eq!(report.unsafe_sites.len(), 1);
+    assert!(report.unsafe_sites[0].justification.is_some());
+}
+
+#[test]
+fn missing_safety_fails_unsafe_audit() {
+    let report = check("missing_safety");
+    assert!(!report.ok());
+    let hit = has(&report, "unsafe-audit", "util/raw.rs");
+    assert!(hit, "{:?}", report.findings);
+}
+
+#[test]
+fn hot_path_unwrap_fails_panic_freedom() {
+    let report = check("hot_path_unwrap");
+    assert!(!report.ok());
+    let hit = has(&report, "panic-freedom", "serving/handler.rs");
+    assert!(hit, "{:?}", report.findings);
+}
+
+#[test]
+fn abba_locks_fail_cycle_check() {
+    let report = check("lock_cycle");
+    assert!(!report.ok());
+    let hit = has(&report, "lock-order", "cycle");
+    assert!(hit, "{:?}", report.findings);
+}
+
+#[test]
+fn undocumented_error_code_fails_drift() {
+    let report = check("undocumented_code");
+    assert!(!report.ok());
+    let hit = has(&report, "drift", "ghost_code");
+    assert!(hit, "{:?}", report.findings);
+    let bad = has(&report, "drift", "known_code");
+    assert!(!bad, "documented code flagged: {:?}", report.findings);
+}

@@ -15,6 +15,23 @@ set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
+# MLCI_TIER1_LINT=1: fast static-analysis-only pass — the project lint
+# (mlci-lint's four rule families plus its own tests), rustfmt and
+# clippy, with no release build or test suite. Mirrors CI's lint leg
+# for quick pre-push iteration.
+if [[ -n "${MLCI_TIER1_LINT:-}" ]]; then
+  echo "== tier1 (lint-only): cargo test -p mlci-lint -q =="
+  cargo test -p mlci-lint -q
+  echo "== tier1 (lint-only): mlci-lint check =="
+  cargo run -p mlci-lint -- check src
+  echo "== tier1 (lint-only): cargo fmt --check =="
+  cargo fmt -- --check
+  echo "== tier1 (lint-only): cargo clippy -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+  echo "== tier1 (lint-only): OK =="
+  exit 0
+fi
+
 echo "== tier1: MLCI_FORCE_SCALAR=${MLCI_FORCE_SCALAR:-<unset>} (scan engine escape hatch) =="
 echo "== tier1: MLCI_WAL_SYNC=${MLCI_WAL_SYNC:-<unset>} (WAL durability policy override) =="
 echo "== tier1: MLCI_FAULTS=${MLCI_FAULTS:-<unset>} (fault-injection plans) =="
