@@ -12,6 +12,8 @@
 //!                    [--policy system|continuous|nobatch] [--max-batch N] [--target-p99 MS]
 //! mlmodelci recommend --name NAME [--p99 50]
 //! mlmodelci delete   --name NAME
+//! mlmodelci jobs     [--limit N] [--cursor ID]
+//! mlmodelci cancel   --job ID
 //! ```
 
 use std::collections::BTreeMap;
@@ -65,6 +67,8 @@ pub fn usage() -> String {
      \x20            --policy system|continuous|nobatch, --max-batch, --target-p99, --max-queue)\n\
      \x20 recommend  cost-effective deployment under an SLO (--name, --p99)\n\
      \x20 delete     remove a model (--name)\n\
+     \x20 jobs       list durable jobs from the _jobs collection (--limit, --cursor)\n\
+     \x20 cancel     cancel a queued or running job (--job ID)\n\
      \x20 demo       run the end-to-end demo pipeline\n\
      \x20 features   print the Table-1 capability matrix\n\
      flags: --artifacts DIR (default ./artifacts), --data DIR (default in-memory),\n\

@@ -48,6 +48,9 @@ pub enum ErrorCode {
     /// The request's deadline budget expired while it was queued; it
     /// was shed before execution.
     DeadlineExceeded,
+    /// Cancelling a job that already reached a terminal state
+    /// (succeeded/failed/cancelled): the outcome is immutable.
+    JobCancelled,
 }
 
 impl ErrorCode {
@@ -63,6 +66,7 @@ impl ErrorCode {
             ErrorCode::Unavailable => "unavailable",
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::JobCancelled => "job_cancelled",
         }
     }
 
@@ -72,7 +76,7 @@ impl ErrorCode {
             ErrorCode::Validation => 422,
             ErrorCode::NotFound => 404,
             ErrorCode::MethodNotAllowed => 405,
-            ErrorCode::Conflict => 409,
+            ErrorCode::Conflict | ErrorCode::JobCancelled => 409,
             ErrorCode::Internal => 500,
             ErrorCode::Unavailable => 503,
             ErrorCode::Overloaded => 429,
@@ -93,6 +97,7 @@ impl ErrorCode {
             ErrorCode::Unavailable,
             ErrorCode::Overloaded,
             ErrorCode::DeadlineExceeded,
+            ErrorCode::JobCancelled,
         ]
     }
 }

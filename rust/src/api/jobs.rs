@@ -1,14 +1,33 @@
 //! Asynchronous job resources for the v1 API (§3.7 alignment): the
 //! paper's controller performs *background* evaluation on idle workers,
 //! so the REST surface must not block an HTTP handler on conversion or
-//! a profiling drain. `POST /api/v1/models/{id}/convert|profile`
-//! submits work here and answers `202 Accepted` with a job id; clients
-//! poll `GET /api/v1/jobs/{id}` through `pending -> running ->
-//! succeeded|failed`, with the conversion/profiling report carried in
-//! the terminal payload.
+//! a profiling drain. `POST /api/v1/models/{id}/convert|profile` and
+//! `POST /api/v1/models` (publish) submit work here and answer `202
+//! Accepted` with a job id; clients poll `GET /api/v1/jobs/{id}`
+//! through `pending -> running -> succeeded|failed|cancelled`, with the
+//! conversion/profiling report carried in the terminal payload, and may
+//! `DELETE /api/v1/jobs/{id}` to cancel.
+//!
+//! **Durability.** Jobs are persisted to the `_jobs` collection riding
+//! the same segmented WAL as the model hub (see docs/STORAGE.md): every
+//! state transition (pending → running → succeeded|failed|cancelled) is
+//! exactly one `apply_batch` write, so the registry survives a process
+//! crash. On startup [`JobRegistry::open`] replays the collection:
+//! terminal jobs reload for `GET /api/v1/jobs`, pending jobs re-enter
+//! the work queue, and jobs the dead process left `running` are
+//! re-marked `pending` when their kind is idempotent (profile) or
+//! `failed` with an `interrupted` error when it is not
+//! (convert/publish, whose status transitions can't legally repeat).
+//!
+//! **Cancellation.** A pending job cancels in O(1): its record flips to
+//! `cancelled` and the stale queue entry is skipped at pickup. A
+//! running job gets its cooperative `cancel` flag set; the runner
+//! threads it into `Controller::run_until_drained` and the converter,
+//! which return the [`crate::controller::Preempted`] sentinel within
+//! one controller tick / variant boundary.
 //!
 //! The registry owns one background worker thread that executes jobs
-//! strictly in submission order. Serial execution is deliberate: both
+//! strictly in submission order. Serial execution is deliberate: all
 //! job kinds drive shared platform state (the controller's single job
 //! queue and `flush_results` accumulator, the hub's status machine),
 //! so one worker keeps job-vs-job interleavings out entirely. Drains
@@ -18,22 +37,35 @@
 //! `Platform::profile_sync` session holds end-to-end. Elastic
 //! parallelism lives *inside* a job — the controller fans a profiling
 //! grid out across every idle device per tick. Terminal jobs are kept
-//! for polling up to [`MAX_RETAINED_JOBS`], then evicted oldest-first.
+//! for polling up to [`MAX_RETAINED_JOBS`], then evicted oldest-first
+//! (the eviction deletes ride the same `apply_batch` as the submit that
+//! overflowed the cap, so the persisted collection is compacted too).
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use anyhow::Result;
 
+use crate::controller::Preempted;
+use crate::storage::{Database, WriteOp};
 use crate::util::clock::SharedClock;
 use crate::util::idgen;
 use crate::util::json::Json;
+
+/// The durable collection job records live in. The leading underscore
+/// keeps it visually separate from user-facing collections (`models`).
+pub const JOBS_COLLECTION: &str = "_jobs";
 
 /// What a job does (frozen API strings, see `docs/API.md`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobKind {
     Convert,
     Profile,
+    /// Full automation: register already happened synchronously (the
+    /// model document must exist before the 202 returns); the job runs
+    /// convert + profile per the payload's automation flags.
+    Publish,
 }
 
 impl JobKind {
@@ -41,7 +73,27 @@ impl JobKind {
         match self {
             JobKind::Convert => "convert",
             JobKind::Profile => "profile",
+            JobKind::Publish => "publish",
         }
+    }
+
+    pub fn from_str(s: &str) -> Option<JobKind> {
+        match s {
+            "convert" => Some(JobKind::Convert),
+            "profile" => Some(JobKind::Profile),
+            "publish" => Some(JobKind::Publish),
+            _ => None,
+        }
+    }
+
+    /// Whether an interrupted run can safely be re-executed from
+    /// scratch. Profiling is: `enqueue_profiling` keeps an
+    /// already-`profiling` model's status and rows are de-duplicated by
+    /// the hub's curve folding. Conversion (and publish, which embeds
+    /// it) is not: the `converting -> converting` status transition is
+    /// illegal and conversion records would double-append.
+    pub fn idempotent(&self) -> bool {
+        matches!(self, JobKind::Profile)
     }
 }
 
@@ -52,6 +104,7 @@ pub enum JobState {
     Running,
     Succeeded,
     Failed,
+    Cancelled,
 }
 
 impl JobState {
@@ -61,11 +114,23 @@ impl JobState {
             JobState::Running => "running",
             JobState::Succeeded => "succeeded",
             JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<JobState> {
+        match s {
+            "pending" => Some(JobState::Pending),
+            "running" => Some(JobState::Running),
+            "succeeded" => Some(JobState::Succeeded),
+            "failed" => Some(JobState::Failed),
+            "cancelled" => Some(JobState::Cancelled),
+            _ => None,
         }
     }
 
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Succeeded | JobState::Failed)
+        matches!(self, JobState::Succeeded | JobState::Failed | JobState::Cancelled)
     }
 }
 
@@ -81,11 +146,19 @@ pub struct Job {
     pub finished_ms: Option<f64>,
     /// Terminal payload of a succeeded job (e.g. `profiles_recorded`).
     pub result: Option<Json>,
-    /// Terminal error text of a failed job.
+    /// Terminal error text of a failed/cancelled job.
     pub error: Option<String>,
+    /// Declarative work spec the runner interprets (persisted, so a
+    /// recovered job re-runs with the same parameters).
+    pub payload: Json,
+    /// Cooperative preemption flag: set by [`JobRegistry::cancel`],
+    /// polled by the runner mid-execution. Process-local (recovered
+    /// jobs get a fresh flag).
+    pub cancel: Arc<AtomicBool>,
 }
 
 impl Job {
+    /// API body (payload and the cancel flag stay internal).
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj()
             .with("id", self.id.as_str())
@@ -107,21 +180,99 @@ impl Job {
         }
         j
     }
+
+    /// Persisted document (`_jobs` schema, docs/STORAGE.md): the API
+    /// body keyed by `_id` plus the replayable `payload`.
+    pub fn to_doc(&self) -> Json {
+        let mut d = Json::obj()
+            .with("_id", self.id.as_str())
+            .with("kind", self.kind.as_str())
+            .with("model_id", self.model_id.as_str())
+            .with("state", self.state.as_str())
+            .with("created_ms", self.created_ms)
+            .with("payload", self.payload.clone());
+        if let Some(t) = self.started_ms {
+            d = d.with("started_ms", t);
+        }
+        if let Some(t) = self.finished_ms {
+            d = d.with("finished_ms", t);
+        }
+        if let Some(result) = &self.result {
+            d = d.with("result", result.clone());
+        }
+        if let Some(error) = &self.error {
+            d = d.with("error", error.as_str());
+        }
+        d
+    }
+
+    /// Rebuild a job from its persisted document. `None` when the doc
+    /// doesn't parse as a job (foreign writes are skipped, not fatal —
+    /// recovery must not wedge the platform on one bad record).
+    pub fn from_doc(doc: &Json) -> Option<Job> {
+        let id = doc.get("_id")?.as_str()?.to_string();
+        let kind = JobKind::from_str(doc.get("kind")?.as_str()?)?;
+        let state = JobState::from_str(doc.get("state")?.as_str()?)?;
+        let model_id = doc.get("model_id")?.as_str()?.to_string();
+        Some(Job {
+            id,
+            kind,
+            model_id,
+            state,
+            created_ms: doc.get("created_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            started_ms: doc.get("started_ms").and_then(Json::as_f64),
+            finished_ms: doc.get("finished_ms").and_then(Json::as_f64),
+            result: doc.get("result").cloned(),
+            error: doc.get("error").and_then(Json::as_str).map(str::to_string),
+            payload: doc.get("payload").cloned().unwrap_or_else(Json::obj),
+            cancel: Arc::new(AtomicBool::new(false)),
+        })
+    }
 }
 
-/// The work a job performs; the returned `Json` becomes the terminal
-/// `result` payload.
-pub type Work = Box<dyn FnOnce() -> Result<Json> + Send + 'static>;
+/// Executes one job; the returned `Json` becomes the terminal `result`
+/// payload. Installed once per process ([`JobRegistry::install_runner`])
+/// and shared by live submissions and recovered jobs — work is a
+/// *declarative* `(kind, model_id, payload)` record, not a closure, so
+/// it survives restarts. An `Err` whose chain contains
+/// [`Preempted`] marks the job `cancelled` instead of `failed`.
+pub type Runner = Arc<dyn Fn(&Job) -> Result<Json> + Send + Sync + 'static>;
 
 /// Retention cap: once the registry holds more jobs than this, the
 /// oldest *terminal* jobs are evicted on submit (pending/running jobs
-/// are never evicted). Bounds a long-lived server's memory; clients
-/// polling a terminal job have this much history to read it.
+/// are never evicted). Bounds a long-lived server's memory AND the
+/// persisted `_jobs` collection; clients polling a terminal job have
+/// this much history to read it.
 pub const MAX_RETAINED_JOBS: usize = 1024;
 
+/// Outcome of a cancellation request (the REST layer maps these onto
+/// 404 / 409 `job_cancelled` / 200 / 202).
+#[derive(Debug, Clone)]
+pub enum CancelOutcome {
+    /// No such job.
+    NotFound,
+    /// The job already reached a terminal state; the record is returned
+    /// untouched (cancel lost the race — 409).
+    AlreadyTerminal(Job),
+    /// The job was still pending: it is now `cancelled` (O(1), durable).
+    Cancelled(Job),
+    /// The job is running: its cooperative preemption flag is set; the
+    /// terminal state arrives when the runner yields.
+    Cancelling(Job),
+}
+
 struct WorkQueue {
-    queue: VecDeque<(String, Work)>,
+    /// Ids of jobs awaiting the worker. Entries may be stale (job
+    /// cancelled while queued) — the worker skips any job no longer
+    /// `pending` at pickup, which is what makes pending-cancel O(1).
+    queue: VecDeque<String>,
     stop: bool,
+    /// Exit immediately without draining (crash simulation / fast
+    /// teardown). Persisted state is left exactly as-is.
+    abort: bool,
+    /// Worker holds off picking up new jobs (tests pin "crash before
+    /// pickup" deterministically).
+    paused: bool,
 }
 
 struct Inner {
@@ -129,15 +280,41 @@ struct Inner {
     work: Mutex<WorkQueue>,
     signal: Condvar,
     clock: SharedClock,
+    db: Arc<Database>,
+    runner: OnceLock<Runner>,
+    retention: AtomicUsize,
 }
 
 impl Inner {
-    fn set_running(&self, id: &str) {
-        let mut jobs = self.jobs.lock().unwrap();
-        if let Some(job) = jobs.get_mut(id) {
-            job.state = JobState::Running;
-            job.started_ms = Some(self.clock.now_ms());
+    /// One durable write per state transition. Errors are surfaced to
+    /// callers that must not proceed on failed persistence (submit) and
+    /// logged otherwise: an in-flight job outliving a full disk is
+    /// better than wedging the worker.
+    fn persist(&self, ops: Vec<WriteOp>) -> Result<()> {
+        self.db.with_collection(JOBS_COLLECTION, |c| c.apply_batch(ops))??;
+        Ok(())
+    }
+
+    fn persist_or_warn(&self, ops: Vec<WriteOp>, what: &str) {
+        if let Err(e) = self.persist(ops) {
+            crate::log_warn!("jobs", "failed to persist job {what}: {e:#}");
         }
+    }
+
+    /// Move a picked-up job to `running` and return a snapshot for the
+    /// runner. `None` = stale queue entry (job cancelled or otherwise
+    /// no longer pending) — skip without executing.
+    fn set_running(&self, id: &str) -> Option<Job> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let job = jobs.get_mut(id)?;
+        if job.state != JobState::Pending {
+            return None;
+        }
+        job.state = JobState::Running;
+        job.started_ms = Some(self.clock.now_ms());
+        let snapshot = job.clone();
+        self.persist_or_warn(vec![WriteOp::Put(snapshot.to_doc())], "running transition");
+        Some(snapshot)
     }
 
     fn finish(&self, id: &str, outcome: Result<Json>) {
@@ -146,42 +323,127 @@ impl Inner {
             job.finished_ms = Some(self.clock.now_ms());
             match outcome {
                 Ok(result) => {
+                    // a completion that raced a cancel request wins: the
+                    // work really happened and the record must say so
                     job.state = JobState::Succeeded;
                     job.result = Some(result);
+                }
+                Err(err) if err.downcast_ref::<Preempted>().is_some() => {
+                    job.state = JobState::Cancelled;
+                    job.error = Some(format!("{err:#}"));
                 }
                 Err(err) => {
                     job.state = JobState::Failed;
                     job.error = Some(format!("{err:#}"));
                 }
             }
+            let doc = job.to_doc();
+            self.persist_or_warn(vec![WriteOp::Put(doc)], "terminal transition");
         }
     }
 }
 
 /// Registry + single worker thread. Owned by the platform; REST
-/// handlers submit closures and read snapshots.
+/// handlers submit `(kind, model_id, payload)` records and read
+/// snapshots. The worker only starts once [`JobRegistry::install_runner`]
+/// provides the execution function — recovery happens in
+/// [`JobRegistry::open`] *before* that, so recovered pending jobs can't
+/// race a half-wired platform.
 pub struct JobRegistry {
     inner: Arc<Inner>,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl JobRegistry {
+    /// In-memory registry (unit tests): nothing survives the process.
     pub fn new(clock: SharedClock) -> JobRegistry {
+        JobRegistry::open(clock, Arc::new(Database::in_memory()), true)
+            .expect("in-memory job registry cannot fail to open")
+    }
+
+    /// Open the registry over a database, recovering the persisted
+    /// `_jobs` collection:
+    ///
+    /// * terminal jobs reload for listing/polling;
+    /// * `pending` jobs reload and (when `resume` is set) re-enter the
+    ///   work queue in creation order;
+    /// * jobs a dead process left `running` are re-marked `pending` and
+    ///   re-enqueued when their kind is idempotent, else `failed` with
+    ///   an `interrupted` error — both re-persisted in one
+    ///   `apply_batch` (when `resume` is set; a read-only open, e.g.
+    ///   the CLI `jobs` verb, leaves the records untouched).
+    pub fn open(clock: SharedClock, db: Arc<Database>, resume: bool) -> Result<JobRegistry> {
+        let docs: Vec<Json> = db.with_collection(JOBS_COLLECTION, |c| {
+            c.all().map(|d| d.to_json()).collect()
+        })?;
+        let mut jobs = BTreeMap::new();
+        let mut queue = VecDeque::new();
+        let mut repairs: Vec<WriteOp> = Vec::new();
+        let now = clock.now_ms();
+        // BTreeMap/`all()` iterate in id order == creation order, so the
+        // recovered queue preserves original submission order
+        for doc in &docs {
+            let Some(mut job) = Job::from_doc(doc) else {
+                crate::log_warn!("jobs", "skipping unparseable _jobs doc during recovery");
+                continue;
+            };
+            match job.state {
+                JobState::Running if resume => {
+                    if job.kind.idempotent() {
+                        job.state = JobState::Pending;
+                        job.started_ms = None;
+                        repairs.push(WriteOp::Put(job.to_doc()));
+                        queue.push_back(job.id.clone());
+                    } else {
+                        job.state = JobState::Failed;
+                        job.finished_ms = Some(now);
+                        job.error =
+                            Some("interrupted: process exited mid-run (non-idempotent job)".into());
+                        repairs.push(WriteOp::Put(job.to_doc()));
+                    }
+                }
+                JobState::Pending if resume => queue.push_back(job.id.clone()),
+                _ => {}
+            }
+            jobs.insert(job.id.clone(), job);
+        }
+        if !repairs.is_empty() {
+            db.with_collection(JOBS_COLLECTION, |c| c.apply_batch(repairs))??;
+        }
         let inner = Arc::new(Inner {
-            jobs: Mutex::new(BTreeMap::new()),
-            work: Mutex::new(WorkQueue { queue: VecDeque::new(), stop: false }),
+            jobs: Mutex::new(jobs),
+            work: Mutex::new(WorkQueue { queue, stop: false, abort: false, paused: false }),
             signal: Condvar::new(),
             clock,
+            db,
+            runner: OnceLock::new(),
+            retention: AtomicUsize::new(MAX_RETAINED_JOBS),
         });
-        let worker_inner = inner.clone();
+        Ok(JobRegistry { inner, worker: Mutex::new(None) })
+    }
+
+    /// Install the execution function and start the worker thread.
+    /// Recovered pending work (queued by [`JobRegistry::open`]) starts
+    /// draining here. Subsequent calls are no-ops (one runner, one
+    /// worker per registry).
+    pub fn install_runner(&self, runner: Runner) {
+        if self.inner.runner.set(runner).is_err() {
+            return;
+        }
+        let worker_inner = self.inner.clone();
         let handle = std::thread::Builder::new()
             .name("api-jobs".into())
             .spawn(move || loop {
-                let task = {
+                let id = {
                     let mut guard = worker_inner.work.lock().unwrap();
                     loop {
-                        if let Some(task) = guard.queue.pop_front() {
-                            break task;
+                        if guard.abort {
+                            return;
+                        }
+                        if !guard.paused {
+                            if let Some(id) = guard.queue.pop_front() {
+                                break id;
+                            }
                         }
                         if guard.stop {
                             return;
@@ -189,17 +451,31 @@ impl JobRegistry {
                         guard = worker_inner.signal.wait(guard).unwrap();
                     }
                 };
-                let (id, work) = task;
-                worker_inner.set_running(&id);
-                let outcome = work();
+                // stale entries (cancelled while queued) skip here
+                let Some(job) = worker_inner.set_running(&id) else {
+                    continue;
+                };
+                let outcome = match worker_inner.runner.get() {
+                    Some(runner) => runner(&job),
+                    None => Err(anyhow::anyhow!("no job runner installed")),
+                };
                 worker_inner.finish(&id, outcome);
             })
             .expect("spawn api-jobs worker");
-        JobRegistry { inner, worker: Mutex::new(Some(handle)) }
+        *self.worker.lock().unwrap() = Some(handle);
     }
 
-    /// Submit a job; returns its id immediately (202 semantics).
-    pub fn submit(&self, kind: JobKind, model_id: &str, work: Work) -> Result<String> {
+    /// Override the terminal-job retention cap (tests; the default is
+    /// [`MAX_RETAINED_JOBS`]).
+    pub fn set_retention(&self, cap: usize) {
+        self.inner.retention.store(cap.max(1), Ordering::SeqCst);
+    }
+
+    /// Submit a job; returns its id immediately (202 semantics). The
+    /// pending record is durable before this returns — a crash after
+    /// the 202 cannot lose an accepted job. Evictions past the
+    /// retention cap ride the same `apply_batch`.
+    pub fn submit(&self, kind: JobKind, model_id: &str, payload: Json) -> Result<String> {
         let id = idgen::object_id();
         let job = Job {
             id: id.clone(),
@@ -211,16 +487,22 @@ impl JobRegistry {
             finished_ms: None,
             result: None,
             error: None,
+            payload,
+            cancel: Arc::new(AtomicBool::new(false)),
         };
         {
             let mut wq = self.inner.work.lock().unwrap();
-            if wq.stop {
+            if wq.stop || wq.abort {
                 anyhow::bail!("job registry is shut down");
             }
             let mut jobs = self.inner.jobs.lock().unwrap();
-            jobs.insert(id.clone(), job);
-            // evict oldest terminal jobs past the retention cap
-            while jobs.len() > MAX_RETAINED_JOBS {
+            let mut ops: Vec<WriteOp> = Vec::new();
+            jobs.insert(id.clone(), job.clone());
+            // evict oldest terminal jobs past the retention cap; the
+            // deletes join the submit's batch so the durable collection
+            // compacts in the same WAL write
+            let cap = self.inner.retention.load(Ordering::SeqCst);
+            while jobs.len() > cap {
                 let Some(evict) = jobs
                     .iter()
                     .find(|(_, j)| j.state.is_terminal())
@@ -229,11 +511,48 @@ impl JobRegistry {
                     break; // everything live — nothing evictable
                 };
                 jobs.remove(&evict);
+                ops.push(WriteOp::Delete(evict));
             }
-            wq.queue.push_back((id.clone(), work));
+            ops.push(WriteOp::Put(job.to_doc()));
+            if let Err(e) = self.inner.persist(ops) {
+                // an unpersisted accept would be lost by a crash right
+                // after the 202 — refuse instead
+                jobs.remove(&id);
+                return Err(e.context("persisting accepted job"));
+            }
+            wq.queue.push_back(id.clone());
         }
         self.inner.signal.notify_all();
         Ok(id)
+    }
+
+    /// Cancel a job. Pending jobs flip straight to `cancelled`
+    /// (durable, O(1) — the work-queue entry is left to be skipped at
+    /// pickup); running jobs get their cooperative preemption flag set
+    /// and reach `cancelled` when the runner yields; terminal jobs are
+    /// reported as such so the API can answer 409.
+    pub fn cancel(&self, id: &str) -> CancelOutcome {
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let Some(job) = jobs.get_mut(id) else {
+            return CancelOutcome::NotFound;
+        };
+        match job.state {
+            s if s.is_terminal() => CancelOutcome::AlreadyTerminal(job.clone()),
+            JobState::Pending => {
+                job.state = JobState::Cancelled;
+                job.finished_ms = Some(self.inner.clock.now_ms());
+                job.error = Some("cancelled before start".into());
+                job.cancel.store(true, Ordering::SeqCst);
+                let snapshot = job.clone();
+                self.inner
+                    .persist_or_warn(vec![WriteOp::Put(snapshot.to_doc())], "cancel transition");
+                CancelOutcome::Cancelled(snapshot)
+            }
+            _ => {
+                job.cancel.store(true, Ordering::SeqCst);
+                CancelOutcome::Cancelling(job.clone())
+            }
+        }
     }
 
     /// Snapshot one job.
@@ -272,6 +591,11 @@ impl JobRegistry {
         self.len() == 0
     }
 
+    /// Jobs currently awaiting the worker (stale entries included).
+    pub fn queued(&self) -> usize {
+        self.inner.work.lock().unwrap().queue.len()
+    }
+
     /// Poll until the job reaches a terminal state (tests, CLI).
     pub fn wait_terminal(&self, id: &str, timeout_ms: u64) -> Option<Job> {
         let deadline = std::time::Instant::now() + std::time::Duration::from_millis(timeout_ms);
@@ -288,12 +612,41 @@ impl JobRegistry {
         }
     }
 
+    /// Hold the worker before its next pickup (deterministic
+    /// "crash before pickup" in restart tests).
+    pub fn pause(&self) {
+        self.inner.work.lock().unwrap().paused = true;
+        self.inner.signal.notify_all();
+    }
+
+    /// Release a [`JobRegistry::pause`].
+    pub fn unpause(&self) {
+        self.inner.work.lock().unwrap().paused = false;
+        self.inner.signal.notify_all();
+    }
+
     /// Stop the worker after draining already-queued jobs. Jobs
     /// submitted after this fail fast.
     pub fn shutdown(&self) {
         {
             let mut wq = self.inner.work.lock().unwrap();
             wq.stop = true;
+            wq.paused = false;
+        }
+        self.inner.signal.notify_all();
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+
+    /// Stop the worker *without* draining: queued jobs stay `pending`,
+    /// a running job is abandoned mid-flight. Persisted state is left
+    /// exactly as a crash would — the restart conformance tests
+    /// simulate process death with this.
+    pub fn abort(&self) {
+        {
+            let mut wq = self.inner.work.lock().unwrap();
+            wq.abort = true;
         }
         self.inner.signal.notify_all();
         if let Some(handle) = self.worker.lock().unwrap().take() {
@@ -313,24 +666,45 @@ mod tests {
     use super::*;
     use crate::util::clock::wall;
 
+    /// Runner for unit tests: interprets tiny payload programs.
+    /// `{"fail": "msg"}` errors; `{"gate": true}` blocks until the
+    /// job's cancel flag or the shared release flag flips; everything
+    /// else succeeds echoing `{"ran": kind}`.
+    fn test_runner(release: Arc<AtomicBool>) -> Runner {
+        Arc::new(move |job: &Job| {
+            if let Some(msg) = job.payload.get("fail").and_then(Json::as_str) {
+                anyhow::bail!("{msg}");
+            }
+            if job.payload.get("gate").and_then(Json::as_bool) == Some(true) {
+                loop {
+                    if job.cancel.load(Ordering::SeqCst) {
+                        return Err(anyhow::Error::new(Preempted));
+                    }
+                    if release.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+            Ok(Json::obj().with("ran", job.kind.as_str()))
+        })
+    }
+
+    fn registry() -> (JobRegistry, Arc<AtomicBool>) {
+        let reg = JobRegistry::new(wall());
+        let release = Arc::new(AtomicBool::new(false));
+        reg.install_runner(test_runner(release.clone()));
+        (reg, release)
+    }
+
     #[test]
     fn lifecycle_pending_running_succeeded_with_payload() {
-        let reg = JobRegistry::new(wall());
+        let (reg, release) = registry();
         // gate the first job so the second one is observably pending
-        let (tx, rx) = std::sync::mpsc::channel::<()>();
         let gated = reg
-            .submit(
-                JobKind::Profile,
-                "model-a",
-                Box::new(move || {
-                    rx.recv().ok();
-                    Ok(Json::obj().with("profiles_recorded", 3usize))
-                }),
-            )
+            .submit(JobKind::Profile, "model-a", Json::obj().with("gate", true))
             .unwrap();
-        let queued = reg
-            .submit(JobKind::Convert, "model-b", Box::new(|| Ok(Json::obj().with("validated", true))))
-            .unwrap();
+        let queued = reg.submit(JobKind::Convert, "model-b", Json::obj()).unwrap();
 
         // the worker picks up the gated job; the second stays pending
         let t0 = std::time::Instant::now();
@@ -341,10 +715,10 @@ mod tests {
         assert_eq!(reg.get(&gated).unwrap().state, JobState::Running);
         assert_eq!(reg.get(&queued).unwrap().state, JobState::Pending);
 
-        tx.send(()).unwrap();
+        release.store(true, Ordering::SeqCst);
         let done = reg.wait_terminal(&gated, 5_000).unwrap();
         assert_eq!(done.state, JobState::Succeeded);
-        assert_eq!(done.result.unwrap().get("profiles_recorded").unwrap().as_i64(), Some(3));
+        assert_eq!(done.result.unwrap().get("ran").unwrap().as_str(), Some("profile"));
         assert!(done.started_ms.is_some() && done.finished_ms.is_some());
 
         let done2 = reg.wait_terminal(&queued, 5_000).unwrap();
@@ -354,9 +728,9 @@ mod tests {
 
     #[test]
     fn failures_record_error_text() {
-        let reg = JobRegistry::new(wall());
+        let (reg, _release) = registry();
         let id = reg
-            .submit(JobKind::Convert, "m", Box::new(|| Err(anyhow::anyhow!("artifact missing"))))
+            .submit(JobKind::Convert, "m", Json::obj().with("fail", "artifact missing"))
             .unwrap();
         let job = reg.wait_terminal(&id, 5_000).unwrap();
         assert_eq!(job.state, JobState::Failed);
@@ -368,12 +742,10 @@ mod tests {
 
     #[test]
     fn list_pages_by_cursor_and_shutdown_rejects_new_work() {
-        let reg = JobRegistry::new(wall());
+        let (reg, _release) = registry();
         let mut ids = Vec::new();
         for i in 0..5 {
-            let id = reg
-                .submit(JobKind::Profile, &format!("m{i}"), Box::new(|| Ok(Json::obj())))
-                .unwrap();
+            let id = reg.submit(JobKind::Profile, &format!("m{i}"), Json::obj()).unwrap();
             ids.push(id);
         }
         let (page1, next) = reg.list(None, 2);
@@ -389,10 +761,76 @@ mod tests {
         assert_eq!(all, expect, "pages partition the job set");
 
         reg.shutdown();
-        assert!(reg.submit(JobKind::Convert, "late", Box::new(|| Ok(Json::obj()))).is_err());
+        assert!(reg.submit(JobKind::Convert, "late", Json::obj()).is_err());
         // already-submitted jobs drained before the worker exited
         for id in &ids {
             assert!(reg.get(id).unwrap().state.is_terminal());
         }
+    }
+
+    #[test]
+    fn cancel_pending_is_immediate_and_skipped_at_pickup() {
+        let (reg, release) = registry();
+        let gated = reg
+            .submit(JobKind::Profile, "hold", Json::obj().with("gate", true))
+            .unwrap();
+        let victim = reg.submit(JobKind::Convert, "victim", Json::obj()).unwrap();
+        let survivor = reg.submit(JobKind::Convert, "survivor", Json::obj()).unwrap();
+
+        match reg.cancel(&victim) {
+            CancelOutcome::Cancelled(job) => {
+                assert_eq!(job.state, JobState::Cancelled);
+                assert!(job.finished_ms.is_some());
+            }
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        // cancelling the same job again reports the terminal record
+        assert!(matches!(reg.cancel(&victim), CancelOutcome::AlreadyTerminal(_)));
+        assert!(matches!(reg.cancel("ghost"), CancelOutcome::NotFound));
+
+        release.store(true, Ordering::SeqCst);
+        let _ = reg.wait_terminal(&gated, 5_000);
+        let done = reg.wait_terminal(&survivor, 5_000).unwrap();
+        assert_eq!(done.state, JobState::Succeeded, "later jobs still run");
+        // the cancelled job was never executed
+        let victim_job = reg.get(&victim).unwrap();
+        assert_eq!(victim_job.state, JobState::Cancelled);
+        assert!(victim_job.result.is_none());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn cancel_running_preempts_cooperatively() {
+        let (reg, _release) = registry();
+        let id = reg
+            .submit(JobKind::Profile, "slow", Json::obj().with("gate", true))
+            .unwrap();
+        let t0 = std::time::Instant::now();
+        while reg.get(&id).unwrap().state != JobState::Running {
+            assert!(t0.elapsed().as_secs() < 5, "job never started");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(matches!(reg.cancel(&id), CancelOutcome::Cancelling(_)));
+        let done = reg.wait_terminal(&id, 5_000).unwrap();
+        assert_eq!(done.state, JobState::Cancelled);
+        assert!(done.result.is_none(), "preempted work contributes no result");
+        reg.shutdown();
+    }
+
+    #[test]
+    fn retention_cap_evicts_oldest_terminal_only() {
+        let (reg, _release) = registry();
+        reg.set_retention(3);
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            let id = reg.submit(JobKind::Profile, &format!("r{i}"), Json::obj()).unwrap();
+            reg.wait_terminal(&id, 5_000).unwrap();
+            ids.push(id);
+        }
+        assert!(reg.len() <= 3, "cap enforced, have {}", reg.len());
+        // the newest jobs survive, the oldest were evicted
+        assert!(reg.get(&ids[5]).is_some());
+        assert!(reg.get(&ids[0]).is_none());
+        reg.shutdown();
     }
 }

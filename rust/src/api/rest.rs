@@ -6,18 +6,23 @@
 //! route table is declarative ([`super::router`]), errors are one
 //! structured envelope ([`super::error`]), list endpoints paginate by
 //! creation-ordered cursor, and the long-running verbs are *job
-//! resources*: `POST /api/v1/models/{id}/convert|profile` answer `202
-//! Accepted` immediately and the controller drains in the background
-//! ([`super::jobs`]) — the paper's elastic offline evaluation, no
-//! longer serialized into an HTTP handler.
+//! resources*: `POST /api/v1/models` (registration + publish
+//! automation) and `POST /api/v1/models/{id}/convert|profile` answer
+//! `202 Accepted` immediately and the controller drains in the
+//! background ([`super::jobs`]) — the paper's elastic offline
+//! evaluation, no longer serialized into an HTTP handler. Jobs are
+//! durable (`_jobs` collection on the WAL) and cancellable:
+//! `DELETE /api/v1/jobs/{id}`.
 //!
 //! ```text
 //! GET    /api/v1/health                      liveness
 //! GET    /api/v1/metrics                     exporter + monitor + per-route metrics
 //! GET    /api/v1/models                      paged summaries {items, next_cursor}
 //!                                            (?name= ?task= ?status= ?limit= ?cursor=)
-//! POST   /api/v1/models                      register {yaml, weights_b64} -> 201
+//! POST   /api/v1/models                      register {yaml, weights_b64} -> 202 {job_id}
 //! POST   /api/v1/models:batch                bulk register {models: [...]} -> 201
+//! POST   /api/v1/models:batchDelete          bulk delete {ids: [...]} -> 200
+//! POST   /api/v1/models:batchUpdate          bulk update {updates: [...]} -> 200
 //! GET    /api/v1/models/{id}                 stored document, verbatim
 //! PUT    /api/v1/models/{id}                 update basic info (guarded fields 422)
 //! DELETE /api/v1/models/{id}                 delete
@@ -29,15 +34,17 @@
 //! POST   /api/v1/services/{name}:infer       inference
 //! GET    /api/v1/jobs                        paged job listing
 //! GET    /api/v1/jobs/{id}                   job state + terminal report
+//! DELETE /api/v1/jobs/{id}                   cancel (pending: 200; running: 202;
+//!                                            terminal: 409 job_cancelled)
 //! ```
 //!
 //! Legacy aliases (`/health`, `/metrics`, `/models...`, `/services...`)
 //! keep their original response shapes — unpaged arrays, synchronous
-//! convert/profile — so pre-v1 clients and the examples keep working.
+//! register/convert/profile — so pre-v1 clients and the examples keep
+//! working.
 
 use std::sync::{Arc, OnceLock};
 
-use crate::controller::summarize_events;
 use crate::dispatcher::{BatchingMode, DeploymentSpec};
 use crate::profiler::example_input;
 use crate::runtime::{DType, Tensor};
@@ -47,9 +54,9 @@ use crate::util::jscan::{self, Kind};
 use crate::util::json::Json;
 use crate::workflow::Platform;
 
-use super::error::ApiError;
+use super::error::{ApiError, ErrorCode};
 use super::http::{Request, Response};
-use super::jobs::JobKind;
+use super::jobs::{CancelOutcome, JobKind};
 use super::router::{query_f64, query_usize, with_json_body, Params, Router};
 
 /// Default / maximum page sizes for the v1 list endpoints.
@@ -73,8 +80,10 @@ pub fn api_router() -> Router<Arc<Platform>> {
         .get("/api/v1/health", h_health)
         .get("/api/v1/metrics", h_metrics)
         .get("/api/v1/models", h_list_models_v1)
-        .post("/api/v1/models", h_register)
+        .post("/api/v1/models", h_register_async)
         .post("/api/v1/models:batch", h_register_batch)
+        .post("/api/v1/models:batchDelete", h_batch_delete)
+        .post("/api/v1/models:batchUpdate", h_batch_update)
         .get("/api/v1/models/{id}", h_get_model)
         .put("/api/v1/models/{id}", h_update_model)
         .delete("/api/v1/models/{id}", h_delete_model)
@@ -86,6 +95,7 @@ pub fn api_router() -> Router<Arc<Platform>> {
         .post("/api/v1/services/{name}:infer", h_infer)
         .get("/api/v1/jobs", h_jobs_list)
         .get("/api/v1/jobs/{id}", h_job_get)
+        .delete("/api/v1/jobs/{id}", h_job_cancel)
         // ---- legacy aliases (original shapes) ----
         .get("/health", h_health)
         .get("/metrics", h_metrics)
@@ -213,6 +223,32 @@ fn h_register(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Res
     })
 }
 
+/// v1 register: validation is synchronous (bad YAML / duplicate name /
+/// bad base64 answer 4xx right away), then the conversion + profiling
+/// automation runs as a durable `publish` job — 202 with the job
+/// resource, like convert/profile. Poll `status_url` for the outcome.
+fn h_register_async(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
+    with_json_body(req, false, |root| {
+        let Some(yaml_text) = root.get("yaml").and_then(|v| v.as_str()) else {
+            return Err(ApiError::bad_request("missing 'yaml' field"));
+        };
+        let weights = match root.get("weights_b64").and_then(|v| v.as_str()) {
+            Some(b64) => base64::decode(&b64)
+                .map_err(|e| ApiError::bad_request(format!("weights_b64: {e}")))?,
+            None => Vec::new(),
+        };
+        let outcome = platform.housekeeper.register(&yaml_text, &weights)?;
+        let payload = Json::obj()
+            .with("convert", outcome.trigger_conversion)
+            .with("profile", outcome.trigger_profiling);
+        let job_id = platform
+            .jobs
+            .submit(JobKind::Publish, &outcome.model_id, payload)
+            .map_err(|e| ApiError::unavailable(format!("{e:#}")))?;
+        Ok(accepted(&job_id, JobKind::Publish, &outcome.model_id))
+    })
+}
+
 /// Bulk register: `{"models": [{"yaml": …, "weights_b64"?: …}, …]}`
 /// lands as one collection lock hold and one WAL group commit
 /// (`Collection::insert_many`). Registration only — conversion and
@@ -253,6 +289,66 @@ fn h_register_batch(platform: &Arc<Platform>, _: &Params, req: &Request) -> Resu
             201,
             &Json::obj().with("count", registered.len()).with("items", Json::Arr(registered)),
         ))
+    })
+}
+
+/// Bulk delete: `{"ids": ["…", …]}` — all-or-nothing, one WAL append
+/// (the batch route deferred since the v1 surface landed). A ghost id
+/// anywhere 404s the whole batch and deletes nothing.
+fn h_batch_delete(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
+    with_json_body(req, false, |root| {
+        let Some(arr) = root.get("ids").filter(|v| v.kind() == Kind::Arr) else {
+            return Err(ApiError::bad_request("missing 'ids' array"));
+        };
+        if arr.is_empty() {
+            return Err(ApiError::validation("'ids' must not be empty"));
+        }
+        let mut ids: Vec<String> = Vec::with_capacity(arr.len());
+        let mut seen = std::collections::HashSet::new();
+        for (i, v) in arr.items().enumerate() {
+            let Some(id) = v.as_str() else {
+                return Err(ApiError::bad_request(format!("item {i}: id must be a string")));
+            };
+            let id = id.into_owned();
+            if !seen.insert(id.clone()) {
+                return Err(ApiError::validation(format!("duplicate id '{id}' in batch")));
+            }
+            ids.push(id);
+        }
+        let deleted = platform.housekeeper.delete_batch(&ids)?;
+        Ok(Response::json(200, &Json::obj().with("deleted", deleted)))
+    })
+}
+
+/// Bulk update: `{"updates": [{"id": "…", "fields": {…}}, …]}` — the
+/// same guarded-field policy as `PUT /models/{id}`, checked across the
+/// whole batch before any document is written; merges land in one WAL
+/// append.
+fn h_batch_update(platform: &Arc<Platform>, _: &Params, req: &Request) -> Result<Response, ApiError> {
+    with_json_body(req, false, |root| {
+        let Some(arr) = root.get("updates").filter(|v| v.kind() == Kind::Arr) else {
+            return Err(ApiError::bad_request("missing 'updates' array"));
+        };
+        if arr.is_empty() {
+            return Err(ApiError::validation("'updates' must not be empty"));
+        }
+        let mut updates: Vec<(String, Json)> = Vec::with_capacity(arr.len());
+        let mut seen = std::collections::HashSet::new();
+        for (i, item) in arr.items().enumerate() {
+            let Some(id) = item.get("id").and_then(|v| v.as_str()) else {
+                return Err(ApiError::bad_request(format!("item {i}: missing 'id' field")));
+            };
+            let id = id.into_owned();
+            if !seen.insert(id.clone()) {
+                return Err(ApiError::validation(format!("duplicate id '{id}' in batch")));
+            }
+            let Some(fields) = item.get("fields").filter(|v| v.kind() == Kind::Obj) else {
+                return Err(ApiError::bad_request(format!("item {i}: missing 'fields' object")));
+            };
+            updates.push((id, fields.to_json()));
+        }
+        let updated = platform.housekeeper.update_batch(&updates)?;
+        Ok(Response::json(200, &Json::obj().with("updated", updated)))
     })
 }
 
@@ -297,21 +393,9 @@ fn accepted(job_id: &str, kind: JobKind, model_id: &str) -> Response {
 fn h_convert_job(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
     let id = params.require("id")?;
     platform.hub.status(id)?; // 404 before accepting work
-    let p = platform.clone();
-    let model = id.to_string();
     let job_id = platform
         .jobs
-        .submit(
-            JobKind::Convert,
-            id,
-            Box::new(move || {
-                let report = p.converter.convert(&p.hub, &model, p.config.auto_batches.as_deref())?;
-                Ok(Json::obj()
-                    .with("validated", report.all_validated())
-                    .with("variants", report.variants.len())
-                    .with("total_ms", report.total_ms))
-            }),
-        )
+        .submit(JobKind::Convert, id, Json::obj())
         .map_err(|e| ApiError::unavailable(format!("{e:#}")))?;
     Ok(accepted(&job_id, JobKind::Convert, id))
 }
@@ -319,23 +403,13 @@ fn h_convert_job(platform: &Arc<Platform>, params: &Params, _: &Request) -> Resu
 fn h_profile_job(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
     let id = params.require("id")?;
     platform.hub.status(id)?; // 404 before accepting work
-    let p = platform.clone();
-    let model = id.to_string();
+    // the explicit profile verb covers the full batch grid, exactly
+    // like the legacy sync route and the CLI; only the publish
+    // automation restricts to auto_batches (an empty payload means
+    // "all batches" to the runner)
     let job_id = platform
         .jobs
-        .submit(
-            JobKind::Profile,
-            id,
-            Box::new(move || {
-                // the explicit profile verb covers the full batch grid,
-                // exactly like the legacy sync route and the CLI; only
-                // the publish automation restricts to auto_batches
-                let (recorded, events) = p.profile_sync(&model, None, &[Frontend::Grpc])?;
-                Ok(Json::obj()
-                    .with("profiles_recorded", recorded)
-                    .with("drain", summarize_events(&events)))
-            }),
-        )
+        .submit(JobKind::Profile, id, Json::obj())
         .map_err(|e| ApiError::unavailable(format!("{e:#}")))?;
     Ok(accepted(&job_id, JobKind::Profile, id))
 }
@@ -574,6 +648,27 @@ fn h_job_get(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<R
     }
 }
 
+/// Cancel a job resource. Pending jobs flip to `cancelled` immediately
+/// (200); running jobs get their cooperative preemption flag set and
+/// answer 202 — poll the job until the drain yields; cancelling a job
+/// that already reached a terminal state is a 409 `job_cancelled`
+/// conflict with the immutable record in `detail`.
+fn h_job_cancel(platform: &Arc<Platform>, params: &Params, _: &Request) -> Result<Response, ApiError> {
+    let id = params.require("id")?;
+    match platform.jobs.cancel(id) {
+        CancelOutcome::NotFound => Err(ApiError::not_found(format!("no job with id '{id}'"))),
+        CancelOutcome::AlreadyTerminal(job) => Err(ApiError::new(
+            ErrorCode::JobCancelled,
+            format!("job '{id}' already reached terminal state '{}'", job.state.as_str()),
+        )
+        .with_detail(job.to_json())),
+        CancelOutcome::Cancelled(job) => Ok(Response::json(200, &job.to_json())),
+        CancelOutcome::Cancelling(job) => {
+            Ok(Response::json(202, &job.to_json().with("cancel_requested", true)))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -596,13 +691,38 @@ mod tests {
         Some((server, platform))
     }
 
+    /// v1 registration is async now: POST answers 202 with a publish
+    /// job; this helper polls the job to `succeeded` so callers observe
+    /// a fully converted/profiled model, like the old synchronous 201.
+    /// Returns the accepted envelope (with `model_id`).
     fn register_yaml(addr: &std::net::SocketAddr, yaml: &str) -> (u16, Json) {
         let req_body = Json::obj()
             .with("yaml", yaml.replace("\\n", "\n"))
             .with("weights_b64", base64::encode(b"some-weights"))
             .to_string();
         let (status, body) = http_request(addr, "POST", "/api/v1/models", Some(&req_body)).unwrap();
-        (status, Json::parse(&body).unwrap_or(Json::Null))
+        let acc = Json::parse(&body).unwrap_or(Json::Null);
+        if status != 202 {
+            return (status, acc);
+        }
+        let url = acc.get("status_url").unwrap().as_str().unwrap().to_string();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+        loop {
+            let (s, body) = http_request(addr, "GET", &url, None).unwrap();
+            assert_eq!(s, 200, "{body}");
+            let job = Json::parse(&body).unwrap();
+            let state = job.get("state").unwrap().as_str().unwrap().to_string();
+            if state == "succeeded" {
+                break;
+            }
+            assert!(
+                state == "pending" || state == "running",
+                "publish job ended {state}: {job}"
+            );
+            assert!(std::time::Instant::now() < deadline, "publish job never finished");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        (status, acc)
     }
 
     #[test]
@@ -689,8 +809,8 @@ mod tests {
         };
         let addr = server.addr;
         let (status, created) = register_yaml(&addr, YAML);
-        assert_eq!(status, 201);
-        let id = created.get("id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(status, 202);
+        let id = created.get("model_id").unwrap().as_str().unwrap().to_string();
 
         // 202 + job id come back immediately, before any drain happens
         let (status, body) =
@@ -823,6 +943,223 @@ mod tests {
     }
 
     #[test]
+    fn v1_job_cancellation_lifecycle() {
+        use crate::api::jobs::JobState;
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        let yaml = YAML.replace("rest-mlp", "cancel-mlp").replace("convert: true", "convert: false");
+        let (status, created) = register_yaml(&addr, &yaml);
+        assert_eq!(status, 202);
+        let id = created.get("model_id").unwrap().as_str().unwrap().to_string();
+        let publish_job = created.get("job_id").unwrap().as_str().unwrap().to_string();
+
+        // terminal jobs refuse cancellation: 409 job_cancelled with the
+        // immutable record in detail
+        let (status, body) =
+            http_request(&addr, "DELETE", &format!("/api/v1/jobs/{publish_job}"), None).unwrap();
+        assert_eq!(status, 409, "{body}");
+        let env = Json::parse(&body).unwrap();
+        assert_eq!(env.get("code").unwrap().as_str(), Some("job_cancelled"));
+        assert_eq!(
+            env.get("detail").unwrap().get("state").unwrap().as_str(),
+            Some("succeeded"),
+            "the terminal record is reported unchanged"
+        );
+
+        // pending cancel is immediate and O(1): hold the worker so the
+        // job can't start, cancel, release — it must never run
+        platform.jobs.pause();
+        let (status, body) =
+            http_request(&addr, "POST", &format!("/api/v1/models/{id}/profile"), None).unwrap();
+        assert_eq!(status, 202, "{body}");
+        let pending_job =
+            Json::parse(&body).unwrap().get("job_id").unwrap().as_str().unwrap().to_string();
+        let (status, body) =
+            http_request(&addr, "DELETE", &format!("/api/v1/jobs/{pending_job}"), None).unwrap();
+        assert_eq!(status, 200, "{body}");
+        assert_eq!(Json::parse(&body).unwrap().get("state").unwrap().as_str(), Some("cancelled"));
+        platform.jobs.unpause();
+        // double-cancel hits the terminal-state conflict
+        let (status, _) =
+            http_request(&addr, "DELETE", &format!("/api/v1/jobs/{pending_job}"), None).unwrap();
+        assert_eq!(status, 409);
+        // the cancelled job never ran: the model never left registered
+        let (_, doc) = http_request(&addr, "GET", &format!("/api/v1/models/{id}"), None).unwrap();
+        assert_eq!(
+            Json::parse(&doc).unwrap().get("status").unwrap().as_str(),
+            Some("registered")
+        );
+
+        // running cancel: convert first so profiling has artifacts,
+        // then preempt a full-grid profile drain mid-run
+        let (status, body) =
+            http_request(&addr, "POST", &format!("/api/v1/models/{id}/convert"), None).unwrap();
+        assert_eq!(status, 202, "{body}");
+        let cjob = Json::parse(&body).unwrap().get("job_id").unwrap().as_str().unwrap().to_string();
+        let converted = platform.jobs.wait_terminal(&cjob, 60_000).unwrap();
+        assert_eq!(converted.state, JobState::Succeeded, "{:?}", converted.error);
+        let (status, body) =
+            http_request(&addr, "POST", &format!("/api/v1/models/{id}/profile"), None).unwrap();
+        assert_eq!(status, 202, "{body}");
+        let pjob = Json::parse(&body).unwrap().get("job_id").unwrap().as_str().unwrap().to_string();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let raced_to_terminal = loop {
+            let job = platform.jobs.get(&pjob).unwrap();
+            if job.state == JobState::Running {
+                break false;
+            }
+            if job.state.is_terminal() {
+                break true;
+            }
+            assert!(std::time::Instant::now() < deadline, "job never started");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        };
+        let (status, body) =
+            http_request(&addr, "DELETE", &format!("/api/v1/jobs/{pjob}"), None).unwrap();
+        if raced_to_terminal || status == 409 {
+            // the drain finished before the cancel landed: the record
+            // is immutable and the conflict is explicit
+            assert_eq!(status, 409, "{body}");
+        } else {
+            assert_eq!(status, 202, "{body}");
+            let env = Json::parse(&body).unwrap();
+            assert_eq!(env.get("cancel_requested").unwrap().as_bool(), Some(true));
+            assert_eq!(env.get("state").unwrap().as_str(), Some("running"));
+            let job = platform.jobs.wait_terminal(&pjob, 60_000).unwrap();
+            match job.state {
+                JobState::Cancelled => {
+                    // a preempted drain discards its staged rows: no
+                    // partial profiles may reach the model document
+                    let (_, doc) =
+                        http_request(&addr, "GET", &format!("/api/v1/models/{id}"), None).unwrap();
+                    let doc = Json::parse(&doc).unwrap();
+                    let profiles = doc
+                        .get("profiles")
+                        .and_then(Json::as_arr)
+                        .map(<[Json]>::len)
+                        .unwrap_or(0);
+                    assert_eq!(profiles, 0, "cancelled drain flushed partial rows: {doc}");
+                    assert!(job.error.unwrap().contains("cancelled"), "error names the cancel");
+                }
+                // completion can win the race cooperatively — also legal
+                JobState::Succeeded => {}
+                other => panic!("unexpected terminal state {other:?}"),
+            }
+        }
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
+    fn v1_batch_delete_and_update_routes() {
+        let Some((mut server, platform)) = server() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let addr = server.addr;
+        let item = |name: &str| {
+            Json::obj()
+                .with(
+                    "yaml",
+                    YAML.replace("rest-mlp", name)
+                        .replace("convert: true", "convert: false")
+                        .replace("\\n", "\n"),
+                )
+                .with("weights_b64", base64::encode(b"bw"))
+        };
+        let body = Json::obj()
+            .with("models", Json::Arr(vec![item("bat-0"), item("bat-1"), item("bat-2")]))
+            .to_string();
+        let (status, text) =
+            http_request(&addr, "POST", "/api/v1/models:batch", Some(&body)).unwrap();
+        assert_eq!(status, 201, "{text}");
+        let ids: Vec<String> = Json::parse(&text)
+            .unwrap()
+            .get("items")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|it| it.get("id").unwrap().as_str().unwrap().to_string())
+            .collect();
+
+        // batch update merges every document in one call
+        let upd = |id: &str, fields: Json| Json::obj().with("id", id).with("fields", fields);
+        let body = Json::obj()
+            .with(
+                "updates",
+                Json::Arr(vec![
+                    upd(&ids[0], Json::obj().with("accuracy", 0.91)),
+                    upd(&ids[1], Json::obj().with("accuracy", 0.92)),
+                ]),
+            )
+            .to_string();
+        let (status, text) =
+            http_request(&addr, "POST", "/api/v1/models:batchUpdate", Some(&body)).unwrap();
+        assert_eq!(status, 200, "{text}");
+        assert_eq!(Json::parse(&text).unwrap().get("updated").unwrap().as_i64(), Some(2));
+        let (_, doc) = http_request(&addr, "GET", &format!("/api/v1/models/{}", ids[0]), None).unwrap();
+        assert_eq!(Json::parse(&doc).unwrap().get("accuracy").unwrap().as_f64(), Some(0.91));
+        // a guarded field anywhere rejects the whole batch (422),
+        // leaving every document untouched
+        let body = Json::obj()
+            .with(
+                "updates",
+                Json::Arr(vec![
+                    upd(&ids[0], Json::obj().with("accuracy", 0.5)),
+                    upd(&ids[1], Json::obj().with("status", "serving")),
+                ]),
+            )
+            .to_string();
+        let (status, text) =
+            http_request(&addr, "POST", "/api/v1/models:batchUpdate", Some(&body)).unwrap();
+        assert_eq!(status, 422, "{text}");
+        let (_, doc) = http_request(&addr, "GET", &format!("/api/v1/models/{}", ids[0]), None).unwrap();
+        assert_eq!(
+            Json::parse(&doc).unwrap().get("accuracy").unwrap().as_f64(),
+            Some(0.91),
+            "failed batch updated nothing"
+        );
+
+        // a ghost id 404s the whole delete batch; nothing is removed
+        let body = Json::obj()
+            .with(
+                "ids",
+                Json::Arr(vec![
+                    Json::Str(ids[0].clone()),
+                    Json::Str("ffffffffffffffffffffffff".into()),
+                ]),
+            )
+            .to_string();
+        let (status, _) =
+            http_request(&addr, "POST", "/api/v1/models:batchDelete", Some(&body)).unwrap();
+        assert_eq!(status, 404);
+        // duplicate ids are rejected up front
+        let body = Json::obj()
+            .with("ids", Json::Arr(vec![Json::Str(ids[0].clone()), Json::Str(ids[0].clone())]))
+            .to_string();
+        assert_eq!(
+            http_request(&addr, "POST", "/api/v1/models:batchDelete", Some(&body)).unwrap().0,
+            422
+        );
+        // a good batch removes everything in one WAL append
+        let body = Json::obj()
+            .with("ids", Json::Arr(ids.iter().map(|i| Json::Str(i.clone())).collect()))
+            .to_string();
+        let (status, text) =
+            http_request(&addr, "POST", "/api/v1/models:batchDelete", Some(&body)).unwrap();
+        assert_eq!(status, 200, "{text}");
+        assert_eq!(Json::parse(&text).unwrap().get("deleted").unwrap().as_i64(), Some(3));
+        let (_, listing) = http_request(&addr, "GET", "/api/v1/models", None).unwrap();
+        assert!(Json::parse(&listing).unwrap().get("items").unwrap().as_arr().unwrap().is_empty());
+        platform.shutdown();
+        server.stop();
+    }
+
+    #[test]
     fn v1_list_models_paginates_and_filters() {
         let Some((mut server, platform)) = server() else {
             eprintln!("skipping: artifacts not built");
@@ -834,7 +1171,7 @@ mod tests {
                 .replace("rest-mlp", &format!("page-mlp-{i}"))
                 .replace("convert: true", "convert: false");
             let (status, _) = register_yaml(&addr, &yaml);
-            assert_eq!(status, 201);
+            assert_eq!(status, 202);
         }
         // page 1
         let (status, body) = http_request(&addr, "GET", "/api/v1/models?limit=2", None).unwrap();
@@ -884,6 +1221,10 @@ mod tests {
             ("PUT", "/api/v1/models/ffffffffffffffffffffffff".into(), Some(r#"{"status": "serving"}"#)),
             ("POST", "/api/v1/services/ghost:infer".into(), Some("{}")),
             ("GET", "/api/v1/jobs/ghost".into(), None),
+            ("DELETE", "/api/v1/jobs/ghost".into(), None),
+            ("POST", "/api/v1/models:batchDelete".into(), Some("{}")),
+            ("POST", "/api/v1/models:batchDelete".into(), Some(r#"{"ids": []}"#)),
+            ("POST", "/api/v1/models:batchUpdate".into(), Some(r#"{"updates": [{"id": "x"}]}"#)),
             ("GET", "/api/v1/models?limit=0".into(), None),
             ("PATCH", "/api/v1/models".into(), None),
             ("GET", "/totally/unknown".into(), None),
@@ -914,8 +1255,8 @@ mod tests {
         // it concurrently must shed with the documented 429 envelope
         let yaml = YAML.replace("rest-mlp", "flood-bert").replace("mlp_tabular", "bert_tiny");
         let (status, created) = register_yaml(&addr, &yaml);
-        assert_eq!(status, 201, "{created}");
-        let id = created.get("id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(status, 202, "{created}");
+        let id = created.get("model_id").unwrap().as_str().unwrap().to_string();
         let (status, body) = http_request(
             &addr,
             "POST",
@@ -1013,8 +1354,8 @@ mod tests {
         };
         let addr = server.addr;
         let (status, created) = register_yaml(&addr, YAML);
-        assert_eq!(status, 201);
-        let id = created.get("id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(status, 202);
+        let id = created.get("model_id").unwrap().as_str().unwrap().to_string();
         // document reads are byte-identical across prefixes
         let (_, legacy_doc) = http_request(&addr, "GET", &format!("/models/{id}"), None).unwrap();
         let (_, v1_doc) = http_request(&addr, "GET", &format!("/api/v1/models/{id}"), None).unwrap();

@@ -66,6 +66,22 @@ impl Event {
     }
 }
 
+/// Sentinel error marking work that stopped because its cooperative
+/// cancellation flag was set (job cancellation, docs/API.md). Raised by
+/// [`Controller::run_until_drained_with`] callers and the converter;
+/// the job registry downcasts for it anywhere in an `anyhow` chain and
+/// records the job `cancelled` instead of `failed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Preempted;
+
+impl std::fmt::Display for Preempted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("preempted by cancellation")
+    }
+}
+
+impl std::error::Error for Preempted {}
+
 /// Aggregate a drain's event stream into the counts an async job
 /// reports back through the API.
 pub fn summarize_events(events: &[Event]) -> Json {
@@ -262,9 +278,28 @@ impl Controller {
     /// Run ticks until the queue drains or `max_ticks` pass, advancing
     /// the clock by `tick_ms` between iterations.
     pub fn run_until_drained(&self, max_ticks: usize, tick_ms: f64) -> Vec<Event> {
+        self.run_until_drained_with(max_ticks, tick_ms, None)
+    }
+
+    /// [`Controller::run_until_drained`] with a cooperative cancellation
+    /// hook: the flag is checked between ticks, so a cancelled drain
+    /// stops within one controller tick (the profiling quantum — jobs
+    /// already dispatched this tick complete, everything queued stays
+    /// queued). Callers that observe the flag set should
+    /// [`Controller::clear_queue`] + [`Controller::discard_results`]
+    /// and report [`Preempted`] instead of flushing.
+    pub fn run_until_drained_with(
+        &self,
+        max_ticks: usize,
+        tick_ms: f64,
+        cancel: Option<&std::sync::atomic::AtomicBool>,
+    ) -> Vec<Event> {
         let clock = self.profiler.cluster().clock().clone();
         let mut all = Vec::new();
         for _ in 0..max_ticks {
+            if cancel.map(|c| c.load(std::sync::atomic::Ordering::SeqCst)).unwrap_or(false) {
+                break;
+            }
             if self.pending_jobs() == 0 {
                 break;
             }
@@ -272,6 +307,22 @@ impl Controller {
             clock.sleep_ms(tick_ms);
         }
         all
+    }
+
+    /// Drop every queued profiling job (cancelled drain teardown).
+    /// Returns how many were dropped.
+    pub fn clear_queue(&self) -> usize {
+        self.queue.lock().unwrap().clear()
+    }
+
+    /// Drop accumulated-but-unflushed profile rows (cancelled drain
+    /// teardown — a cancelled job must not flush partial rows to the
+    /// hub). Returns how many rows were discarded.
+    pub fn discard_results(&self) -> usize {
+        let mut results = self.results.lock().unwrap();
+        let n = results.len();
+        results.clear();
+        n
     }
 
     /// §3.7 item 2: recommend a deployment from stored profiles, under a

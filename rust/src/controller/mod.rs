@@ -6,6 +6,6 @@ pub mod controller;
 pub mod policy;
 pub mod scheduler;
 
-pub use controller::{summarize_events, Controller, Event};
+pub use controller::{summarize_events, Controller, Event, Preempted};
 pub use policy::{IdlePolicy, QosFeed, SloGuard};
 pub use scheduler::{JobQueue, Placement, ProfilingJob};

@@ -109,6 +109,14 @@ impl JobQueue {
         self.jobs.push_front(job);
     }
 
+    /// Drop every queued job (cancelled-drain teardown). Returns how
+    /// many were dropped.
+    pub fn clear(&mut self) -> usize {
+        let n = self.jobs.len();
+        self.jobs.clear();
+        n
+    }
+
     pub fn len(&self) -> usize {
         self.jobs.len()
     }

@@ -77,6 +77,23 @@ impl Converter {
     /// Convert a registered model: compile + validate all variants and
     /// update its document. Batch sizes can be restricted to keep CI fast.
     pub fn convert(&self, hub: &ModelHub, model_id: &str, batches: Option<&[usize]>) -> Result<ConversionReport> {
+        self.convert_cancellable(hub, model_id, batches, None)
+    }
+
+    /// [`Converter::convert`] with a cooperative cancellation hook: the
+    /// flag is polled between (format, batch) variants — the conversion
+    /// preemption quantum. On preemption the model is marked `failed`
+    /// (conversion is not idempotent: a partial variant sweep already
+    /// appended conversion records) and the
+    /// [`crate::controller::Preempted`] sentinel is returned so the job
+    /// registry records `cancelled`.
+    pub fn convert_cancellable(
+        &self,
+        hub: &ModelHub,
+        model_id: &str,
+        batches: Option<&[usize]>,
+        cancel: Option<&std::sync::atomic::AtomicBool>,
+    ) -> Result<ConversionReport> {
         let t0 = std::time::Instant::now();
         // single-field read through the zero-copy scan path
         let family = hub
@@ -97,6 +114,14 @@ impl Converter {
                 None => all,
             };
             for batch in batches {
+                if cancel
+                    .map(|c| c.load(std::sync::atomic::Ordering::SeqCst))
+                    .unwrap_or(false)
+                {
+                    hub.set_status(model_id, ModelStatus::Failed)?;
+                    return Err(anyhow::Error::new(crate::controller::Preempted)
+                        .context(format!("conversion of {model_id} cancelled mid-sweep")));
+                }
                 let entry = manifest
                     .artifact(&format, batch)
                     .ok_or_else(|| anyhow!("missing artifact {family}@{format}/b{batch}"))?;

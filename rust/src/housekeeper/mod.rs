@@ -178,6 +178,29 @@ impl Housekeeper {
     pub fn delete(&self, model_id: &str) -> Result<bool> {
         self.hub.delete(model_id)
     }
+
+    /// Bulk delete: every id must exist; all documents drop in one WAL
+    /// append or none do (see [`ModelHub::delete_many`]).
+    pub fn delete_batch(&self, model_ids: &[String]) -> Result<usize> {
+        self.hub.delete_many(model_ids)
+    }
+
+    /// Bulk update with the same guarded-field policy as [`Self::update`]:
+    /// every item is checked before any document is written, then all
+    /// merges land in one WAL append (see [`ModelHub::update_many`]).
+    pub fn update_batch(&self, updates: &[(String, Json)]) -> Result<usize> {
+        for (id, fields) in updates {
+            let obj = fields
+                .as_obj()
+                .ok_or_else(|| anyhow!("update fields must be an object (model '{id}')"))?;
+            for forbidden in Self::GUARDED_FIELDS {
+                if obj.contains_key(*forbidden) {
+                    anyhow::bail!("field '{forbidden}' cannot be updated through the housekeeper");
+                }
+            }
+        }
+        self.hub.update_many(updates)
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +345,26 @@ profile: false
         let out = hk.register(YAML, b"w").unwrap();
         assert!(hk.delete(&out.model_id).unwrap());
         assert!(!hk.delete(&out.model_id).unwrap());
+        assert_eq!(hk.retrieve(None, None, None).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn batch_delete_and_update_guard_like_singles() {
+        let hk = hk();
+        let a = hk.register(&YAML.replace("demo-mlp", "bd-a"), b"w").unwrap().model_id;
+        let b = hk.register(&YAML.replace("demo-mlp", "bd-b"), b"w").unwrap().model_id;
+        // guarded field anywhere in the batch rejects the whole batch
+        let tamper = vec![
+            (a.clone(), Json::obj().with("accuracy", 0.9)),
+            (b.clone(), Json::obj().with("status", "serving")),
+        ];
+        assert!(hk.update_batch(&tamper).is_err());
+        assert_eq!(hk.hub().get(&a).unwrap().get("accuracy").unwrap().as_f64(), Some(0.76));
+        assert_eq!(
+            hk.update_batch(&[(a.clone(), Json::obj().with("accuracy", 0.9))]).unwrap(),
+            1
+        );
+        assert_eq!(hk.delete_batch(&[a, b]).unwrap(), 2);
         assert_eq!(hk.retrieve(None, None, None).unwrap().len(), 0);
     }
 }

@@ -42,6 +42,16 @@ fn platform(args: &Args) -> Result<Arc<Platform>> {
     Ok(Arc::new(Platform::init(&artifacts, data.as_deref(), wall(), PlatformConfig::default())?))
 }
 
+/// Platform with job resumption off: short-lived CLI verbs that only
+/// inspect or cancel jobs must not adopt a crashed server's queue (the
+/// server restart is the process that should resume it).
+fn platform_read_only_jobs(args: &Args) -> Result<Arc<Platform>> {
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let data = args.get("data").map(PathBuf::from);
+    let config = PlatformConfig { resume_jobs: false, ..Default::default() };
+    Ok(Arc::new(Platform::init(&artifacts, data.as_deref(), wall(), config)?))
+}
+
 fn model_id_by_name(p: &Platform, name: &str) -> Result<String> {
     let doc = p.hub.find_by_name(name)?.ok_or_else(|| anyhow!("no model named '{name}'"))?;
     Ok(doc.get("_id").unwrap().as_str().unwrap().to_string())
@@ -190,6 +200,51 @@ fn run(args: &Args) -> Result<()> {
             println!("deleted");
             p.shutdown();
             Ok(())
+        }
+        "jobs" => {
+            let p = platform_read_only_jobs(args)?;
+            let limit = args.get_usize("limit").unwrap_or(100);
+            let (jobs, next) = p.jobs.list(args.get("cursor"), limit);
+            if jobs.is_empty() {
+                println!("(no jobs)");
+            }
+            for j in jobs {
+                println!(
+                    "{}  {:<8} {:<10} {:<26} {}",
+                    j.id,
+                    j.kind.as_str(),
+                    j.state.as_str(),
+                    j.model_id,
+                    j.error.as_deref().unwrap_or(""),
+                );
+            }
+            if let Some(cursor) = next {
+                println!("next page: --limit {limit} --cursor {cursor}");
+            }
+            p.shutdown();
+            Ok(())
+        }
+        "cancel" => {
+            let p = platform_read_only_jobs(args)?;
+            let id = args.require("job").map_err(|e| anyhow!(e))?;
+            use mlmodelci::api::jobs::CancelOutcome;
+            match p.jobs.cancel(id) {
+                CancelOutcome::NotFound => Err(anyhow!("no job with id '{id}'")),
+                CancelOutcome::AlreadyTerminal(job) => Err(anyhow!(
+                    "job '{id}' already reached terminal state '{}'",
+                    job.state.as_str()
+                )),
+                CancelOutcome::Cancelled(_) => {
+                    println!("cancelled (job never started)");
+                    p.shutdown();
+                    Ok(())
+                }
+                CancelOutcome::Cancelling(_) => {
+                    println!("cancellation requested; the running job will stop at its next checkpoint");
+                    p.shutdown();
+                    Ok(())
+                }
+            }
         }
         "features" => {
             let p = platform(args)?;

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::storage::{BlobRef, Database, Doc, Query};
+use crate::storage::{BlobRef, Database, Doc, Query, WriteOp};
 use crate::util::clock::SharedClock;
 use crate::util::jscan;
 use crate::util::json::Json;
@@ -379,6 +379,84 @@ impl ModelHub {
         Ok(deleted)
     }
 
+    /// Bulk delete: all-or-nothing on the document side. Every id must
+    /// exist (and be unique in the request) — the batch is validated
+    /// under the same lock hold as the delete, then all documents drop
+    /// in one [`crate::storage::Collection::apply_batch`] WAL append.
+    /// Weights blobs referenced by no *surviving* document are dropped
+    /// afterwards (content-addressed blobs may be shared, including
+    /// between two models deleted in the same batch). Returns how many
+    /// documents were removed.
+    pub fn delete_many(&self, ids: &[String]) -> Result<usize> {
+        let mut seen = std::collections::HashSet::new();
+        for id in ids {
+            if !seen.insert(id.as_str()) {
+                bail!("duplicate model id '{id}' in batch");
+            }
+        }
+        let (deleted, dead_blobs) = self.db.with_collection(MODELS, |c| -> Result<_> {
+            let mut blobs = std::collections::HashSet::new();
+            for id in ids {
+                match c.get(id) {
+                    Some(doc) => {
+                        if let Some(b) = doc.get("weights").and_then(BlobRef::from_scan) {
+                            blobs.insert(b.id);
+                        }
+                    }
+                    None => bail!("no model with id '{id}'"),
+                }
+            }
+            // a blob stays alive if any document *outside* the delete
+            // set still points at it
+            for doc in c.all() {
+                let id = doc.str_field("_id").map(Cow::into_owned).unwrap_or_default();
+                if seen.contains(id.as_str()) {
+                    continue;
+                }
+                if let Some(b) = doc.str_field("weights.id") {
+                    blobs.remove(b.as_ref());
+                }
+            }
+            let removed =
+                c.apply_batch(ids.iter().map(|id| WriteOp::Delete(id.clone())).collect())?;
+            Ok((removed.len(), blobs))
+        })??;
+        for blob_id in dead_blobs {
+            self.db.gridfs().delete(&blob_id)?;
+        }
+        Ok(deleted)
+    }
+
+    /// Bulk field merge: all-or-nothing. Every id must exist and every
+    /// `fields` value must be an object; the merged documents land in
+    /// one [`crate::storage::Collection::apply_batch`] WAL append.
+    /// Returns how many documents were updated.
+    pub fn update_many(&self, updates: &[(String, Json)]) -> Result<usize> {
+        self.db.with_collection(MODELS, |c| -> Result<usize> {
+            let mut puts = Vec::with_capacity(updates.len());
+            for (id, fields) in updates {
+                let Some(src) = fields.as_obj() else {
+                    bail!("update fields must be an object");
+                };
+                let mut merged = match c.get(id) {
+                    Some(doc) => doc.to_json(),
+                    None => bail!("no model with id '{id}'"),
+                };
+                match merged.as_obj_mut() {
+                    Some(dst) => {
+                        for (k, v) in src {
+                            dst.insert(k.clone(), v.clone());
+                        }
+                    }
+                    None => bail!("stored document is not an object"),
+                }
+                merged.set("_id", id.as_str());
+                puts.push(WriteOp::Put(merged));
+            }
+            Ok(c.apply_batch(puts)?.len())
+        })?
+    }
+
     pub fn count(&self) -> Result<usize> {
         Ok(self.db.with_collection(MODELS, |c| c.len())?)
     }
@@ -550,6 +628,57 @@ mod tests {
         assert!(hub.delete(&id2).unwrap());
         assert!(!hub.db().gridfs().exists(&blob_id), "last reference dropped");
         assert!(!hub.delete(&id2).unwrap());
+    }
+
+    #[test]
+    fn delete_many_is_atomic_and_respects_shared_blobs() {
+        let hub = hub();
+        let a = hub.create(&info("bm-a"), b"shared").unwrap();
+        let b = hub.create(&info("bm-b"), b"shared").unwrap();
+        let c = hub.create(&info("bm-c"), b"solo").unwrap();
+        let shared_blob = hub.get_field_str(&a, "weights.id").unwrap().unwrap();
+        let solo_blob = hub.get_field_str(&c, "weights.id").unwrap().unwrap();
+        // one ghost id fails the whole batch: nothing deleted
+        let bad = vec![a.clone(), "ffffffffffffffffffffffff".to_string()];
+        assert!(hub.delete_many(&bad).is_err());
+        assert_eq!(hub.count().unwrap(), 3, "failed batch deleted nothing");
+        assert!(hub.delete_many(&[a.clone(), a.clone()]).is_err(), "duplicate ids rejected");
+        // deleting one sharer keeps the blob; deleting both in one batch
+        // plus the solo model drops both blobs
+        assert_eq!(hub.delete_many(std::slice::from_ref(&a)).unwrap(), 1);
+        assert!(hub.db().gridfs().exists(&shared_blob), "blob still used by bm-b");
+        assert_eq!(hub.delete_many(&[b, c]).unwrap(), 2);
+        assert!(!hub.db().gridfs().exists(&shared_blob));
+        assert!(!hub.db().gridfs().exists(&solo_blob));
+        assert_eq!(hub.count().unwrap(), 0);
+    }
+
+    #[test]
+    fn update_many_merges_all_or_nothing() {
+        let hub = hub();
+        let a = hub.create(&info("um-a"), b"w").unwrap();
+        let b = hub.create(&info("um-b"), b"w").unwrap();
+        // one ghost id fails the whole batch
+        let bad = vec![
+            (a.clone(), Json::obj().with("accuracy", 0.99)),
+            ("ffffffffffffffffffffffff".to_string(), Json::obj().with("accuracy", 0.5)),
+        ];
+        assert!(hub.update_many(&bad).is_err());
+        assert_eq!(hub.get(&a).unwrap().get("accuracy").unwrap().as_f64(), Some(0.8));
+        // non-object fields fail the whole batch
+        let non_obj = vec![(a.clone(), Json::Num(1.0))];
+        assert!(hub.update_many(&non_obj).is_err());
+        // a good batch merges every document in one WAL append
+        let updates = vec![
+            (a.clone(), Json::obj().with("accuracy", 0.99).with("note", "tuned")),
+            (b.clone(), Json::obj().with("accuracy", 0.42)),
+        ];
+        assert_eq!(hub.update_many(&updates).unwrap(), 2);
+        let doc_a = hub.get(&a).unwrap();
+        assert_eq!(doc_a.get("accuracy").unwrap().as_f64(), Some(0.99));
+        assert_eq!(doc_a.get("note").unwrap().as_str(), Some("tuned"));
+        assert_eq!(doc_a.get("name").unwrap().as_str(), Some("um-a"), "merge keeps other fields");
+        assert_eq!(hub.get(&b).unwrap().get("accuracy").unwrap().as_f64(), Some(0.42));
     }
 
     #[test]

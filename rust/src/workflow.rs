@@ -13,9 +13,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::api::jobs::JobRegistry;
+use crate::api::jobs::{Job, JobKind, JobRegistry};
 use crate::cluster::Cluster;
-use crate::controller::{Controller, IdlePolicy, Placement, QosFeed, SloGuard};
+use crate::controller::{summarize_events, Controller, IdlePolicy, Placement, Preempted, QosFeed, SloGuard};
 use crate::converter::{Converter, ConversionReport};
 use crate::dispatcher::{DeploymentSpec, Dispatcher, ServiceGroup};
 use crate::housekeeper::Housekeeper;
@@ -26,6 +26,7 @@ use crate::runtime::ArtifactStore;
 use crate::serving::{Frontend, ALL_SYSTEMS};
 use crate::storage::{Database, DatabaseOptions};
 use crate::util::clock::SharedClock;
+use crate::util::json::Json;
 
 /// Per-stage wall-clock timings of one publish (experiment D2).
 #[derive(Debug, Clone)]
@@ -62,6 +63,11 @@ pub struct PlatformConfig {
     /// [`Database::tick_wals`] for `SyncPolicy::IntervalMs` collections.
     /// Only spawned for durable (data-dir) databases; `0` disables it.
     pub wal_tick_ms: u64,
+    /// Re-enqueue recovered pending/interrupted jobs from the durable
+    /// `_jobs` collection on startup (the restart-safe CI/CD loop).
+    /// `false` = read-only job recovery: the table reloads for
+    /// listing/polling but nothing re-executes (CLI inspection verbs).
+    pub resume_jobs: bool,
 }
 
 impl Default for PlatformConfig {
@@ -73,6 +79,7 @@ impl Default for PlatformConfig {
             profiler_iters: 8,
             db: DatabaseOptions::default(),
             wal_tick_ms: 25,
+            resume_jobs: true,
         }
     }
 }
@@ -85,7 +92,7 @@ pub struct Platform {
     pub store: Arc<ArtifactStore>,
     pub cluster: Arc<Cluster>,
     pub dispatcher: Arc<Dispatcher>,
-    pub converter: Converter,
+    pub converter: Arc<Converter>,
     pub profiler: Arc<Profiler>,
     pub monitor: Arc<Monitor>,
     pub exporter: Arc<NodeExporter>,
@@ -108,12 +115,11 @@ impl Platform {
             Some(dir) => Database::open_with(dir, config.db.clone())?,
             None => Database::in_memory(),
         });
-        let jobs = Arc::new(JobRegistry::new(clock.clone()));
         let hub = Arc::new(ModelHub::new(db.clone(), clock.clone())?);
         let housekeeper = Housekeeper::new(hub.clone());
-        let cluster = Arc::new(Cluster::default_demo(clock));
+        let cluster = Arc::new(Cluster::default_demo(clock.clone()));
         let dispatcher = Arc::new(Dispatcher::new(cluster.clone(), store.clone()));
-        let converter = Converter::new(store.clone(), cluster.leader_engine().clone());
+        let converter = Arc::new(Converter::new(store.clone(), cluster.leader_engine().clone()));
         let mut profiler = Profiler::new(cluster.clone(), store.clone());
         profiler.iters = config.profiler_iters;
         let profiler = Arc::new(profiler);
@@ -129,6 +135,16 @@ impl Platform {
             config.idle.clone(),
             SloGuard::new(config.p99_slo_ms, 5_000.0),
         ));
+        // job registry last: recovery may re-enqueue WAL-persisted work
+        // whose runner drives the converter/controller built above
+        let jobs = Arc::new(JobRegistry::open(clock, db.clone(), config.resume_jobs)?);
+        {
+            let (hub2, store2, controller2, converter2, config2) =
+                (hub.clone(), store.clone(), controller.clone(), converter.clone(), config.clone());
+            jobs.install_runner(Arc::new(move |job: &Job| -> Result<Json> {
+                run_job(&hub2, &store2, &controller2, &converter2, &config2, job)
+            }));
+        }
         // the group-commit tail of IntervalMs collections must not wait
         // for the next foreground write to become durable — a ticker
         // thread bounds the sync lag to ~wal_tick_ms
@@ -217,31 +233,7 @@ impl Platform {
         batches: Option<&[usize]>,
         frontends: &[Frontend],
     ) -> Result<(usize, Vec<crate::controller::Event>)> {
-        // single-field read through the zero-copy scan path
-        let family = self.hub.get_field_str(model_id, "family")?.unwrap_or_default();
-        let manifest = self.store.model(&family)?;
-        let all = manifest.batches("reference");
-        let batches: Vec<usize> = match batches {
-            Some(sel) => all.iter().copied().filter(|b| sel.contains(b)).collect(),
-            None => all,
-        };
-        // the whole enqueue→drain→flush session holds the drain gate:
-        // a concurrent session would drain this model's rows into its
-        // own flush and misattribute the counts
-        self.controller.exclusive_drain(|| {
-            self.controller.enqueue_profiling(
-                model_id,
-                &family,
-                &["reference", "optimized"],
-                &batches,
-                ALL_SYSTEMS,
-                frontends,
-                Placement::Workers,
-            )?;
-            let events = self.controller.run_until_drained(10_000, 0.0);
-            let recorded = self.controller.flush_results()?;
-            Ok((recorded, events))
-        })
+        profile_model(&self.hub, &self.store, &self.controller, model_id, batches, frontends, None)
     }
 
     /// Deploy a published model by name. Returns the replica group
@@ -272,6 +264,131 @@ impl Platform {
         // unsynced — a clean exit is a commit point
         if let Err(e) = self.db.sync() {
             crate::log_warn!("platform", "wal sync on shutdown failed: {e}");
+        }
+    }
+}
+
+/// Enqueue a model's profiling grid on the controller and drain it with
+/// an optional cooperative cancellation flag checked between ticks. On
+/// preemption the remaining queue is dropped and staged result rows are
+/// discarded — a cancelled drain never flushes partial profiles — and
+/// the [`Preempted`] sentinel propagates so the job registry records
+/// `cancelled` (the model stays `profiling`; re-profiling is safe, the
+/// job is idempotent).
+fn profile_model(
+    hub: &Arc<ModelHub>,
+    store: &Arc<ArtifactStore>,
+    controller: &Arc<Controller>,
+    model_id: &str,
+    batches: Option<&[usize]>,
+    frontends: &[Frontend],
+    cancel: Option<&AtomicBool>,
+) -> Result<(usize, Vec<crate::controller::Event>)> {
+    // single-field read through the zero-copy scan path
+    let family = hub.get_field_str(model_id, "family")?.unwrap_or_default();
+    let manifest = store.model(&family)?;
+    let all = manifest.batches("reference");
+    let batches: Vec<usize> = match batches {
+        Some(sel) => all.iter().copied().filter(|b| sel.contains(b)).collect(),
+        None => all,
+    };
+    // the whole enqueue→drain→flush session holds the drain gate: a
+    // concurrent session would drain this model's rows into its own
+    // flush and misattribute the counts
+    controller.exclusive_drain(|| {
+        controller.enqueue_profiling(
+            model_id,
+            &family,
+            &["reference", "optimized"],
+            &batches,
+            ALL_SYSTEMS,
+            frontends,
+            Placement::Workers,
+        )?;
+        let events = controller.run_until_drained_with(10_000, 0.0, cancel);
+        if cancel.map(|c| c.load(Ordering::SeqCst)).unwrap_or(false) {
+            let dropped = controller.clear_queue();
+            let discarded = controller.discard_results();
+            return Err(anyhow::Error::new(Preempted).context(format!(
+                "profiling of {model_id} cancelled mid-drain ({dropped} queued jobs dropped, {discarded} staged rows discarded)"
+            )));
+        }
+        let recorded = controller.flush_results()?;
+        Ok((recorded, events))
+    })
+}
+
+/// Execute one accepted job against the assembled platform modules —
+/// the registry worker's dispatch table. Payloads are declarative
+/// (kind + model id + options), never closures, so jobs recovered from
+/// the `_jobs` WAL replay identically after a process restart.
+fn run_job(
+    hub: &Arc<ModelHub>,
+    store: &Arc<ArtifactStore>,
+    controller: &Arc<Controller>,
+    converter: &Arc<Converter>,
+    config: &PlatformConfig,
+    job: &Job,
+) -> Result<Json> {
+    match job.kind {
+        JobKind::Convert => {
+            let report =
+                converter.convert_cancellable(hub, &job.model_id, config.auto_batches.as_deref(), Some(&job.cancel))?;
+            Ok(Json::obj()
+                .with("validated", report.all_validated())
+                .with("variants", report.variants.len())
+                .with("total_ms", report.total_ms))
+        }
+        JobKind::Profile => {
+            let batches: Option<Vec<usize>> = job
+                .payload
+                .get("batches")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect());
+            let (recorded, events) = profile_model(
+                hub,
+                store,
+                controller,
+                &job.model_id,
+                batches.as_deref(),
+                &[Frontend::Grpc],
+                Some(&job.cancel),
+            )?;
+            Ok(Json::obj().with("profiles_recorded", recorded).with("drain", summarize_events(&events)))
+        }
+        JobKind::Publish => {
+            let do_convert = job.payload.get("convert").and_then(Json::as_bool).unwrap_or(true);
+            let do_profile = job.payload.get("profile").and_then(Json::as_bool).unwrap_or(true);
+            let batches = config.auto_batches.as_deref();
+            let mut validated = false;
+            if do_convert {
+                validated = converter
+                    .convert_cancellable(hub, &job.model_id, batches, Some(&job.cancel))?
+                    .all_validated();
+            }
+            // stage boundary is a preemption point: conversion already
+            // committed its records, profiling has not started
+            if job.cancel.load(Ordering::SeqCst) {
+                return Err(anyhow::Error::new(Preempted)
+                    .context(format!("publish of {} cancelled between convert and profile", job.model_id)));
+            }
+            let mut profiles_recorded = 0;
+            if do_profile && validated {
+                profiles_recorded = profile_model(
+                    hub,
+                    store,
+                    controller,
+                    &job.model_id,
+                    batches,
+                    &[Frontend::Grpc, Frontend::Rest],
+                    Some(&job.cancel),
+                )?
+                .0;
+            }
+            Ok(Json::obj()
+                .with("model_id", job.model_id.as_str())
+                .with("validated", validated)
+                .with("profiles_recorded", profiles_recorded))
         }
     }
 }

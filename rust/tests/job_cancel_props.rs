@@ -1,0 +1,194 @@
+//! Property tests for job cancellation (ISSUE 9): randomized
+//! interleavings of enqueue / cancel / drain, driven on a virtual
+//! clock, must never corrupt a job record.
+//!
+//! Invariants checked on every interleaving:
+//!
+//! * every job settles in **exactly one** terminal state, and that
+//!   state never changes afterwards (two snapshots agree);
+//! * a job that ends `cancelled` contributed **zero** flushed rows —
+//!   cooperative preemption discards staged work;
+//! * cancelling an already-terminal job reports the immutable record
+//!   (the API's 409) and mutates nothing;
+//! * timestamps are coherent: `created <= started <= finished` wherever
+//!   present.
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use mlmodelci::api::jobs::{CancelOutcome, JobKind, JobRegistry, JobState, Runner};
+use mlmodelci::controller::Preempted;
+use mlmodelci::util::clock::virtual_clock;
+use mlmodelci::util::json::Json;
+use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop, PropResult};
+
+/// Runner: gated jobs block until cancelled or released; completed jobs
+/// "flush a row" by recording their id in `flushed`.
+fn rowcount_runner(
+    flushed: Arc<Mutex<HashSet<String>>>,
+    release: Arc<std::sync::atomic::AtomicBool>,
+) -> Runner {
+    Arc::new(move |job| {
+        if job.payload.get("gate").and_then(Json::as_bool) == Some(true) {
+            loop {
+                if job.cancel.load(Ordering::SeqCst) {
+                    return Err(anyhow::Error::new(Preempted)
+                        .context(format!("job for {} cancelled mid-run", job.model_id)));
+                }
+                if release.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        flushed.lock().unwrap().insert(job.id.clone());
+        Ok(Json::obj().with("rows", 1))
+    })
+}
+
+fn snapshot(reg: &JobRegistry) -> Vec<(String, JobState, bool, Option<String>)> {
+    let (jobs, _) = reg.list(None, 10_000);
+    jobs.iter().map(|j| (j.id.clone(), j.state, j.result.is_some(), j.error.clone())).collect()
+}
+
+/// Interpret one op stream against a fresh registry, then check every
+/// invariant. Op encoding (`v % 4`): submit plain, submit gated, cancel
+/// an earlier job (`v / 4` picks which), advance the virtual clock.
+fn check_interleaving(ops: &[u64]) -> PropResult {
+    let clock = virtual_clock();
+    let reg = JobRegistry::new(clock.clone());
+    let flushed = Arc::new(Mutex::new(HashSet::new()));
+    let release = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    reg.install_runner(rowcount_runner(flushed.clone(), release.clone()));
+
+    let mut submitted: Vec<String> = Vec::new();
+    for &v in ops {
+        match v % 4 {
+            0 => {
+                let id = reg
+                    .submit(JobKind::Profile, &format!("m{}", submitted.len()), Json::obj())
+                    .map_err(|e| format!("submit failed: {e:#}"))?;
+                submitted.push(id);
+            }
+            1 => {
+                let id = reg
+                    .submit(
+                        JobKind::Convert,
+                        &format!("m{}", submitted.len()),
+                        Json::obj().with("gate", true),
+                    )
+                    .map_err(|e| format!("submit failed: {e:#}"))?;
+                submitted.push(id);
+            }
+            2 => {
+                if !submitted.is_empty() {
+                    let target = &submitted[(v / 4) as usize % submitted.len()];
+                    // any outcome is legal here; corruption is what the
+                    // post-drain invariants would catch
+                    let _ = reg.cancel(target);
+                }
+            }
+            _ => clock.advance_ms((v / 4) as f64),
+        }
+    }
+    release.store(true, Ordering::SeqCst);
+    for id in &submitted {
+        let job = reg
+            .wait_terminal(id, 10_000)
+            .ok_or_else(|| format!("job {id} vanished before settling"))?;
+        if !job.state.is_terminal() {
+            return Err(format!("job {id} never settled: {:?}", job.state));
+        }
+    }
+
+    // exactly one terminal state: two snapshots must agree, and
+    // cancelling a terminal job must both report 409 and change nothing
+    let first = snapshot(&reg);
+    for (id, state, _, _) in &first {
+        if !state.is_terminal() {
+            return Err(format!("job {id} non-terminal after drain: {state:?}"));
+        }
+        match reg.cancel(id) {
+            CancelOutcome::AlreadyTerminal(job) if job.state == *state => {}
+            other => return Err(format!("cancel of terminal {id} answered {other:?}")),
+        }
+    }
+    if snapshot(&reg) != first {
+        return Err("terminal records mutated after settling".into());
+    }
+
+    let flushed = flushed.lock().unwrap();
+    for (id, state, has_result, error) in &first {
+        match state {
+            JobState::Cancelled => {
+                if flushed.contains(id) {
+                    return Err(format!("cancelled job {id} flushed rows"));
+                }
+                if *has_result {
+                    return Err(format!("cancelled job {id} kept a result payload"));
+                }
+                if !error.as_deref().unwrap_or("").contains("cancel") {
+                    return Err(format!("cancelled job {id} lacks a cancel error: {error:?}"));
+                }
+            }
+            JobState::Succeeded => {
+                if !flushed.contains(id) {
+                    return Err(format!("succeeded job {id} flushed nothing"));
+                }
+            }
+            other => return Err(format!("unexpected terminal state {other:?} for {id}")),
+        }
+        let job = reg.get(id).ok_or_else(|| format!("job {id} evicted mid-check"))?;
+        let created = job.created_ms;
+        if let Some(started) = job.started_ms {
+            if started < created {
+                return Err(format!("job {id} started ({started}) before created ({created})"));
+            }
+            if let Some(finished) = job.finished_ms {
+                if finished < started {
+                    return Err(format!(
+                        "job {id} finished ({finished}) before started ({started})"
+                    ));
+                }
+            }
+        }
+    }
+    drop(flushed);
+    reg.shutdown();
+    Ok(())
+}
+
+#[test]
+fn randomized_cancel_interleavings_never_corrupt_records() {
+    run_prop(
+        "job cancel interleavings",
+        40,
+        gen_vec(gen_u64(0, 63), 1, 24),
+        |ops: &Vec<u64>| check_interleaving(ops),
+    );
+}
+
+/// Directed edge: a cancel that loses the race to completion must leave
+/// the success record intact (the work really happened).
+#[test]
+fn cancel_losing_race_to_completion_preserves_success() {
+    let clock = virtual_clock();
+    let reg = JobRegistry::new(clock);
+    let flushed = Arc::new(Mutex::new(HashSet::new()));
+    let release = Arc::new(std::sync::atomic::AtomicBool::new(true)); // gate open: jobs finish instantly
+    reg.install_runner(rowcount_runner(flushed.clone(), release));
+
+    let id = reg.submit(JobKind::Profile, "fast", Json::obj()).unwrap();
+    let done = reg.wait_terminal(&id, 10_000).unwrap();
+    assert_eq!(done.state, JobState::Succeeded);
+    match reg.cancel(&id) {
+        CancelOutcome::AlreadyTerminal(job) => {
+            assert_eq!(job.state, JobState::Succeeded);
+            assert!(job.result.is_some(), "late cancel must not strip the result");
+        }
+        other => panic!("expected AlreadyTerminal, got {other:?}"),
+    }
+    assert!(flushed.lock().unwrap().contains(&id), "the flushed row stays flushed");
+    reg.shutdown();
+}

@@ -1,0 +1,238 @@
+//! Crash-restart conformance for the durable job registry (ISSUE 9).
+//!
+//! The `_jobs` collection rides the storage WAL, so killing the process
+//! at any point and reopening must lose no accepted job and
+//! double-execute no terminal one. Each test drops the process state at
+//! one interesting point — before pickup, mid-run, after the terminal
+//! write — reopens the same data directory, and checks the recovered
+//! table (and a resumed drain) against an uninterrupted twin.
+//!
+//! These tests run at the registry level (temp-dir [`Database`] + a
+//! counting test runner) so they carry weight even where the model
+//! artifacts are not built.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use mlmodelci::api::jobs::{CancelOutcome, JobKind, JobRegistry, JobState, Runner, JOBS_COLLECTION};
+use mlmodelci::storage::{Database, WriteOp};
+use mlmodelci::util::clock::wall;
+use mlmodelci::util::idgen;
+use mlmodelci::util::json::Json;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mlci-jobs-{tag}-{}", idgen::object_id()))
+}
+
+/// Runner that counts executions and echoes the job kind.
+fn counting_runner(executions: Arc<AtomicUsize>) -> Runner {
+    Arc::new(move |job| {
+        executions.fetch_add(1, Ordering::SeqCst);
+        Ok(Json::obj().with("ran", job.kind.as_str()))
+    })
+}
+
+/// `(kind, model_id, state, has_result)` fingerprint of the whole
+/// table, creation-ordered — what a differential run compares.
+fn fingerprint(reg: &JobRegistry) -> Vec<(String, String, String, bool)> {
+    let (jobs, _) = reg.list(None, 10_000);
+    jobs.iter()
+        .map(|j| {
+            (
+                j.kind.as_str().to_string(),
+                j.model_id.clone(),
+                j.state.as_str().to_string(),
+                j.result.is_some(),
+            )
+        })
+        .collect()
+}
+
+/// Crash point 1: the process accepts jobs (202 answered, pending rows
+/// durable) and dies before the worker picks anything up. Reopening
+/// must re-enqueue them in submission order and drain to the same
+/// terminal states as a run that was never interrupted.
+#[test]
+fn crash_before_pickup_resumes_and_matches_uninterrupted_run() {
+    let dir = tmp("pickup");
+    let submissions =
+        [(JobKind::Convert, "model-a"), (JobKind::Profile, "model-b"), (JobKind::Profile, "model-c")];
+
+    // incarnation 1: accept only — no runner installed, so no worker
+    // ever starts; this is exactly the "202 sent, crash" window
+    {
+        let db = Arc::new(Database::open(&dir).unwrap());
+        let reg = JobRegistry::open(wall(), db, true).unwrap();
+        for (kind, model) in &submissions {
+            reg.submit(*kind, model, Json::obj()).unwrap();
+        }
+        assert_eq!(reg.queued(), 3);
+        reg.abort(); // crash: no drain, no terminal writes
+    }
+
+    // incarnation 2: recover and drain
+    let db = Arc::new(Database::open(&dir).unwrap());
+    let reg = JobRegistry::open(wall(), db, true).unwrap();
+    assert_eq!(reg.len(), 3, "no accepted job was lost");
+    assert_eq!(reg.queued(), 3, "pending jobs re-enter the queue");
+    let executions = Arc::new(AtomicUsize::new(0));
+    reg.install_runner(counting_runner(executions.clone()));
+    let (jobs, _) = reg.list(None, 100);
+    for job in &jobs {
+        let done = reg.wait_terminal(&job.id, 10_000).unwrap();
+        assert_eq!(done.state, JobState::Succeeded, "{:?}", done.error);
+    }
+    assert_eq!(executions.load(Ordering::SeqCst), 3, "each job ran exactly once");
+
+    // differential twin: the same submissions, never interrupted
+    let twin = JobRegistry::open(wall(), Arc::new(Database::in_memory()), true).unwrap();
+    twin.install_runner(counting_runner(Arc::new(AtomicUsize::new(0))));
+    for (kind, model) in &submissions {
+        let id = twin.submit(*kind, model, Json::obj()).unwrap();
+        twin.wait_terminal(&id, 10_000).unwrap();
+    }
+    assert_eq!(fingerprint(&reg), fingerprint(&twin), "crash-restart is observationally clean");
+    reg.shutdown();
+    twin.shutdown();
+}
+
+/// Crash point 2: the process dies with jobs in `running`. On a
+/// resuming reopen the idempotent kind (profile) re-runs to success;
+/// the non-idempotent kind (convert) is marked failed/interrupted
+/// rather than silently re-executed.
+#[test]
+fn crash_mid_run_resumes_idempotent_and_fails_non_idempotent() {
+    let dir = tmp("midrun");
+    let (profile_id, convert_id);
+
+    // incarnation 1: accept two jobs, then die "mid-run" — the durable
+    // rows show `running`, exactly what set_running persists before the
+    // runner does any work
+    {
+        let db = Arc::new(Database::open(&dir).unwrap());
+        let reg = JobRegistry::open(wall(), db.clone(), true).unwrap();
+        profile_id = reg.submit(JobKind::Profile, "model-p", Json::obj()).unwrap();
+        convert_id = reg.submit(JobKind::Convert, "model-c", Json::obj()).unwrap();
+        let mut crash_state = Vec::new();
+        for id in [&profile_id, &convert_id] {
+            let mut job = reg.get(id).unwrap();
+            job.state = JobState::Running;
+            job.started_ms = Some(1.0);
+            crash_state.push(WriteOp::Put(job.to_doc()));
+        }
+        db.with_collection(JOBS_COLLECTION, |c| c.apply_batch(crash_state)).unwrap().unwrap();
+        reg.abort();
+    }
+
+    // incarnation 2: recovery repairs both in one batch, then drains
+    let db = Arc::new(Database::open(&dir).unwrap());
+    let reg = JobRegistry::open(wall(), db, true).unwrap();
+    let convert = reg.get(&convert_id).unwrap();
+    assert_eq!(convert.state, JobState::Failed, "non-idempotent work is not re-run");
+    assert!(convert.error.unwrap().contains("interrupted"), "the record says why");
+    assert_eq!(reg.get(&profile_id).unwrap().state, JobState::Pending, "idempotent work re-queues");
+
+    let executions = Arc::new(AtomicUsize::new(0));
+    reg.install_runner(counting_runner(executions.clone()));
+    let done = reg.wait_terminal(&profile_id, 10_000).unwrap();
+    assert_eq!(done.state, JobState::Succeeded);
+    assert_eq!(executions.load(Ordering::SeqCst), 1, "only the profile job re-ran");
+    reg.shutdown();
+
+    // incarnation 3 (read-only open, like the CLI `jobs` verb): the
+    // repairs and the resumed terminal state were themselves durable
+    let db = Arc::new(Database::open(&dir).unwrap());
+    let reg = JobRegistry::open(wall(), db, false).unwrap();
+    assert_eq!(reg.get(&profile_id).unwrap().state, JobState::Succeeded);
+    assert_eq!(reg.get(&convert_id).unwrap().state, JobState::Failed);
+    assert_eq!(reg.queued(), 0, "a read-only open adopts no work");
+}
+
+/// Crash point 3: the process dies after the terminal write. Reopening
+/// reloads the table exactly and re-executes nothing.
+#[test]
+fn restart_after_terminal_write_reloads_without_reexecution() {
+    let dir = tmp("terminal");
+    let before;
+    {
+        let db = Arc::new(Database::open(&dir).unwrap());
+        let reg = JobRegistry::open(wall(), db, true).unwrap();
+        reg.install_runner(counting_runner(Arc::new(AtomicUsize::new(0))));
+        for (kind, model) in [(JobKind::Convert, "m1"), (JobKind::Profile, "m2")] {
+            let id = reg.submit(kind, model, Json::obj()).unwrap();
+            assert_eq!(reg.wait_terminal(&id, 10_000).unwrap().state, JobState::Succeeded);
+        }
+        before = fingerprint(&reg);
+        reg.abort(); // die right after the terminal writes landed
+    }
+
+    let db = Arc::new(Database::open(&dir).unwrap());
+    let reg = JobRegistry::open(wall(), db, true).unwrap();
+    assert_eq!(fingerprint(&reg), before, "terminal table reloads identically");
+    assert_eq!(reg.queued(), 0, "terminal jobs are not re-enqueued");
+    let executions = Arc::new(AtomicUsize::new(0));
+    reg.install_runner(counting_runner(executions.clone()));
+    // give a would-be double execution a moment to happen, then check
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    assert_eq!(executions.load(Ordering::SeqCst), 0, "no terminal job double-executes");
+    reg.shutdown();
+}
+
+/// The retention cap compacts the durable collection too: evicted
+/// terminal jobs must not resurrect on restart.
+#[test]
+fn retention_eviction_survives_restart() {
+    let dir = tmp("retention");
+    let mut ids = Vec::new();
+    {
+        let db = Arc::new(Database::open(&dir).unwrap());
+        let reg = JobRegistry::open(wall(), db, true).unwrap();
+        reg.set_retention(3);
+        reg.install_runner(counting_runner(Arc::new(AtomicUsize::new(0))));
+        for i in 0..6 {
+            let id = reg.submit(JobKind::Profile, &format!("m{i}"), Json::obj()).unwrap();
+            reg.wait_terminal(&id, 10_000).unwrap();
+            ids.push(id);
+        }
+        assert!(reg.len() <= 3, "cap enforced in memory, have {}", reg.len());
+        reg.shutdown();
+    }
+
+    let db = Arc::new(Database::open(&dir).unwrap());
+    let reg = JobRegistry::open(wall(), db, true).unwrap();
+    assert!(reg.len() <= 3, "evictions were compacted durably, have {}", reg.len());
+    assert!(reg.get(&ids[0]).is_none(), "the oldest terminal job stays evicted");
+    assert!(reg.get(ids.last().unwrap()).is_some(), "the newest survives");
+}
+
+/// A job cancelled while queued is durably `cancelled`: after a restart
+/// it neither re-enqueues nor runs, and its record is intact.
+#[test]
+fn cancelled_pending_job_stays_cancelled_across_restart() {
+    let dir = tmp("cancel");
+    let (victim, survivor);
+    {
+        let db = Arc::new(Database::open(&dir).unwrap());
+        let reg = JobRegistry::open(wall(), db, true).unwrap();
+        victim = reg.submit(JobKind::Profile, "victim", Json::obj()).unwrap();
+        survivor = reg.submit(JobKind::Profile, "survivor", Json::obj()).unwrap();
+        assert!(matches!(reg.cancel(&victim), CancelOutcome::Cancelled(_)));
+        reg.abort();
+    }
+
+    let db = Arc::new(Database::open(&dir).unwrap());
+    let reg = JobRegistry::open(wall(), db, true).unwrap();
+    assert_eq!(reg.queued(), 1, "only the survivor re-enqueues");
+    let recovered = reg.get(&victim).unwrap();
+    assert_eq!(recovered.state, JobState::Cancelled);
+    assert!(recovered.error.unwrap().contains("cancelled before start"));
+    // cancelling again still answers "already terminal" (API's 409)
+    assert!(matches!(reg.cancel(&victim), CancelOutcome::AlreadyTerminal(_)));
+
+    let executions = Arc::new(AtomicUsize::new(0));
+    reg.install_runner(counting_runner(executions.clone()));
+    assert_eq!(reg.wait_terminal(&survivor, 10_000).unwrap().state, JobState::Succeeded);
+    assert_eq!(executions.load(Ordering::SeqCst), 1, "the cancelled job never ran");
+    assert!(reg.get(&victim).unwrap().result.is_none());
+    reg.shutdown();
+}

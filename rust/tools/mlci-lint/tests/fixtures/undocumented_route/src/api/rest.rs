@@ -1,0 +1,20 @@
+//! Seeded violation: `/api/v1/ghost` is registered but never appears
+//! in the fixture docs.
+
+pub struct Router;
+
+impl Router {
+    pub fn new() -> Router {
+        Router
+    }
+    pub fn get(self, _path: &str) -> Router {
+        self
+    }
+    pub fn delete(self, _path: &str) -> Router {
+        self
+    }
+}
+
+pub fn routes() -> Router {
+    Router::new().get("/api/v1/ping").delete("/api/v1/ghost")
+}

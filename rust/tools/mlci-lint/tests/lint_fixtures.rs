@@ -75,6 +75,16 @@ fn abba_locks_fail_cycle_check() {
 }
 
 #[test]
+fn undocumented_route_fails_drift() {
+    let report = check("undocumented_route");
+    assert!(!report.ok());
+    let hit = has(&report, "drift", "/api/v1/ghost");
+    assert!(hit, "{:?}", report.findings);
+    let bad = has(&report, "drift", "/api/v1/ping");
+    assert!(!bad, "documented route flagged: {:?}", report.findings);
+}
+
+#[test]
 fn undocumented_error_code_fails_drift() {
     let report = check("undocumented_code");
     assert!(!report.ok());

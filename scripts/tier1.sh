@@ -41,6 +41,9 @@ if [[ -n "${MLCI_FAULTS:-}" ]]; then
   cargo build --release
   echo "== tier1 (faults leg): cargo test -q --test serving_stress =="
   cargo test -q --test serving_stress
+  echo "== tier1 (faults leg): cargo test -q --test job_recovery =="
+  # crash-restart conformance must hold under injected faults too
+  cargo test -q --test job_recovery
   echo "== tier1 (faults leg): OK =="
   exit 0
 fi
@@ -50,6 +53,12 @@ cargo build --release
 
 echo "== tier1: cargo test -q =="
 cargo test -q
+
+echo "== tier1: job restart leg (MLCI_WAL_SYNC=always) =="
+# re-run the crash-restart conformance suite on the strictest fsync
+# path regardless of the leg's own MLCI_WAL_SYNC setting: reopen after
+# a kill must recover the _jobs table even when every append fsyncs
+MLCI_WAL_SYNC=always cargo test -q --test job_recovery
 
 echo "== tier1: json_scan bench smoke =="
 # --smoke keeps iteration counts tiny; report goes to a scratch file so
