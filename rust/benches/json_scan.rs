@@ -38,6 +38,21 @@
 //!              and a WAL record line. Acceptance bar: the vectorized
 //!              pass is never slower than scalar on any of these.
 //!
+//!   unescape/* — the byte-at-a-time unescape oracle vs the
+//!              block-accelerated gear (same classifier kernels as the
+//!              scanner) on a long plain payload (best case), a
+//!              maximal-escape-density payload (worst case — bar:
+//!              never slower than scalar) and a wide-char mix.
+//!
+//!   serialize/* — the byte-wise escape-writer oracle vs the
+//!              classify-then-copy gear, on the model document and an
+//!              escape-heavy document (same bar as unescape).
+//!
+//!   wal_crc_overhead/* — the same appends with `crc: false` (the
+//!              pre-CRC byte layout) vs `crc: true` (checksummed
+//!              frames): the cost of integrity framing on the write
+//!              path, expected within ~10% of free.
+//!
 //! Run: `cargo bench --bench json_scan` (flags: `--smoke` for tiny
 //! iteration counts, `--out PATH` for the JSON report, default
 //! `BENCH_json_scan.json`, `--force-scalar` to pin every dispatched
@@ -51,6 +66,7 @@ use mlmodelci::util::benchkit::{bench, f2, Table};
 use mlmodelci::util::jscan::{self, Doc, Offsets};
 use mlmodelci::util::jscan_simd::{self, Engine};
 use mlmodelci::util::json::Json;
+use mlmodelci::util::unescape_simd;
 
 /// A representative model document (schema.rs shape) with `profiles`
 /// grown to the requested length.
@@ -365,9 +381,13 @@ fn main() {
         for (label, sync, n) in rows {
             let raws: Vec<String> =
                 (0..n).map(|i| model_doc(i, 2).to_string()).collect();
-            let rec_bytes: usize = raws.iter().map(|r| r.len() + 20).sum();
-            let opts =
-                || WalOptions { segment_bytes: 64 * 1024 * 1024, replay_threads: 0, sync };
+            let rec_bytes: usize = raws.iter().map(|r| r.len() + 37).sum();
+            let opts = || WalOptions {
+                segment_bytes: 64 * 1024 * 1024,
+                replay_threads: 0,
+                sync,
+                crc: true,
+            };
             // a fresh WAL dir per iteration so both arms pay identical
             // open/create costs and no segment state leaks across runs
             let mut run = 0usize;
@@ -510,6 +530,96 @@ fn main() {
                 bytes_per_iter: text.len(),
             });
         }
+    }
+
+    // --- unescape: scalar oracle vs block-accelerated gear --------------
+    {
+        // plain-long: 64 KiB of escape-free payload with one escape at
+        // the end — best case for block skipping
+        let plain_long = format!("{}\\n", "x".repeat(64 * 1024));
+        // escape-heavy: maximal escape density — worst case; bar is
+        // "never slower than scalar"
+        let escape_heavy = "\\n\\t\\\"\\\\".repeat(4 * 1024);
+        // wide-mixed: multi-byte characters between escape sites
+        let wide_mixed = "héllo 世界 😀\\u0041 plain tail ".repeat(1024);
+        for (label, raw) in [
+            ("unescape/plain-long", &plain_long),
+            ("unescape/escape-heavy", &escape_heavy),
+            ("unescape/wide-mixed", &wide_mixed),
+        ] {
+            let scalar =
+                bench(label, warmup, iters, || unescape_simd::unescape_scalar(raw).len());
+            let simd = bench(label, warmup, iters, || unescape_simd::unescape_simd(raw).len());
+            cases.push(Case {
+                name: label.to_string(),
+                baseline_ms: scalar.mean_ms,
+                scan_ms: simd.mean_ms,
+                bytes_per_iter: raw.len(),
+            });
+        }
+    }
+
+    // --- serializer: byte-wise oracle gear vs classify-then-copy gear ---
+    {
+        let model = model_doc(3, 24);
+        let escape_heavy = Json::obj()
+            .with("dense", "\n\t\"\\".repeat(2 * 1024))
+            .with("plain", "x".repeat(64 * 1024))
+            .with("wide", "héllo 世界 😀".repeat(512));
+        for (label, doc) in
+            [("serialize/model-doc", &model), ("serialize/escape-heavy", &escape_heavy)]
+        {
+            let bytes = jscan::json_to_string(doc).len();
+            let scalar = bench(label, warmup, iters, || jscan::json_to_string_scalar(doc).len());
+            let simd = bench(label, warmup, iters, || jscan::json_to_string_simd(doc).len());
+            cases.push(Case {
+                name: label.to_string(),
+                baseline_ms: scalar.mean_ms,
+                scan_ms: simd.mean_ms,
+                bytes_per_iter: bytes,
+            });
+        }
+    }
+
+    // --- CRC framing overhead on the append path ------------------------
+    {
+        let root = std::env::temp_dir().join(format!("mlci-bench-walcrc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let n = if smoke { 16 } else { 1000 };
+        let raws: Vec<String> = (0..n).map(|i| model_doc(i, 2).to_string()).collect();
+        let rec_bytes: usize = raws.iter().map(|r| r.len() + 37).sum();
+        let opts = |crc: bool| WalOptions {
+            segment_bytes: 64 * 1024 * 1024,
+            replay_threads: 0,
+            sync: SyncPolicy::OnSeal,
+            crc,
+        };
+        let append_iters = if smoke { 2 } else { 20 };
+        let label = "wal_crc_overhead";
+        let mut arm = |crc: bool, tag: &str| {
+            let mut run = 0usize;
+            bench(label, if smoke { 1 } else { 2 }, append_iters, || {
+                run += 1;
+                let dir = root.join(format!("{tag}-{run}"));
+                let (mut wal, _) = Wal::open(&dir, "b", opts(crc)).unwrap();
+                for raw in &raws {
+                    wal.append_put(raw).unwrap();
+                }
+                wal.sync().unwrap();
+                drop(wal);
+                std::fs::remove_dir_all(&dir).ok();
+                run
+            })
+        };
+        let nocrc = arm(false, "nocrc");
+        let withcrc = arm(true, "crc");
+        cases.push(Case {
+            name: format!("wal_crc_overhead/append-{n}recs"),
+            baseline_ms: nocrc.mean_ms,
+            scan_ms: withcrc.mean_ms,
+            bytes_per_iter: rec_bytes,
+        });
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     // --- report ---------------------------------------------------------

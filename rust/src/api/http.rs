@@ -104,15 +104,14 @@ pub struct Response {
 
 impl Response {
     /// Encode a [`Json`](crate::util::json::Json) body through the
-    /// shared pre-sized canonical serializer.
+    /// shared pre-sized canonical serializer, staging into a pooled
+    /// buffer so steady-state responses reuse one warm allocation.
     pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
-        let encoded = crate::util::jscan::json_to_string(body);
-        Response {
-            status,
-            content_type: "application/json",
-            body: encoded.into_bytes(),
-            headers: Vec::new(),
-        }
+        let body = crate::util::jscan::with_pooled_json_buf(|buf| {
+            crate::util::jscan::write_json(body, buf);
+            buf.as_bytes().to_vec()
+        });
+        Response { status, content_type: "application/json", body, headers: Vec::new() }
     }
 
     /// Send an already-serialized JSON body verbatim (the zero-copy

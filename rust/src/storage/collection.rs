@@ -220,9 +220,10 @@ impl Collection {
     pub fn compact(&mut self) -> Result<()> {
         let Some(wal) = self.wal.as_mut() else { return Ok(()) };
         let docs = &self.docs;
+        let crc = wal.crc_enabled();
         wal.compact(|w| {
             for doc in docs.values() {
-                Wal::write_put_record(w, doc.raw())?;
+                Wal::write_put_record(w, doc.raw(), crc)?;
             }
             Ok(())
         })?;

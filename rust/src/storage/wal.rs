@@ -28,9 +28,15 @@
 //!   per batch (per segment touched). When the segment reaches
 //!   [`WalOptions::segment_bytes`] it is fsynced, sealed, and a new
 //!   active segment starts. Records are newline-terminated JSON objects
-//!   (`{"doc":…,"op":"put"}` / `{"id":…,"op":"del"}`), identical to the
-//!   legacy format — a legacy `<name>.jsonl` file is migrated in as the
-//!   first segment on open.
+//!   (`{"doc":…,"op":"put"}` / `{"id":…,"op":"del"}`) with, by default,
+//!   a CRC-32 frame check appended as the record's final member
+//!   (`…,"op":"put","crc":"xxxxxxxx"}`) — the checksum covers every
+//!   record byte before the `crc` member and is verified on replay,
+//!   catching bit rot that JSON validity can't. Records without the
+//!   suffix (legacy segments, or [`WalOptions::crc`] = false) replay
+//!   with verification disabled-on-read, and `crc: false` reproduces
+//!   the pre-CRC byte layout exactly; a legacy `<name>.jsonl` file is
+//!   migrated in as the first segment on open.
 //! * **Durability** of the active segment is governed by
 //!   [`SyncPolicy`] (group commit): `OnSeal` (default — fsync only at
 //!   seal/compaction, exactly the pre-group-commit behavior and byte
@@ -39,8 +45,11 @@
 //!   any commit point. `MLCI_WAL_SYNC` overrides the *default* policy
 //!   process-wide (`onseal` / `always` / `every:N` / `interval:MS`).
 //! * **Crash recovery**: a torn tail in the *active* segment (a record
-//!   with no terminating newline) is truncated away on the next open;
-//!   any malformed newline-terminated record is still hard corruption.
+//!   with no terminating newline) is truncated away on the next open,
+//!   and a CRC mismatch on the active segment's *final* record — bit
+//!   rot or a torn rewrite under the last newline — is truncated away
+//!   the same way; any other malformed or checksum-failing
+//!   newline-terminated record is still hard corruption.
 //! * **Compaction** streams the live state into `compact.tmp`, fsyncs,
 //!   and publishes it as the next `base-N` segment via an atomic
 //!   rename; replay then ignores everything older than the newest base,
@@ -54,6 +63,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::util::crc32;
 use crate::util::jscan::{self, Doc, Offsets};
 use crate::util::jscan_simd;
 
@@ -136,6 +146,13 @@ pub struct WalOptions {
     pub replay_threads: usize,
     /// Durability policy for the active segment (see [`SyncPolicy`]).
     pub sync: SyncPolicy,
+    /// Frame every appended record with a CRC-32 check member (default
+    /// true). Affects *writes* only: replay always verifies records
+    /// that carry the frame and always accepts records that don't
+    /// (legacy segments stay readable), so flipping this knob never
+    /// strands existing data. With `crc: false` the on-disk layout is
+    /// byte-identical to the pre-CRC format.
+    pub crc: bool,
 }
 
 impl Default for WalOptions {
@@ -144,6 +161,7 @@ impl Default for WalOptions {
             segment_bytes: DEFAULT_SEGMENT_BYTES,
             replay_threads: 0,
             sync: SyncPolicy::env_default(),
+            crc: true,
         }
     }
 }
@@ -286,7 +304,7 @@ impl Wal {
     pub fn append_put(&mut self, doc_raw: &str) -> Result<()> {
         let mut buf = std::mem::take(&mut self.frame_buf);
         buf.clear();
-        frame_put(&mut buf, doc_raw);
+        frame_put(&mut buf, doc_raw, self.opts.crc);
         let result = self.append_frame(&buf);
         self.stash_frame_buf(buf);
         result
@@ -296,7 +314,7 @@ impl Wal {
     pub fn append_del(&mut self, id: &str) -> Result<()> {
         let mut buf = std::mem::take(&mut self.frame_buf);
         buf.clear();
-        frame_del(&mut buf, id);
+        frame_del(&mut buf, id, self.opts.crc);
         let result = self.append_frame(&buf);
         self.stash_frame_buf(buf);
         result
@@ -325,8 +343,8 @@ impl Wal {
                     wal.seal_and_rotate()?;
                 }
                 match op {
-                    WalBatchOp::Put { doc_raw } => frame_put(&mut buf, doc_raw),
-                    WalBatchOp::Del { id } => frame_del(&mut buf, id),
+                    WalBatchOp::Put { doc_raw } => frame_put(&mut buf, doc_raw, wal.opts.crc),
+                    WalBatchOp::Del { id } => frame_del(&mut buf, id, wal.opts.crc),
                 }
                 pending += 1;
             }
@@ -560,12 +578,20 @@ impl Wal {
         Ok(())
     }
 
-    /// Write one put record to a compaction stream (shared with the
-    /// append path so base segments replay through the same parser).
-    pub fn write_put_record(w: &mut dyn Write, doc_raw: &str) -> std::io::Result<()> {
-        w.write_all(b"{\"doc\":")?;
-        w.write_all(doc_raw.as_bytes())?;
-        w.write_all(b",\"op\":\"put\"}\n")
+    /// Write one put record to a compaction stream, framed by the same
+    /// builder as the append path (CRC included when `crc`) so base
+    /// segments replay through the same parser and verifier.
+    pub fn write_put_record(w: &mut dyn Write, doc_raw: &str, crc: bool) -> std::io::Result<()> {
+        let mut buf = Vec::with_capacity(doc_raw.len() + 40);
+        frame_put(&mut buf, doc_raw, crc);
+        w.write_all(&buf)
+    }
+
+    /// Whether this WAL frames appended records with a CRC check
+    /// (callers streaming compaction state pass it through to
+    /// [`Wal::write_put_record`]).
+    pub fn crc_enabled(&self) -> bool {
+        self.opts.crc
     }
 
     /// Sequence numbers currently on disk, `(seq, is_base)`, in order
@@ -585,23 +611,47 @@ impl Wal {
     }
 }
 
-/// Frame a put record — `{"doc":…,"op":"put"}\n` — into the build
-/// buffer, newline folded in so the record flushes in one write.
-fn frame_put(buf: &mut Vec<u8>, doc_raw: &str) {
-    buf.reserve(doc_raw.len() + 20);
+/// Frame a put record — `{"doc":…,"op":"put"[,"crc":"…"]}\n` — into
+/// the build buffer, newline folded in so the record flushes in one
+/// write.
+fn frame_put(buf: &mut Vec<u8>, doc_raw: &str, crc: bool) {
+    let start = buf.len();
+    buf.reserve(doc_raw.len() + 40);
     buf.extend_from_slice(b"{\"doc\":");
     buf.extend_from_slice(doc_raw.as_bytes());
-    buf.extend_from_slice(b",\"op\":\"put\"}\n");
+    buf.extend_from_slice(b",\"op\":\"put\"");
+    finish_frame(buf, start, crc);
 }
 
-/// Frame a delete record — `{"id":…,"op":"del"}\n`.
-fn frame_del(buf: &mut Vec<u8>, id: &str) {
-    let mut escaped = String::with_capacity(id.len() + 2);
-    jscan::write_escaped(&mut escaped, id);
-    buf.reserve(escaped.len() + 20);
-    buf.extend_from_slice(b"{\"id\":");
-    buf.extend_from_slice(escaped.as_bytes());
-    buf.extend_from_slice(b",\"op\":\"del\"}\n");
+/// Frame a delete record — `{"id":…,"op":"del"[,"crc":"…"]}\n`.
+fn frame_del(buf: &mut Vec<u8>, id: &str, crc: bool) {
+    let start = buf.len();
+    jscan::with_pooled_json_buf(|escaped| {
+        jscan::write_escaped(escaped, id);
+        buf.reserve(escaped.len() + 40);
+        buf.extend_from_slice(b"{\"id\":");
+        buf.extend_from_slice(escaped.as_bytes());
+    });
+    buf.extend_from_slice(b",\"op\":\"del\"");
+    finish_frame(buf, start, crc);
+}
+
+/// Close a frame whose first byte sits at `start` (the build buffer
+/// may already hold earlier records of a batch). With `crc`, the
+/// record's final member is `"crc":"xxxxxxxx"` — CRC-32/IEEE over
+/// every frame byte before the member's leading comma, spelled as
+/// exactly eight lowercase hex digits — giving the fixed-width
+/// `,"crc":"xxxxxxxx"}` suffix replay verifies textually. Without, the
+/// frame closes as the pre-CRC format did, byte for byte.
+fn finish_frame(buf: &mut Vec<u8>, start: usize, crc: bool) {
+    if crc {
+        let sum = crc32::crc32(&buf[start..]);
+        buf.extend_from_slice(b",\"crc\":\"");
+        buf.extend_from_slice(&crc32::hex8(sum));
+        buf.extend_from_slice(b"\"}\n");
+    } else {
+        buf.extend_from_slice(b"}\n");
+    }
 }
 
 /// Fsync a directory so renames/creates/unlinks inside it are durable.
@@ -775,12 +825,36 @@ fn parse_segment(
             }
             let line = &text[pos..line_end];
             if !line.trim().is_empty() {
-                parse_record(line, offsets, &mut ops).map_err(|e| {
-                    StoreError::Corrupt(format!(
-                        "{label} wal segment {} record {lineno}: {e}",
-                        seg.seq
-                    ))
-                })?;
+                let crc = match verify_crc(line) {
+                    Ok(state) => state,
+                    Err(e) => {
+                        if tolerate_torn_tail && line_end + 1 >= bytes.len() {
+                            // checksum failure on the *final* record of
+                            // the active segment: bit rot (or a torn
+                            // rewrite) under the last newline. Drop it
+                            // exactly like a torn tail — valid_len stops
+                            // at the previous boundary and open()
+                            // truncates the damage away.
+                            crate::log_warn!(
+                                "wal",
+                                "{label} wal segment {} record {lineno}: {e}; dropping final record like a torn tail",
+                                seg.seq
+                            );
+                            break;
+                        }
+                        return Err(StoreError::Corrupt(format!(
+                            "{label} wal segment {} record {lineno}: {e}",
+                            seg.seq
+                        )));
+                    }
+                };
+                parse_record(line, matches!(crc, CrcState::Verified), offsets, &mut ops)
+                    .map_err(|e| {
+                        StoreError::Corrupt(format!(
+                            "{label} wal segment {} record {lineno}: {e}",
+                            seg.seq
+                        ))
+                    })?;
             }
             pos = line_end + 1;
             valid_len = pos;
@@ -789,16 +863,67 @@ fn parse_segment(
     })
 }
 
+/// Outcome of the textual CRC frame check on one record line.
+enum CrcState {
+    /// The `,"crc":"xxxxxxxx"}` suffix is present and the checksum
+    /// matches the record bytes.
+    Verified,
+    /// No CRC frame — a legacy (pre-CRC or `crc: false`) record.
+    /// Verification is disabled-on-read so existing segments stay
+    /// replayable.
+    Absent,
+}
+
+/// Check a record line's CRC frame *before* any JSON scanning: when
+/// the line ends with the exact fixed-width `,"crc":"xxxxxxxx"}`
+/// spelling the frame writer emits, the checksum must match
+/// CRC-32/IEEE over every byte before that suffix. The check is
+/// purely textual, so a record too damaged to even scan still fails
+/// here with a checksum error rather than a JSON error.
+fn verify_crc(line: &str) -> std::result::Result<CrcState, String> {
+    // `,` + `"crc":` + `"` + 8 hex digits + `"` + `}`
+    const SUFFIX_LEN: usize = 18;
+    const TAG: &[u8] = b",\"crc\":\"";
+    let b = line.as_bytes();
+    if b.len() < SUFFIX_LEN || !line.ends_with("\"}") {
+        return Ok(CrcState::Absent);
+    }
+    let tag_at = b.len() - SUFFIX_LEN;
+    if &b[tag_at..tag_at + TAG.len()] != TAG {
+        return Ok(CrcState::Absent);
+    }
+    let hex = &line[tag_at + TAG.len()..b.len() - 2];
+    // the suffix shape only comes from our frame writer (or from
+    // corruption of it), so a non-canonical checksum spelling is frame
+    // damage, not a legacy record
+    let Some(stored) = crc32::parse_hex8(hex) else {
+        return Err(format!("crc frame damaged (non-canonical checksum '{hex}')"));
+    };
+    let computed = crc32::crc32(&b[..tag_at]);
+    if stored != computed {
+        return Err(format!("crc mismatch (stored {stored:08x}, computed {computed:08x})"));
+    }
+    Ok(CrcState::Verified)
+}
+
 /// Scan one record span in place (pooled table, no line `String`) and
 /// push the op it encodes. The stored document is detached straight off
 /// the record's `doc` span — one scan pass per record total.
 fn parse_record(
     line: &str,
+    crc_verified: bool,
     offsets: &mut Offsets,
     ops: &mut Vec<WalOp>,
 ) -> std::result::Result<(), String> {
     jscan::scan_into(line, offsets).map_err(|e| e.to_string())?;
     let root = offsets.root(line);
+    // belt and braces behind the textual suffix check: a record that
+    // *scans* with a top-level `crc` member but did not verify above
+    // has a damaged frame (reordered members, stray whitespace, torn
+    // splice) — refuse it rather than replay an unverified checksum
+    if !crc_verified && root.get("crc").is_some() {
+        return Err("crc member present but frame did not verify".to_string());
+    }
     let op = root.get("op").and_then(|v| v.as_str());
     match op.as_deref().unwrap_or(OP_PUT) {
         OP_PUT => {
@@ -994,8 +1119,8 @@ mod tests {
             }
             // compact down to two live docs
             wal.compact(|w| {
-                Wal::write_put_record(w, &put_raw(3))?;
-                Wal::write_put_record(w, &put_raw(5))
+                Wal::write_put_record(w, &put_raw(3), true)?;
+                Wal::write_put_record(w, &put_raw(5), true)
             })
             .unwrap();
             // post-compaction appends land after the base
@@ -1020,7 +1145,7 @@ mod tests {
             for i in 0..10 {
                 wal.append_put(&put_raw(i)).unwrap();
             }
-            wal.compact(|w| Wal::write_put_record(w, &put_raw(1))).unwrap();
+            wal.compact(|w| Wal::write_put_record(w, &put_raw(1), true)).unwrap();
         }
         // simulate a crash that interrupted compaction cleanup: drop a
         // stale pre-base segment and a leftover tmp back in
@@ -1077,9 +1202,10 @@ mod tests {
         }
         let seg = dir.join("t.wal").join(segment_file_name(1, false));
         let bytes = std::fs::read(&seg).unwrap();
-        // chop the newline, closing brace, closing quote and one byte
-        // of 本 — the surviving tail is not valid UTF-8 on its own
-        std::fs::write(&seg, &bytes[..bytes.len() - 4]).unwrap();
+        // chop the record's ASCII tail (newline, crc frame, op member,
+        // closing quote/brace — 32 bytes) plus one byte of 本, so the
+        // surviving tail is not valid UTF-8 on its own
+        std::fs::write(&seg, &bytes[..bytes.len() - 33]).unwrap();
         let (_, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
         assert_eq!(replay_ids(&ops), vec![format!("put:{:024}", 1)]);
         // recovery truncated cleanly: a second open agrees
@@ -1123,7 +1249,12 @@ mod tests {
         // record boundaries the one-at-a-time history does
         let dir_a = tmp();
         let dir_b = tmp();
-        let opts = || WalOptions { segment_bytes: 160, replay_threads: 0, sync: SyncPolicy::OnSeal };
+        let opts = || WalOptions {
+            segment_bytes: 160,
+            replay_threads: 0,
+            sync: SyncPolicy::OnSeal,
+            crc: true,
+        };
         let raws: Vec<String> = (0..25).map(put_raw).collect();
         {
             let (mut wal, _) = Wal::open(&dir_a, "t", opts()).unwrap();
@@ -1164,7 +1295,12 @@ mod tests {
     #[test]
     fn append_batch_issues_one_write_per_batch() {
         let dir = tmp();
-        let opts = WalOptions { segment_bytes: 1 << 20, replay_threads: 0, sync: SyncPolicy::OnSeal };
+        let opts = WalOptions {
+            segment_bytes: 1 << 20,
+            replay_threads: 0,
+            sync: SyncPolicy::OnSeal,
+            crc: true,
+        };
         let (mut wal, _) = Wal::open(&dir, "t", opts).unwrap();
         let raws: Vec<String> = (0..64).map(put_raw).collect();
         let ops: Vec<WalBatchOp> = raws.iter().map(|r| WalBatchOp::Put { doc_raw: r }).collect();
@@ -1195,7 +1331,12 @@ mod tests {
         let big = 1u64 << 20; // never seals in this test
         // Always: one fsync per append call, batches included
         {
-            let opts = WalOptions { segment_bytes: big, replay_threads: 0, sync: SyncPolicy::Always };
+            let opts = WalOptions {
+                segment_bytes: big,
+                replay_threads: 0,
+                sync: SyncPolicy::Always,
+                crc: true,
+            };
             let (mut wal, _) = Wal::open(&dir, "always", opts).unwrap();
             for i in 0..3 {
                 wal.append_put(&put_raw(i)).unwrap();
@@ -1208,7 +1349,12 @@ mod tests {
         }
         // EveryN: fsync at the first append boundary with >= n unsynced
         {
-            let opts = WalOptions { segment_bytes: big, replay_threads: 0, sync: SyncPolicy::EveryN(4) };
+            let opts = WalOptions {
+                segment_bytes: big,
+                replay_threads: 0,
+                sync: SyncPolicy::EveryN(4),
+                crc: true,
+            };
             let (mut wal, _) = Wal::open(&dir, "everyn", opts).unwrap();
             for i in 0..10 {
                 wal.append_put(&put_raw(i)).unwrap();
@@ -1222,7 +1368,12 @@ mod tests {
         }
         // OnSeal: zero fsyncs until the segment seals
         {
-            let opts = WalOptions { segment_bytes: 128, replay_threads: 0, sync: SyncPolicy::OnSeal };
+            let opts = WalOptions {
+                segment_bytes: 128,
+                replay_threads: 0,
+                sync: SyncPolicy::OnSeal,
+                crc: true,
+            };
             let (mut wal, _) = Wal::open(&dir, "onseal", opts).unwrap();
             wal.append_put(&put_raw(0)).unwrap();
             assert_eq!(wal.io_stats().syncs, 0);
@@ -1233,8 +1384,12 @@ mod tests {
         }
         // IntervalMs: nothing syncs until tick() past the interval
         {
-            let opts =
-                WalOptions { segment_bytes: big, replay_threads: 0, sync: SyncPolicy::IntervalMs(0) };
+            let opts = WalOptions {
+                segment_bytes: big,
+                replay_threads: 0,
+                sync: SyncPolicy::IntervalMs(0),
+                crc: true,
+            };
             let (mut wal, _) = Wal::open(&dir, "interval", opts).unwrap();
             wal.append_put(&put_raw(0)).unwrap();
             assert_eq!(wal.io_stats().syncs, 0);
@@ -1245,6 +1400,7 @@ mod tests {
                 segment_bytes: big,
                 replay_threads: 0,
                 sync: SyncPolicy::IntervalMs(3_600_000),
+                crc: true,
             };
             let (mut wal, _) = Wal::open(&dir, "interval2", opts).unwrap();
             wal.append_put(&put_raw(0)).unwrap();
@@ -1285,6 +1441,192 @@ mod tests {
             Wal::open(&dir, "t", WalOptions::default()),
             Err(StoreError::Corrupt(_))
         ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Expect a corruption error whose message names the crc check.
+    fn expect_crc_corrupt(result: Result<(Wal, Vec<WalOp>)>) {
+        match result {
+            Err(StoreError::Corrupt(msg)) => {
+                assert!(msg.contains("crc"), "error must name the crc check: {msg}")
+            }
+            other => panic!("expected crc corruption, got {:?}", other.map(|(_, ops)| ops.len())),
+        }
+    }
+
+    #[test]
+    fn single_bit_flip_in_sealed_segment_is_rejected_via_crc() {
+        let dir = tmp();
+        {
+            let (mut wal, _) = Wal::open(&dir, "t", small_opts()).unwrap();
+            for i in 0..10 {
+                wal.append_put(&put_raw(i)).unwrap();
+            }
+            assert!(wal.segment_seqs().unwrap().len() > 1, "need a sealed segment");
+        }
+        // flip one bit inside the first record's body of the (sealed)
+        // first segment — the result is still printable JSON-ish text,
+        // so only the checksum can catch it
+        let seg = dir.join("t.wal").join(segment_file_name(1, false));
+        let mut bytes = std::fs::read(&seg).unwrap();
+        bytes[10] ^= 0x01;
+        std::fs::write(&seg, &bytes).unwrap();
+        expect_crc_corrupt(Wal::open(&dir, "t", small_opts()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc_mismatch_on_active_final_record_truncates_like_torn_tail() {
+        let dir = tmp();
+        {
+            let (mut wal, _) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+            for i in 0..5 {
+                wal.append_put(&put_raw(i)).unwrap();
+            }
+        }
+        let seg = dir.join("t.wal").join(segment_file_name(1, false));
+        let bytes = std::fs::read(&seg).unwrap();
+        // flip a bit in the *final* record's body (just past the
+        // second-to-last newline): bit rot under the last newline of
+        // the active segment is recoverable, exactly like a torn tail
+        let prev_nl = bytes[..bytes.len() - 1].iter().rposition(|&b| b == b'\n').unwrap();
+        let mut flipped = bytes.clone();
+        flipped[prev_nl + 3] ^= 0x01;
+        std::fs::write(&seg, &flipped).unwrap();
+        {
+            let (_, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+            assert_eq!(replay_ids(&ops).len(), 4, "damaged final record dropped");
+            assert!(
+                std::fs::metadata(&seg).unwrap().len() < flipped.len() as u64,
+                "damaged bytes physically truncated"
+            );
+        }
+        // truncation is idempotent and the log accepts appends again
+        let (mut wal, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+        assert_eq!(replay_ids(&ops).len(), 4);
+        wal.append_put(&put_raw(77)).unwrap();
+        drop(wal);
+        let (_, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+        assert_eq!(replay_ids(&ops).len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc_mismatch_mid_active_segment_is_still_hard_corruption() {
+        let dir = tmp();
+        {
+            let (mut wal, _) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+            for i in 0..5 {
+                wal.append_put(&put_raw(i)).unwrap();
+            }
+        }
+        // damage the *first* record: truncating the tail cannot recover
+        // the records behind it, so this must refuse to open
+        let seg = dir.join("t.wal").join(segment_file_name(1, false));
+        let mut bytes = std::fs::read(&seg).unwrap();
+        bytes[10] ^= 0x01;
+        std::fs::write(&seg, &bytes).unwrap();
+        expect_crc_corrupt(Wal::open(&dir, "t", WalOptions::default()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc_disabled_reproduces_pre_crc_byte_layout() {
+        let dir = tmp();
+        let opts = || WalOptions { crc: false, ..WalOptions::default() };
+        {
+            let (mut wal, _) = Wal::open(&dir, "t", opts()).unwrap();
+            wal.append_put(&put_raw(0)).unwrap();
+            wal.append_put("{\"_id\":\"000000000000000000000001\",\"name\":\"a\\nb\"}").unwrap();
+            wal.append_del(&format!("{:024}", 0)).unwrap();
+        }
+        // pin the exact pre-CRC framing, byte for byte
+        let seg = dir.join("t.wal").join(segment_file_name(1, false));
+        let expected = format!(
+            "{{\"doc\":{},\"op\":\"put\"}}\n{}{}",
+            put_raw(0),
+            "{\"doc\":{\"_id\":\"000000000000000000000001\",\"name\":\"a\\nb\"},\"op\":\"put\"}\n",
+            format_args!("{{\"id\":\"{:024}\",\"op\":\"del\"}}\n", 0),
+        );
+        assert_eq!(std::fs::read(&seg).unwrap(), expected.as_bytes());
+        // records without the frame replay fine under crc-enabled opts:
+        // verification is disabled-on-read, never required
+        let (_, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+        assert_eq!(
+            replay_ids(&ops),
+            vec![format!("put:{:024}", 0), format!("put:{:024}", 1), format!("del:{:024}", 0)]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_legacy_and_crc_records_replay_together() {
+        let dir = tmp();
+        // a segment written by a pre-CRC binary…
+        let wal_dir = dir.join("t.wal");
+        std::fs::create_dir_all(&wal_dir).unwrap();
+        let legacy = format!("{{\"doc\":{},\"op\":\"put\"}}\n", put_raw(0));
+        std::fs::write(wal_dir.join(segment_file_name(1, false)), &legacy).unwrap();
+        // …continued by a crc-framing binary appending into the same
+        // (now mixed) segment
+        {
+            let (mut wal, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+            assert_eq!(replay_ids(&ops), vec![format!("put:{:024}", 0)]);
+            wal.append_put(&put_raw(1)).unwrap();
+        }
+        let (_, ops) = Wal::open(&dir, "t", WalOptions::default()).unwrap();
+        assert_eq!(replay_ids(&ops), vec![format!("put:{:024}", 0), format!("put:{:024}", 1)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn damaged_crc_frames_are_refused() {
+        // a suffix-shaped frame with a non-canonical checksum spelling
+        // can only come from corruption of a framed record
+        let dir = tmp();
+        let wal_dir = dir.join("t.wal");
+        std::fs::create_dir_all(&wal_dir).unwrap();
+        let bad_hex = format!("{{\"doc\":{},\"op\":\"put\",\"crc\":\"zzzzzzzz\"}}\n", put_raw(0));
+        let ok = format!("{{\"doc\":{},\"op\":\"put\"}}\n", put_raw(1));
+        std::fs::write(wal_dir.join(segment_file_name(1, false)), format!("{bad_hex}{ok}"))
+            .unwrap();
+        expect_crc_corrupt(Wal::open(&dir, "t", WalOptions::default()));
+        // a record that *scans* with a top-level crc member but whose
+        // frame is not in suffix position (torn splice, reordered
+        // members) is refused by the belt-and-braces check
+        let displaced = format!("{{\"crc\":\"00000000\",\"doc\":{},\"op\":\"put\"}}\n", put_raw(0));
+        std::fs::write(wal_dir.join(segment_file_name(1, false)), format!("{displaced}{ok}"))
+            .unwrap();
+        expect_crc_corrupt(Wal::open(&dir, "t", WalOptions::default()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_bases_carry_and_verify_crc_frames() {
+        let dir = tmp();
+        {
+            let (mut wal, _) = Wal::open(&dir, "t", small_opts()).unwrap();
+            for i in 0..8 {
+                wal.append_put(&put_raw(i)).unwrap();
+            }
+            let crc = wal.crc_enabled();
+            assert!(crc, "default options frame with crc");
+            wal.compact(|w| Wal::write_put_record(w, &put_raw(3), crc)).unwrap();
+        }
+        // the base segment's record carries the frame and replays…
+        let (_, ops) = Wal::open(&dir, "t", small_opts()).unwrap();
+        assert_eq!(replay_ids(&ops), vec![format!("put:{:024}", 3)]);
+        // …and a bit flip inside the base is caught (bases never
+        // tolerate torn tails, so damage anywhere is hard corruption)
+        let base = list_segments(&dir.join("t.wal"))
+            .unwrap()
+            .into_iter()
+            .find(|s| s.base)
+            .expect("compaction published a base");
+        let mut bytes = std::fs::read(&base.path).unwrap();
+        bytes[10] ^= 0x01;
+        std::fs::write(&base.path, &bytes).unwrap();
+        expect_crc_corrupt(Wal::open(&dir, "t", small_opts()));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,119 @@
+//! CRC-32 (IEEE 802.3: reflected, polynomial `0xEDB88320`) with the
+//! fixed-width lowercase-hex spelling the WAL frame format uses.
+//!
+//! The WAL appends a `,"crc":"xxxxxxxx"}` suffix to every record it
+//! frames (`storage/wal.rs`); replay recomputes the checksum over the
+//! record bytes before the suffix and rejects mismatches — catching
+//! bit rot that JSON validity alone cannot. Table-driven, built at
+//! compile time; no external crates (offline sandbox).
+
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0usize;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32/IEEE of `bytes`: init all-ones, reflected, final xor
+/// all-ones — the same parameterization as zlib's `crc32()`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// The canonical frame spelling of a checksum: exactly eight
+/// lowercase hex digits, most-significant nibble first.
+pub fn hex8(sum: u32) -> [u8; 8] {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut out = [0u8; 8];
+    let mut i = 0;
+    while i < 8 {
+        out[i] = HEX[((sum >> (28 - 4 * i)) & 0xF) as usize];
+        i += 1;
+    }
+    out
+}
+
+/// Parse the canonical spelling back. Strict by design: exactly eight
+/// bytes of `[0-9a-f]` — uppercase or short input is not a checksum
+/// our writer produced, so the caller treats it as frame damage.
+pub fn parse_hex8(s: &str) -> Option<u32> {
+    let b = s.as_bytes();
+    if b.len() != 8 {
+        return None;
+    }
+    let mut v = 0u32;
+    for &c in b {
+        let d = match c {
+            b'0'..=b'9' => c - b'0',
+            b'a'..=b'f' => c - b'a' + 10,
+            _ => return None,
+        };
+        v = (v << 4) | d as u32;
+    }
+    Some(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the standard CRC-32/IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_sum() {
+        let base = b"{\"doc\":{\"_id\":\"m-1\",\"n\":1},\"op\":\"put\"}";
+        let want = crc32(base);
+        for byte in 0..base.len() {
+            for bit in 0..8 {
+                let mut flipped = base.to_vec();
+                flipped[byte] ^= 1 << bit;
+                assert_ne!(crc32(&flipped), want, "flip at byte {byte} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn hex8_round_trips() {
+        for sum in [0u32, 1, 0xCBF4_3926, 0xDEAD_BEEF, u32::MAX] {
+            let spelled = hex8(sum);
+            let s = std::str::from_utf8(&spelled).expect("hex8 is ASCII");
+            assert_eq!(s.len(), 8);
+            assert!(s.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase()));
+            assert_eq!(parse_hex8(s), Some(sum));
+        }
+    }
+
+    #[test]
+    fn parse_hex8_is_strict() {
+        assert_eq!(parse_hex8("cbf43926"), Some(0xCBF4_3926));
+        assert_eq!(parse_hex8("CBF43926"), None, "uppercase is not the canonical spelling");
+        assert_eq!(parse_hex8("cbf4392"), None, "short");
+        assert_eq!(parse_hex8("cbf439261"), None, "long");
+        assert_eq!(parse_hex8("zzzzzzzz"), None, "non-hex");
+        assert_eq!(parse_hex8(""), None);
+    }
+}

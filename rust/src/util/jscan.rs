@@ -844,97 +844,16 @@ pub fn extract<'a>(root: ValueRef<'a>, fields: &[&str]) -> Vec<Option<ValueRef<'
 }
 
 /// Unescape a validated string payload (the inside-the-quotes span).
-/// Plain byte runs are copied slice-wise; invalid sequences (which the
-/// scanner never produces) degrade to U+FFFD instead of panicking.
+/// Delegates to the block-accelerated implementation in
+/// [`unescape_simd`](super::unescape_simd): plain runs between escape
+/// sites are found block-wise by the same classifier the scanner uses
+/// and copied slice-wise, with byte-at-a-time decoding only at the
+/// escape sites; `MLCI_FORCE_SCALAR` and
+/// [`force_engine`](super::jscan_simd::force_engine) pin it to the
+/// byte-wise oracle. Invalid sequences (which the scanner never
+/// produces) degrade to U+FFFD instead of panicking.
 pub fn unescape(raw: &str) -> String {
-    let b = raw.as_bytes();
-    let mut out = String::with_capacity(raw.len());
-    let mut i = 0;
-    while i < b.len() {
-        if b[i] != b'\\' {
-            let start = i;
-            while i < b.len() && b[i] != b'\\' {
-                i += 1;
-            }
-            out.push_str(&raw[start..i]);
-            continue;
-        }
-        i += 1;
-        match b.get(i).copied() {
-            Some(b'"') => {
-                out.push('"');
-                i += 1;
-            }
-            Some(b'\\') => {
-                out.push('\\');
-                i += 1;
-            }
-            Some(b'/') => {
-                out.push('/');
-                i += 1;
-            }
-            Some(b'b') => {
-                out.push('\u{8}');
-                i += 1;
-            }
-            Some(b'f') => {
-                out.push('\u{c}');
-                i += 1;
-            }
-            Some(b'n') => {
-                out.push('\n');
-                i += 1;
-            }
-            Some(b'r') => {
-                out.push('\r');
-                i += 1;
-            }
-            Some(b't') => {
-                out.push('\t');
-                i += 1;
-            }
-            Some(b'u') => {
-                i += 1;
-                let hi = hex4_at(b, i);
-                i += 4;
-                let cp = match hi {
-                    Some(h) if (0xD800..0xDC00).contains(&h) => {
-                        // validated input has "\uXXXX" right here
-                        if b.get(i) == Some(&b'\\') && b.get(i + 1) == Some(&b'u') {
-                            let lo = hex4_at(b, i + 2);
-                            i += 6;
-                            match lo {
-                                Some(l) if (0xDC00..0xE000).contains(&l) => {
-                                    Some(0x10000 + ((h - 0xD800) << 10) + (l - 0xDC00))
-                                }
-                                _ => None,
-                            }
-                        } else {
-                            None
-                        }
-                    }
-                    other => other,
-                };
-                out.push(cp.and_then(char::from_u32).unwrap_or('\u{FFFD}'));
-            }
-            _ => {
-                out.push('\u{FFFD}');
-                i += 1;
-            }
-        }
-    }
-    out
-}
-
-fn hex4_at(b: &[u8], at: usize) -> Option<u32> {
-    if at + 4 > b.len() {
-        return None;
-    }
-    let mut v = 0u32;
-    for &c in &b[at..at + 4] {
-        v = v * 16 + (c as char).to_digit(16)?;
-    }
-    Some(v)
+    super::unescape_simd::unescape(raw)
 }
 
 // ---------------------------------------------------------------------------
@@ -1017,22 +936,103 @@ impl Doc {
 // canonical serializer
 
 /// Serialize compactly into a fresh pre-sized buffer.
+///
+/// Like the scan side, the serializer runs in two gears sharing one
+/// structural pass: string escaping either walks byte-at-a-time (the
+/// oracle) or jumps block-wise to the next escape-needed byte via the
+/// same [`jscan_simd`] classifier the scanner uses, copying the safe
+/// run in between slice-wise. The engine is resolved once per
+/// serialization (not per string) and honors the usual escape hatches.
 pub fn json_to_string(v: &Json) -> String {
     let mut out = String::with_capacity(size_hint(v));
-    write_value(v, &mut out, None, 0);
+    write_value(v, &mut out, None, 0, simd::engine());
     out
 }
 
 /// Pretty-serialize (2-space indent) into a fresh pre-sized buffer.
 pub fn json_to_pretty(v: &Json) -> String {
     let mut out = String::with_capacity(size_hint(v) * 2);
-    write_value(v, &mut out, Some(2), 0);
+    write_value(v, &mut out, Some(2), 0, simd::engine());
     out
 }
 
 /// Append the compact serialization of `v` to `out`.
 pub fn write_json(v: &Json, out: &mut String) {
-    write_value(v, out, None, 0);
+    write_value(v, out, None, 0, simd::engine());
+}
+
+/// [`json_to_string`] pinned to the byte-wise oracle gear
+/// (differential tests, benches).
+pub fn json_to_string_scalar(v: &Json) -> String {
+    let mut out = String::with_capacity(size_hint(v));
+    write_value(v, &mut out, None, 0, simd::Engine::Scalar);
+    out
+}
+
+/// [`json_to_string`] pinned to the best vector engine, mirroring
+/// [`scan_into_simd`]: stays genuinely vectorized even when dispatch
+/// is pinned scalar, which keeps the scalar-vs-SIMD differential
+/// tests and bench rows meaningful under `MLCI_FORCE_SCALAR=1`.
+pub fn json_to_string_simd(v: &Json) -> String {
+    let mut out = String::with_capacity(size_hint(v));
+    write_value(v, &mut out, None, 0, simd::vector_engine());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// serializer output-buffer pool
+
+/// Detach/attach pool of serializer output buffers, the write-side
+/// twin of [`OFFSETS_POOL`]: per-request response encoding and WAL
+/// record framing borrow a pre-grown `String`, serialize into it, and
+/// hand it back, so steady-state serialization stops allocating once
+/// the pool has warmed to the working-set document size.
+static JSON_BUF_POOL: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+/// Bound on pooled buffers; beyond this, returned buffers are dropped.
+const JSON_BUF_POOL_MAX: usize = 64;
+
+/// Per-buffer capacity bound for re-pooling (the same 256 KiB-style
+/// cap as the WAL's frame-buffer stash): one burst of huge responses
+/// must not pin peak-sized buffers for the process lifetime.
+const JSON_BUF_POOL_BYTES_MAX: usize = 256 * 1024;
+
+/// Take a serializer buffer from the pool (or a fresh empty one).
+pub fn detach_json_buf() -> String {
+    JSON_BUF_POOL.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+}
+
+/// Return a serializer buffer to the pool for reuse. Returns `true`
+/// when the buffer was actually pooled, `false` when it was dropped
+/// instead — because it outgrew [`JSON_BUF_POOL_BYTES_MAX`] or the
+/// pool is already at [`JSON_BUF_POOL_MAX`]. The boolean exists for
+/// the cap regression tests; callers are free to ignore it.
+pub fn attach_json_buf(mut buf: String) -> bool {
+    buf.clear();
+    if buf.capacity() > JSON_BUF_POOL_BYTES_MAX {
+        return false; // oversized by a burst of huge documents: let it drop
+    }
+    if let Ok(mut p) = JSON_BUF_POOL.lock() {
+        if p.len() < JSON_BUF_POOL_MAX {
+            p.push(buf);
+            return true;
+        }
+    }
+    false
+}
+
+/// Pooled-buffer count right now (cap regression tests / diagnostics).
+pub fn pooled_json_buf_len() -> usize {
+    JSON_BUF_POOL.lock().map(|p| p.len()).unwrap_or(0)
+}
+
+/// Run `f` with a pooled (cleared) serializer buffer, returning the
+/// buffer to the pool afterwards.
+pub fn with_pooled_json_buf<R>(f: impl FnOnce(&mut String) -> R) -> R {
+    let mut buf = detach_json_buf();
+    let out = f(&mut buf);
+    attach_json_buf(buf);
+    out
 }
 
 /// Serialized-size estimate used to pre-size output buffers.
@@ -1047,13 +1047,13 @@ fn size_hint(v: &Json) -> usize {
     }
 }
 
-fn write_value(v: &Json, out: &mut String, indent: Option<usize>, depth: usize) {
+fn write_value(v: &Json, out: &mut String, indent: Option<usize>, depth: usize, engine: simd::Engine) {
     match v {
         Json::Null => out.push_str("null"),
         Json::Bool(true) => out.push_str("true"),
         Json::Bool(false) => out.push_str("false"),
         Json::Num(n) => write_num(out, *n),
-        Json::Str(s) => write_escaped(out, s),
+        Json::Str(s) => write_escaped_with(out, s, engine),
         Json::Arr(items) => {
             out.push('[');
             for (i, item) in items.iter().enumerate() {
@@ -1061,7 +1061,7 @@ fn write_value(v: &Json, out: &mut String, indent: Option<usize>, depth: usize) 
                     out.push(',');
                 }
                 newline(out, indent, depth + 1);
-                write_value(item, out, indent, depth + 1);
+                write_value(item, out, indent, depth + 1, engine);
             }
             if !items.is_empty() {
                 newline(out, indent, depth);
@@ -1075,12 +1075,12 @@ fn write_value(v: &Json, out: &mut String, indent: Option<usize>, depth: usize) 
                     out.push(',');
                 }
                 newline(out, indent, depth + 1);
-                write_escaped(out, k);
+                write_escaped_with(out, k, engine);
                 out.push(':');
                 if indent.is_some() {
                     out.push(' ');
                 }
-                write_value(val, out, indent, depth + 1);
+                write_value(val, out, indent, depth + 1, engine);
             }
             if !map.is_empty() {
                 newline(out, indent, depth);
@@ -1116,8 +1116,26 @@ pub fn write_num(out: &mut String, n: f64) {
 }
 
 /// Escape-aware string writer: contiguous safe runs are appended
-/// slice-wise instead of char-by-char.
+/// slice-wise instead of char-by-char. Dispatches on the current
+/// engine selection (`MLCI_FORCE_SCALAR` / `force_engine` pin it to
+/// the byte-wise oracle).
 pub fn write_escaped(out: &mut String, s: &str) {
+    write_escaped_with(out, s, simd::engine());
+}
+
+/// [`write_escaped`] on an explicit engine (differential tests,
+/// benches, and the engine-pinned serializer pass). The gears must
+/// produce byte-identical output on every input — a contract enforced
+/// by `rust/tests/json_scan_props.rs`.
+pub fn write_escaped_with(out: &mut String, s: &str, engine: simd::Engine) {
+    match engine {
+        simd::Engine::Scalar => write_escaped_scalar(out, s),
+        engine => write_escaped_blocks(out, s, engine),
+    }
+}
+
+/// The byte-at-a-time reference writer — the differential oracle.
+pub fn write_escaped_scalar(out: &mut String, s: &str) {
     out.push('"');
     let bytes = s.as_bytes();
     let mut start = 0;
@@ -1139,6 +1157,42 @@ pub fn write_escaped(out: &mut String, s: &str) {
             }
         }
         start = i + 1;
+    }
+    out.push_str(&s[start..]);
+    out.push('"');
+}
+
+/// The vectorized writer: the scan classifier's interest set (`"`,
+/// `\`, control bytes) is exactly the JSON escape-needed set, so the
+/// block primitive jumps straight to the next byte that needs
+/// escaping and everything it skipped is appended as one slice. Both
+/// escape-site indices and run boundaries sit on ASCII bytes, so the
+/// slice bounds are always `char` boundaries — no new unsafe code.
+fn write_escaped_blocks(out: &mut String, s: &str, engine: simd::Engine) {
+    out.push('"');
+    let bytes = s.as_bytes();
+    let mut start = 0usize;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let j = simd::find_string_special_with(engine, bytes, i);
+        if j >= bytes.len() {
+            break;
+        }
+        out.push_str(&s[start..j]);
+        match bytes[j] {
+            b'"' => out.push_str("\\\""),
+            b'\\' => out.push_str("\\\\"),
+            b'\n' => out.push_str("\\n"),
+            b'\r' => out.push_str("\\r"),
+            b'\t' => out.push_str("\\t"),
+            other => {
+                // remaining classifier hits are exactly the control
+                // bytes < 0x20 without a short spelling
+                let _ = write!(out, "\\u{:04x}", other);
+            }
+        }
+        start = j + 1;
+        i = j + 1;
     }
     out.push_str(&s[start..]);
     out.push('"');
@@ -1444,6 +1498,83 @@ mod tests {
         big.nodes.reserve(OFFSETS_POOL_NODES_MAX + 1);
         assert!(!attach_offsets(big), "a peak-sized table must be dropped, not pooled");
         assert!(pooled_offsets_len() <= OFFSETS_POOL_MAX);
+    }
+
+    #[test]
+    fn serializer_gears_agree() {
+        let corpus = [
+            DOC,
+            r#"{"e":"tab\tline\nquote\"","u":"","ctl":"ab","uni":"héllo 世界 😀"}"#,
+            r#"["\\\\\\",{"k\n":"v\r"},null,true,-2.5e3]"#,
+            "\"\"",
+            "{}",
+        ];
+        for text in corpus {
+            let v = Json::parse(text).unwrap();
+            let scalar = json_to_string_scalar(&v);
+            let vector = json_to_string_simd(&v);
+            let dispatched = json_to_string(&v);
+            assert_eq!(scalar, vector, "gears diverge for {text}");
+            assert_eq!(scalar, dispatched, "dispatch diverges for {text}");
+        }
+    }
+
+    #[test]
+    fn write_escaped_gears_agree_on_adversarial_strings() {
+        let long_plain = "x".repeat(1000);
+        let dense: String = "\n".repeat(64);
+        let cases = [
+            "",
+            "plain",
+            long_plain.as_str(),
+            dense.as_str(),
+            "quote\"backslash\\tab\tnul\u{0}bell\u{7}",
+            "é\u{1}世界\u{1f}😀",
+            "ends with control\u{2}",
+            "\u{3}starts with control",
+        ];
+        for s in cases {
+            let mut scalar = String::new();
+            write_escaped_scalar(&mut scalar, s);
+            for engine in [simd::Engine::Scalar, simd::Engine::Swar, simd::detect_best()] {
+                let mut got = String::new();
+                write_escaped_with(&mut got, s, engine);
+                assert_eq!(got, scalar, "engine {engine:?} diverges on {s:?}");
+            }
+            let mut dispatched = String::new();
+            write_escaped(&mut dispatched, s);
+            assert_eq!(dispatched, scalar, "dispatch diverges on {s:?}");
+        }
+    }
+
+    #[test]
+    fn pooled_json_buf_roundtrip() {
+        let v = Json::obj().with("name", "resnet_mini").with("esc", "a\nb");
+        let out = with_pooled_json_buf(|buf| {
+            write_json(&v, buf);
+            buf.clone()
+        });
+        assert_eq!(out, json_to_string(&v));
+        // attach/detach cycle hands back a usable (cleared) buffer
+        let b = detach_json_buf();
+        assert!(b.is_empty());
+        attach_json_buf(b);
+    }
+
+    #[test]
+    fn json_buf_pool_caps_hold() {
+        // oversized buffers are dropped, not pooled
+        let big = String::with_capacity(JSON_BUF_POOL_BYTES_MAX + 1);
+        assert!(!attach_json_buf(big), "a peak-sized buffer must be dropped, not pooled");
+        // overfill attempt: attach twice the cap back-to-back
+        let taken: Vec<String> = (0..JSON_BUF_POOL_MAX * 2).map(|_| detach_json_buf()).collect();
+        for t in taken {
+            attach_json_buf(t);
+        }
+        assert!(pooled_json_buf_len() <= JSON_BUF_POOL_MAX, "pool exceeded its cap on overfill");
+        // a dirty buffer comes back cleared
+        attach_json_buf(String::from("stale contents"));
+        assert!(detach_json_buf().is_empty());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 pub mod benchkit;
 pub mod clock;
+pub mod crc32;
 pub mod hash;
 pub mod idgen;
 pub mod jscan;
@@ -14,4 +15,5 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod sync;
+pub mod unescape_simd;
 pub mod yaml;

@@ -1,0 +1,306 @@
+//! Block-accelerated JSON string unescape (the squirrel-json
+//! `unescape/` idea): plain runs between escape sites are found
+//! block-wise and copied slice-wise; only the escape sequences
+//! themselves go through byte-at-a-time decoding.
+//!
+//! This is the read-side twin of the scan acceleration in
+//! [`super::jscan`]: the scanner already classifies string payloads
+//! with [`jscan_simd::find_string_special_with`] (interest set `"`,
+//! `\`, control bytes), and the same classifier locates the escape
+//! sites here — so the unescaper adds **no new unsafe code**; every
+//! vector load runs through the kernels the scan path already proved
+//! out, and the run copies are safe `push_str` slices (run boundaries
+//! sit on ASCII bytes, hence always on `char` boundaries).
+//!
+//! Two gears, one escape decoder:
+//!
+//! * [`unescape_scalar`] / `Engine::Scalar` — the byte-at-a-time
+//!   reference ("the oracle").
+//! * any other engine — jump block-wise to the next `\`, `push_str`
+//!   the run before it, decode the escape with the *same*
+//!   [`decode_escape`] the oracle uses, repeat.
+//!
+//! [`unescape`] dispatches on
+//! [`jscan_simd::engine`](super::jscan_simd::engine), so
+//! `MLCI_FORCE_SCALAR=1` and
+//! [`force_engine`](super::jscan_simd::force_engine) pin it to the
+//! oracle exactly like the scan path. The gears must agree
+//! byte-for-byte on *every* input — including invalid sequences,
+//! where both degrade to U+FFFD through the shared decoder — a
+//! contract enforced by `rust/tests/json_scan_props.rs` and
+//! `rust/tests/json_conformance.rs`.
+
+use super::jscan_simd::{self as simd, Engine};
+
+/// Unescape a validated string payload (the inside-the-quotes span).
+/// Invalid sequences (which the scanner never produces) degrade to
+/// U+FFFD instead of panicking — identically in every gear.
+pub fn unescape(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    unescape_into_with(simd::engine(), raw, &mut out);
+    out
+}
+
+/// The byte-at-a-time reference — the differential oracle. Always
+/// available regardless of engine selection.
+pub fn unescape_scalar(raw: &str) -> String {
+    unescape_with(Engine::Scalar, raw)
+}
+
+/// [`unescape`] pinned to the best vector engine, mirroring
+/// [`scan_into_simd`](super::jscan::scan_into_simd): stays genuinely
+/// vectorized even when process-wide dispatch is pinned scalar, which
+/// keeps differential tests and benches meaningful under
+/// `MLCI_FORCE_SCALAR=1`.
+pub fn unescape_simd(raw: &str) -> String {
+    unescape_with(simd::vector_engine(), raw)
+}
+
+/// [`unescape`] on an explicit engine (differential tests, benches).
+pub fn unescape_with(engine: Engine, raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    unescape_into_with(engine, raw, &mut out);
+    out
+}
+
+/// Engine-explicit core, appending into a caller-owned buffer.
+pub fn unescape_into_with(engine: Engine, raw: &str, out: &mut String) {
+    match engine {
+        Engine::Scalar => unescape_into_scalar(raw, out),
+        engine => unescape_into_blocks(engine, raw, out),
+    }
+}
+
+/// The oracle gear: copy maximal plain runs slice-wise, decode at
+/// escape sites. This is the pre-vectorization `jscan::unescape` body
+/// with the escape decoder factored out so both gears share it.
+fn unescape_into_scalar(raw: &str, out: &mut String) {
+    let b = raw.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'\\' {
+            let start = i;
+            while i < b.len() && b[i] != b'\\' {
+                i += 1;
+            }
+            out.push_str(&raw[start..i]);
+            continue;
+        }
+        i = decode_escape(raw, i + 1, out);
+    }
+}
+
+/// The vectorized gear: the scan classifier jumps block-wise to the
+/// next interest byte (`"`, `\`, control). In a validated payload only
+/// `\` occurs, but on arbitrary input the classifier may stop on a
+/// stray quote or control byte — plain content to the unescaper, so it
+/// is stepped over and the pending run keeps growing, exactly like the
+/// oracle's "anything but `\`" loop.
+fn unescape_into_blocks(engine: Engine, raw: &str, out: &mut String) {
+    let b = raw.as_bytes();
+    let mut run_start = 0usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let j = simd::find_string_special_with(engine, b, i);
+        if j >= b.len() {
+            break;
+        }
+        if b[j] != b'\\' {
+            i = j + 1;
+            continue;
+        }
+        // memcpy the plain run, then decode through the shared path;
+        // `\` is ASCII and decode_escape returns an index just past an
+        // all-ASCII sequence, so both slice bounds are char boundaries
+        out.push_str(&raw[run_start..j]);
+        let next = decode_escape(raw, j + 1, out).min(b.len());
+        run_start = next;
+        i = next;
+    }
+    out.push_str(&raw[run_start..]);
+}
+
+/// Decode one escape sequence whose `\` sits at `at - 1`: push the
+/// decoded character and return the index just past the sequence (one
+/// past the end of input for a truncated tail). Shared verbatim by
+/// both gears — byte-identical degradation on invalid input is a
+/// structural guarantee, not a hope.
+fn decode_escape(raw: &str, at: usize, out: &mut String) -> usize {
+    let b = raw.as_bytes();
+    let mut i = at;
+    match b.get(i).copied() {
+        Some(b'"') => {
+            out.push('"');
+            i += 1;
+        }
+        Some(b'\\') => {
+            out.push('\\');
+            i += 1;
+        }
+        Some(b'/') => {
+            out.push('/');
+            i += 1;
+        }
+        Some(b'b') => {
+            out.push('\u{8}');
+            i += 1;
+        }
+        Some(b'f') => {
+            out.push('\u{c}');
+            i += 1;
+        }
+        Some(b'n') => {
+            out.push('\n');
+            i += 1;
+        }
+        Some(b'r') => {
+            out.push('\r');
+            i += 1;
+        }
+        Some(b't') => {
+            out.push('\t');
+            i += 1;
+        }
+        Some(b'u') => {
+            i += 1;
+            let hi = hex4_at(b, i);
+            i += 4;
+            let cp = match hi {
+                Some(h) if (0xD800..0xDC00).contains(&h) => {
+                    // validated input has "\uXXXX" right here
+                    if b.get(i) == Some(&b'\\') && b.get(i + 1) == Some(&b'u') {
+                        let lo = hex4_at(b, i + 2);
+                        i += 6;
+                        match lo {
+                            Some(l) if (0xDC00..0xE000).contains(&l) => {
+                                Some(0x10000 + ((h - 0xD800) << 10) + (l - 0xDC00))
+                            }
+                            _ => None,
+                        }
+                    } else {
+                        None
+                    }
+                }
+                other => other,
+            };
+            out.push(cp.and_then(char::from_u32).unwrap_or('\u{FFFD}'));
+        }
+        _ => {
+            out.push('\u{FFFD}');
+            i += 1;
+        }
+    }
+    i
+}
+
+fn hex4_at(b: &[u8], at: usize) -> Option<u32> {
+    if at + 4 > b.len() {
+        return None;
+    }
+    let mut v = 0u32;
+    for &c in &b[at..at + 4] {
+        v = v * 16 + (c as char).to_digit(16)?;
+    }
+    Some(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engines() -> Vec<Engine> {
+        let mut engines = vec![Engine::Scalar, Engine::Swar];
+        let best = simd::detect_best();
+        if !engines.contains(&best) {
+            engines.push(best);
+        }
+        engines
+    }
+
+    #[test]
+    fn gears_agree_on_basics() {
+        let cases: &[(&str, &str)] = &[
+            ("", ""),
+            ("plain ascii with no escapes at all", "plain ascii with no escapes at all"),
+            (r"a\nb", "a\nb"),
+            (r"\t\r\n\b\f\\\"\/", "\t\r\n\u{8}\u{c}\\\"/"),
+            (r"tab\tmid", "tab\tmid"),
+            (r"A", "A"),
+            (r"é café", "é café"),
+            (r"😀", "😀"),
+            ("héllo 世界 😀", "héllo 世界 😀"),
+            (r"trailing escape at end\n", "trailing escape at end\n"),
+        ];
+        for (raw, want) in cases {
+            for engine in engines() {
+                assert_eq!(
+                    unescape_with(engine, raw),
+                    *want,
+                    "engine {engine:?} diverges on {raw:?}"
+                );
+            }
+            assert_eq!(unescape(raw), *want, "dispatched gear diverges on {raw:?}");
+            assert_eq!(unescape_simd(raw), *want);
+            assert_eq!(unescape_scalar(raw), *want);
+        }
+    }
+
+    #[test]
+    fn invalid_sequences_degrade_identically() {
+        // the scanner never produces these; the decoder must still
+        // terminate with U+FFFD and every gear must agree byte-for-byte
+        let cases = [
+            r"\q",
+            r"\",
+            r"\u",
+            r"\u12",
+            r"\uZZZZ",
+            r"\ud800",
+            r"\ud800\n",
+            r"\ud800\uZZZZ",
+            r"\ud800A",
+            r"\udc00 lone low",
+            r"x😀 upper hex",
+            "run \\q mid run",
+        ];
+        for raw in cases {
+            let oracle = unescape_scalar(raw);
+            for engine in engines() {
+                assert_eq!(unescape_with(engine, raw), oracle, "engine {engine:?} on {raw:?}");
+            }
+            assert!(!oracle.is_empty());
+        }
+    }
+
+    #[test]
+    fn stray_specials_are_plain_content() {
+        // unescape operates on the *inside-the-quotes* span, so a bare
+        // quote or control byte is ordinary content; the vector gear's
+        // classifier stops on them and must step over, like the oracle
+        let raw = "a\"b\u{1}c\\nd\"";
+        let oracle = unescape_scalar(raw);
+        assert_eq!(oracle, "a\"b\u{1}c\nd\"");
+        for engine in engines() {
+            assert_eq!(unescape_with(engine, raw), oracle, "engine {engine:?}");
+        }
+    }
+
+    #[test]
+    fn escapes_at_block_edges() {
+        // pin the run-resume logic exactly at and around every engine's
+        // block width (SWAR 8, NEON 16, AVX2 32)
+        for width in [8usize, 16, 32, 64] {
+            for pad in width.saturating_sub(2)..=width + 2 {
+                let raw = format!("{}\\n{}", "x".repeat(pad), "y".repeat(width));
+                let oracle = unescape_scalar(&raw);
+                for engine in engines() {
+                    assert_eq!(
+                        unescape_with(engine, &raw),
+                        oracle,
+                        "engine {engine:?}, pad {pad}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -22,7 +22,9 @@
 //! how the WAL treats torn segment tails.
 
 use mlmodelci::util::jscan::{self, Offsets, MAX_DEPTH};
+use mlmodelci::util::jscan_simd::{self, Engine};
 use mlmodelci::util::json::Json;
+use mlmodelci::util::unescape_simd;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Verdict {
@@ -190,6 +192,66 @@ fn depth_bound_divergence_is_exactly_as_documented() {
     let err = scan_both(&past).unwrap_err();
     assert_eq!(err.msg, "nesting too deep");
     assert!(Json::parse(&past).is_ok());
+}
+
+/// Every accepted string in the corpus must unescape to the tree
+/// parser's value under every gear: the dispatched path, the scalar
+/// oracle and each explicitly-pinned engine (ISSUE 10).
+#[test]
+fn corpus_strings_unescape_identically_under_every_gear() {
+    let mut engines = vec![Engine::Scalar, Engine::Swar];
+    let best = jscan_simd::detect_best();
+    if !engines.contains(&best) {
+        engines.push(best);
+    }
+    for &(name, text, _) in CORPUS {
+        let (Ok(offsets), Ok(Json::Str(want))) = (scan_both(text), Json::parse(text)) else {
+            continue;
+        };
+        // the payload is the inside-the-quotes span of the document
+        let payload = text.trim().trim_start_matches('\u{feff}');
+        let payload = &payload[1..payload.len() - 1];
+        assert_eq!(
+            offsets.root(text).as_str().as_deref(),
+            Some(want.as_str()),
+            "{name}: scanner string access diverges"
+        );
+        assert_eq!(unescape_simd::unescape(payload), want, "{name}: dispatched unescape");
+        assert_eq!(unescape_simd::unescape_simd(payload), want, "{name}: simd unescape");
+        for &engine in &engines {
+            assert_eq!(
+                unescape_simd::unescape_with(engine, payload),
+                want,
+                "{name}: unescape under {engine:?}"
+            );
+        }
+    }
+}
+
+/// Escape-heavy round-trip smoke under both dispatch regimes: the CI
+/// matrix runs this file with and without `MLCI_FORCE_SCALAR=1`, so
+/// the dispatched serializer/unescaper exercises the scalar oracle on
+/// one leg and the vector gear on the other, while the explicitly
+/// pinned gears cross-check on both.
+#[test]
+fn escape_heavy_documents_round_trip_under_both_engines() {
+    let doc = Json::obj()
+        .with("plain", "x".repeat(200))
+        .with("dense", "\n\t\"\\".repeat(64))
+        .with("wide", "héllo 世界 😀".repeat(8))
+        .with("k\n\"key", Json::Arr(vec![
+            Json::Str("tab\there".into()),
+            Json::Str("ctl\u{1}\u{1f}".into()),
+            Json::Str("\\u0041 is not an escape once decoded".into()),
+        ]));
+    let dispatched = jscan::json_to_string(&doc);
+    assert_eq!(jscan::json_to_string_scalar(&doc), dispatched, "scalar gear diverges");
+    assert_eq!(jscan::json_to_string_simd(&doc), dispatched, "vector gear diverges");
+    // the canonical text re-scans on both scan gears and materializes
+    // back to the original value (string unescape included)
+    let offsets = scan_both(&dispatched).unwrap();
+    assert_eq!(offsets.root(&dispatched).to_json(), doc);
+    assert_eq!(Json::parse(&dispatched).unwrap(), doc);
 }
 
 #[test]

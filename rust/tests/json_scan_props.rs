@@ -7,9 +7,11 @@
 use std::borrow::Cow;
 
 use mlmodelci::util::jscan::{self, Doc, Offsets, MAX_DEPTH};
+use mlmodelci::util::jscan_simd::{self, Engine};
 use mlmodelci::util::json::Json;
 use mlmodelci::util::prop::{gen_u64, gen_vec, run_prop, Gen};
 use mlmodelci::util::rng::Rng;
+use mlmodelci::util::unescape_simd;
 
 /// The two parsers must agree byte-for-byte on this input.
 fn differential(text: &str) -> Result<(), String> {
@@ -431,6 +433,180 @@ fn interest_extraction_agrees_with_tree_lookup() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// unescape + serialize differentials (ISSUE 10): the scalar gear is
+// the oracle; every vector gear must match it byte for byte, on valid
+// and invalid input alike.
+
+/// Scan engines to pit against each other: the oracle, SWAR (always
+/// runnable) and whatever the host detects as best.
+fn all_engines() -> Vec<Engine> {
+    let mut engines = vec![Engine::Scalar, Engine::Swar];
+    let best = jscan_simd::detect_best();
+    if !engines.contains(&best) {
+        engines.push(best);
+    }
+    engines
+}
+
+/// Every unescape gear must produce the scalar oracle's exact bytes.
+fn unescape_differential(raw: &str) -> Result<(), String> {
+    let oracle = unescape_simd::unescape_scalar(raw);
+    for engine in all_engines() {
+        let got = unescape_simd::unescape_with(engine, raw);
+        if got != oracle {
+            return Err(format!("unescape diverges on {raw:?} under {engine:?}: {got:?} != {oracle:?}"));
+        }
+    }
+    if unescape_simd::unescape(raw) != oracle || unescape_simd::unescape_simd(raw) != oracle {
+        return Err(format!("dispatched unescape diverges on {raw:?}"));
+    }
+    Ok(())
+}
+
+/// Valid and invalid escape material for adversarial payloads.
+const ESCAPES: [&str; 12] = [
+    "\\n", "\\t", "\\r", "\\b", "\\f", "\\/", "\\\"", "\\\\", "\\u0041", "\\u00e9",
+    "\\ud83d\\ude00", "\\u4e16",
+];
+const INVALID_ESCAPES: [&str; 7] =
+    ["\\q", "\\u", "\\u12", "\\uZZZZ", "\\ud800", "\\ud800\\uZZZZ", "\\udc00"];
+
+/// An inside-the-quotes payload built from blocks of plain runs sized
+/// around engine block widths, escape clusters at maximal density, and
+/// (sometimes) invalid sequences — ending on a lone `\` now and then
+/// so the truncated-escape path gets hit at the final byte.
+fn adversarial_payload(rng: &mut Rng) -> String {
+    let mut s = String::new();
+    for _ in 0..rng.usize(1, 8) {
+        match rng.usize(0, 6) {
+            0 => s.push_str(&"x".repeat(rng.usize(0, 40))),
+            1 => {
+                // plain run ending within ±2 of a block edge
+                let block = *rng.choose(&BLOCKS);
+                s.push_str(&"p".repeat((block + rng.usize(0, 5)).saturating_sub(2)));
+            }
+            2 => s.push_str(rng.choose(&ESCAPES)),
+            3 => s.push_str(rng.choose(&INVALID_ESCAPES)),
+            4 => s.push(*rng.choose(&WIDE_CHARS)),
+            _ => {
+                // maximal escape density: nothing but escape sequences
+                for _ in 0..rng.usize(1, 20) {
+                    s.push_str(rng.choose(&ESCAPES));
+                }
+            }
+        }
+    }
+    if rng.bool(0.25) {
+        s.push('\\'); // escape at the very last byte
+    }
+    s
+}
+
+#[test]
+fn unescape_gears_agree_on_adversarial_payloads() {
+    run_prop(
+        "unescape: simd == scalar",
+        400,
+        gen_vec(gen_u64(0, u64::MAX - 1), 1, 2),
+        |seeds| {
+            let mut rng = Rng::new(seeds[0] ^ 0x0e5c);
+            unescape_differential(&adversarial_payload(&mut rng))
+        },
+    );
+}
+
+#[test]
+fn unescape_block_edge_catalog() {
+    // deterministic sweep: \u escapes and surrogate pairs straddling
+    // every engine's block edge, escape at the final byte, plus the
+    // invalid forms — each placed at every offset around the edge
+    for block in BLOCKS {
+        for delta in 0..4usize {
+            let pad = "a".repeat((block + delta).saturating_sub(2));
+            for tail in ESCAPES.iter().chain(INVALID_ESCAPES.iter()) {
+                unescape_differential(&format!("{pad}{tail}")).unwrap();
+                unescape_differential(&format!("{pad}{tail}suffix")).unwrap();
+                // the pair's second \u lands a block later
+                unescape_differential(&format!("{pad}\\ud83d{}\\ude00", "b".repeat(block)))
+                    .unwrap();
+            }
+            // escape exactly at the final byte of the payload
+            unescape_differential(&format!("{pad}\\")).unwrap();
+            unescape_differential(&format!("{pad}\\u00")).unwrap();
+        }
+    }
+    // maximal density: every byte is part of an escape sequence
+    unescape_differential(&"\\n".repeat(257)).unwrap();
+    unescape_differential(&"\\ud83d\\ude00".repeat(64)).unwrap();
+}
+
+/// The serializer gears must agree byte for byte, and escaping must
+/// round-trip through unescape (write → strip quotes → unescape ==
+/// identity) under every gear pairing.
+fn serialize_differential(doc: &Json) -> Result<(), String> {
+    let oracle = jscan::json_to_string_scalar(doc);
+    let simd = jscan::json_to_string_simd(doc);
+    let dispatched = jscan::json_to_string(doc);
+    if simd != oracle || dispatched != oracle {
+        return Err(format!("serializer gears diverge on {doc:?}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn serializer_gears_agree_on_random_documents() {
+    run_prop(
+        "serialize: simd == scalar",
+        200,
+        gen_vec(gen_u64(0, u64::MAX - 1), 1, 2),
+        |seeds| {
+            let mut rng = Rng::new(seeds[0] ^ 0x5e1a);
+            serialize_differential(&random_json(&mut rng, 4))
+        },
+    );
+}
+
+#[test]
+fn escape_unescape_round_trips_under_every_gear_pairing() {
+    run_prop(
+        "unescape(escape(s)) == s",
+        200,
+        gen_vec(gen_u64(0, u64::MAX - 1), 1, 2),
+        |seeds| {
+            let mut rng = Rng::new(seeds[0] ^ 0x70f1);
+            // arbitrary well-formed text, controls and wide chars
+            // included — escaping must round-trip exactly
+            let mut s = String::new();
+            for _ in 0..rng.usize(0, 6) {
+                match rng.usize(0, 4) {
+                    0 => s.push_str(&"x".repeat(rng.usize(0, 40))),
+                    1 => s.push(*rng.choose(&WIDE_CHARS)),
+                    2 => s.push(*rng.choose(&['"', '\\', '\n', '\r', '\t', '\u{1}', '\u{1f}'])),
+                    _ => s.push_str(rng.choose(&["", " ", "k:v", "a/b"])),
+                }
+            }
+            for write_engine in all_engines() {
+                let mut quoted = String::new();
+                jscan::write_escaped_with(&mut quoted, &s, write_engine);
+                let payload = quoted
+                    .strip_prefix('"')
+                    .and_then(|q| q.strip_suffix('"'))
+                    .ok_or_else(|| format!("unquoted escape output {quoted:?}"))?;
+                for read_engine in all_engines() {
+                    let back = unescape_simd::unescape_with(read_engine, payload);
+                    if back != s {
+                        return Err(format!(
+                            "round-trip drift {write_engine:?}->{read_engine:?}: {s:?} became {back:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------

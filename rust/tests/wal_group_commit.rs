@@ -40,11 +40,11 @@ fn replay_fingerprint(ops: &[WalOp]) -> Vec<String> {
 }
 
 /// Doc raw text for record `i`, padded via the `p` field so the framed
-/// record (`{"doc":…,"op":"put"}\n` = raw + 20 bytes) is exactly
-/// `framed_len` bytes.
+/// record (`{"doc":…,"op":"put","crc":"xxxxxxxx"}\n` = raw + 37 bytes)
+/// is exactly `framed_len` bytes.
 fn padded_doc(i: usize, framed_len: usize) -> String {
     let fixed = format!("{{\"_id\":\"{i:024}\",\"p\":\"\"}}");
-    let overhead = fixed.len() + 20;
+    let overhead = fixed.len() + 37;
     assert!(framed_len >= overhead, "framed_len {framed_len} below minimum {overhead}");
     let pad = "x".repeat(framed_len - overhead);
     format!("{{\"_id\":\"{i:024}\",\"p\":\"{pad}\"}}")
@@ -60,9 +60,10 @@ fn torn_batch_tail_truncates_to_last_complete_record() {
         segment_bytes: 1 << 20, // never seals: everything in one active segment
         replay_threads: 0,
         sync: SyncPolicy::OnSeal,
+        crc: true,
     };
     let docs = [padded_doc(1, 3 * BLOCK), padded_doc(2, 3 * BLOCK + 7), padded_doc(3, 2 * BLOCK)];
-    let live_len: usize = docs.iter().map(|d| d.len() + 20).sum();
+    let live_len: usize = docs.iter().map(|d| d.len() + 37).sum();
 
     // record 4: place a 4-byte 😀 so two of its bytes sit before an
     // exact block boundary and two after, then cut at the boundary
@@ -132,7 +133,8 @@ fn batched_collection_writes_match_single_writes_on_disk() {
     let dir_single = tmp("diff-single");
     let dir_batch = tmp("diff-batch");
     // tiny segments so batches cross several seal boundaries
-    let opts = WalOptions { segment_bytes: 512, replay_threads: 0, sync: SyncPolicy::OnSeal };
+    let opts =
+        WalOptions { segment_bytes: 512, replay_threads: 0, sync: SyncPolicy::OnSeal, crc: true };
     let doc = |i: usize, status: &str| {
         Json::obj()
             .with("_id", format!("{i:024}"))
@@ -205,8 +207,12 @@ fn batched_collection_writes_match_single_writes_on_disk() {
 #[test]
 fn unsynced_batch_survives_process_exit() {
     let dir = tmp("writethrough");
-    let opts =
-        WalOptions { segment_bytes: 1 << 20, replay_threads: 0, sync: SyncPolicy::IntervalMs(3_600_000) };
+    let opts = WalOptions {
+        segment_bytes: 1 << 20,
+        replay_threads: 0,
+        sync: SyncPolicy::IntervalMs(3_600_000),
+        crc: true,
+    };
     {
         let mut c = Collection::open_with(&dir, "m", opts.clone()).unwrap();
         let ids = c

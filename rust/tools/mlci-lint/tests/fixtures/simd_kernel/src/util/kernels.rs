@@ -1,0 +1,39 @@
+//! Feature-gated SIMD kernel dispatch, modeled on the tree's
+//! `util/jscan_simd.rs`: the kernel is unsafe to *declare* (the caller
+//! must prove the CPU feature) and unsafe to *call* (the dispatch arm
+//! carries the proof). One tail read is seeded without a justification.
+
+/// Find the first interest byte at or after `from`, 32 bytes at a time.
+///
+/// # Safety
+/// The CPU must support AVX2; callers gate on the runtime probe.
+#[target_feature(enable = "avx2")]
+pub unsafe fn find_interest_avx2(bytes: &[u8], from: usize) -> usize {
+    find_interest_swar(bytes, from)
+}
+
+/// Engine-dispatched entry point.
+pub fn find_interest(bytes: &[u8], from: usize) -> usize {
+    if std::is_x86_feature_detected!("avx2") {
+        // SAFETY: the branch condition is exactly the kernel's
+        // precondition — AVX2 was detected on this CPU at runtime.
+        return unsafe { find_interest_avx2(bytes, from) };
+    }
+    find_interest_swar(bytes, from)
+}
+
+/// Portable fallback: one word at a time, no intrinsics.
+fn find_interest_swar(bytes: &[u8], from: usize) -> usize {
+    let mut i = from;
+    while i < bytes.len() && bytes[i] >= 0x20 && bytes[i] != b'"' && bytes[i] != b'\\' {
+        i += 1;
+    }
+    i
+}
+
+/// Seeded violation: the wording gestures at an argument but never
+/// carries the required marker, and sits right above the site.
+pub fn last_byte(bytes: &[u8]) -> u8 {
+    // the caller checked the slice is non-empty, so this feels safe
+    unsafe { *bytes.as_ptr().add(bytes.len() - 1) }
+}

@@ -59,6 +59,28 @@ fn missing_safety_fails_unsafe_audit() {
 }
 
 #[test]
+fn simd_kernel_fixture_audits_feature_gated_unsafe() {
+    // the jscan_simd-style dispatch pattern: a `# Safety`-documented
+    // `#[target_feature]` kernel and a SAFETY-commented dispatch arm
+    // are inventoried as justified; the seeded tail read (lowercase
+    // "feels safe" hand-wave, no marker) is the only bare site
+    let report = check("simd_kernel");
+    assert!(!report.ok());
+    assert!(has(&report, "unsafe-audit", "util/kernels.rs"), "{:?}", report.findings);
+    let sites: Vec<_> = report
+        .unsafe_sites
+        .iter()
+        .filter(|s| s.path.contains("util/kernels.rs"))
+        .collect();
+    assert_eq!(sites.len(), 3, "fn + dispatch arm + seeded block: {sites:?}");
+    assert_eq!(
+        sites.iter().filter(|s| s.justification.is_none()).count(),
+        1,
+        "exactly the seeded site is bare: {sites:?}"
+    );
+}
+
+#[test]
 fn hot_path_unwrap_fails_panic_freedom() {
     let report = check("hot_path_unwrap");
     assert!(!report.ok());
